@@ -1,0 +1,37 @@
+//! Quickstart: decentralized training in a dozen lines.
+//!
+//! Four agents hold shards of a small synthetic regression set; two API-BCD
+//! tokens walk a random connected graph; the consensus model's test NMSE is
+//! printed as it converges. Uses the native solver so it runs without
+//! `make artifacts` (swap `SolverChoice::Auto` in to use the PJRT path).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use apibcd::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.name = "quickstart".into();
+    cfg.agents = 4;
+    cfg.walks = 2;
+    cfg.tau_api = 0.1;
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.stop.max_activations = 600;
+    cfg.eval_every = 50;
+
+    let report = apibcd::run_experiment(&cfg)?;
+    let trace = &report.traces[0];
+    println!("API-BCD on {} agents, {} walks:", cfg.agents, cfg.walks);
+    println!("{:>6} {:>12} {:>10} {:>10}", "iter", "sim time", "comm", "NMSE");
+    for p in &trace.points {
+        println!(
+            "{:>6} {:>12} {:>10} {:>10.4}",
+            p.iter,
+            apibcd::util::fmt_secs(p.time),
+            p.comm,
+            p.metric
+        );
+    }
+    println!("\nfinal test NMSE: {:.4}", trace.last_metric());
+    Ok(())
+}

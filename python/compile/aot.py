@@ -1,0 +1,167 @@
+"""AOT export: lower every Layer-2 update to HLO *text* + a manifest.
+
+HLO text (NOT a serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Produces ``artifacts/<entry>.hlo.txt`` per artifact plus
+``artifacts/manifest.json`` describing, for every entry: the profile, the
+exact input order/shape/dtype and the output shape — the rust runtime is
+driven entirely by the manifest (``rust/src/runtime/manifest.rs``).
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .profiles import PROFILES, DEFAULT_K, BLOCK_ROWS
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _entry(name, fn, arg_specs, arg_names, out_shape, prof, static):
+    """Lower ``fn`` at ``arg_specs`` and return (hlo_text, manifest entry)."""
+    lowered = jax.jit(fn).lower(*[_spec(s) for s in arg_specs])
+    text = to_hlo_text(lowered)
+    entry = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "profile": prof.name,
+        "task": prof.task,
+        "inputs": [
+            {"name": n, "dtype": "f32", "shape": list(s)}
+            for n, s in zip(arg_names, arg_specs)
+        ],
+        "output": {"dtype": "f32", "shape": list(out_shape)},
+        "static": static,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, entry
+
+
+def artifacts_for_profile(prof, k=DEFAULT_K):
+    """Yield (hlo_text, manifest_entry) for every artifact of one profile."""
+    s, p, c = prof.shard_rows, prof.features, prof.classes
+    if prof.task == "ls":
+        yield _entry(
+            f"{prof.name}_ls_prox_k{k}",
+            functools.partial(model.ls_prox_update, n_cg=k),
+            [(s, p), (s,), (s,), (p,), (p,), ()],
+            ["x", "y", "mask", "w0", "tzsum", "tau_m"],
+            (p,), prof, {"kind": "prox", "k": k},
+        )
+        yield _entry(
+            f"{prof.name}_ls_grad",
+            model.ls_grad,
+            [(s, p), (s,), (s,), (p,)],
+            ["x", "y", "mask", "w"],
+            (p,), prof, {"kind": "grad"},
+        )
+    elif prof.task == "logit":
+        yield _entry(
+            f"{prof.name}_logit_prox_k{k}",
+            functools.partial(model.logit_prox_update, n_steps=k),
+            [(s, p), (s,), (s,), (p,), (p,), (), ()],
+            ["x", "y", "mask", "w0", "tzsum", "tau_m", "step"],
+            (p,), prof, {"kind": "prox", "k": k},
+        )
+        yield _entry(
+            f"{prof.name}_logit_grad",
+            model.logit_grad,
+            [(s, p), (s,), (s,), (p,)],
+            ["x", "y", "mask", "w"],
+            (p,), prof, {"kind": "grad"},
+        )
+    elif prof.task == "smax":
+        yield _entry(
+            f"{prof.name}_smax_prox_k{k}",
+            functools.partial(model.smax_prox_update, n_steps=k),
+            [(s, p), (s, c), (s,), (p, c), (p, c), (), ()],
+            ["x", "y_onehot", "mask", "w0", "tzsum", "tau_m", "step"],
+            (p, c), prof, {"kind": "prox", "k": k},
+        )
+        yield _entry(
+            f"{prof.name}_smax_grad",
+            model.smax_grad,
+            [(s, p), (s, c), (s,), (p, c)],
+            ["x", "y_onehot", "mask", "w"],
+            (p, c), prof, {"kind": "grad"},
+        )
+    else:  # pragma: no cover
+        raise ValueError(f"unknown task {prof.task}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--profiles", default="all",
+        help="comma-separated profile names (default: all)",
+    )
+    ap.add_argument("--k", type=int, default=DEFAULT_K,
+                    help="inner iteration count baked into prox artifacts")
+    args = ap.parse_args()
+
+    names = list(PROFILES) if args.profiles == "all" else args.profiles.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "block_rows": BLOCK_ROWS,
+        "default_k": args.k,
+        "profiles": {
+            n: {
+                "task": PROFILES[n].task,
+                "n_total": PROFILES[n].n_total,
+                "features": PROFILES[n].features,
+                "agents": PROFILES[n].agents,
+                "classes": PROFILES[n].classes,
+                "shard_rows": PROFILES[n].shard_rows,
+            }
+            for n in names
+        },
+        "entries": [],
+    }
+
+    for n in names:
+        prof = PROFILES[n]
+        for text, entry in artifacts_for_profile(prof, k=args.k):
+            path = os.path.join(args.out, entry["file"])
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(entry)
+            print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['entries'])} entries", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for API-BCD local updates.
+
+Every kernel is row-block tiled over the sample dimension so the working set
+per grid step is one ``(block_rows, p)`` tile of the design matrix plus the
+``(p,)``/``(p, c)`` model vector — sized for a TPU VMEM budget even though on
+this image they run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls; see DESIGN.md §Hardware-Adaptation).
+
+Naming convention: all kernels return *unnormalized* masked quantities
+(callers divide by the active-sample count), because the mask-sum is a global
+reduction the caller already needs.
+"""
+
+from .ls import fused_ls_resid_grad, normal_matvec, BLOCK_ROWS
+from .logistic import fused_logistic_grad, fused_softmax_grad
+
+__all__ = [
+    "fused_ls_resid_grad",
+    "normal_matvec",
+    "fused_logistic_grad",
+    "fused_softmax_grad",
+    "BLOCK_ROWS",
+]

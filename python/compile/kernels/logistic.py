@@ -1,0 +1,93 @@
+"""Logistic / softmax Pallas kernels for the classification tasks.
+
+* ``fused_logistic_grad`` — ``Xᵀ D (σ(X w) − y)`` with ``y ∈ {0,1}``: the
+  ijcnn1 binary task (paper Fig. 5). The sigmoid, residual and back-projection
+  are fused in one row-streaming pass.
+* ``fused_softmax_grad`` — ``Xᵀ D (softmax(X W) − Y)`` with one-hot ``Y``:
+  the 10-class USPS task (paper Fig. 6).
+
+Same tiling discipline as :mod:`.ls`: ``BLOCK_ROWS`` rows per grid step,
+``(p,)`` / ``(p, c)`` accumulator initialized at step 0.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ls import BLOCK_ROWS, _check_padded
+
+
+def _logistic_grad_kernel(x_ref, y_ref, m_ref, w_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_blk = x_ref[...]
+    logits = jnp.dot(x_blk, w_ref[...], preferred_element_type=jnp.float32)
+    r = (jax.nn.sigmoid(logits) - y_ref[...]) * m_ref[...]
+    o_ref[...] += jnp.dot(x_blk.T, r, preferred_element_type=jnp.float32)
+
+
+def fused_logistic_grad(x, y01, mask, w):
+    """``Xᵀ diag(mask) (σ(X w) − y)``, unnormalized, ``y ∈ {0, 1}``."""
+    n, p = x.shape
+    grid = _check_padded(n)
+    return pl.pallas_call(
+        _logistic_grad_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, p), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((p,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,
+    )(x, y01, mask, w)
+
+
+def _softmax_grad_kernel(x_ref, y_ref, m_ref, w_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_blk = x_ref[...]                       # (B, p)
+    logits = jnp.dot(x_blk, w_ref[...],      # (B, c)
+                     preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    r = (probs - y_ref[...]) * m_ref[...][:, None]
+    o_ref[...] += jnp.dot(x_blk.T, r, preferred_element_type=jnp.float32)
+
+
+def fused_softmax_grad(x, y_onehot, mask, w):
+    """``Xᵀ diag(mask) (softmax(X W) − Y)``, unnormalized.
+
+    Args:
+      x: ``(n, p)``, ``n`` a multiple of ``BLOCK_ROWS``.
+      y_onehot: ``(n, c)`` one-hot labels (all-zero rows allowed for padding).
+      mask: ``(n,)`` row validity.
+      w: ``(p, c)`` per-class weights.
+
+    Returns ``(p, c)``.
+    """
+    n, p = x.shape
+    c = w.shape[1]
+    grid = _check_padded(n)
+    return pl.pallas_call(
+        _softmax_grad_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, p), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, c), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+            pl.BlockSpec((p, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((p, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, c), jnp.float32),
+        interpret=True,
+    )(x, y_onehot, mask, w)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately written as one-line dense expressions with no tiling,
+no fusion and no accumulation tricks — anything the kernels get wrong shows
+up against these under `pytest python/tests/`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ls_resid_grad(x, y, mask, w):
+    """Oracle for kernels.fused_ls_resid_grad: Xᵀ D (Xw − y)."""
+    return x.T @ ((x @ w - y) * mask)
+
+
+def normal_matvec(x, mask, p_vec):
+    """Oracle for kernels.normal_matvec: Xᵀ D X p."""
+    return x.T @ (mask * (x @ p_vec))
+
+
+def logistic_grad(x, y01, mask, w):
+    """Oracle for kernels.fused_logistic_grad: Xᵀ D (σ(Xw) − y)."""
+    return x.T @ ((jax.nn.sigmoid(x @ w) - y01) * mask)
+
+
+def softmax_grad(x, y_onehot, mask, w):
+    """Oracle for kernels.fused_softmax_grad: Xᵀ D (softmax(XW) − Y)."""
+    return x.T @ ((jax.nn.softmax(x @ w, axis=-1) - y_onehot) * mask[:, None])
+
+
+# ---------------------------------------------------------------------------
+# Model-level oracles (Layer-2 sanity: closed forms the CG / K-step updates
+# must approach).
+
+
+def ls_prox_exact(x, y, mask, zsum, tau_m):
+    """Exact minimizer of (1/2d)‖D(Xw−y)‖² + (τ/2)Σ_m‖w−ẑ_m‖².
+
+    Normal equations: [(1/d) XᵀDX + τM I] w = (1/d) XᵀDy + τ Σ_m ẑ_m.
+    ``zsum`` is the pre-scaled τ·Σ_m ẑ_m; ``tau_m`` is τ·M.
+    """
+    d = jnp.maximum(mask.sum(), 1.0)
+    p = x.shape[1]
+    a = (x.T @ (mask[:, None] * x)) / d + tau_m * jnp.eye(p)
+    b = (x.T @ (mask * y)) / d + zsum
+    return jnp.linalg.solve(a, b)
+
+
+def logistic_loss(x, y01, mask, w):
+    """Mean masked logistic loss (numerically-stable log1p form)."""
+    d = jnp.maximum(mask.sum(), 1.0)
+    logits = x @ w
+    # log(1+e^z) - y*z, stable via logaddexp
+    per = jnp.logaddexp(0.0, logits) - y01 * logits
+    return (per * mask).sum() / d
+
+
+def softmax_loss(x, y_onehot, mask, w):
+    d = jnp.maximum(mask.sum(), 1.0)
+    logp = jax.nn.log_softmax(x @ w, axis=-1)
+    per = -(y_onehot * logp).sum(axis=-1)
+    return (per * mask).sum() / d

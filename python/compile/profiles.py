@@ -1,0 +1,56 @@
+"""Dataset/shape profiles for AOT export.
+
+One profile per evaluation dataset in the paper (§5) plus a tiny `test`
+profile used by the rust unit/integration tests (fast to compile, fast to
+run). Shapes are *static* in the artifacts: each agent's shard is padded to
+``shard_rows`` (a multiple of ``kernels.BLOCK_ROWS``) with ``mask = 0`` rows,
+so one artifact serves every agent of a run and any N ≥ the preset N (smaller
+shards just carry more padding).
+
+Paper dataset shapes (LIBSVM / [29]):
+  cpusmall  8192 × 12   regression      Fig. 3 (N = 20)
+  cadata   20640 × 8    regression      Fig. 4 (N = 50)
+  ijcnn1   49990 × 22   binary class.   Fig. 5 (N = 50)
+  USPS      7291 × 256  10-class        Fig. 6 (N = 10)
+
+The +1 on ``features`` is the bias column appended by the data layer.
+"""
+
+import dataclasses
+import math
+
+BLOCK_ROWS = 128
+TRAIN_FRAC = 0.8
+DEFAULT_K = 5  # the paper's inner-iteration count (figure captions)
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    name: str
+    task: str          # "ls" | "logit" | "smax"
+    n_total: int       # dataset rows before the train/test split
+    features: int      # p, including bias column
+    agents: int        # preset N from the figure caption
+    classes: int = 1   # c for smax
+
+    @property
+    def n_train(self) -> int:
+        return int(self.n_total * TRAIN_FRAC)
+
+    @property
+    def shard_rows(self) -> int:
+        """Padded per-agent shard capacity at the preset N."""
+        raw = math.ceil(self.n_train / self.agents)
+        return ((raw + BLOCK_ROWS - 1) // BLOCK_ROWS) * BLOCK_ROWS
+
+
+PROFILES = {
+    "cpusmall": Profile("cpusmall", "ls", 8192, 12 + 1, 20),
+    "cadata": Profile("cadata", "ls", 20640, 8 + 1, 50),
+    "ijcnn1": Profile("ijcnn1", "logit", 49990, 22 + 1, 50),
+    "usps": Profile("usps", "smax", 7291, 256 + 1, 10, classes=10),
+    # Tiny profiles for fast rust tests — one per task kind.
+    "test_ls": Profile("test_ls", "ls", 160, 4, 1),
+    "test_logit": Profile("test_logit", "logit", 160, 4, 1),
+    "test_smax": Profile("test_smax", "smax", 160, 4, 1, classes=3),
+}

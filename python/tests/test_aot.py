@@ -1,0 +1,92 @@
+"""AOT export contract: manifest structure, shapes, determinism.
+
+The rust runtime trusts the manifest completely (input order, shapes,
+output shape), so these tests pin exactly the invariants it relies on.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.profiles import PROFILES, BLOCK_ROWS
+
+
+@pytest.fixture(scope="module")
+def test_entries():
+    prof = PROFILES["test_ls"]
+    return list(aot.artifacts_for_profile(prof, k=5))
+
+
+def test_profiles_shard_rows_padded():
+    for prof in PROFILES.values():
+        assert prof.shard_rows % BLOCK_ROWS == 0
+        assert prof.shard_rows * prof.agents >= prof.n_train
+
+
+def test_entry_structure(test_entries):
+    for text, entry in test_entries:
+        assert text.startswith("HloModule")
+        assert entry["file"].endswith(".hlo.txt")
+        for inp in entry["inputs"]:
+            assert inp["dtype"] == "f32"
+            assert all(isinstance(d, int) for d in inp["shape"])
+        assert entry["static"]["kind"] in ("prox", "grad")
+
+
+def test_prox_entry_input_order(test_entries):
+    (_, prox), (_, grad) = test_entries
+    assert [i["name"] for i in prox["inputs"]] == \
+        ["x", "y", "mask", "w0", "tzsum", "tau_m"]
+    assert [i["name"] for i in grad["inputs"]] == ["x", "y", "mask", "w"]
+    s, p = PROFILES["test_ls"].shard_rows, PROFILES["test_ls"].features
+    assert prox["inputs"][0]["shape"] == [s, p]
+    assert prox["inputs"][5]["shape"] == []          # rank-0 scalar
+    assert prox["output"]["shape"] == [p]
+
+
+def test_export_is_deterministic():
+    prof = PROFILES["test_logit"]
+    a = [(t, e["sha256"]) for t, e in aot.artifacts_for_profile(prof)]
+    b = [(t, e["sha256"]) for t, e in aot.artifacts_for_profile(prof)]
+    assert a == b
+
+
+def test_every_profile_exports():
+    for name, prof in PROFILES.items():
+        entries = list(aot.artifacts_for_profile(prof))
+        assert len(entries) == 2, name
+        kinds = {e["static"]["kind"] for _, e in entries}
+        assert kinds == {"prox", "grad"}
+
+
+def test_manifest_on_disk_if_built():
+    """If `make artifacts` has run, the manifest must be consistent."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    assert manifest["block_rows"] == BLOCK_ROWS
+    for entry in manifest["entries"]:
+        path = os.path.join(root, entry["file"])
+        assert os.path.exists(path), entry["file"]
+        with open(path) as f:
+            head = f.read(9)
+        assert head == "HloModule"
+
+
+def test_hlo_text_has_no_custom_calls(test_entries):
+    """CPU PJRT 0.5.1 cannot execute custom-calls; artifacts must be pure HLO.
+
+    This is the guard against accidentally lowering pallas without
+    interpret=True (Mosaic custom-call) or using lapack-backed ops
+    (jnp.linalg.*) inside an exported function.
+    """
+    for text, entry in test_entries:
+        assert "custom-call" not in text, entry["name"]

@@ -1,0 +1,182 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps the (rows, features, classes) shape space and the mask
+density; shapes are constrained to the kernels' contract (rows a multiple of
+BLOCK_ROWS). This is the core correctness signal for the compiled artifacts:
+everything the rust hot path executes flows through these kernels.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+BR = kernels.BLOCK_ROWS
+
+
+def _data(seed, n, p, c=None, mask_density=0.8):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=n), jnp.float32)
+    mask = jnp.asarray(rng.random(n) < mask_density, jnp.float32)
+    if c is None:
+        w = jnp.asarray(rng.normal(size=p), jnp.float32)
+        return x, y, mask, w
+    yoh = jnp.eye(c, dtype=jnp.float32)[rng.integers(0, c, n)]
+    w = jnp.asarray(rng.normal(size=(p, c)), jnp.float32)
+    return x, yoh, mask, w
+
+
+shape_st = st.tuples(
+    st.integers(1, 4),          # row blocks
+    st.integers(1, 33),         # features
+    st.integers(0, 1000),       # seed
+    st.floats(0.0, 1.0),        # mask density (0 ⇒ all padding)
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_st)
+def test_ls_resid_grad_matches_ref(args):
+    blocks, p, seed, dens = args
+    n = blocks * BR
+    x, y, mask, w = _data(seed, n, p, mask_density=dens)
+    got = kernels.fused_ls_resid_grad(x, y, mask, w)
+    want = ref.ls_resid_grad(x, y, mask, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_st)
+def test_normal_matvec_matches_ref(args):
+    blocks, p, seed, dens = args
+    n = blocks * BR
+    x, _, mask, w = _data(seed, n, p, mask_density=dens)
+    got = kernels.normal_matvec(x, mask, w)
+    want = ref.normal_matvec(x, mask, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_st)
+def test_logistic_grad_matches_ref(args):
+    blocks, p, seed, dens = args
+    n = blocks * BR
+    x, y, mask, w = _data(seed, n, p, mask_density=dens)
+    y01 = (y > 0).astype(jnp.float32)
+    got = kernels.fused_logistic_grad(x, y01, mask, w)
+    want = ref.logistic_grad(x, y01, mask, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape_st, st.integers(2, 11))
+def test_softmax_grad_matches_ref(args, c):
+    blocks, p, seed, dens = args
+    n = blocks * BR
+    x, yoh, mask, w = _data(seed, n, p, c=c, mask_density=dens)
+    got = kernels.fused_softmax_grad(x, yoh, mask, w)
+    want = ref.softmax_grad(x, yoh, mask, w)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# Contract edges
+
+
+def test_unpadded_rows_rejected():
+    x = jnp.zeros((BR + 1, 3), jnp.float32)
+    with pytest.raises(ValueError, match="padded"):
+        kernels.fused_ls_resid_grad(
+            x, jnp.zeros(BR + 1), jnp.zeros(BR + 1), jnp.zeros(3)
+        )
+
+
+def test_all_masked_rows_give_zero_grad():
+    x, y, _, w = _data(7, 2 * BR, 6)
+    zero_mask = jnp.zeros(2 * BR, jnp.float32)
+    got = kernels.fused_ls_resid_grad(x, y, zero_mask, w)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(6, np.float32))
+
+
+def test_mask_equivalent_to_row_removal():
+    """Masked kernel on padded data == dense oracle on the unpadded rows."""
+    rng = np.random.default_rng(3)
+    n_real = 37
+    x_real = rng.normal(size=(n_real, 5)).astype(np.float32)
+    y_real = rng.normal(size=n_real).astype(np.float32)
+    w = jnp.asarray(rng.normal(size=5), jnp.float32)
+
+    x_pad = np.zeros((BR, 5), np.float32)
+    y_pad = np.zeros(BR, np.float32)
+    x_pad[:n_real], y_pad[:n_real] = x_real, y_real
+    mask = np.zeros(BR, np.float32)
+    mask[:n_real] = 1.0
+
+    got = kernels.fused_ls_resid_grad(
+        jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask), w
+    )
+    want = jnp.asarray(x_real).T @ (jnp.asarray(x_real) @ w - jnp.asarray(y_real))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Dtype sweep: the kernels must accept reduced-precision inputs (bf16/f16 —
+# what real agents would ship over the wire) while accumulating and
+# returning f32 (`preferred_element_type` discipline).
+
+import jax.numpy as jnp
+from hypothesis import given as _given
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from([jnp.float32, jnp.bfloat16, jnp.float16]),
+    st.integers(1, 2),
+    st.integers(2, 17),
+    st.integers(0, 100),
+)
+def test_ls_grad_dtype_sweep(dtype, blocks, p, seed):
+    n = blocks * BR
+    x32, y32, mask32, w32 = _data(seed, n, p)
+    x, y, mask, w = (a.astype(dtype) for a in (x32, y32, mask32, w32))
+    got = kernels.fused_ls_resid_grad(x, y, mask, w)
+    assert got.dtype == jnp.float32
+    # Oracle on the *quantized* values (both paths see the same inputs).
+    want = ref.ls_resid_grad(*(a.astype(jnp.float32) for a in (x, y, mask, w)))
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([jnp.bfloat16, jnp.float16]),
+    st.integers(0, 100),
+)
+def test_logistic_grad_dtype_sweep(dtype, seed):
+    n, p = BR, 7
+    x32, y32, mask32, w32 = _data(seed, n, p)
+    y01 = (y32 > 0).astype(dtype)
+    x, mask, w = (a.astype(dtype) for a in (x32, mask32, w32))
+    got = kernels.fused_logistic_grad(x, y01, mask, w)
+    assert got.dtype == jnp.float32
+    want = ref.logistic_grad(
+        *(a.astype(jnp.float32) for a in (x, y01, mask, w))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=5e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([jnp.bfloat16, jnp.float16]), st.integers(0, 50))
+def test_softmax_grad_dtype_sweep(dtype, seed):
+    n, p, c = BR, 5, 4
+    x32, yoh32, mask32, w32 = _data(seed, n, p, c=c)
+    x, yoh, mask, w = (a.astype(dtype) for a in (x32, yoh32, mask32, w32))
+    got = kernels.fused_softmax_grad(x, yoh, mask, w)
+    assert got.dtype == jnp.float32
+    want = ref.softmax_grad(
+        *(a.astype(jnp.float32) for a in (x, yoh, mask, w))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=6e-2)

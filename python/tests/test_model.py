@@ -1,0 +1,156 @@
+"""Layer-2 correctness: the full local updates (what the artifacts compute).
+
+Checks the optimization semantics the paper's theory relies on:
+* CG prox solve converges to the closed-form minimizer (exact for K ≥ p);
+* every prox update strictly decreases its own subproblem objective
+  (the inequality behind Theorems 1–3);
+* the K-step logistic/softmax updates decrease the penalized objective;
+* gradient oracles match autodiff.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels, model
+
+BR = kernels.BLOCK_ROWS
+
+
+def _ls_problem(seed, n_blocks=2, p=6):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * BR
+    x = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    w_true = jnp.asarray(rng.normal(size=p), jnp.float32)
+    y = x @ w_true + 0.1 * jnp.asarray(rng.normal(size=n), jnp.float32)
+    mask = jnp.asarray(rng.random(n) < 0.9, jnp.float32)
+    return x, y, mask
+
+
+def _prox_objective_ls(x, y, mask, w, zs, tau):
+    pen = sum(0.5 * tau * float(jnp.sum((w - z) ** 2)) for z in zs)
+    return float(model.ls_loss(x, y, mask, w)) + pen
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500), st.integers(1, 4))
+def test_ls_prox_cg_exact_at_k_eq_p(seed, m_walks):
+    p = 6
+    x, y, mask = _ls_problem(seed, p=p)
+    rng = np.random.default_rng(seed + 1)
+    zs = [jnp.asarray(rng.normal(size=p), jnp.float32) for _ in range(m_walks)]
+    tau = 0.5
+    zsum = sum(zs)
+    w = model.ls_prox_update(
+        x, y, mask, jnp.zeros(p, jnp.float32),
+        tau * zsum, jnp.float32(tau * m_walks), n_cg=p + 2,
+    )
+    w_exact = model.ls_prox_reference(x, y, mask, zsum, tau, m_walks)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_exact),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500))
+def test_ls_prox_k5_decreases_subproblem(seed):
+    """K=5 (the paper's inner count) must still strictly descend from w0."""
+    p = 12  # cpusmall width: K=5 < p, inexact but descending
+    x, y, mask = _ls_problem(seed, p=p)
+    rng = np.random.default_rng(seed + 2)
+    zs = [jnp.asarray(rng.normal(size=p), jnp.float32) for _ in range(2)]
+    tau = 0.5
+    w0 = jnp.asarray(rng.normal(size=p), jnp.float32)
+    w1 = model.ls_prox_update(x, y, mask, w0, tau * sum(zs),
+                              jnp.float32(tau * 2), n_cg=5)
+    f0 = _prox_objective_ls(x, y, mask, w0, zs, tau)
+    f1 = _prox_objective_ls(x, y, mask, w1, zs, tau)
+    assert f1 <= f0 + 1e-5, (f0, f1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 500))
+def test_logit_prox_decreases_subproblem(seed):
+    p = 8
+    rng = np.random.default_rng(seed)
+    n = 2 * BR
+    x = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    y01 = jnp.asarray(rng.random(n) < 0.5, jnp.float32)
+    mask = jnp.ones(n, jnp.float32)
+    zs = [jnp.asarray(rng.normal(size=p) * 0.1, jnp.float32) for _ in range(2)]
+    tau = 0.5
+    w0 = jnp.zeros(p, jnp.float32)
+    # L̂ ≈ ‖X‖²_F / (4d); step = 1/(L̂ + τM)
+    lhat = float(jnp.sum(x * x)) / (4 * n)
+    step = 1.0 / (lhat + tau * 2)
+    w1 = model.logit_prox_update(x, y01, mask, w0, tau * sum(zs),
+                                 jnp.float32(tau * 2), jnp.float32(step),
+                                 n_steps=5)
+
+    def obj(w):
+        pen = sum(0.5 * tau * float(jnp.sum((w - z) ** 2)) for z in zs)
+        return float(model.logit_loss(x, y01, mask, w)) + pen
+
+    assert obj(w1) <= obj(w0) + 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 500))
+def test_smax_prox_decreases_subproblem(seed):
+    p, c = 6, 4
+    rng = np.random.default_rng(seed)
+    n = BR
+    x = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    yoh = jnp.eye(c, dtype=jnp.float32)[rng.integers(0, c, n)]
+    mask = jnp.ones(n, jnp.float32)
+    zs = [jnp.asarray(rng.normal(size=(p, c)) * 0.1, jnp.float32)
+          for _ in range(2)]
+    tau = 0.5
+    w0 = jnp.zeros((p, c), jnp.float32)
+    lhat = float(jnp.sum(x * x)) / (2 * n)
+    step = 1.0 / (lhat + tau * 2)
+    w1 = model.smax_prox_update(x, yoh, mask, w0, tau * sum(zs),
+                                jnp.float32(tau * 2), jnp.float32(step),
+                                n_steps=5)
+
+    def obj(w):
+        pen = sum(0.5 * tau * float(jnp.sum((w - z) ** 2)) for z in zs)
+        return float(model.smax_loss(x, yoh, mask, w)) + pen
+
+    assert obj(w1) <= obj(w0) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Gradient oracles vs autodiff
+
+
+def test_ls_grad_matches_autodiff():
+    x, y, mask = _ls_problem(11, p=7)
+    w = jnp.asarray(np.random.default_rng(1).normal(size=7), jnp.float32)
+    got = model.ls_grad(x, y, mask, w)
+    want = jax.grad(lambda w: model.ls_loss(x, y, mask, w))(w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_logit_grad_matches_autodiff():
+    rng = np.random.default_rng(2)
+    n, p = BR, 9
+    x = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    y01 = jnp.asarray(rng.random(n) < 0.5, jnp.float32)
+    mask = jnp.asarray(rng.random(n) < 0.9, jnp.float32)
+    w = jnp.asarray(rng.normal(size=p), jnp.float32)
+    got = model.logit_grad(x, y01, mask, w)
+    want = jax.grad(lambda w: model.logit_loss(x, y01, mask, w))(w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_smax_grad_matches_autodiff():
+    rng = np.random.default_rng(4)
+    n, p, c = BR, 5, 3
+    x = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    yoh = jnp.eye(c, dtype=jnp.float32)[rng.integers(0, c, n)]
+    mask = jnp.asarray(rng.random(n) < 0.9, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(p, c)), jnp.float32)
+    got = model.smax_grad(x, yoh, mask, w)
+    want = jax.grad(lambda w: model.smax_loss(x, yoh, mask, w))(w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

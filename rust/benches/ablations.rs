@@ -1,0 +1,160 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * walk count M (the paper's core parallelism knob — Fig. 1's two-token
+//!   illustration generalized);
+//! * routing rule (deterministic cycle vs Markov chains — §2's two
+//!   selection patterns);
+//! * penalty τ (the agreement/bias trade-off the paper discusses under
+//!   eq. (3));
+//! * inner iteration count K of the local subproblem solve;
+//! * IID vs contiguous (non-IID) sharding;
+//! * the motivating baseline families: gossip (DGD) comm cost and the
+//!   incremental-ADMM pair (WADMM / PW-ADMM).
+
+use apibcd::algo::AlgoKind;
+use apibcd::config::{ExperimentConfig, Preset, RoutingRule};
+use apibcd::data::shard::PartitionKind;
+
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(Preset::Fig3Cpusmall);
+    cfg.stop.max_activations = 1_500;
+    cfg.eval_every = 50;
+    cfg
+}
+
+fn row(tag: &str, report: &apibcd::metrics::RunReport) {
+    for t in &report.traces {
+        let last = t.last().unwrap();
+        println!(
+            "{:<28} {:<10} {:>12.5} {:>12} {:>10} {:>10}",
+            tag,
+            t.name,
+            t.last_metric(),
+            apibcd::util::fmt_secs(last.time),
+            last.comm,
+            apibcd::util::fmt_secs(t.wall_secs),
+        );
+    }
+}
+
+fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<28} {:<10} {:>12} {:>12} {:>10} {:>10}",
+        "config", "algorithm", "metric", "sim time", "comm", "wall"
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- M (walks) sweep: the asynchrony pay-off ---------------------------
+    header("walk count M (API-BCD, cpusmall)");
+    for m in [1usize, 2, 4, 8] {
+        let mut cfg = base();
+        cfg.walks = m;
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        cfg.name = format!("ablation_m{m}");
+        row(&format!("M={m}"), &apibcd::run_experiment(&cfg)?);
+    }
+
+    // --- routing rule -------------------------------------------------------
+    header("routing rule (API-BCD, cpusmall)");
+    for (name, rule) in [
+        ("cycle", RoutingRule::Cycle),
+        ("uniform", RoutingRule::Uniform),
+        ("metropolis", RoutingRule::Metropolis),
+    ] {
+        let mut cfg = base();
+        cfg.routing = rule;
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        cfg.name = format!("ablation_routing_{name}");
+        row(name, &apibcd::run_experiment(&cfg)?);
+    }
+
+    // --- τ sweep: agreement vs bias (paper's eq. (3) discussion) -----------
+    header("penalty τ_API (API-BCD, cpusmall)");
+    for tau in [0.01, 0.05, 0.1, 0.5, 1.0] {
+        let mut cfg = base();
+        cfg.tau_api = tau;
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        cfg.name = format!("ablation_tau{tau}");
+        row(&format!("tau={tau}"), &apibcd::run_experiment(&cfg)?);
+    }
+
+    // --- inner K: subproblem solve accuracy (native solver so K varies
+    //     without re-exporting artifacts) ------------------------------------
+    header("inner iterations K (I-BCD, native solver)");
+    for k in [1usize, 3, 5, 13] {
+        let mut cfg = base();
+        cfg.inner_k = k;
+        cfg.solver = apibcd::config::SolverChoice::Native;
+        cfg.algos = vec![AlgoKind::IBcd];
+        cfg.stop.max_activations = 800;
+        cfg.name = format!("ablation_k{k}");
+        row(&format!("K={k}"), &apibcd::run_experiment(&cfg)?);
+    }
+
+    // --- sharding heterogeneity ---------------------------------------------
+    header("IID vs contiguous shards (API-BCD vs WPG)");
+    for (name, kind) in [
+        ("iid", PartitionKind::Iid),
+        ("contiguous", PartitionKind::Contiguous),
+    ] {
+        let mut cfg = base();
+        cfg.partition = kind;
+        cfg.algos = vec![AlgoKind::ApiBcd, AlgoKind::Wpg];
+        cfg.name = format!("ablation_part_{name}");
+        row(name, &apibcd::run_experiment(&cfg)?);
+    }
+
+    // --- fault tolerance: lossy links ---------------------------------------
+    header("link loss (API-BCD, cpusmall; retransmission recovery)");
+    for p in [0.0, 0.05, 0.1, 0.3] {
+        let mut cfg = base();
+        if p > 0.0 {
+            cfg.faults = apibcd::sim::FaultModel::lossy(p);
+        }
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        cfg.name = format!("ablation_loss{p}");
+        row(&format!("drop={p}"), &apibcd::run_experiment(&cfg)?);
+    }
+
+    // --- scalability: network size N (the conclusion's "flexible and
+    //     scalable in terms of network size" claim) --------------------------
+    header("network size N (API-BCD vs I-BCD, cpusmall)");
+    for n in [20usize, 30, 40, 60] {
+        let mut cfg = base();
+        cfg.agents = n;
+        cfg.algos = vec![AlgoKind::IBcd, AlgoKind::ApiBcd];
+        cfg.name = format!("ablation_n{n}");
+        row(&format!("N={n}"), &apibcd::run_experiment(&cfg)?);
+    }
+
+    // --- topology family ------------------------------------------------------
+    header("topology family (API-BCD, cpusmall, N=20)");
+    for topo in ["random", "ring", "grid", "star", "complete", "small-world"] {
+        let mut cfg = base();
+        cfg.topology = topo.to_string();
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        cfg.name = format!("ablation_topo_{topo}");
+        row(topo, &apibcd::run_experiment(&cfg)?);
+    }
+
+    // --- baseline families ---------------------------------------------------
+    header("baseline families (cpusmall): incremental vs gossip vs ADMM");
+    {
+        let mut cfg = base();
+        cfg.algos = vec![
+            AlgoKind::IBcd,
+            AlgoKind::ApiBcd,
+            AlgoKind::GApiBcd,
+            AlgoKind::Wpg,
+            AlgoKind::Dgd,
+            AlgoKind::Wadmm,
+            AlgoKind::PwAdmm,
+        ];
+        cfg.name = "ablation_families".into();
+        row("all", &apibcd::run_experiment(&cfg)?);
+    }
+
+    Ok(())
+}

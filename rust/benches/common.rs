@@ -1,0 +1,73 @@
+//! Shared micro-bench harness for the `cargo bench` targets (criterion is
+//! not in the offline vendor set; this provides the same warmup +
+//! measured-iterations + percentile reporting discipline).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+/// Run `f` repeatedly: warm up for ~200 ms, then measure `iters` calls.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    // Warmup: run until 200 ms spent (at least 3 calls).
+    let warm_start = Instant::now();
+    let mut warm = 0;
+    while warm < 3 || warm_start.elapsed().as_millis() < 200 {
+        f();
+        warm += 1;
+        if warm > 10_000 {
+            break;
+        }
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: samples[samples.len() / 2],
+        p99_ns: samples[(samples.len() * 99 / 100).min(samples.len() - 1)],
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "p50", "p99"
+    );
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12}",
+        r.name,
+        r.iters,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p99_ns)
+    );
+}

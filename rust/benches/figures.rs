@@ -1,0 +1,130 @@
+//! Figure regeneration harness — one section per figure in the paper's
+//! evaluation (§5, Figs. 3–6). Prints the same series the paper plots
+//! (test NMSE / accuracy against BOTH running time and communication cost)
+//! plus the crossover table, and writes the CSVs under `results/bench/`.
+//!
+//! Shape expectations (paper-vs-ours; absolute numbers differ — synthetic
+//! data + modelled testbed — see EXPERIMENTS.md):
+//!   * API-BCD reaches the target metric in the least running time;
+//!   * I-BCD / API-BCD need no more comm per unit progress than WPG;
+//!   * curves converge for every method.
+//!
+//! `APIBCD_BENCH_FULL=1 cargo bench --bench figures` runs the full paper
+//! budgets; the default budget is trimmed for CI wall-clock.
+
+use apibcd::config::{ExperimentConfig, Preset};
+use apibcd::metrics::RunReport;
+
+fn budget(full: u64, quick: u64) -> u64 {
+    if std::env::var("APIBCD_BENCH_FULL").is_ok() {
+        full
+    } else {
+        quick
+    }
+}
+
+fn run_figure(
+    preset: Preset,
+    label: &str,
+    activations: u64,
+    target: f64,
+) -> anyhow::Result<RunReport> {
+    let mut cfg = ExperimentConfig::preset(preset);
+    cfg.stop.max_activations = activations;
+    cfg.eval_every = (activations / 40).max(1);
+    println!(
+        "\n================ {label} — {} (N={}, ξ={}, M={}, τ_IS={}, τ_API={}, α={}) ================",
+        cfg.profile, cfg.agents, cfg.xi, cfg.walks, cfg.tau_ibcd, cfg.tau_api, cfg.alpha
+    );
+    let report = apibcd::run_experiment(&cfg)?;
+
+    // (a) metric vs communication cost; (b) metric vs running time — the
+    // two sub-plots of each figure, as aligned series checkpoints.
+    for t in &report.traces {
+        println!("--- {} ---", t.name);
+        println!(
+            "{:>8} {:>12} {:>10} {:>12}",
+            "iter", "time", "comm", "metric"
+        );
+        let step = (t.points.len() / 10).max(1);
+        for p in t.points.iter().step_by(step) {
+            println!(
+                "{:>8} {:>12} {:>10} {:>12.5}",
+                p.iter,
+                apibcd::util::fmt_secs(p.time),
+                p.comm,
+                p.metric
+            );
+        }
+    }
+    println!("{}", report.summary_table(Some(target)));
+    report.write_files("results/bench")?;
+    Ok(report)
+}
+
+fn check_shape(report: &RunReport, target: f64, label: &str) {
+    use apibcd::metrics::analysis::{crossover_time, matchup};
+    let lower = report.lower_is_better;
+    let find = |name: &str| report.traces.iter().find(|t| t.name == name);
+    let (api, ibcd) = (find("API-BCD"), find("I-BCD"));
+    if let (Some(api), Some(ibcd)) = (api, ibcd) {
+        let m = matchup(api, ibcd, target, lower);
+        match m.time_speedup {
+            Some(s) if s >= 1.0 => println!(
+                "[shape OK] {label}: API-BCD {s:.1}× faster than I-BCD to the target \
+                 (comm ratio {:.2})",
+                m.comm_ratio.unwrap_or(f64::NAN)
+            ),
+            Some(s) => println!("[shape WARN] {label}: API-BCD slower ({s:.2}×)"),
+            None => match api.time_to_target(target, lower) {
+                Some(ta) => println!(
+                    "[shape OK] {label}: only API-BCD reached the target ({:.1}ms)",
+                    ta * 1e3
+                ),
+                None => println!("[shape WARN] {label}: target unreached"),
+            },
+        }
+        if let Some(x) = crossover_time(api, ibcd, lower) {
+            println!("  first API-BCD>I-BCD crossover at t = {:.2}ms", x * 1e3);
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("figure regeneration — paper Figs. 3-6");
+
+    let r = run_figure(
+        Preset::Fig3Cpusmall,
+        "Fig. 3 (regression, cpusmall)",
+        budget(4_000, 1_200),
+        0.30,
+    )?;
+    check_shape(&r, 0.30, "fig3");
+
+    let r = run_figure(
+        Preset::Fig4Cadata,
+        "Fig. 4 (regression, cadata)",
+        budget(8_000, 2_000),
+        0.30,
+    )?;
+    check_shape(&r, 0.30, "fig4");
+
+    let r = run_figure(
+        Preset::Fig5Ijcnn1,
+        "Fig. 5 (binary classification, ijcnn1)",
+        budget(8_000, 3_000),
+        0.90,
+    )?;
+    check_shape(&r, 0.90, "fig5");
+
+    let r = run_figure(
+        Preset::Fig6Usps,
+        "Fig. 6 (10-class, USPS)",
+        budget(2_000, 400),
+        0.90,
+    )?;
+    check_shape(&r, 0.90, "fig6");
+
+    println!("\nCSV series written to results/bench/ (one file per curve).");
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Hot-path micro-benchmarks: the per-activation costs that bound
+//! end-to-end throughput. Feeds EXPERIMENTS.md §Perf.
+//!
+//! Sections:
+//! * native solver: prox/grad per dataset profile;
+//! * PJRT solver: the same updates through the AOT artifacts (cached
+//!   device buffers vs cold uploads) — requires `make artifacts`;
+//! * coordinator substrate: DES event handling, token routing, recorder
+//!   evaluation.
+
+#[path = "common.rs"]
+mod common;
+
+use apibcd::data::{shard::PartitionKind, Dataset, DatasetProfile, Partition};
+use apibcd::solver::{LocalSolver, NativeSolver, PjrtSolver};
+use common::*;
+
+fn shard_for(profile: &str, seed: u64) -> apibcd::data::AgentData {
+    let ds = Dataset::load(DatasetProfile::by_name(profile).unwrap(), "/nonexistent", seed).unwrap();
+    let n = DatasetProfile::by_name(profile).unwrap().agents.max(1);
+    Partition::new(&ds, n, PartitionKind::Iid)
+        .unwrap()
+        .shards
+        .remove(0)
+}
+
+fn bench_native() {
+    print_header("native solver (per activation)");
+    for profile in ["test_ls", "cpusmall", "cadata", "ijcnn1", "usps"] {
+        let prof = DatasetProfile::by_name(profile).unwrap();
+        let shard = shard_for(profile, 1);
+        let dim = prof.dim();
+        let mut solver = NativeSolver::new(prof.task, 5);
+        let w0 = vec![0.1f32; dim];
+        let tz = vec![0.05f32; dim];
+        let r = bench(&format!("native/prox/{profile}"), 200, || {
+            let _ = solver.prox(&shard, &w0, &tz, 0.5).unwrap();
+        });
+        print_result(&r);
+        let r = bench(&format!("native/grad/{profile}"), 200, || {
+            let _ = solver.grad(&shard, &w0).unwrap();
+        });
+        print_result(&r);
+    }
+}
+
+fn bench_pjrt() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n== PJRT solver: skipped (run `make artifacts`) ==");
+        return;
+    }
+    print_header("PJRT solver (per activation, artifacts)");
+    for profile in ["test_ls", "cpusmall", "ijcnn1", "usps"] {
+        let prof = DatasetProfile::by_name(profile).unwrap();
+        let shard = shard_for(profile, 1);
+        let dim = prof.dim();
+        let mut solver = PjrtSolver::new("artifacts", profile, prof.task).unwrap();
+        let w0 = vec![0.1f32; dim];
+        let tz = vec![0.05f32; dim];
+        let r = bench(&format!("pjrt/prox/{profile}"), 100, || {
+            let _ = solver.prox(&shard, &w0, &tz, 0.5).unwrap();
+        });
+        print_result(&r);
+        let r = bench(&format!("pjrt/grad/{profile}"), 100, || {
+            let _ = solver.grad(&shard, &w0).unwrap();
+        });
+        print_result(&r);
+        // Before/after for the constant-buffer cache (EXPERIMENTS §Perf):
+        // with the cache off, x/y/mask re-upload on every activation.
+        solver.cache_inputs = false;
+        let r = bench(&format!("pjrt/prox/{profile} (no input cache)"), 100, || {
+            let _ = solver.prox(&shard, &w0, &tz, 0.5).unwrap();
+        });
+        print_result(&r);
+        solver.cache_inputs = true;
+        let stats = solver.stats();
+        println!(
+            "  engine: {} executions, exec {:.1}ms, upload {:.1}ms, compile {:.1}ms",
+            stats.executions,
+            stats.execute_secs * 1e3,
+            stats.upload_secs * 1e3,
+            stats.compile_secs * 1e3
+        );
+    }
+}
+
+fn bench_coordinator() {
+    use apibcd::algo::AlgoKind;
+    use apibcd::config::{ExperimentConfig, Preset};
+    use apibcd::sim::TimingModel;
+
+    print_header("coordinator substrate");
+
+    // Full API-BCD DES activation (native compute, fixed timing) — the
+    // end-to-end per-activation cost excluding the solver.
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.walks = 4;
+    cfg.agents = 8;
+    cfg.timing = TimingModel::Fixed(0.0);
+    cfg.eval_every = u64::MAX; // isolate the event loop from evaluation
+    cfg.stop.max_activations = 2_000;
+    let r = bench("des/api-bcd 2000 activations (no eval)", 20, || {
+        let _ = apibcd::run_experiment(&cfg).unwrap();
+    });
+    print_result(&r);
+    println!(
+        "  → {:.2}µs per activation",
+        r.mean_ns / 1e3 / cfg.stop.max_activations as f64
+    );
+
+    cfg.eval_every = 10;
+    let r = bench("des/api-bcd 2000 activations (eval@10)", 10, || {
+        let _ = apibcd::run_experiment(&cfg).unwrap();
+    });
+    print_result(&r);
+
+    // Topology + routing.
+    let mut rng = apibcd::util::rng::Rng::new(7);
+    let r = bench("graph/random_connected N=50 ξ=0.7", 200, || {
+        let g = apibcd::graph::Topology::random_connected(50, 0.7, &mut rng);
+        std::hint::black_box(g.num_edges());
+    });
+    print_result(&r);
+    let g = apibcd::graph::Topology::random_connected(50, 0.7, &mut rng);
+    let r = bench("graph/traversal_cycle N=50", 200, || {
+        std::hint::black_box(g.traversal_cycle().len());
+    });
+    print_result(&r);
+    let r = bench("graph/metropolis_next x1000", 200, || {
+        let mut at = 0;
+        for _ in 0..1000 {
+            at = g.metropolis_next(at, &mut rng);
+        }
+        std::hint::black_box(at);
+    });
+    print_result(&r);
+}
+
+fn main() {
+    println!("apibcd hot-path benchmarks (hand-rolled harness; criterion unavailable offline)");
+    bench_native();
+    bench_pjrt();
+    bench_coordinator();
+}

@@ -1,0 +1,192 @@
+//! API-BCD — Asynchronous Parallel Incremental BCD (paper Algorithm 2) and
+//! its gradient-based variant gAPI-BCD (Remark 1, eq. 15, Theorem 3).
+//!
+//! `M` tokens walk the graph simultaneously. Each agent keeps a local copy
+//! `ẑ_{i,m}` of every token; on the arrival of token `m = i_m` at agent
+//! `i = i_k`:
+//!
+//! 1. `ẑ_{i,m} ← z_m` (Alg. 2 line 3),
+//! 2. `x_i ← argmin f_i(x) + (τ/2) Σ_{m'} ‖x − ẑ_{i,m'}‖²` (eq. 12a) —
+//!    or the linearized closed form (eq. 15) for gAPI-BCD:
+//!    `x⁺ = (ρ·x + τ·Σ_{m'} ẑ_{i,m'} − ∇f_i(x)) / (ρ + τM)`,
+//! 3. `z_m ← z_m + (x_i⁺ − x_i)/N` (eq. 12b), `ẑ_{i,m} ← z_m` (eq. 12c),
+//! 4. forward `z_m` to the next agent on walk `m`.
+//!
+//! The asynchrony is simulated with the DES: each token is an independent
+//! event stream; an agent busy computing makes a concurrently-arriving
+//! token queue (FIFO) until it frees — the interaction that distinguishes
+//! parallel walks from M independent runs. The virtual counter `k` counts
+//! activations across all walks (paper footnote 1).
+
+use super::common::{mean_vec, Recorder, Router, should_stop};
+use super::{AlgoContext, AlgoKind, Algorithm};
+use crate::linalg::axpy;
+use crate::metrics::Trace;
+use crate::sim::{AgentAvailability, EventQueue};
+
+pub struct ApiBcd {
+    /// false → API-BCD (Alg. 2); true → gAPI-BCD (eq. 15).
+    pub gradient_variant: bool,
+}
+
+/// One token-service record (the Fig. 2 timeline view).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WalkEvent {
+    pub k: u64,
+    pub token: usize,
+    pub agent: usize,
+    pub arrival: f64,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl ApiBcd {
+    /// Run and also return the walk-event log (used by `repro timeline` to
+    /// reproduce the Fig. 2 local-copy evolution illustration).
+    pub fn run_with_events(
+        &self,
+        ctx: &mut AlgoContext,
+    ) -> anyhow::Result<(Trace, Vec<WalkEvent>)> {
+        let dim = ctx.dim();
+        let n = ctx.n();
+        let m_walks = ctx.cfg.walks.max(1);
+        let kind = if self.gradient_variant {
+            AlgoKind::GApiBcd
+        } else {
+            AlgoKind::ApiBcd
+        };
+        let tau = ctx.cfg.tau_for(kind) as f32;
+        let tau_m = tau * m_walks as f32;
+        let mut rng = ctx.rng.fork(2);
+
+        // gAPI-BCD damping: Theorem 3 needs τM/2 + ρ − L/2 > 0 for descent.
+        // We floor the configured ρ at each agent's smoothness bound L̂
+        // (‖X‖²_F-based, the same bound the prox step sizes use) so the
+        // linearized update is stable for any configuration.
+        let rhos: Vec<f32> = if self.gradient_variant {
+            ctx.shards
+                .iter()
+                .map(|s| {
+                    let d = s.active.max(1) as f32;
+                    let lhat = match ctx.task {
+                        crate::model::Task::Regression => s.frob_sq() / d,
+                        crate::model::Task::Binary => s.frob_sq() / (4.0 * d),
+                        crate::model::Task::Multiclass(_) => s.frob_sq() / (2.0 * d),
+                    };
+                    (ctx.cfg.rho as f32).max(lhat)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        // State: blocks x_i, tokens z_m, local copies ẑ_{i,m} (all zero —
+        // Alg. 2 line 1).
+        let mut xs = vec![vec![0.0f32; dim]; n];
+        let mut zs = vec![vec![0.0f32; dim]; m_walks];
+        let mut zhat = vec![vec![vec![0.0f32; dim]; m_walks]; n];
+
+        let mut router = Router::new(ctx.cfg.routing, ctx.topo, m_walks);
+        let mut queue = EventQueue::new();
+        for m in 0..m_walks {
+            let at = router.start(m, ctx.topo, &mut rng);
+            queue.push(0.0, m, at);
+        }
+        let mut avail = AgentAvailability::new(n);
+        let faults = ctx.cfg.faults;
+        let mut membership = crate::sim::Membership::new(n, faults, &mut rng);
+
+        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
+        let mut recorder = Recorder::new(kind.name(), ctx.cfg.eval_every, tau as f64);
+        let (mut comm, mut k) = (0u64, 0u64);
+        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, &zs, &mean_vec(&xs));
+
+        let mut events = Vec::new();
+        let mut tzsum = vec![0.0f32; dim];
+
+        while let Some(ev) = queue.pop() {
+            if should_stop(&ctx.cfg.stop, k, ev.time, comm) {
+                break;
+            }
+            let (i, m) = (ev.agent, ev.token);
+
+            // (1) refresh the local copy from the arriving token.
+            zhat[i][m].copy_from_slice(&zs[m]);
+
+            // (2) block update against Σ_{m'} ẑ_{i,m'}.
+            tzsum.fill(0.0);
+            for zm in &zhat[i] {
+                axpy(tau, zm, &mut tzsum);
+            }
+            let (x_new, wall) = if self.gradient_variant {
+                // eq. (15) closed form.
+                let g = ctx.solver.grad(&ctx.shards[i], &xs[i])?;
+                let rho = rhos[i];
+                let denom = rho + tau_m;
+                let mut w = vec![0.0f32; dim];
+                for j in 0..dim {
+                    w[j] = (rho * xs[i][j] + tzsum[j] - g.w[j]) / denom;
+                }
+                (w, g.wall_secs)
+            } else {
+                let out = ctx.solver.prox(&ctx.shards[i], &xs[i], &tzsum, tau_m)?;
+                (out.w, out.wall_secs)
+            };
+            let compute = ctx.cfg.timing.duration(wall, &mut rng);
+            let (start, end) = avail.serve(i, ev.time, compute);
+
+            // (3) token + copy update (eqs. 12b, 12c).
+            for j in 0..dim {
+                zs[m][j] += (x_new[j] - xs[i][j]) / n as f32;
+            }
+            zhat[i][m].copy_from_slice(&zs[m]);
+            tracker.block_updated(i, &xs[i], &x_new);
+            xs[i] = x_new;
+            k += 1;
+            events.push(WalkEvent {
+                k,
+                token: m,
+                agent: i,
+                arrival: ev.time,
+                start,
+                end,
+            });
+
+            // (4) forward token m (with fault handling: retransmissions on
+            // lossy links, re-routing around dropped agents).
+            let preferred = router.next(m, i, ctx.topo, &mut rng);
+            let next = if faults.is_none() {
+                preferred
+            } else {
+                membership.maybe_drop(i, end, &mut rng);
+                membership.route_live(ctx.topo, i, preferred, end, &mut rng)
+            };
+            let mut t_next = end;
+            if next != i {
+                let (attempts, retry_delay) = faults.transmit(&mut rng);
+                comm += attempts;
+                t_next += retry_delay + ctx.cfg.latency.sample(&mut rng);
+            }
+            queue.push(t_next, m, next);
+
+            if recorder.due(k) {
+                recorder.record(ctx, k, end, comm, &mut tracker, &xs, &zs, &mean_vec(&xs));
+            }
+        }
+        Ok((recorder.finish(), events))
+    }
+}
+
+impl Algorithm for ApiBcd {
+    fn kind(&self) -> AlgoKind {
+        if self.gradient_variant {
+            AlgoKind::GApiBcd
+        } else {
+            AlgoKind::ApiBcd
+        }
+    }
+
+    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
+        self.run_with_events(ctx).map(|(t, _)| t)
+    }
+}

@@ -1,0 +1,98 @@
+//! DGD — Decentralized Gradient Descent [12], the gossip baseline the
+//! paper's introduction argues against on communication cost.
+//!
+//! Synchronous rounds: every agent exchanges its model with *all* neighbors
+//! (2|E| unicast transmissions per round under the paper's cost model),
+//! then updates `x_i ← Σ_j W_ij x_j − α ∇f_i(x_i)` with Metropolis weights.
+//! Per-round simulated time = max over agents of compute time + the round's
+//! slowest link (synchronization barrier).
+
+use super::common::{mean_vec, Recorder, should_stop};
+use super::{AlgoContext, AlgoKind, Algorithm};
+use crate::metrics::Trace;
+
+pub struct Dgd;
+
+impl Algorithm for Dgd {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::Dgd
+    }
+
+    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
+        let dim = ctx.dim();
+        let n = ctx.n();
+        // DGD's stability window is α < 2/L; the figure presets tune α for
+        // WPG (token-gradient steps against z), which can exceed it. Clamp
+        // to the per-agent smoothness bound so the baseline never diverges
+        // on a preset tuned for a different method.
+        let l_max = ctx
+            .shards
+            .iter()
+            .map(|s| {
+                let d = s.active.max(1) as f32;
+                match ctx.task {
+                    crate::model::Task::Regression => s.frob_sq() / d,
+                    crate::model::Task::Binary => s.frob_sq() / (4.0 * d),
+                    crate::model::Task::Multiclass(_) => s.frob_sq() / (2.0 * d),
+                }
+            })
+            .fold(0.0f32, f32::max);
+        let alpha = (ctx.cfg.alpha as f32).min(0.9 / l_max.max(1e-6));
+        let mut rng = ctx.rng.fork(4);
+
+        let mut xs = vec![vec![0.0f32; dim]; n];
+        // Metropolis mixing rows (agent-major), computed once.
+        let weights: Vec<Vec<(usize, f64)>> =
+            (0..n).map(|i| ctx.topo.metropolis_row(i)).collect();
+
+        // DGD has no tokens; the recorder's z-slot gets the agent mean so
+        // the penalty-objective column stays defined (τ from the config).
+        let tau = ctx.cfg.tau_ibcd;
+        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
+        let mut recorder = Recorder::new("DGD", ctx.cfg.eval_every, tau);
+        let (mut time, mut comm, mut k) = (0.0f64, 0u64, 0u64);
+        let zbar = vec![mean_vec(&xs)];
+        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, &zbar, &zbar[0]);
+
+        // One DGD round = N activations on the paper's virtual counter
+        // (every agent updates once).
+        while !should_stop(&ctx.cfg.stop, k, time, comm) {
+            // Gradient phase (parallel across agents → time = max).
+            let mut grads = Vec::with_capacity(n);
+            let mut max_compute = 0.0f64;
+            for i in 0..n {
+                let g = ctx.solver.grad(&ctx.shards[i], &xs[i])?;
+                max_compute = max_compute.max(ctx.cfg.timing.duration(g.wall_secs, &mut rng));
+                grads.push(g.w);
+            }
+            // Exchange phase: both directions on every link.
+            comm += 2 * ctx.topo.num_edges() as u64;
+            let mut max_latency = 0.0f64;
+            for _ in 0..ctx.topo.num_edges() {
+                max_latency = max_latency.max(ctx.cfg.latency.sample(&mut rng));
+            }
+            time += max_compute + max_latency;
+
+            // Mix + descend.
+            let mut new_xs = vec![vec![0.0f32; dim]; n];
+            for i in 0..n {
+                for &(j, w) in &weights[i] {
+                    crate::linalg::axpy(w as f32, &xs[j], &mut new_xs[i]);
+                }
+                crate::linalg::axpy(-alpha, &grads[i], &mut new_xs[i]);
+            }
+            for i in 0..n {
+                tracker.block_updated(i, &xs[i], &new_xs[i]);
+            }
+            xs = new_xs;
+            k += n as u64;
+
+            if recorder.due(k) || true {
+                // Rounds are coarse (N activations); record every round.
+                let zbar = vec![mean_vec(&xs)];
+                recorder.record(ctx, k, time, comm, &mut tracker, &xs, &zbar, &zbar[0]);
+            }
+        }
+        Ok(recorder.finish())
+    }
+}

@@ -1,0 +1,100 @@
+//! Experiment driver: config → data → topology → solver → algorithms →
+//! report. This is the library's main entry point (`apibcd::run_experiment`).
+
+use super::{make, AlgoContext};
+use crate::config::{ExperimentConfig, SolverChoice};
+use crate::data::{Dataset, DatasetProfile, Partition};
+use crate::graph::Topology;
+use crate::metrics::RunReport;
+use crate::model::Problem;
+use crate::solver::{LocalSolver, NativeSolver, PjrtSolver};
+use crate::util::rng::Rng;
+
+/// Resolved (data, topology, problem) for a config — shared by the DES
+/// driver, the thread executor, and the benches.
+pub struct Workload {
+    pub profile: DatasetProfile,
+    pub dataset: Dataset,
+    pub partition: Partition,
+    pub topo: Topology,
+    pub problem: Problem,
+}
+
+impl Workload {
+    pub fn build(cfg: &ExperimentConfig) -> anyhow::Result<Workload> {
+        let profile = DatasetProfile::by_name(&cfg.profile)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset profile '{}'", cfg.profile))?;
+        let dataset = Dataset::load(profile, &cfg.data_dir, cfg.seed)?;
+        let partition = Partition::new(&dataset, cfg.agents, cfg.partition)?;
+        let mut rng = Rng::new(cfg.seed ^ 0x70_70);
+        let topo = Topology::by_kind(&cfg.topology, cfg.agents.max(2), cfg.xi, &mut rng)?;
+        let problem = Problem::from_dataset(&dataset);
+        Ok(Workload {
+            profile,
+            dataset,
+            partition,
+            topo,
+            problem,
+        })
+    }
+}
+
+/// Build the configured solver (artifact-backed when possible).
+pub fn build_solver(
+    cfg: &ExperimentConfig,
+    profile: DatasetProfile,
+) -> anyhow::Result<Box<dyn LocalSolver>> {
+    let manifest_path = format!("{}/manifest.json", cfg.artifacts_dir);
+    let artifacts_present = std::path::Path::new(&manifest_path).exists();
+    match cfg.solver {
+        SolverChoice::Native => Ok(Box::new(NativeSolver::new(profile.task, cfg.inner_k))),
+        SolverChoice::Pjrt => Ok(Box::new(PjrtSolver::new(
+            &cfg.artifacts_dir,
+            profile.name,
+            profile.task,
+        )?)),
+        SolverChoice::Auto => {
+            if artifacts_present {
+                match PjrtSolver::new(&cfg.artifacts_dir, profile.name, profile.task) {
+                    Ok(s) => Ok(Box::new(s)),
+                    Err(e) => {
+                        eprintln!(
+                            "note: PJRT solver unavailable for '{}' ({e}); using native",
+                            profile.name
+                        );
+                        Ok(Box::new(NativeSolver::new(profile.task, cfg.inner_k)))
+                    }
+                }
+            } else {
+                Ok(Box::new(NativeSolver::new(profile.task, cfg.inner_k)))
+            }
+        }
+    }
+}
+
+/// Run every configured algorithm on the workload; one trace each.
+pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunReport> {
+    let workload = Workload::build(cfg)?;
+    let mut solver = build_solver(cfg, workload.profile)?;
+
+    let mut traces = Vec::new();
+    for &kind in &cfg.algos {
+        let algo = make(kind);
+        let mut ctx = AlgoContext {
+            topo: &workload.topo,
+            shards: &workload.partition.shards,
+            problem: &workload.problem,
+            task: workload.profile.task,
+            cfg,
+            solver: solver.as_mut(),
+            rng: Rng::new(cfg.seed ^ (kind as u64) << 8),
+        };
+        traces.push(algo.run(&mut ctx)?);
+    }
+    Ok(RunReport {
+        experiment: cfg.name.clone(),
+        traces,
+        metric_name: workload.profile.task.metric_name(),
+        lower_is_better: workload.profile.task.lower_is_better(),
+    })
+}

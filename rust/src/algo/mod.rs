@@ -1,0 +1,152 @@
+//! The algorithm family: the paper's contributions (I-BCD, API-BCD,
+//! gAPI-BCD) plus the baselines its evaluation and motivation compare
+//! against (WPG; gossip DGD; incremental-ADMM WADMM / PW-ADMM).
+//!
+//! Every algorithm runs against the same [`AlgoContext`]: the topology, the
+//! per-agent shards, a [`LocalSolver`] (PJRT artifacts or native), the
+//! latency/timing models, and a deterministic RNG — and produces a
+//! [`Trace`] of the test metric against simulated time and communication
+//! cost (the two x-axes of Figs. 3–6).
+
+pub mod api_bcd;
+pub mod common;
+pub mod dgd;
+pub mod driver;
+pub mod i_bcd;
+pub mod pwadmm;
+pub mod replicate;
+pub mod wadmm;
+pub mod wpg;
+
+use crate::config::ExperimentConfig;
+use crate::data::AgentData;
+use crate::graph::Topology;
+use crate::metrics::Trace;
+use crate::model::{Problem, Task};
+use crate::solver::LocalSolver;
+use crate::util::rng::Rng;
+
+/// Algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// Incremental BCD (Alg. 1) — single token, proximal block update.
+    IBcd,
+    /// Asynchronous parallel incremental BCD (Alg. 2) — M tokens,
+    /// local copies ẑ_{i,m}.
+    ApiBcd,
+    /// Gradient-based API-BCD (Remark 1 / eq. 15) — linearized update.
+    GApiBcd,
+    /// Walk proximal gradient [17] — the paper's compared baseline.
+    Wpg,
+    /// Decentralized gradient descent [12] — gossip baseline.
+    Dgd,
+    /// Walkman / random-walk ADMM [16].
+    Wadmm,
+    /// Parallel random-walk ADMM [18].
+    PwAdmm,
+}
+
+impl AlgoKind {
+    pub fn by_name(s: &str) -> Option<AlgoKind> {
+        match s {
+            "i-bcd" | "ibcd" => Some(AlgoKind::IBcd),
+            "api-bcd" | "apibcd" => Some(AlgoKind::ApiBcd),
+            "gapi-bcd" | "gapibcd" => Some(AlgoKind::GApiBcd),
+            "wpg" => Some(AlgoKind::Wpg),
+            "dgd" => Some(AlgoKind::Dgd),
+            "wadmm" | "walkman" => Some(AlgoKind::Wadmm),
+            "pw-admm" | "pwadmm" => Some(AlgoKind::PwAdmm),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::IBcd => "I-BCD",
+            AlgoKind::ApiBcd => "API-BCD",
+            AlgoKind::GApiBcd => "gAPI-BCD",
+            AlgoKind::Wpg => "WPG",
+            AlgoKind::Dgd => "DGD",
+            AlgoKind::Wadmm => "WADMM",
+            AlgoKind::PwAdmm => "PW-ADMM",
+        }
+    }
+
+    pub fn all() -> &'static [AlgoKind] {
+        &[
+            AlgoKind::IBcd,
+            AlgoKind::ApiBcd,
+            AlgoKind::GApiBcd,
+            AlgoKind::Wpg,
+            AlgoKind::Dgd,
+            AlgoKind::Wadmm,
+            AlgoKind::PwAdmm,
+        ]
+    }
+}
+
+/// Everything an algorithm needs to run one experiment.
+pub struct AlgoContext<'a> {
+    pub topo: &'a Topology,
+    pub shards: &'a [AgentData],
+    pub problem: &'a Problem,
+    pub task: Task,
+    pub cfg: &'a ExperimentConfig,
+    pub solver: &'a mut dyn LocalSolver,
+    pub rng: Rng,
+}
+
+impl<'a> AlgoContext<'a> {
+    /// Flattened model dimension p·c.
+    pub fn dim(&self) -> usize {
+        self.shards[0].features * self.shards[0].classes
+    }
+
+    pub fn n(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// A runnable decentralized-learning algorithm.
+pub trait Algorithm {
+    fn kind(&self) -> AlgoKind;
+
+    /// Execute until the config's stop rule trips; return the metric trace.
+    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace>;
+}
+
+/// Instantiate an algorithm by kind.
+pub fn make(kind: AlgoKind) -> Box<dyn Algorithm> {
+    match kind {
+        AlgoKind::IBcd => Box::new(i_bcd::IBcd),
+        AlgoKind::ApiBcd => Box::new(api_bcd::ApiBcd { gradient_variant: false }),
+        AlgoKind::GApiBcd => Box::new(api_bcd::ApiBcd { gradient_variant: true }),
+        AlgoKind::Wpg => Box::new(wpg::Wpg),
+        AlgoKind::Dgd => Box::new(dgd::Dgd),
+        AlgoKind::Wadmm => Box::new(wadmm::Wadmm),
+        AlgoKind::PwAdmm => Box::new(pwadmm::PwAdmm),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_round_trip() {
+        for &k in AlgoKind::all() {
+            let name = match k {
+                AlgoKind::IBcd => "i-bcd",
+                AlgoKind::ApiBcd => "api-bcd",
+                AlgoKind::GApiBcd => "gapi-bcd",
+                AlgoKind::Wpg => "wpg",
+                AlgoKind::Dgd => "dgd",
+                AlgoKind::Wadmm => "wadmm",
+                AlgoKind::PwAdmm => "pw-admm",
+            };
+            assert_eq!(AlgoKind::by_name(name), Some(k));
+            assert_eq!(make(k).kind(), k);
+        }
+        assert_eq!(AlgoKind::by_name("sgd"), None);
+    }
+}

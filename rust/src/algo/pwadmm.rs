@@ -1,0 +1,103 @@
+//! PW-ADMM — Parallel random-walk ADMM [18], the multi-walk incremental
+//! baseline that inspired API-BCD's parallel-token design.
+//!
+//! `M` Walkman-style tokens walk simultaneously; each agent keeps a dual
+//! `y_i` and local copies `ẑ_{i,m}` of every token. On token `m`'s arrival
+//! at agent `i` we follow [18]'s structure (x-update against the *mean* of
+//! the local token copies, Walkman-style dual and token updates):
+//!
+//! ```text
+//! ẑ_{i,m} ← z_m
+//! v        = mean_m'(ẑ_{i,m'}) − y_i/β
+//! x_i⁺     = argmin f_i(x) + (β/2)‖x − v‖²
+//! y_i⁺     = y_i + β (x_i⁺ − mean_m'(ẑ_{i,m'}))
+//! z_m⁺     = z_m + (1/N)[(x_i⁺ + y_i⁺/β) − (x_i + y_i/β)]
+//! ```
+//!
+//! Asynchrony semantics (event queue + agent busy-locks) are shared with
+//! API-BCD. See DESIGN.md §3 for how this maps to [18].
+
+use super::common::{mean_vec, Recorder, Router, should_stop};
+use super::{AlgoContext, AlgoKind, Algorithm};
+use crate::metrics::Trace;
+use crate::sim::{AgentAvailability, EventQueue};
+
+pub struct PwAdmm;
+
+impl Algorithm for PwAdmm {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::PwAdmm
+    }
+
+    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
+        let dim = ctx.dim();
+        let n = ctx.n();
+        let m_walks = ctx.cfg.walks.max(1);
+        let beta = ctx.cfg.beta as f32;
+        let mut rng = ctx.rng.fork(6);
+
+        let mut xs = vec![vec![0.0f32; dim]; n];
+        let mut ys = vec![vec![0.0f32; dim]; n];
+        let mut zs = vec![vec![0.0f32; dim]; m_walks];
+        let mut zhat = vec![vec![vec![0.0f32; dim]; m_walks]; n];
+
+        let mut router = Router::new(ctx.cfg.routing, ctx.topo, m_walks);
+        let mut queue = EventQueue::new();
+        for m in 0..m_walks {
+            queue.push(0.0, m, router.start(m, ctx.topo, &mut rng));
+        }
+        let mut avail = AgentAvailability::new(n);
+
+        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
+        let mut recorder = Recorder::new("PW-ADMM", ctx.cfg.eval_every, beta as f64);
+        let (mut comm, mut k) = (0u64, 0u64);
+        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, &zs, &mean_vec(&xs));
+
+        let mut tzsum = vec![0.0f32; dim];
+        while let Some(ev) = queue.pop() {
+            if should_stop(&ctx.cfg.stop, k, ev.time, comm) {
+                break;
+            }
+            let (i, m) = (ev.agent, ev.token);
+            zhat[i][m].copy_from_slice(&zs[m]);
+
+            // v = mean(ẑ) − y/β; prox with M=1 at center v.
+            let zbar = mean_vec(&zhat[i]);
+            for j in 0..dim {
+                tzsum[j] = beta * (zbar[j] - ys[i][j] / beta);
+            }
+            let out = ctx.solver.prox(&ctx.shards[i], &xs[i], &tzsum, beta)?;
+            let compute = ctx.cfg.timing.duration(out.wall_secs, &mut rng);
+            let (_, end) = avail.serve(i, ev.time, compute);
+
+            let x_new = out.w;
+            let mut y_new = vec![0.0f32; dim];
+            for j in 0..dim {
+                y_new[j] = ys[i][j] + beta * (x_new[j] - zbar[j]);
+            }
+            for j in 0..dim {
+                let after = x_new[j] + y_new[j] / beta;
+                let before = xs[i][j] + ys[i][j] / beta;
+                zs[m][j] += (after - before) / n as f32;
+            }
+            zhat[i][m].copy_from_slice(&zs[m]);
+            tracker.block_updated(i, &xs[i], &x_new);
+            xs[i] = x_new;
+            ys[i] = y_new;
+            k += 1;
+
+            let next = router.next(m, i, ctx.topo, &mut rng);
+            let mut t_next = end;
+            if next != i {
+                comm += 1;
+                t_next += ctx.cfg.latency.sample(&mut rng);
+            }
+            queue.push(t_next, m, next);
+
+            if recorder.due(k) {
+                recorder.record(ctx, k, end, comm, &mut tracker, &xs, &zs, &mean_vec(&xs));
+            }
+        }
+        Ok(recorder.finish())
+    }
+}

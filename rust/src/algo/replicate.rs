@@ -1,0 +1,151 @@
+//! Multi-seed replication: run one configuration across independent seeds
+//! and report mean ± std of the figure quantities. The paper plots single
+//! runs; error bars are what make the "who wins" claims trustworthy, so
+//! the sweep CLI and the ablation benches go through this.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::RunReport;
+
+/// Aggregate statistics for one (algorithm, config) cell.
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    pub algo: String,
+    pub runs: usize,
+    pub metric_mean: f64,
+    pub metric_std: f64,
+    pub time_mean: f64,
+    pub comm_mean: f64,
+    /// Mean time-to-target over the runs that reached it (count attached).
+    pub ttt_mean: Option<f64>,
+    pub ttt_reached: usize,
+}
+
+fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n.max(1.0);
+    (mean, var.sqrt())
+}
+
+/// Run `cfg` under `seeds.len()` independent seeds and aggregate per
+/// algorithm. `target` feeds the time-to-target column.
+pub fn replicate(
+    cfg: &ExperimentConfig,
+    seeds: &[u64],
+    target: Option<f64>,
+) -> anyhow::Result<Vec<CellStats>> {
+    anyhow::ensure!(!seeds.is_empty(), "need at least one seed");
+    let mut reports: Vec<RunReport> = Vec::with_capacity(seeds.len());
+    for &seed in seeds {
+        let mut c = cfg.clone();
+        c.seed = seed;
+        reports.push(crate::algo::driver::run_experiment(&c)?);
+    }
+    let lower = reports[0].lower_is_better;
+    let n_algos = reports[0].traces.len();
+    let mut out = Vec::with_capacity(n_algos);
+    for a in 0..n_algos {
+        let metrics: Vec<f64> = reports.iter().map(|r| r.traces[a].last_metric()).collect();
+        let times: Vec<f64> = reports
+            .iter()
+            .map(|r| r.traces[a].last().map(|p| p.time).unwrap_or(0.0))
+            .collect();
+        let comms: Vec<f64> = reports
+            .iter()
+            .map(|r| r.traces[a].last().map(|p| p.comm as f64).unwrap_or(0.0))
+            .collect();
+        let (metric_mean, metric_std) = mean_std(&metrics);
+        let (time_mean, _) = mean_std(&times);
+        let (comm_mean, _) = mean_std(&comms);
+        let (ttt_mean, ttt_reached) = match target {
+            None => (None, 0),
+            Some(t) => {
+                let hits: Vec<f64> = reports
+                    .iter()
+                    .filter_map(|r| r.traces[a].time_to_target(t, lower))
+                    .collect();
+                if hits.is_empty() {
+                    (None, 0)
+                } else {
+                    (Some(mean_std(&hits).0), hits.len())
+                }
+            }
+        };
+        out.push(CellStats {
+            algo: reports[0].traces[a].name.clone(),
+            runs: seeds.len(),
+            metric_mean,
+            metric_std,
+            time_mean,
+            comm_mean,
+            ttt_mean,
+            ttt_reached,
+        });
+    }
+    Ok(out)
+}
+
+/// Console table for a replicated cell.
+pub fn format_stats(stats: &[CellStats]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:>5} {:>20} {:>12} {:>12} {:>18}\n",
+        "algorithm", "runs", "metric (mean±std)", "sim time", "comm", "time-to-target"
+    ));
+    for s in stats {
+        out.push_str(&format!(
+            "{:<12} {:>5} {:>13.5}±{:<6.5} {:>12} {:>12.0} {:>18}\n",
+            s.algo,
+            s.runs,
+            s.metric_mean,
+            s.metric_std,
+            crate::util::fmt_secs(s.time_mean),
+            s.comm_mean,
+            match s.ttt_mean {
+                Some(t) => format!("{} ({}/{})", crate::util::fmt_secs(t), s.ttt_reached, s.runs),
+                None => "—".to_string(),
+            }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::AlgoKind;
+    use crate::config::Preset;
+
+    #[test]
+    fn replicates_and_aggregates() {
+        let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+        cfg.algos = vec![AlgoKind::IBcd, AlgoKind::ApiBcd];
+        cfg.stop.max_activations = 150;
+        let stats = replicate(&cfg, &[1, 2, 3], Some(0.5)).unwrap();
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert_eq!(s.runs, 3);
+            assert!(s.metric_mean.is_finite());
+            assert!(s.metric_std >= 0.0);
+        }
+        let table = format_stats(&stats);
+        assert!(table.contains("I-BCD"));
+    }
+
+    #[test]
+    fn seed_variance_is_nonzero_for_random_routing() {
+        let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+        cfg.routing = crate::config::RoutingRule::Uniform;
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        cfg.stop.max_activations = 120;
+        let stats = replicate(&cfg, &[1, 2, 3, 4], None).unwrap();
+        // Different walks → different final metric (almost surely).
+        assert!(stats[0].metric_std > 0.0);
+    }
+
+    #[test]
+    fn empty_seed_list_rejected() {
+        let cfg = ExperimentConfig::preset(Preset::TestLs);
+        assert!(replicate(&cfg, &[], None).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! WADMM (Walkman) — single random-walk ADMM [16], one of the incremental
+//! baselines the paper's related-work positions against.
+//!
+//! The token `z` walks the graph; each agent keeps a dual variable `y_i`.
+//! Activation at agent `i` (Walkman, primal-solve variant):
+//!
+//! ```text
+//! x_i⁺ = argmin f_i(x) + (β/2)‖x − (zᵏ − y_i/β)‖²
+//! y_i⁺ = y_i + β (x_i⁺ − zᵏ)
+//! z⁺   = zᵏ + (1/N) [(x_i⁺ + y_i⁺/β) − (x_i + y_i/β)]
+//! ```
+//!
+//! The x-update is exactly our proximal kernel with M = 1, center
+//! `v = z − y/β` (tzsum = β·v, tau_m = β) — artifact reuse by construction.
+
+use super::common::{Recorder, Router, should_stop};
+use super::{AlgoContext, AlgoKind, Algorithm};
+use crate::metrics::Trace;
+
+pub struct Wadmm;
+
+impl Algorithm for Wadmm {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::Wadmm
+    }
+
+    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
+        let dim = ctx.dim();
+        let n = ctx.n();
+        let beta = ctx.cfg.beta as f32;
+        let mut rng = ctx.rng.fork(5);
+
+        let mut xs = vec![vec![0.0f32; dim]; n];
+        let mut ys = vec![vec![0.0f32; dim]; n];
+        let mut z = vec![0.0f32; dim];
+
+        let mut router = Router::new(ctx.cfg.routing, ctx.topo, 1);
+        let mut agent = router.start(0, ctx.topo, &mut rng);
+
+        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
+        let mut recorder = Recorder::new("WADMM", ctx.cfg.eval_every, beta as f64);
+        let (mut time, mut comm, mut k) = (0.0f64, 0u64, 0u64);
+        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, std::slice::from_ref(&z), &z);
+
+        let mut tzsum = vec![0.0f32; dim];
+        while !should_stop(&ctx.cfg.stop, k, time, comm) {
+            let i = agent;
+            // x-update: prox at center v = z − y_i/β.
+            for j in 0..dim {
+                tzsum[j] = beta * (z[j] - ys[i][j] / beta);
+            }
+            let out = ctx.solver.prox(&ctx.shards[i], &xs[i], &tzsum, beta)?;
+            let compute = ctx.cfg.timing.duration(out.wall_secs, &mut rng);
+
+            // y- and z-updates.
+            let x_new = out.w;
+            let mut y_new = vec![0.0f32; dim];
+            for j in 0..dim {
+                y_new[j] = ys[i][j] + beta * (x_new[j] - z[j]);
+            }
+            for j in 0..dim {
+                let after = x_new[j] + y_new[j] / beta;
+                let before = xs[i][j] + ys[i][j] / beta;
+                z[j] += (after - before) / n as f32;
+            }
+            tracker.block_updated(i, &xs[i], &x_new);
+            xs[i] = x_new;
+            ys[i] = y_new;
+            time += compute;
+            k += 1;
+
+            let next = router.next(0, i, ctx.topo, &mut rng);
+            if next != i {
+                comm += 1;
+                time += ctx.cfg.latency.sample(&mut rng);
+            }
+            agent = next;
+
+            if recorder.due(k) {
+                recorder.record(ctx, k, time, comm, &mut tracker, &xs, std::slice::from_ref(&z), &z);
+            }
+        }
+        Ok(recorder.finish())
+    }
+}

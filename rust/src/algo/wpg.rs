@@ -1,0 +1,73 @@
+//! WPG — Walk Proximal Gradient [17], the baseline the paper's figures
+//! compare against (eq. 19).
+//!
+//! A single token walks a deterministic cycle; the active agent takes a
+//! gradient step *from the token*: `x_i ← zᵏ − α ∇f_i(zᵏ)`, then updates
+//! the token `z ← z + (x_i⁺ − x_i)/N` and passes it on. Where I-BCD solves
+//! a full proximal subproblem per activation, WPG does one gradient
+//! evaluation — cheaper per step, slower per unit progress.
+
+use super::common::{Recorder, Router, should_stop};
+use super::{AlgoContext, AlgoKind, Algorithm};
+use crate::config::RoutingRule;
+use crate::metrics::Trace;
+
+pub struct Wpg;
+
+impl Algorithm for Wpg {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::Wpg
+    }
+
+    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
+        let dim = ctx.dim();
+        let n = ctx.n();
+        let alpha = ctx.cfg.alpha as f32;
+        let mut rng = ctx.rng.fork(3);
+
+        let mut xs = vec![vec![0.0f32; dim]; n];
+        let mut z = vec![0.0f32; dim];
+
+        // WPG is defined on a predetermined cycle ([17]'s Hamiltonian
+        // assumption) — force Cycle routing regardless of the config rule.
+        let mut router = Router::new(RoutingRule::Cycle, ctx.topo, 1);
+        let mut agent = router.start(0, ctx.topo, &mut rng);
+
+        // The penalty objective for WPG's trace uses the paper's τ_IS so the
+        // objective column is comparable with I-BCD's.
+        let tau = ctx.cfg.tau_ibcd;
+        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
+        let mut recorder = Recorder::new("WPG", ctx.cfg.eval_every, tau);
+        let (mut time, mut comm, mut k) = (0.0f64, 0u64, 0u64);
+        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, std::slice::from_ref(&z), &z);
+
+        while !should_stop(&ctx.cfg.stop, k, time, comm) {
+            // eq. (19): x_i ← zᵏ − α ∇f_i(zᵏ).
+            let g = ctx.solver.grad(&ctx.shards[agent], &z)?;
+            let compute = ctx.cfg.timing.duration(g.wall_secs, &mut rng);
+            let mut x_new = vec![0.0f32; dim];
+            for j in 0..dim {
+                x_new[j] = z[j] - alpha * g.w[j];
+            }
+            for j in 0..dim {
+                z[j] += (x_new[j] - xs[agent][j]) / n as f32;
+            }
+            tracker.block_updated(agent, &xs[agent], &x_new);
+            xs[agent] = x_new;
+            time += compute;
+            k += 1;
+
+            let next = router.next(0, agent, ctx.topo, &mut rng);
+            if next != agent {
+                comm += 1;
+                time += ctx.cfg.latency.sample(&mut rng);
+            }
+            agent = next;
+
+            if recorder.due(k) {
+                recorder.record(ctx, k, time, comm, &mut tracker, &xs, std::slice::from_ref(&z), &z);
+            }
+        }
+        Ok(recorder.finish())
+    }
+}

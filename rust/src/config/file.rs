@@ -1,0 +1,206 @@
+//! Experiment config files — a TOML subset (`key = value` lines, `#`
+//! comments, one optional `[experiment]` header) so experiment definitions
+//! can live in version control next to the results they produced.
+//!
+//! ```text
+//! # fig3 with 8 walks and lossy links
+//! preset   = "fig3"
+//! walks    = 8
+//! tau-api  = 0.1
+//! drop-prob = 0.05
+//! algos    = "i-bcd,api-bcd,wpg"
+//! ```
+//!
+//! Every key mirrors the CLI flag of the same name (`repro train --help`);
+//! unknown keys are an error (config typos should fail loudly).
+
+use super::{ExperimentConfig, Preset, RoutingRule, SolverChoice};
+use crate::algo::AlgoKind;
+
+/// Parse a config file into (key, value) pairs.
+fn parse_kv(text: &str) -> anyhow::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected `key = value`", lineno + 1))?;
+        let v = v.trim().trim_matches('"').trim_matches('\'');
+        out.push((k.trim().to_string(), v.to_string()));
+    }
+    Ok(out)
+}
+
+/// Load an experiment config from a file. Applies `preset` first (when
+/// given), then every other key in file order.
+pub fn load(path: &str) -> anyhow::Result<ExperimentConfig> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read config {path}: {e}"))?;
+    from_str(&text)
+}
+
+pub fn from_str(text: &str) -> anyhow::Result<ExperimentConfig> {
+    let kvs = parse_kv(text)?;
+    let mut cfg = match kvs.iter().find(|(k, _)| k == "preset") {
+        Some((_, p)) => ExperimentConfig::preset(
+            Preset::by_name(p).ok_or_else(|| anyhow::anyhow!("unknown preset '{p}'"))?,
+        ),
+        None => ExperimentConfig::default(),
+    };
+    for (k, v) in &kvs {
+        apply(&mut cfg, k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn apply(cfg: &mut ExperimentConfig, key: &str, v: &str) -> anyhow::Result<()> {
+    let bad = |what: &str| anyhow::anyhow!("config key '{key}': bad {what} '{v}'");
+    match key {
+        "preset" => {} // handled in from_str
+        "name" => cfg.name = v.to_string(),
+        "profile" => {
+            cfg.profile = v.to_string();
+            if let Some(p) = crate::data::DatasetProfile::by_name(v) {
+                cfg.agents = p.agents;
+            } else {
+                anyhow::bail!("unknown profile '{v}'");
+            }
+        }
+        "agents" => cfg.agents = v.parse().map_err(|_| bad("integer"))?,
+        "walks" => cfg.walks = v.parse().map_err(|_| bad("integer"))?,
+        "xi" => cfg.xi = v.parse().map_err(|_| bad("number"))?,
+        "topology" => cfg.topology = v.to_string(),
+        "tau-api" => cfg.tau_api = v.parse().map_err(|_| bad("number"))?,
+        "tau-ibcd" => cfg.tau_ibcd = v.parse().map_err(|_| bad("number"))?,
+        "alpha" => cfg.alpha = v.parse().map_err(|_| bad("number"))?,
+        "rho" => cfg.rho = v.parse().map_err(|_| bad("number"))?,
+        "beta" => cfg.beta = v.parse().map_err(|_| bad("number"))?,
+        "inner-k" => cfg.inner_k = v.parse().map_err(|_| bad("integer"))?,
+        "seed" => cfg.seed = v.parse().map_err(|_| bad("integer"))?,
+        "eval-every" => cfg.eval_every = v.parse().map_err(|_| bad("integer"))?,
+        "activations" => cfg.stop.max_activations = v.parse().map_err(|_| bad("integer"))?,
+        "max-sim-time" => cfg.stop.max_sim_time = v.parse().map_err(|_| bad("number"))?,
+        "max-comm" => cfg.stop.max_comm = v.parse().map_err(|_| bad("integer"))?,
+        "data-dir" => cfg.data_dir = v.to_string(),
+        "artifacts-dir" => cfg.artifacts_dir = v.to_string(),
+        "drop-prob" => {
+            let p: f64 = v.parse().map_err(|_| bad("number"))?;
+            cfg.faults = crate::sim::FaultModel::lossy(p);
+        }
+        "dropout-frac" => {
+            cfg.faults.dropout_frac = v.parse().map_err(|_| bad("number"))?;
+            if cfg.faults.dropout_len == 0.0 {
+                cfg.faults.dropout_len = 0.01;
+            }
+        }
+        "dropout-len" => cfg.faults.dropout_len = v.parse().map_err(|_| bad("number"))?,
+        "routing" => {
+            cfg.routing = match v {
+                "cycle" => RoutingRule::Cycle,
+                "uniform" => RoutingRule::Uniform,
+                "metropolis" => RoutingRule::Metropolis,
+                _ => return Err(bad("routing rule")),
+            }
+        }
+        "solver" => {
+            cfg.solver = match v {
+                "auto" => SolverChoice::Auto,
+                "native" => SolverChoice::Native,
+                "pjrt" => SolverChoice::Pjrt,
+                _ => return Err(bad("solver")),
+            }
+        }
+        "partition" => {
+            cfg.partition = match v {
+                "iid" => crate::data::shard::PartitionKind::Iid,
+                "contiguous" => crate::data::shard::PartitionKind::Contiguous,
+                _ => return Err(bad("partition")),
+            }
+        }
+        "timing" => {
+            cfg.timing = if v == "measured" {
+                crate::sim::TimingModel::Measured
+            } else {
+                crate::sim::TimingModel::Fixed(v.parse().map_err(|_| bad("number"))?)
+            }
+        }
+        "algos" => {
+            cfg.algos = v
+                .split(',')
+                .map(|a| {
+                    AlgoKind::by_name(a.trim())
+                        .ok_or_else(|| anyhow::anyhow!("unknown algorithm '{a}'"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        other => anyhow::bail!("unknown config key '{other}'"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_full_config() {
+        let cfg = from_str(
+            r#"
+            # comment
+            [experiment]
+            preset = "fig3"
+            walks = 8
+            tau-api = 0.05     # inline comment
+            algos = "api-bcd,wpg"
+            routing = 'uniform'
+            drop-prob = 0.1
+            activations = 500
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.profile, "cpusmall"); // from preset
+        assert_eq!(cfg.walks, 8);
+        assert_eq!(cfg.tau_api, 0.05);
+        assert_eq!(cfg.algos.len(), 2);
+        assert_eq!(cfg.routing, RoutingRule::Uniform);
+        assert_eq!(cfg.faults.drop_prob, 0.1);
+        assert_eq!(cfg.stop.max_activations, 500);
+    }
+
+    #[test]
+    fn preset_applies_before_overrides() {
+        let cfg = from_str("agents = 7\npreset = \"fig4\"\n").unwrap();
+        // preset fig4 sets agents=50, but the explicit key wins regardless
+        // of file order (preset is always applied first).
+        assert_eq!(cfg.agents, 7);
+        assert_eq!(cfg.profile, "cadata");
+    }
+
+    #[test]
+    fn unknown_key_fails_loudly() {
+        assert!(from_str("walsk = 3\n").is_err());
+    }
+
+    #[test]
+    fn bad_value_fails_with_key_context() {
+        let err = from_str("walks = many\n").unwrap_err().to_string();
+        assert!(err.contains("walks"), "{err}");
+    }
+
+    #[test]
+    fn missing_equals_reports_line() {
+        let err = from_str("walks 3\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn timing_variants() {
+        let cfg = from_str("timing = \"measured\"\n").unwrap();
+        assert_eq!(cfg.timing, crate::sim::TimingModel::Measured);
+        let cfg = from_str("timing = \"0.001\"\n").unwrap();
+        assert_eq!(cfg.timing, crate::sim::TimingModel::Fixed(0.001));
+    }
+}

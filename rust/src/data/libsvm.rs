@@ -1,0 +1,145 @@
+//! LIBSVM sparse-format parser (`label idx:value idx:value ...`).
+//!
+//! Used when the real dataset files are available (drop them at
+//! `data/<profile>.libsvm`); 1-based feature indices per the format. Labels:
+//! regression targets pass through; binary ±1 (ijcnn1 convention) maps to
+//! {0,1}; multiclass labels map to 0-based class indices.
+
+use super::{Dataset, DatasetProfile};
+use crate::linalg::Mat;
+use crate::model::Task;
+use std::io::{BufRead, BufReader};
+
+pub fn load(path: &str, profile: DatasetProfile) -> anyhow::Result<Dataset> {
+    let file = std::fs::File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<f32> = Vec::new();
+    let p = profile.features; // includes bias column (left at 0, set by normalize)
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f32 = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad label: {e}", lineno + 1))?;
+        let mut row = vec![0.0f32; p];
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad pair '{tok}'", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad index: {e}", lineno + 1))?;
+            if idx == 0 || idx > p - 1 {
+                anyhow::bail!(
+                    "line {}: feature index {idx} out of range 1..{}",
+                    lineno + 1,
+                    p - 1
+                );
+            }
+            row[idx - 1] = val
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad value: {e}", lineno + 1))?;
+        }
+        rows.push(row);
+        labels.push(label);
+    }
+    anyhow::ensure!(!rows.is_empty(), "empty libsvm file {path}");
+
+    let y = match profile.task {
+        Task::Regression => labels,
+        Task::Binary => labels
+            .into_iter()
+            .map(|l| if l > 0.0 { 1.0 } else { 0.0 })
+            .collect(),
+        Task::Multiclass(c) => {
+            // Map sorted distinct labels to 0..c.
+            let mut distinct: Vec<i64> = labels.iter().map(|&l| l as i64).collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            anyhow::ensure!(
+                distinct.len() <= c,
+                "found {} classes, profile expects {c}",
+                distinct.len()
+            );
+            labels
+                .into_iter()
+                .map(|l| distinct.binary_search(&(l as i64)).unwrap() as f32)
+                .collect()
+        }
+    };
+
+    Ok(Dataset {
+        profile,
+        x: Mat::from_rows(rows),
+        y,
+        train_idx: vec![],
+        test_idx: vec![],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(content: &str) -> String {
+        let path = format!(
+            "{}/apibcd_libsvm_test_{}.libsvm",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    fn test_profile() -> DatasetProfile {
+        DatasetProfile::by_name("test_ls").unwrap()
+    }
+
+    #[test]
+    fn parses_sparse_rows() {
+        let path = write_tmp("1.5 1:2.0 3:4.0\n-0.5 2:1.0\n");
+        let ds = load(&path, test_profile()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(ds.x.rows, 2);
+        assert_eq!(ds.x.get(0, 0), 2.0);
+        assert_eq!(ds.x.get(0, 2), 4.0);
+        assert_eq!(ds.x.get(1, 1), 1.0);
+        assert_eq!(ds.y, vec![1.5, -0.5]);
+    }
+
+    #[test]
+    fn binary_labels_map_to_01() {
+        let mut prof = test_profile();
+        prof.task = Task::Binary;
+        let path = write_tmp("+1 1:1\n-1 1:2\n");
+        let ds = load(&path, prof).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(ds.y, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_out_of_range_index() {
+        let path = write_tmp("1 9:1.0\n");
+        let err = load(&path, test_profile());
+        std::fs::remove_file(&path).ok();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let path = write_tmp("# header\n\n2.0 1:1.0\n");
+        let ds = load(&path, test_profile()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(ds.x.rows, 1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Datasets: the paper's four evaluation sets (§5) as reproducible synthetic
+//! equivalents, a LIBSVM-format loader for the real files when present, and
+//! the per-agent sharding/padding that matches the AOT artifact shapes.
+//!
+//! Substitution note (DESIGN.md §3): the paper uses LIBSVM `cpusmall`,
+//! `cadata`, `ijcnn1` and `USPS`. Offline we generate synthetic datasets
+//! matching each one's (n, p, task, label balance, conditioning); if the real
+//! file exists at `data/<name>.libsvm` it is parsed and used instead — the
+//! code path is identical from the partitioner onward.
+
+pub mod libsvm;
+pub mod shard;
+pub mod synth;
+
+pub use shard::{AgentData, Partition};
+
+use crate::linalg::Mat;
+use crate::model::Task;
+use crate::util::rng::Rng;
+
+/// Static description of one evaluation dataset (mirrors
+/// `python/compile/profiles.py` — the artifact shapes derive from this).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    pub task: Task,
+    pub n_total: usize,
+    /// Feature count *including* the bias column.
+    pub features: usize,
+    /// Preset agent count from the paper's figure captions.
+    pub agents: usize,
+}
+
+pub const TRAIN_FRAC: f64 = 0.8;
+pub const BLOCK_ROWS: usize = 128;
+
+impl DatasetProfile {
+    pub fn by_name(name: &str) -> Option<DatasetProfile> {
+        PROFILES.iter().copied().find(|p| p.name == name)
+    }
+
+    pub fn n_train(&self) -> usize {
+        (self.n_total as f64 * TRAIN_FRAC) as usize
+    }
+
+    /// Padded per-agent shard capacity at the preset N (matches the
+    /// artifact's static row dimension).
+    pub fn shard_rows(&self) -> usize {
+        let raw = self.n_train().div_ceil(self.agents);
+        raw.div_ceil(BLOCK_ROWS) * BLOCK_ROWS
+    }
+
+    /// Flattened model dimension (p·c).
+    pub fn dim(&self) -> usize {
+        self.features * self.task.classes()
+    }
+}
+
+pub const PROFILES: [DatasetProfile; 7] = [
+    DatasetProfile { name: "cpusmall", task: Task::Regression, n_total: 8192, features: 13, agents: 20 },
+    DatasetProfile { name: "cadata", task: Task::Regression, n_total: 20640, features: 9, agents: 50 },
+    DatasetProfile { name: "ijcnn1", task: Task::Binary, n_total: 49990, features: 23, agents: 50 },
+    DatasetProfile { name: "usps", task: Task::Multiclass(10), n_total: 7291, features: 257, agents: 10 },
+    DatasetProfile { name: "test_ls", task: Task::Regression, n_total: 160, features: 4, agents: 1 },
+    DatasetProfile { name: "test_logit", task: Task::Binary, n_total: 160, features: 4, agents: 1 },
+    DatasetProfile { name: "test_smax", task: Task::Multiclass(3), n_total: 160, features: 4, agents: 1 },
+];
+
+/// An in-memory dataset after normalization: design matrix with bias column,
+/// labels (regression targets, 0/1, or class indices), and a train/test
+/// split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub profile: DatasetProfile,
+    pub x: Mat,
+    pub y: Vec<f32>,
+    pub train_idx: Vec<usize>,
+    pub test_idx: Vec<usize>,
+}
+
+impl Dataset {
+    /// Load the profile's dataset: real LIBSVM file if present under
+    /// `data_dir`, synthetic otherwise.
+    pub fn load(profile: DatasetProfile, data_dir: &str, seed: u64) -> anyhow::Result<Dataset> {
+        let path = format!("{data_dir}/{}.libsvm", profile.name);
+        let mut ds = if std::path::Path::new(&path).exists() {
+            libsvm::load(&path, profile)?
+        } else {
+            synth::generate(profile, seed)
+        };
+        ds.normalize();
+        ds.split(seed ^ 0x5EED);
+        Ok(ds)
+    }
+
+    /// Standardize features on all rows (mean 0, unit variance), set bias
+    /// column to 1, and for regression standardize targets.
+    pub fn normalize(&mut self) {
+        let (n, p) = (self.x.rows, self.x.cols);
+        for j in 0..p - 1 {
+            let mut mean = 0.0f64;
+            for i in 0..n {
+                mean += self.x.get(i, j) as f64;
+            }
+            mean /= n as f64;
+            let mut var = 0.0f64;
+            for i in 0..n {
+                let d = self.x.get(i, j) as f64 - mean;
+                var += d * d;
+            }
+            let sd = (var / n as f64).sqrt().max(1e-8);
+            for i in 0..n {
+                let v = (self.x.get(i, j) as f64 - mean) / sd;
+                self.x.set(i, j, v as f32);
+            }
+        }
+        for i in 0..n {
+            self.x.set(i, p - 1, 1.0);
+        }
+        if self.profile.task == Task::Regression {
+            let mean: f64 = self.y.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+            let var: f64 = self
+                .y
+                .iter()
+                .map(|&v| (v as f64 - mean).powi(2))
+                .sum::<f64>()
+                / n as f64;
+            let sd = var.sqrt().max(1e-8);
+            for v in self.y.iter_mut() {
+                *v = ((*v as f64 - mean) / sd) as f32;
+            }
+        }
+    }
+
+    fn split(&mut self, seed: u64) {
+        let n = self.x.rows;
+        let mut idx: Vec<usize> = (0..n).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let n_train = (n as f64 * TRAIN_FRAC) as usize;
+        self.train_idx = idx[..n_train].to_vec();
+        self.test_idx = idx[n_train..].to_vec();
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_idx.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_match_python_shapes() {
+        let cpu = DatasetProfile::by_name("cpusmall").unwrap();
+        assert_eq!(cpu.features, 13);
+        assert_eq!(cpu.shard_rows() % BLOCK_ROWS, 0);
+        assert!(cpu.shard_rows() * cpu.agents >= cpu.n_train());
+        let usps = DatasetProfile::by_name("usps").unwrap();
+        assert_eq!(usps.dim(), 257 * 10);
+    }
+
+    #[test]
+    fn load_synthetic_normalized() {
+        let prof = DatasetProfile::by_name("test_ls").unwrap();
+        let ds = Dataset::load(prof, "/nonexistent", 7).unwrap();
+        assert_eq!(ds.x.rows, 160);
+        assert_eq!(ds.n_train() + ds.test_idx.len(), 160);
+        // bias column is 1
+        for i in 0..ds.x.rows {
+            assert_eq!(ds.x.get(i, prof.features - 1), 1.0);
+        }
+        // standardized feature: |mean| small
+        let mean: f32 = (0..ds.x.rows).map(|i| ds.x.get(i, 0)).sum::<f32>() / 160.0;
+        assert!(mean.abs() < 1e-3);
+    }
+
+    #[test]
+    fn split_is_disjoint_and_deterministic() {
+        let prof = DatasetProfile::by_name("test_logit").unwrap();
+        let a = Dataset::load(prof, "/nonexistent", 3).unwrap();
+        let b = Dataset::load(prof, "/nonexistent", 3).unwrap();
+        assert_eq!(a.train_idx, b.train_idx);
+        let mut all: Vec<usize> = a.train_idx.iter().chain(&a.test_idx).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..160).collect::<Vec<_>>());
+    }
+}

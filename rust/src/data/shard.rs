@@ -1,0 +1,202 @@
+//! Per-agent sharding and padding.
+//!
+//! Training rows are dealt to the `N` agents (IID by default — the shuffled
+//! split — or contiguous for a non-IID stress mode), then each shard is
+//! padded with `mask = 0` rows up to the artifact's static row capacity so a
+//! single compiled executable serves every agent.
+
+use super::Dataset;
+use crate::model::Task;
+
+/// One agent's padded local dataset, laid out exactly as the AOT artifact
+/// inputs expect (row-major `x`, flat `y`/`y_onehot`, 0/1 `mask`).
+#[derive(Debug, Clone)]
+pub struct AgentData {
+    pub agent: usize,
+    /// Padded row capacity `s` (multiple of BLOCK_ROWS).
+    pub rows: usize,
+    pub features: usize,
+    pub classes: usize,
+    pub x: Vec<f32>,
+    /// Regression targets or 0/1 labels; for multiclass, class indices
+    /// (kept for evaluation) with the one-hot encoding in `y_onehot`.
+    pub y: Vec<f32>,
+    /// `s*c` one-hot labels — only populated for multiclass tasks.
+    pub y_onehot: Vec<f32>,
+    pub mask: Vec<f32>,
+    /// Number of real (unmasked) rows `d_i`.
+    pub active: usize,
+}
+
+impl AgentData {
+    /// Frobenius-norm-squared of the active rows — used for the logistic
+    /// step-size bound L̂ = ‖X‖²_F / (4 d).
+    pub fn frob_sq(&self) -> f32 {
+        let mut acc = 0.0f64;
+        for r in 0..self.active {
+            for j in 0..self.features {
+                let v = self.x[r * self.features + j] as f64;
+                acc += v * v;
+            }
+        }
+        acc as f32
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Rows dealt from the shuffled training split (IID shards).
+    Iid,
+    /// Contiguous blocks of the *unshuffled* row order (heterogeneous
+    /// shards — the non-IID stress ablation).
+    Contiguous,
+}
+
+/// The full decentralized data placement: one padded shard per agent.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub shards: Vec<AgentData>,
+}
+
+impl Partition {
+    pub fn new(ds: &Dataset, n_agents: usize, kind: PartitionKind) -> anyhow::Result<Partition> {
+        anyhow::ensure!(n_agents >= 1, "need at least one agent");
+        let capacity = ds.profile.shard_rows();
+        let per = ds.n_train().div_ceil(n_agents);
+        anyhow::ensure!(
+            per <= capacity,
+            "N={n_agents} gives {per} rows/agent which exceeds the artifact \
+             capacity {capacity} (compiled for N ≥ {}); re-export artifacts \
+             or raise N",
+            ds.profile.agents
+        );
+        let p = ds.profile.features;
+        let c = ds.profile.task.classes();
+
+        let order: Vec<usize> = match kind {
+            PartitionKind::Iid => ds.train_idx.clone(),
+            PartitionKind::Contiguous => {
+                let mut v = ds.train_idx.clone();
+                v.sort_unstable();
+                v
+            }
+        };
+
+        let mut shards = Vec::with_capacity(n_agents);
+        for a in 0..n_agents {
+            let lo = a * per;
+            let hi = ((a + 1) * per).min(order.len());
+            let rows_here = hi.saturating_sub(lo);
+            let mut x = vec![0.0f32; capacity * p];
+            let mut y = vec![0.0f32; capacity];
+            let mut yoh = if matches!(ds.profile.task, Task::Multiclass(_)) {
+                vec![0.0f32; capacity * c]
+            } else {
+                Vec::new()
+            };
+            let mut mask = vec![0.0f32; capacity];
+            for (r, &src) in order[lo..hi].iter().enumerate() {
+                x[r * p..(r + 1) * p].copy_from_slice(ds.x.row(src));
+                y[r] = ds.y[src];
+                mask[r] = 1.0;
+                if !yoh.is_empty() {
+                    yoh[r * c + ds.y[src] as usize] = 1.0;
+                }
+            }
+            shards.push(AgentData {
+                agent: a,
+                rows: capacity,
+                features: p,
+                classes: c,
+                x,
+                y,
+                y_onehot: yoh,
+                mask,
+                active: rows_here,
+            });
+        }
+        Ok(Partition { shards })
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_active(&self) -> usize {
+        self.shards.iter().map(|s| s.active).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetProfile;
+
+    fn dataset(name: &str) -> Dataset {
+        Dataset::load(DatasetProfile::by_name(name).unwrap(), "/nonexistent", 1).unwrap()
+    }
+
+    #[test]
+    fn shards_cover_all_training_rows() {
+        let ds = dataset("test_ls");
+        let part = Partition::new(&ds, 4, PartitionKind::Iid).unwrap();
+        assert_eq!(part.n_agents(), 4);
+        assert_eq!(part.total_active(), ds.n_train());
+        for s in &part.shards {
+            assert_eq!(s.rows % crate::data::BLOCK_ROWS, 0);
+            // mask prefix-structure: 1s then 0s
+            let ones = s.mask.iter().filter(|&&m| m == 1.0).count();
+            assert_eq!(ones, s.active);
+            assert!(s.mask[..s.active].iter().all(|&m| m == 1.0));
+        }
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        // test profiles are compiled for 1 agent with capacity 128 while
+        // n_train=128; 1 agent fits, but a hypothetical capacity overflow is
+        // guarded. Build an artificial failure by asking for less capacity:
+        let ds = dataset("test_ls");
+        // 128 train rows, capacity 128 → N=1 fits exactly.
+        assert!(Partition::new(&ds, 1, PartitionKind::Iid).is_ok());
+    }
+
+    #[test]
+    fn multiclass_one_hot_consistent() {
+        let ds = dataset("test_smax");
+        let part = Partition::new(&ds, 2, PartitionKind::Iid).unwrap();
+        for s in &part.shards {
+            assert_eq!(s.y_onehot.len(), s.rows * 3);
+            for r in 0..s.active {
+                let row = &s.y_onehot[r * 3..(r + 1) * 3];
+                assert_eq!(row.iter().sum::<f32>(), 1.0);
+                assert_eq!(row[s.y[r] as usize], 1.0);
+            }
+            // padding rows all-zero one-hot
+            for r in s.active..s.rows {
+                assert!(s.y_onehot[r * 3..(r + 1) * 3].iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_differs_from_iid() {
+        let ds = dataset("test_ls");
+        let iid = Partition::new(&ds, 4, PartitionKind::Iid).unwrap();
+        let contig = Partition::new(&ds, 4, PartitionKind::Contiguous).unwrap();
+        assert_ne!(iid.shards[0].x, contig.shards[0].x);
+        assert_eq!(contig.total_active(), iid.total_active());
+    }
+
+    #[test]
+    fn frob_sq_counts_only_active_rows() {
+        let ds = dataset("test_ls");
+        let part = Partition::new(&ds, 2, PartitionKind::Iid).unwrap();
+        let s = &part.shards[0];
+        let manual: f32 = (0..s.active)
+            .flat_map(|r| (0..s.features).map(move |j| (r, j)))
+            .map(|(r, j)| s.x[r * s.features + j].powi(2))
+            .sum();
+        assert!((s.frob_sq() - manual).abs() < 1e-3);
+    }
+}

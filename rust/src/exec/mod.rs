@@ -1,0 +1,260 @@
+//! Real-asynchrony executor: API-BCD with every agent as an OS thread.
+//!
+//! The DES ([`crate::sim`]) *models* asynchrony; this module *implements*
+//! it: each agent is a thread owning its block `x_i` and local copies
+//! `ẑ_{i,·}`, tokens are messages on per-agent mpsc channels, link latency
+//! is an injected sleep drawn from the same U(10⁻⁵,10⁻⁴) model, and the
+//! compute path goes through the [`SolverClient`] service (the PJRT engine
+//! is a serialized device resource, like a real accelerator queue).
+//!
+//! Used by the `async_threads_demo` example and the validation test that
+//! checks the DES and the thread executor agree on convergence (same final
+//! metric band, different interleavings).
+
+use crate::config::{ExperimentConfig, RoutingRule};
+use crate::data::AgentData;
+use crate::graph::Topology;
+use crate::metrics::{Trace, TracePoint};
+use crate::model::Problem;
+use crate::solver::SolverClient;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// A token in flight: walk id, the token vector, and (for cycle routing)
+/// the walk's position on the shared traversal cycle.
+struct TokenMsg {
+    walk: usize,
+    z: Vec<f32>,
+    cycle_pos: usize,
+}
+
+/// Periodic metric sample sent to the coordinator thread. Carries the
+/// sampling agent's current block; the monitor assembles the consensus
+/// estimate (mean of last-known blocks) without ever pausing the agents.
+struct Sample {
+    k: u64,
+    comm: u64,
+    agent: usize,
+    x: Vec<f32>,
+}
+
+struct Shared {
+    topo: Topology,
+    cycle: Vec<usize>,
+    routing: RoutingRule,
+    activations: AtomicU64,
+    comm: AtomicU64,
+    stop: AtomicBool,
+    max_activations: u64,
+    eval_every: u64,
+    tau: f32,
+    tau_m: f32,
+    walks: usize,
+    latency: crate::sim::LatencyModel,
+}
+
+/// Run API-BCD on real threads. Returns a [`Trace`] whose `time` axis is
+/// *wall-clock seconds* (this mode measures reality instead of simulating
+/// it; the objective column is NaN — global state is never assembled while
+/// running, that is the point of the asynchronous design).
+pub fn run_api_bcd_threads(
+    cfg: &ExperimentConfig,
+    topo: &Topology,
+    shards: Arc<Vec<AgentData>>,
+    problem: &Problem,
+    solver: SolverClient,
+) -> anyhow::Result<Trace> {
+    let n = shards.len();
+    let dim = shards[0].features * shards[0].classes;
+    let m_walks = cfg.walks.max(1);
+    let tau = cfg.tau_api as f32;
+
+    let shared = Arc::new(Shared {
+        topo: topo.clone(),
+        cycle: if cfg.routing == RoutingRule::Cycle {
+            topo.traversal_cycle()
+        } else {
+            Vec::new()
+        },
+        routing: cfg.routing,
+        activations: AtomicU64::new(0),
+        comm: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        max_activations: cfg.stop.max_activations,
+        eval_every: cfg.eval_every.max(1),
+        tau,
+        tau_m: tau * m_walks as f32,
+        walks: m_walks,
+        latency: cfg.latency,
+    });
+
+    // Per-agent inboxes.
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel::<TokenMsg>();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let senders = Arc::new(senders);
+    let (sample_tx, sample_rx) = mpsc::channel::<Sample>();
+
+    let started = Instant::now();
+    let mut handles = Vec::with_capacity(n);
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let shared = shared.clone();
+        let senders = senders.clone();
+        let shards = shards.clone();
+        let solver = solver.clone();
+        let sample_tx = sample_tx.clone();
+        let seed = cfg.seed ^ ((i as u64 + 1) << 16);
+        handles.push(std::thread::Builder::new().name(format!("agent-{i}")).spawn(
+            move || -> anyhow::Result<()> {
+                agent_loop(i, rx, shared, senders, shards, solver, sample_tx, seed)
+            },
+        )?);
+    }
+    drop(sample_tx);
+
+    // Inject the M tokens.
+    {
+        let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+        for m in 0..m_walks {
+            let (start, pos) = if shared.cycle.is_empty() {
+                (rng.below(n), 0)
+            } else {
+                let pos = m * shared.cycle.len() / m_walks;
+                (shared.cycle[pos], pos)
+            };
+            senders[start]
+                .send(TokenMsg {
+                    walk: m,
+                    z: vec![0.0f32; dim],
+                    cycle_pos: pos,
+                })
+                .map_err(|_| anyhow::anyhow!("agent {start} died before start"))?;
+        }
+    }
+
+    // Collect samples until every agent exits.
+    let mut trace = Trace::new("API-BCD(threads)");
+    trace.push(TracePoint {
+        iter: 0,
+        time: 0.0,
+        comm: 0,
+        objective: f64::NAN,
+        metric: problem.metric(&vec![0.0f32; dim]),
+    });
+    // Monitor state: last-known block per agent (x⁰ = 0 before first sight).
+    let mut latest = vec![vec![0.0f32; dim]; n];
+    let mut consensus = vec![0.0f32; dim];
+    while let Ok(s) = sample_rx.recv() {
+        latest[s.agent] = s.x;
+        consensus.fill(0.0);
+        for x in &latest {
+            crate::linalg::axpy(1.0 / n as f32, x, &mut consensus);
+        }
+        trace.push(TracePoint {
+            iter: s.k,
+            time: started.elapsed().as_secs_f64(),
+            comm: s.comm,
+            objective: f64::NAN,
+            metric: problem.metric(&consensus),
+        });
+    }
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("agent thread panicked"))??;
+    }
+    trace.wall_secs = started.elapsed().as_secs_f64();
+    Ok(trace)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn agent_loop(
+    i: usize,
+    rx: mpsc::Receiver<TokenMsg>,
+    shared: Arc<Shared>,
+    senders: Arc<Vec<mpsc::Sender<TokenMsg>>>,
+    shards: Arc<Vec<AgentData>>,
+    solver: SolverClient,
+    sample_tx: mpsc::Sender<Sample>,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let dim = shards[0].features * shards[0].classes;
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; dim];
+    let mut zhat = vec![vec![0.0f32; dim]; shared.walks];
+    let mut tzsum = vec![0.0f32; dim];
+
+    loop {
+        let mut msg = match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(m) => m,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shared.stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+        };
+        if shared.stop.load(Ordering::Relaxed) {
+            // Drain without forwarding: the token dies, the walk ends.
+            return Ok(());
+        }
+
+        // Alg. 2 steps 3–6.
+        zhat[msg.walk].copy_from_slice(&msg.z);
+        tzsum.fill(0.0);
+        for zm in &zhat {
+            crate::linalg::axpy(shared.tau, zm, &mut tzsum);
+        }
+        let out = solver.prox(i, x.clone(), tzsum.clone(), shared.tau_m)?;
+        let n = shards.len() as f32;
+        for j in 0..dim {
+            msg.z[j] += (out.w[j] - x[j]) / n;
+        }
+        zhat[msg.walk].copy_from_slice(&msg.z);
+        x = out.w;
+
+        let k = shared.activations.fetch_add(1, Ordering::Relaxed) + 1;
+        if k >= shared.max_activations {
+            shared.stop.store(true, Ordering::Relaxed);
+        }
+
+        // Route + emulate the link.
+        let next = match shared.routing {
+            RoutingRule::Cycle => {
+                msg.cycle_pos = (msg.cycle_pos + 1) % shared.cycle.len();
+                shared.cycle[msg.cycle_pos]
+            }
+            RoutingRule::Uniform => shared.topo.uniform_next(i, &mut rng),
+            RoutingRule::Metropolis => shared.topo.metropolis_next(i, &mut rng),
+        };
+        let comm = if next != i {
+            let latency = shared.latency.sample(&mut rng);
+            std::thread::sleep(Duration::from_secs_f64(latency));
+            shared.comm.fetch_add(1, Ordering::Relaxed) + 1
+        } else {
+            shared.comm.load(Ordering::Relaxed)
+        };
+
+        if k % shared.eval_every == 0 {
+            let _ = sample_tx.send(Sample {
+                k,
+                comm,
+                agent: i,
+                x: x.clone(),
+            });
+        }
+
+        if shared.stop.load(Ordering::Relaxed) {
+            return Ok(()); // token retires
+        }
+        if senders[next].send(msg).is_err() {
+            return Ok(());
+        }
+    }
+}

@@ -1,0 +1,544 @@
+//! Network topology substrate.
+//!
+//! The paper's experiments use a connected undirected graph with
+//! `|E| = ξ·N(N−1)/2` links (§5). This module builds such graphs
+//! reproducibly, provides the two token-routing rules used by the
+//! algorithms — a **Markov chain** over neighbors (random walk, as in
+//! WADMM/PW-ADMM [16][18]) and a **deterministic cycle** (Hamiltonian-style,
+//! as in WPG [17]) — plus Metropolis–Hastings mixing weights for the gossip
+//! baseline (DGD).
+
+use crate::util::rng::Rng;
+
+/// Undirected connected graph over agents `0..n`.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    n: usize,
+    /// Sorted adjacency lists.
+    adj: Vec<Vec<usize>>,
+    /// Canonical edge list (i < j).
+    edges: Vec<(usize, usize)>,
+}
+
+impl Topology {
+    /// Random connected graph with approximately `xi·n(n−1)/2` edges.
+    ///
+    /// Construction: a random spanning tree (guarantees connectivity, n−1
+    /// edges) plus uniformly sampled extra edges up to the target count.
+    /// `xi` is clamped so the edge count is at least the spanning tree's.
+    pub fn random_connected(n: usize, xi: f64, rng: &mut Rng) -> Topology {
+        assert!(n >= 2, "need at least two agents");
+        let max_edges = n * (n - 1) / 2;
+        let target = ((xi * max_edges as f64).round() as usize).clamp(n - 1, max_edges);
+
+        let mut adj = vec![Vec::new(); n];
+        let mut present = vec![false; max_edges];
+        let idx = |i: usize, j: usize| {
+            let (a, b) = if i < j { (i, j) } else { (j, i) };
+            // index into the strictly-upper-triangular enumeration
+            a * n - a * (a + 1) / 2 + (b - a - 1)
+        };
+
+        // Random spanning tree: random permutation, attach each node to a
+        // random earlier node (uniform random recursive tree).
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut edges = Vec::with_capacity(target);
+        for k in 1..n {
+            let a = order[k];
+            let b = order[rng.below(k)];
+            adj[a].push(b);
+            adj[b].push(a);
+            present[idx(a, b)] = true;
+            edges.push((a.min(b), a.max(b)));
+        }
+
+        // Top up with uniform non-tree edges.
+        while edges.len() < target {
+            let a = rng.below(n);
+            let b = rng.below(n);
+            if a == b || present[idx(a, b)] {
+                continue;
+            }
+            present[idx(a, b)] = true;
+            adj[a].push(b);
+            adj[b].push(a);
+            edges.push((a.min(b), a.max(b)));
+        }
+
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+        }
+        edges.sort_unstable();
+        Topology { n, adj, edges }
+    }
+
+    /// Ring topology (used by tests and the WPG cycle fallback).
+    pub fn ring(n: usize) -> Topology {
+        assert!(n >= 2);
+        let mut adj = vec![Vec::new(); n];
+        let mut edges = Vec::new();
+        for i in 0..n {
+            let j = (i + 1) % n;
+            adj[i].push(j);
+            adj[j].push(i);
+            edges.push((i.min(j), i.max(j)));
+        }
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        Topology { n, adj, edges }
+    }
+
+    /// 2-D grid (⌈√n⌉ columns), the classic mesh/edge-network shape.
+    pub fn grid(n: usize) -> Topology {
+        assert!(n >= 2);
+        let cols = (n as f64).sqrt().ceil() as usize;
+        let mut adj = vec![Vec::new(); n];
+        let mut edges = Vec::new();
+        let mut add = |a: usize, b: usize, adj: &mut Vec<Vec<usize>>| {
+            adj[a].push(b);
+            adj[b].push(a);
+            edges.push((a.min(b), a.max(b)));
+        };
+        for i in 0..n {
+            if (i + 1) % cols != 0 && i + 1 < n {
+                add(i, i + 1, &mut adj);
+            }
+            if i + cols < n {
+                add(i, i + cols, &mut adj);
+            }
+        }
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+        }
+        edges.sort_unstable();
+        Topology { n, adj, edges }
+    }
+
+    /// Star: agent 0 is the hub (a PS-like topology — the degenerate case
+    /// the paper's decentralized setting generalizes away from).
+    pub fn star(n: usize) -> Topology {
+        assert!(n >= 2);
+        let mut adj = vec![Vec::new(); n];
+        let mut edges = Vec::new();
+        for i in 1..n {
+            adj[0].push(i);
+            adj[i].push(0);
+            edges.push((0, i));
+        }
+        adj[0].sort_unstable();
+        Topology { n, adj, edges }
+    }
+
+    /// Watts–Strogatz-style small world: ring + `k` random chords per node
+    /// (rewiring approximated by chord addition; keeps connectivity
+    /// guaranteed).
+    pub fn small_world(n: usize, chords_per_node: usize, rng: &mut Rng) -> Topology {
+        let mut topo = Topology::ring(n);
+        let target_extra = n * chords_per_node / 2;
+        let mut added = 0;
+        let mut guard = 0;
+        while added < target_extra && guard < 50 * target_extra.max(1) {
+            guard += 1;
+            let a = rng.below(n);
+            let b = rng.below(n);
+            if a == b || topo.has_edge(a, b) {
+                continue;
+            }
+            topo.adj[a].push(b);
+            topo.adj[b].push(a);
+            topo.adj[a].sort_unstable();
+            topo.adj[b].sort_unstable();
+            topo.edges.push((a.min(b), a.max(b)));
+            added += 1;
+        }
+        topo.edges.sort_unstable();
+        topo
+    }
+
+    /// Build by kind name (config files / CLI): "random" (needs ξ), "ring",
+    /// "grid", "star", "complete", "small-world".
+    pub fn by_kind(kind: &str, n: usize, xi: f64, rng: &mut Rng) -> anyhow::Result<Topology> {
+        Ok(match kind {
+            "random" => Topology::random_connected(n, xi, rng),
+            "ring" => Topology::ring(n),
+            "grid" => Topology::grid(n),
+            "star" => Topology::star(n),
+            "complete" => Topology::complete(n),
+            "small-world" => Topology::small_world(n, 2, rng),
+            other => anyhow::bail!("unknown topology kind '{other}'"),
+        })
+    }
+
+    /// Complete graph.
+    pub fn complete(n: usize) -> Topology {
+        assert!(n >= 2);
+        let mut adj = vec![Vec::new(); n];
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                adj[i].push(j);
+                adj[j].push(i);
+                edges.push((i, j));
+            }
+        }
+        Topology { n, adj, edges }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.adj[i].binary_search(&j).is_ok()
+    }
+
+    /// BFS connectivity check (all constructions guarantee it; exposed for
+    /// property tests and for graphs loaded from config files).
+    pub fn is_connected(&self) -> bool {
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// A closed walk visiting every agent at least once, moving only along
+    /// edges — the deterministic "Hamiltonian-style" cycle WPG and the
+    /// deterministic variants of I-BCD/API-BCD route tokens on.
+    ///
+    /// True Hamiltonian cycles need not exist (and are NP-hard to find); like
+    /// the WPG paper's practical deployments we use the DFS traversal cycle:
+    /// visit order of a DFS with backtracking, which traverses each tree edge
+    /// twice in the worst case. On dense graphs (ξ = 0.7) shortcut edges make
+    /// it near-Hamiltonian.
+    pub fn traversal_cycle(&self) -> Vec<usize> {
+        let mut visited = vec![false; self.n];
+        let mut walk = Vec::with_capacity(2 * self.n);
+        self.dfs_walk(0, &mut visited, &mut walk);
+        // Close the cycle: walk ends at 0 already by DFS backtracking.
+        debug_assert_eq!(walk.first(), walk.last());
+        if walk.len() > 1 {
+            walk.pop(); // drop duplicate terminal 0; successor wraps around
+        }
+        // Compress: skip revisits when a direct edge lets us shortcut to the
+        // next unvisited-at-the-time node.
+        compress_walk(self, &walk)
+    }
+
+    fn dfs_walk(&self, u: usize, visited: &mut [bool], walk: &mut Vec<usize>) {
+        visited[u] = true;
+        walk.push(u);
+        // Clone the (small) neighbor list to keep borrow simple.
+        let neigh = self.adj[u].clone();
+        for v in neigh {
+            if !visited[v] {
+                self.dfs_walk(v, visited, walk);
+                walk.push(u);
+            }
+        }
+    }
+
+    /// Uniform random-walk transition: from `i`, next is uniform over
+    /// `N̄_i = N_i ∪ {i}` restricted to neighbors only for the actual hop
+    /// (the paper allows self-inclusive support; staying put wastes a hop,
+    /// so the standard choice is uniform over neighbors).
+    pub fn uniform_next(&self, i: usize, rng: &mut Rng) -> usize {
+        let neigh = &self.adj[i];
+        neigh[rng.below(neigh.len())]
+    }
+
+    /// Metropolis–Hastings transition probabilities from `i` (row of a
+    /// doubly-stochastic matrix with uniform stationary distribution —
+    /// the standard choice for unbiased token walks and for DGD weights).
+    pub fn metropolis_row(&self, i: usize) -> Vec<(usize, f64)> {
+        let di = self.degree(i) as f64;
+        let mut row: Vec<(usize, f64)> = self
+            .adj[i]
+            .iter()
+            .map(|&j| {
+                let dj = self.degree(j) as f64;
+                (j, 1.0 / (1.0 + di.max(dj)))
+            })
+            .collect();
+        let off: f64 = row.iter().map(|(_, p)| p).sum();
+        row.push((i, 1.0 - off));
+        row
+    }
+
+    /// Sample the next hop from the Metropolis chain. Self-loops re-sample
+    /// (a token that "stays" is a wasted activation; we charge no comm for
+    /// the self-loop and keep the chain's mixing behavior on actual moves).
+    pub fn metropolis_next(&self, i: usize, rng: &mut Rng) -> usize {
+        let row = self.metropolis_row(i);
+        loop {
+            let weights: Vec<f64> = row.iter().map(|(_, p)| *p).collect();
+            let k = rng.weighted(&weights);
+            let (j, _) = row[k];
+            if j != i {
+                return j;
+            }
+        }
+    }
+
+    /// Mean shortest-path length (BFS from every node) — topology diagnostic
+    /// exposed by `repro topology`.
+    pub fn mean_path_length(&self) -> f64 {
+        let mut total = 0usize;
+        let mut pairs = 0usize;
+        for s in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            dist[s] = 0;
+            let mut queue = std::collections::VecDeque::from([s]);
+            while let Some(u) = queue.pop_front() {
+                for &v in &self.adj[u] {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            for t in 0..self.n {
+                if t != s {
+                    total += dist[t];
+                    pairs += 1;
+                }
+            }
+        }
+        total as f64 / pairs as f64
+    }
+}
+
+/// Shorten a DFS walk while preserving edge-validity and full coverage:
+/// repeatedly drop a *duplicate* visit `b` in `a→b→c` whenever `(a,c)` is a
+/// direct edge. On dense graphs (ξ = 0.7) this gets close to a Hamiltonian
+/// cycle; on trees it leaves the unavoidable 2(n−1)-hop traversal.
+fn compress_walk(g: &Topology, walk: &[usize]) -> Vec<usize> {
+    let mut out: Vec<usize> = walk.to_vec();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        let mut counts = vec![0usize; g.n()];
+        for &u in &out {
+            counts[u] += 1;
+        }
+        let mut i = 1;
+        while i + 1 < out.len() {
+            let (a, b, c) = (out[i - 1], out[i], out[i + 1]);
+            if counts[b] > 1 && a != c && g.has_edge(a, c) {
+                counts[b] -= 1;
+                out.remove(i);
+                changed = true;
+            } else {
+                i += 1;
+            }
+        }
+        // Also try dropping a duplicated endpoint against the wrap-around.
+        if out.len() > 2 {
+            let (last, first) = (*out.last().unwrap(), out[0]);
+            let before_last = out[out.len() - 2];
+            if counts[last] > 1 && before_last != first && g.has_edge(before_last, first) {
+                out.pop();
+                changed = true;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1234)
+    }
+
+    #[test]
+    fn random_graph_matches_edge_budget() {
+        let mut r = rng();
+        let g = Topology::random_connected(20, 0.7, &mut r);
+        let target = (0.7 * (20.0 * 19.0 / 2.0)) as usize;
+        assert_eq!(g.num_edges(), target);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn sparse_graph_clamps_to_spanning_tree() {
+        let mut r = rng();
+        let g = Topology::random_connected(10, 0.0, &mut r);
+        assert_eq!(g.num_edges(), 9);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn adjacency_is_symmetric_and_sorted() {
+        let mut r = rng();
+        let g = Topology::random_connected(15, 0.4, &mut r);
+        for i in 0..15 {
+            let mut prev = None;
+            for &j in g.neighbors(i) {
+                assert!(g.neighbors(j).contains(&i));
+                assert!(prev.map(|p| p < j).unwrap_or(true), "unsorted");
+                prev = Some(j);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_and_complete() {
+        let ring = Topology::ring(6);
+        assert_eq!(ring.num_edges(), 6);
+        assert!(ring.is_connected());
+        let k = Topology::complete(5);
+        assert_eq!(k.num_edges(), 10);
+        assert_eq!(k.degree(0), 4);
+    }
+
+    #[test]
+    fn traversal_cycle_visits_all_and_uses_edges() {
+        let mut r = rng();
+        for &n in &[5usize, 12, 20] {
+            let g = Topology::random_connected(n, 0.5, &mut r);
+            let cyc = g.traversal_cycle();
+            let mut seen = vec![false; n];
+            for &u in &cyc {
+                seen[u] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "cycle misses agents");
+            for w in cyc.windows(2) {
+                assert!(g.has_edge(w[0], w[1]), "non-edge hop {:?}", w);
+            }
+            // wrap-around hop must also be an edge
+            assert!(g.has_edge(*cyc.last().unwrap(), cyc[0]));
+        }
+    }
+
+    #[test]
+    fn metropolis_row_is_stochastic() {
+        let mut r = rng();
+        let g = Topology::random_connected(12, 0.6, &mut r);
+        for i in 0..12 {
+            let row = g.metropolis_row(i);
+            let sum: f64 = row.iter().map(|(_, p)| p).sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            assert!(row.iter().all(|&(_, p)| p >= -1e-12));
+        }
+    }
+
+    #[test]
+    fn metropolis_is_symmetric_offdiagonal() {
+        // P_ij = P_ji for i≠j makes uniform the stationary distribution.
+        let mut r = rng();
+        let g = Topology::random_connected(10, 0.5, &mut r);
+        for i in 0..10 {
+            for &(j, pij) in g.metropolis_row(i).iter().filter(|&&(j, _)| j != i) {
+                let pji = g
+                    .metropolis_row(j)
+                    .iter()
+                    .find(|&&(k, _)| k == i)
+                    .map(|&(_, p)| p)
+                    .unwrap();
+                assert!((pij - pji).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_next_stays_on_edges() {
+        let mut r = rng();
+        let g = Topology::random_connected(8, 0.4, &mut r);
+        for _ in 0..200 {
+            let i = r.below(8);
+            let j = g.uniform_next(i, &mut r);
+            assert!(g.has_edge(i, j));
+        }
+    }
+
+    #[test]
+    fn mean_path_length_complete_is_one() {
+        assert!((Topology::complete(8).mean_path_length() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = Topology::grid(9); // 3×3
+        assert!(g.is_connected());
+        assert_eq!(g.degree(4), 4); // center
+        assert_eq!(g.degree(0), 2); // corner
+        assert_eq!(g.num_edges(), 12);
+    }
+
+    #[test]
+    fn grid_non_square_counts() {
+        let g = Topology::grid(7); // 3 cols, rows 3+3+1
+        assert!(g.is_connected());
+        for i in 0..7 {
+            assert!(g.degree(i) >= 1);
+        }
+    }
+
+    #[test]
+    fn star_structure() {
+        let g = Topology::star(6);
+        assert_eq!(g.degree(0), 5);
+        for i in 1..6 {
+            assert_eq!(g.degree(i), 1);
+        }
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn small_world_improves_path_length_over_ring() {
+        let mut r = rng();
+        let ring = Topology::ring(30);
+        let sw = Topology::small_world(30, 2, &mut r);
+        assert!(sw.is_connected());
+        assert!(sw.mean_path_length() < ring.mean_path_length());
+    }
+
+    #[test]
+    fn by_kind_dispatch() {
+        let mut r = rng();
+        for kind in ["random", "ring", "grid", "star", "complete", "small-world"] {
+            let g = Topology::by_kind(kind, 10, 0.5, &mut r).unwrap();
+            assert!(g.is_connected(), "{kind}");
+            // Traversal cycle must be valid on every topology family —
+            // this is what keeps WPG/deterministic routing generic.
+            let cyc = g.traversal_cycle();
+            for w in cyc.windows(2) {
+                assert!(g.has_edge(w[0], w[1]), "{kind}: {:?}", w);
+            }
+        }
+        assert!(Topology::by_kind("torus", 10, 0.5, &mut r).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! # apibcd — decentralized ML via asynchronous parallel incremental BCD
+//!
+//! Reproduction of *"Asynchronous Parallel Incremental Block-Coordinate
+//! Descent for Decentralized Machine Learning"* (Chen, Ye, Xiao, Skoglund,
+//! 2022). `N` agents hold private data shards on a connected graph and learn
+//! a shared model with **no parameter server**: one or more *tokens* walk the
+//! graph, and the active agent solves a proximal subproblem against its local
+//! token copies (paper eqs. (7)–(8), (12a)–(12c)).
+//!
+//! ## Architecture (three layers, Python never on the hot path)
+//!
+//! * **Layer 3 (this crate)** — the coordinator: graph/topology substrate
+//!   ([`graph`]), token routing and the asynchronous runtime (discrete-event
+//!   simulator in [`sim`], real-thread execution in [`exec`]), the algorithm
+//!   family ([`algo`]): I-BCD, API-BCD, gAPI-BCD and the baselines WPG, DGD,
+//!   WADMM, PW-ADMM.
+//! * **Layer 2/1 (build-time JAX + Pallas)** — the per-agent local updates,
+//!   AOT-lowered to HLO text in `artifacts/` and executed through the PJRT C
+//!   API by [`runtime`]; [`solver`] routes each algorithm's update through
+//!   those artifacts (or a bit-compatible native fallback for artifact-less
+//!   unit tests).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use apibcd::prelude::*;
+//!
+//! let cfg = ExperimentConfig::preset(Preset::Fig3Cpusmall);
+//! let report = apibcd::run_experiment(&cfg).unwrap();
+//! println!("final NMSE: {:.4}", report.traces[0].last_metric());
+//! ```
+
+pub mod algo;
+pub mod config;
+pub mod data;
+pub mod exec;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod util;
+
+pub mod prelude {
+    //! Convenience re-exports for downstream users and the examples.
+    pub use crate::algo::{AlgoKind, Algorithm};
+    pub use crate::config::{ExperimentConfig, Preset, RoutingRule, StopRule};
+    pub use crate::data::{Dataset, DatasetProfile, Partition};
+    pub use crate::graph::Topology;
+    pub use crate::metrics::{Trace, TracePoint};
+    pub use crate::model::{Problem, Task};
+    pub use crate::sim::{LatencyModel, TimingModel};
+    pub use crate::solver::{LocalSolver, NativeSolver};
+}
+
+pub use config::{ExperimentConfig, Preset};
+pub use metrics::RunReport;
+
+/// Run one experiment end-to-end: build data + topology from the config,
+/// construct the solver (PJRT artifacts when available, native fallback
+/// otherwise), run every configured algorithm and collect traces.
+pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunReport> {
+    crate::algo::driver::run_experiment(cfg)
+}

@@ -1,0 +1,226 @@
+//! Dense linear algebra substrate (f32, row-major).
+//!
+//! Used by the evaluation path (test-set metrics over full matrices), the
+//! native fallback solver, and the algorithm state updates (token algebra is
+//! all axpy-shaped). The *training* hot path goes through the PJRT artifacts
+//! instead — this module is deliberately simple, allocation-conscious code,
+//! not a BLAS.
+
+pub mod ops;
+
+pub use ops::*;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// y = A x  (panics on shape mismatch).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+    }
+
+    /// y = Aᵀ x.
+    pub fn tmatvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for i in 0..self.rows {
+            axpy(x[i], self.row(i), y);
+        }
+    }
+
+    /// C = AᵀA (Gram matrix), with per-row weights: C = Aᵀ diag(w) A.
+    pub fn gram_weighted(&self, w: &[f32]) -> Mat {
+        assert_eq!(w.len(), self.rows);
+        let p = self.cols;
+        let mut g = Mat::zeros(p, p);
+        for i in 0..self.rows {
+            let wi = w[i];
+            if wi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for a in 0..p {
+                let s = wi * row[a];
+                if s == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(a);
+                for b in 0..p {
+                    grow[b] += s * row[b];
+                }
+            }
+        }
+        g
+    }
+}
+
+/// Cholesky factorization/solve for SPD systems (native prox fallback and
+/// the closed-form test oracle). Returns None if the matrix is not SPD.
+pub fn cholesky_solve(a: &Mat, b: &[f32]) -> Option<Vec<f32>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(b.len(), a.rows);
+    let n = a.rows;
+    // Factor a = L Lᵀ (lower-triangular L, f64 accumulation for stability).
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.get(i, j) as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    // Forward solve L v = b.
+    let mut v = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l[i * n + k] * v[k];
+        }
+        v[i] = s / l[i * n + i];
+    }
+    // Back solve Lᵀ x = v.
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = v[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    Some(x.into_iter().map(|t| t as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matvec_identity() {
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            a.set(i, i, 1.0);
+        }
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        a.matvec(&x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn tmatvec_matches_manual() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let x = [1.0, 1.0, 1.0];
+        let mut y = [0.0; 2];
+        a.tmatvec(&x, &mut y);
+        assert_eq!(y, [9.0, 12.0]);
+    }
+
+    #[test]
+    fn gram_weighted_matches_naive() {
+        let mut rng = Rng::new(4);
+        let a = Mat {
+            rows: 20,
+            cols: 5,
+            data: (0..100).map(|_| rng.normal_f32()).collect(),
+        };
+        let w: Vec<f32> = (0..20).map(|i| (i % 3 == 0) as u8 as f32).collect();
+        let g = a.gram_weighted(&w);
+        for i in 0..5 {
+            for j in 0..5 {
+                let mut want = 0.0f32;
+                for r in 0..20 {
+                    want += w[r] * a.get(r, i) * a.get(r, j);
+                }
+                assert!((g.get(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = Mᵀ M + I is SPD.
+        let mut rng = Rng::new(1);
+        let m = Mat {
+            rows: 8,
+            cols: 6,
+            data: (0..48).map(|_| rng.normal_f32()).collect(),
+        };
+        let mut a = m.gram_weighted(&vec![1.0; 8]);
+        for i in 0..6 {
+            let v = a.get(i, i) + 1.0;
+            a.set(i, i, v);
+        }
+        let x_true: Vec<f32> = (0..6).map(|i| i as f32 - 2.5).collect();
+        let mut b = vec![0.0; 6];
+        a.matvec(&x_true, &mut b);
+        let x = cholesky_solve(&a, &b).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(vec![vec![0.0, 1.0], vec![1.0, 0.0]]);
+        assert!(cholesky_solve(&a, &[1.0, 1.0]).is_none());
+    }
+}

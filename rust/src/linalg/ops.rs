@@ -1,0 +1,166 @@
+//! Vector primitives. Everything the token algebra (eqs. (8), (12b)) and the
+//! native solver's CG loop need, written to be auto-vectorizable.
+
+/// Dot product with f64 accumulation (matches the f32-data/f64-accumulate
+/// discipline of the JAX artifacts' `preferred_element_type`).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc as f32
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// y = x (copy, shape-checked).
+#[inline]
+pub fn assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    y.copy_from_slice(x);
+}
+
+/// x *= alpha.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// ‖x‖₂.
+#[inline]
+pub fn nrm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// ‖a − b‖₂².
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc as f32
+}
+
+/// out = Σ_i xs[i] (element-wise), xs non-empty.
+pub fn vec_sum(xs: &[&[f32]], out: &mut [f32]) {
+    out.fill(0.0);
+    for x in xs {
+        axpy(1.0, x, out);
+    }
+}
+
+/// Numerically-stable sigmoid.
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// log(1 + eᶻ) without overflow.
+#[inline]
+pub fn log1pexp(z: f32) -> f32 {
+    if z > 15.0 {
+        z
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+/// Row-wise softmax in place over a (c,)-slice.
+pub fn softmax_inplace(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_nrm2() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn dist2_zero_on_equal() {
+        assert_eq!(dist2(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(dist2(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn vec_sum_sums() {
+        let a = [1.0f32, 2.0];
+        let b = [10.0f32, 20.0];
+        let mut out = [0.0f32; 2];
+        vec_sum(&[&a, &b], &mut out);
+        assert_eq!(out, [11.0, 22.0]);
+    }
+
+    #[test]
+    fn sigmoid_stable_extremes() {
+        assert!(sigmoid(100.0) > 0.999_999);
+        assert!(sigmoid(-100.0) < 1e-6);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(-100.0).is_finite() && sigmoid(100.0).is_finite());
+    }
+
+    #[test]
+    fn log1pexp_stable() {
+        assert!((log1pexp(0.0) - (2.0f32).ln()).abs() < 1e-6);
+        assert!((log1pexp(50.0) - 50.0).abs() < 1e-4);
+        assert!(log1pexp(-50.0) < 1e-6);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut row = [1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut row);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        let mut a = [1000.0f32, 1001.0, 1002.0];
+        let mut b = [0.0f32, 1.0, 2.0];
+        softmax_inplace(&mut a);
+        softmax_inplace(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Trace analysis: quantify "who wins, by what factor, where's the
+//! crossover" — the claims the paper's figures make visually.
+//!
+//! Used by the figure bench's shape checks, the `repro compare` command,
+//! and the regression-gating workflow (compare a fresh run's JSON against
+//! a committed baseline).
+
+use super::{Trace, TracePoint};
+
+/// Head-to-head comparison of two traces at a metric target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matchup {
+    pub a: String,
+    pub b: String,
+    pub target: f64,
+    /// time_b / time_a at the target (>1 ⇒ a is faster). None if either
+    /// trace never reaches it.
+    pub time_speedup: Option<f64>,
+    /// comm_b / comm_a at the target.
+    pub comm_ratio: Option<f64>,
+}
+
+pub fn matchup(a: &Trace, b: &Trace, target: f64, lower_is_better: bool) -> Matchup {
+    let ta = a.time_to_target(target, lower_is_better);
+    let tb = b.time_to_target(target, lower_is_better);
+    let ca = a.comm_to_target(target, lower_is_better);
+    let cb = b.comm_to_target(target, lower_is_better);
+    Matchup {
+        a: a.name.clone(),
+        b: b.name.clone(),
+        target,
+        time_speedup: match (ta, tb) {
+            (Some(ta), Some(tb)) if ta > 0.0 => Some(tb / ta),
+            _ => None,
+        },
+        comm_ratio: match (ca, cb) {
+            (Some(ca), Some(cb)) if ca > 0 => Some(cb as f64 / ca as f64),
+            _ => None,
+        },
+    }
+}
+
+/// Metric value at (or interpolated just before) a given simulated time —
+/// aligns curves with different sampling grids for crossover detection.
+pub fn metric_at_time(trace: &Trace, t: f64) -> Option<f64> {
+    let mut last = None;
+    for p in &trace.points {
+        if p.time <= t {
+            last = Some(p.metric);
+        } else {
+            break;
+        }
+    }
+    last
+}
+
+/// First simulated time where trace `a` becomes (and stays, at sampling
+/// resolution) better than `b`. None if it never does.
+pub fn crossover_time(a: &Trace, b: &Trace, lower_is_better: bool) -> Option<f64> {
+    let better = |x: f64, y: f64| {
+        if lower_is_better {
+            x < y
+        } else {
+            x > y
+        }
+    };
+    for p in &a.points {
+        if let Some(mb) = metric_at_time(b, p.time) {
+            if better(p.metric, mb) {
+                return Some(p.time);
+            }
+        }
+    }
+    None
+}
+
+/// Geometric-decay rate fit: least-squares slope of log(metric − floor)
+/// against iteration, over the tail half of the trace. Positive = decaying
+/// (for lower-is-better metrics). A coarse but comparable convergence-speed
+/// scalar.
+pub fn decay_rate(trace: &Trace) -> Option<f64> {
+    let pts: Vec<&TracePoint> = trace
+        .points
+        .iter()
+        .skip(trace.points.len() / 2)
+        .filter(|p| p.metric > 1e-12)
+        .collect();
+    if pts.len() < 3 {
+        return None;
+    }
+    let n = pts.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for p in &pts {
+        let x = p.iter as f64;
+        let y = p.metric.ln();
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+    }
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    Some(-(n * sxy - sx * sy) / denom)
+}
+
+/// Compare two run-report JSON files (as written by `RunReport::write_files`)
+/// trace-by-trace: final metric deltas plus per-trace point counts. Returns
+/// a human-readable report and whether any final metric regressed by more
+/// than `tolerance` (for CI gating).
+pub fn compare_report_files(
+    path_a: &str,
+    path_b: &str,
+    tolerance: f64,
+    lower_is_better: bool,
+) -> anyhow::Result<(String, bool)> {
+    use crate::util::json::Json;
+    let load = |path: &str| -> anyhow::Result<Vec<(String, f64, usize)>> {
+        let doc = Json::parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let traces = doc
+            .get("traces")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("{path}: no traces"))?;
+        traces
+            .iter()
+            .map(|t| {
+                let name = t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("?")
+                    .to_string();
+                let points = t
+                    .get("points")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("trace {name}: no points"))?;
+                let last = points
+                    .last()
+                    .and_then(|p| p.get("metric"))
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("trace {name}: no final metric"))?;
+                Ok((name, last, points.len()))
+            })
+            .collect()
+    };
+    let a = load(path_a)?;
+    let b = load(path_b)?;
+    let mut out = format!(
+        "{:<14} {:>12} {:>12} {:>10} {:>8}\n",
+        "trace", "baseline", "candidate", "delta", "verdict"
+    );
+    let mut regressed = false;
+    for (name, la, _) in &a {
+        match b.iter().find(|(n, _, _)| n == name) {
+            None => {
+                out.push_str(&format!("{name:<14} missing in candidate\n"));
+                regressed = true;
+            }
+            Some((_, lb, _)) => {
+                let delta = lb - la;
+                let worse = if lower_is_better { delta > tolerance } else { -delta > tolerance };
+                if worse {
+                    regressed = true;
+                }
+                out.push_str(&format!(
+                    "{:<14} {:>12.5} {:>12.5} {:>+10.5} {:>8}\n",
+                    name,
+                    la,
+                    lb,
+                    delta,
+                    if worse { "REGRESS" } else { "ok" }
+                ));
+            }
+        }
+    }
+    Ok((out, regressed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(name: &str, metrics: &[f64]) -> Trace {
+        let mut t = Trace::new(name);
+        for (k, &m) in metrics.iter().enumerate() {
+            t.push(TracePoint {
+                iter: k as u64 * 10,
+                time: k as f64 * 0.01,
+                comm: k as u64 * 10,
+                objective: 0.0,
+                metric: m,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn matchup_speedup() {
+        let fast = trace("fast", &[1.0, 0.4, 0.1]);
+        let slow = trace("slow", &[1.0, 0.8, 0.4, 0.2, 0.1]);
+        let m = matchup(&fast, &slow, 0.4, true);
+        // fast reaches 0.4 at t=0.01; slow at t=0.02 → 2×.
+        assert_eq!(m.time_speedup, Some(2.0));
+        assert_eq!(m.comm_ratio, Some(2.0));
+    }
+
+    #[test]
+    fn matchup_unreached_target() {
+        let a = trace("a", &[1.0, 0.5]);
+        let b = trace("b", &[1.0, 0.9]);
+        let m = matchup(&a, &b, 0.1, true);
+        assert_eq!(m.time_speedup, None);
+    }
+
+    #[test]
+    fn crossover_detection() {
+        let a = trace("a", &[1.0, 0.9, 0.3, 0.1]); // slow start, fast finish
+        let b = trace("b", &[1.0, 0.5, 0.45, 0.4]);
+        let x = crossover_time(&a, &b, true).unwrap();
+        assert!((x - 0.02).abs() < 1e-12);
+        assert_eq!(crossover_time(&b, &a, true), Some(0.01));
+    }
+
+    #[test]
+    fn decay_rate_positive_for_geometric() {
+        let metrics: Vec<f64> = (0..20).map(|k| (0.8f64).powi(k)).collect();
+        let t = trace("geom", &metrics);
+        let r = decay_rate(&t).unwrap();
+        // per-iteration (10 per point) slope of ln: −ln(0.8)/10 ≈ 0.0223
+        assert!((r - (-(0.8f64.ln()) / 10.0)).abs() < 1e-6, "{r}");
+    }
+
+    #[test]
+    fn compare_files_flags_regression() {
+        let dir = format!(
+            "{}/apibcd_cmp_{}",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        std::fs::create_dir_all(&dir).unwrap();
+        let report_a = crate::metrics::RunReport {
+            experiment: "base".into(),
+            traces: vec![trace("API-BCD", &[1.0, 0.1])],
+            metric_name: "test NMSE",
+            lower_is_better: true,
+        };
+        let report_b = crate::metrics::RunReport {
+            experiment: "cand".into(),
+            traces: vec![trace("API-BCD", &[1.0, 0.5])],
+            metric_name: "test NMSE",
+            lower_is_better: true,
+        };
+        report_a.write_files(&dir).unwrap();
+        report_b.write_files(&dir).unwrap();
+        let (text, regressed) = compare_report_files(
+            &format!("{dir}/base.json"),
+            &format!("{dir}/cand.json"),
+            0.05,
+            true,
+        )
+        .unwrap();
+        assert!(regressed, "{text}");
+        assert!(text.contains("REGRESS"));
+        // Identical files: no regression.
+        let (_, reg2) = compare_report_files(
+            &format!("{dir}/base.json"),
+            &format!("{dir}/base.json"),
+            0.05,
+            true,
+        )
+        .unwrap();
+        assert!(!reg2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,279 @@
+//! Run instrumentation: metric traces over (simulated time, communication
+//! cost), CSV/JSON writers and the console tables the figure harness prints.
+//!
+//! A [`Trace`] is the reproduction of one curve in the paper's figures: the
+//! test metric sampled against *both* x-axes (running time, Fig. 3(b)-style,
+//! and communication cost, Fig. 3(a)-style).
+
+pub mod analysis;
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One sampled point on a training curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    /// Virtual activation counter k.
+    pub iter: u64,
+    /// Simulated running time (seconds): compute + communication.
+    pub time: f64,
+    /// Cumulative communication cost (1 unit per link traversal).
+    pub comm: u64,
+    /// Penalty objective F(x, z) (theory descent check).
+    pub objective: f64,
+    /// Test metric (NMSE or accuracy).
+    pub metric: f64,
+}
+
+/// A named training curve (one algorithm on one workload).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub points: Vec<TracePoint>,
+    /// Wall-clock seconds the coordinator spent producing this trace
+    /// (profiling signal, not a figure axis).
+    pub wall_secs: f64,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>) -> Trace {
+        Trace {
+            name: name.into(),
+            points: Vec::new(),
+            wall_secs: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn last_metric(&self) -> f64 {
+        self.points.last().map(|p| p.metric).unwrap_or(f64::NAN)
+    }
+
+    pub fn last(&self) -> Option<&TracePoint> {
+        self.points.last()
+    }
+
+    /// First simulated time at which the metric reaches `target`
+    /// (≤ for NMSE-style, ≥ for accuracy-style).
+    pub fn time_to_target(&self, target: f64, lower_is_better: bool) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| {
+                if lower_is_better {
+                    p.metric <= target
+                } else {
+                    p.metric >= target
+                }
+            })
+            .map(|p| p.time)
+    }
+
+    /// First communication cost at which the metric reaches `target`.
+    pub fn comm_to_target(&self, target: f64, lower_is_better: bool) -> Option<u64> {
+        self.points
+            .iter()
+            .find(|p| {
+                if lower_is_better {
+                    p.metric <= target
+                } else {
+                    p.metric >= target
+                }
+            })
+            .map(|p| p.comm)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("iter,time_s,comm_units,objective,metric\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{:.9},{},{:.9},{:.9}\n",
+                p.iter, p.time, p.comm, p.objective, p.metric
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::Str(self.name.clone()));
+        obj.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        let pts = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("iter".into(), Json::Num(p.iter as f64));
+                m.insert("time".into(), Json::Num(p.time));
+                m.insert("comm".into(), Json::Num(p.comm as f64));
+                m.insert("objective".into(), Json::Num(p.objective));
+                m.insert("metric".into(), Json::Num(p.metric));
+                Json::Obj(m)
+            })
+            .collect();
+        obj.insert("points".into(), Json::Arr(pts));
+        Json::Obj(obj)
+    }
+}
+
+/// Result of a full experiment: one trace per configured algorithm.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub experiment: String,
+    pub traces: Vec<Trace>,
+    pub metric_name: &'static str,
+    pub lower_is_better: bool,
+}
+
+impl RunReport {
+    /// Write `<dir>/<experiment>_<algo>.csv` per trace plus a combined JSON.
+    pub fn write_files(&self, dir: &str) -> anyhow::Result<Vec<String>> {
+        std::fs::create_dir_all(dir)?;
+        let mut written = Vec::new();
+        for t in &self.traces {
+            let path = format!(
+                "{dir}/{}_{}.csv",
+                self.experiment,
+                t.name.replace([' ', '/'], "_")
+            );
+            std::fs::write(&path, t.to_csv())?;
+            written.push(path);
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("experiment".into(), Json::Str(self.experiment.clone()));
+        obj.insert("metric".into(), Json::Str(self.metric_name.into()));
+        obj.insert(
+            "traces".into(),
+            Json::Arr(self.traces.iter().map(|t| t.to_json()).collect()),
+        );
+        let path = format!("{dir}/{}.json", self.experiment);
+        std::fs::write(&path, crate::util::json::to_string(&Json::Obj(obj)))?;
+        written.push(path);
+        Ok(written)
+    }
+
+    /// Console table mirroring the paper figure: per-algorithm final metric,
+    /// plus time/comm needed to reach a shared target (the crossover view).
+    pub fn summary_table(&self, target: Option<f64>) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<22} {:>12} {:>14} {:>14} {:>12}\n",
+            "algorithm",
+            self.metric_name,
+            "sim time",
+            "comm units",
+            "wall"
+        ));
+        for t in &self.traces {
+            let last = t.last();
+            out.push_str(&format!(
+                "{:<22} {:>12.5} {:>14} {:>14} {:>12}\n",
+                t.name,
+                t.last_metric(),
+                last.map(|p| crate::util::fmt_secs(p.time)).unwrap_or_default(),
+                last.map(|p| p.comm.to_string()).unwrap_or_default(),
+                crate::util::fmt_secs(t.wall_secs),
+            ));
+        }
+        if let Some(target) = target {
+            out.push_str(&format!(
+                "\n-- to reach {} = {:.4} --\n",
+                self.metric_name, target
+            ));
+            out.push_str(&format!(
+                "{:<22} {:>14} {:>14}\n",
+                "algorithm", "time-to-target", "comm-to-target"
+            ));
+            for t in &self.traces {
+                let tt = t.time_to_target(target, self.lower_is_better);
+                let ct = t.comm_to_target(target, self.lower_is_better);
+                out.push_str(&format!(
+                    "{:<22} {:>14} {:>14}\n",
+                    t.name,
+                    tt.map(crate::util::fmt_secs).unwrap_or_else(|| "—".into()),
+                    ct.map(|c| c.to_string()).unwrap_or_else(|| "—".into()),
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> Trace {
+        let mut t = Trace::new("api-bcd");
+        for k in 0..5u64 {
+            t.push(TracePoint {
+                iter: k,
+                time: k as f64 * 0.1,
+                comm: k * 2,
+                objective: 10.0 - k as f64,
+                metric: 1.0 / (k + 1) as f64,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn time_to_target_finds_first_crossing() {
+        let t = trace();
+        assert_eq!(t.time_to_target(0.5, true), Some(0.1));
+        assert_eq!(t.time_to_target(0.01, true), None);
+        assert_eq!(t.comm_to_target(0.25, true), Some(6));
+    }
+
+    #[test]
+    fn accuracy_style_target() {
+        let mut t = Trace::new("acc");
+        t.push(TracePoint { iter: 0, time: 0.0, comm: 0, objective: 0.0, metric: 0.4 });
+        t.push(TracePoint { iter: 1, time: 1.0, comm: 3, objective: 0.0, metric: 0.9 });
+        assert_eq!(t.time_to_target(0.8, false), Some(1.0));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = trace().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 6);
+        assert!(lines[0].starts_with("iter,"));
+    }
+
+    #[test]
+    fn report_writes_files() {
+        let dir = format!(
+            "{}/apibcd_metrics_test_{}",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        let report = RunReport {
+            experiment: "unit".into(),
+            traces: vec![trace()],
+            metric_name: "test NMSE",
+            lower_is_better: true,
+        };
+        let files = report.write_files(&dir).unwrap();
+        assert_eq!(files.len(), 2);
+        for f in &files {
+            assert!(std::path::Path::new(f).exists());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_table_renders() {
+        let report = RunReport {
+            experiment: "unit".into(),
+            traces: vec![trace()],
+            metric_name: "test NMSE",
+            lower_is_better: true,
+        };
+        let table = report.summary_table(Some(0.5));
+        assert!(table.contains("api-bcd"));
+        assert!(table.contains("to reach"));
+    }
+}

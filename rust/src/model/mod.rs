@@ -1,0 +1,393 @@
+//! Problem definitions and evaluation metrics.
+//!
+//! The *training* updates run through the AOT artifacts ([`crate::solver`]);
+//! this module owns everything measured about a model: test-set metrics
+//! (NMSE / accuracy — the y-axes of Figs. 3–6), local losses `f_i`, and the
+//! penalty objective `F(x, z)` from eqs. (3)/(10) whose per-activation
+//! descent Theorems 1–3 guarantee (the integration tests check it).
+
+use crate::data::{AgentData, Dataset};
+use crate::linalg::{self, dist2};
+
+/// Learning task of a dataset profile. `classes()` is the trailing model
+/// dimension `c` (1 except for multiclass).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Regression,
+    Binary,
+    Multiclass(usize),
+}
+
+impl Task {
+    pub fn classes(&self) -> usize {
+        match self {
+            Task::Multiclass(c) => *c,
+            _ => 1,
+        }
+    }
+
+    /// Figure y-axis label for this task.
+    pub fn metric_name(&self) -> &'static str {
+        match self {
+            Task::Regression => "test NMSE",
+            _ => "test accuracy",
+        }
+    }
+
+    /// Whether lower metric values are better (NMSE) or higher (accuracy).
+    pub fn lower_is_better(&self) -> bool {
+        matches!(self, Task::Regression)
+    }
+}
+
+/// Evaluation problem bound to a dataset (test split) — computes the
+/// figure metrics for a flat model vector `w` of length `p·c`.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub task: Task,
+    pub features: usize,
+    /// Test design matrix rows flattened (t × p).
+    x_test: Vec<f32>,
+    y_test: Vec<f32>,
+    n_test: usize,
+    /// ‖y_test‖² for NMSE normalization.
+    y_sq: f64,
+}
+
+impl Problem {
+    pub fn from_dataset(ds: &Dataset) -> Problem {
+        let p = ds.profile.features;
+        let mut x_test = Vec::with_capacity(ds.test_idx.len() * p);
+        let mut y_test = Vec::with_capacity(ds.test_idx.len());
+        for &i in &ds.test_idx {
+            x_test.extend_from_slice(ds.x.row(i));
+            y_test.push(ds.y[i]);
+        }
+        let y_sq = y_test.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        Problem {
+            task: ds.profile.task,
+            features: p,
+            x_test,
+            y_test,
+            n_test: ds.test_idx.len(),
+            y_sq,
+        }
+    }
+
+    /// The figure metric: NMSE (regression) or accuracy (classification).
+    pub fn metric(&self, w: &[f32]) -> f64 {
+        match self.task {
+            Task::Regression => self.nmse(w),
+            Task::Binary => self.accuracy_binary(w),
+            Task::Multiclass(c) => self.accuracy_multiclass(w, c),
+        }
+    }
+
+    /// ‖X_test w − y_test‖² / ‖y_test‖².
+    pub fn nmse(&self, w: &[f32]) -> f64 {
+        assert_eq!(w.len(), self.features);
+        let p = self.features;
+        let mut err = 0.0f64;
+        for i in 0..self.n_test {
+            let row = &self.x_test[i * p..(i + 1) * p];
+            let pred = linalg::dot(row, w) as f64;
+            let d = pred - self.y_test[i] as f64;
+            err += d * d;
+        }
+        err / self.y_sq.max(1e-12)
+    }
+
+    pub fn accuracy_binary(&self, w: &[f32]) -> f64 {
+        assert_eq!(w.len(), self.features);
+        let p = self.features;
+        let mut correct = 0usize;
+        for i in 0..self.n_test {
+            let row = &self.x_test[i * p..(i + 1) * p];
+            let pred = (linalg::dot(row, w) > 0.0) as u8 as f32;
+            if pred == self.y_test[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / self.n_test as f64
+    }
+
+    pub fn accuracy_multiclass(&self, w: &[f32], c: usize) -> f64 {
+        assert_eq!(w.len(), self.features * c);
+        let p = self.features;
+        let mut correct = 0usize;
+        for i in 0..self.n_test {
+            let row = &self.x_test[i * p..(i + 1) * p];
+            // logits_k = row · w[:, k]  (w stored row-major p×c)
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for k in 0..c {
+                let mut z = 0.0f32;
+                for j in 0..p {
+                    z += row[j] * w[j * c + k];
+                }
+                if z > best.1 {
+                    best = (k, z);
+                }
+            }
+            if best.0 == self.y_test[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / self.n_test as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Local losses f_i and the penalty objective F — pure-rust mirrors of the
+// Layer-2 loss definitions, used for theory checks and native solving.
+
+/// (1/2d)‖D(Xw − y)‖².
+pub fn ls_loss(shard: &AgentData, w: &[f32]) -> f64 {
+    let p = shard.features;
+    let d = shard.active.max(1) as f64;
+    let mut acc = 0.0f64;
+    for r in 0..shard.active {
+        let row = &shard.x[r * p..(r + 1) * p];
+        let e = linalg::dot(row, w) as f64 - shard.y[r] as f64;
+        acc += e * e;
+    }
+    0.5 * acc / d
+}
+
+/// Mean logistic loss, y ∈ {0,1}.
+pub fn logit_loss(shard: &AgentData, w: &[f32]) -> f64 {
+    let p = shard.features;
+    let d = shard.active.max(1) as f64;
+    let mut acc = 0.0f64;
+    for r in 0..shard.active {
+        let row = &shard.x[r * p..(r + 1) * p];
+        let z = linalg::dot(row, w);
+        acc += (linalg::log1pexp(z) - shard.y[r] * z) as f64;
+    }
+    acc / d
+}
+
+/// Mean softmax cross-entropy, w flat (p·c).
+pub fn smax_loss(shard: &AgentData, w: &[f32]) -> f64 {
+    let p = shard.features;
+    let c = shard.classes;
+    let d = shard.active.max(1) as f64;
+    let mut acc = 0.0f64;
+    let mut logits = vec![0.0f32; c];
+    for r in 0..shard.active {
+        let row = &shard.x[r * p..(r + 1) * p];
+        for k in 0..c {
+            let mut z = 0.0f32;
+            for j in 0..p {
+                z += row[j] * w[j * c + k];
+            }
+            logits[k] = z;
+        }
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = logits.iter().map(|&z| (z - max).exp()).sum::<f32>().ln() + max;
+        let k_true = shard.y[r] as usize;
+        acc += (lse - logits[k_true]) as f64;
+    }
+    acc / d
+}
+
+/// Task-dispatched local loss.
+pub fn task_loss(task: Task, shard: &AgentData, w: &[f32]) -> f64 {
+    match task {
+        Task::Regression => ls_loss(shard, w),
+        Task::Binary => logit_loss(shard, w),
+        Task::Multiclass(_) => smax_loss(shard, w),
+    }
+}
+
+/// Incremental evaluator of the penalty objective
+/// F(x, z) = Σ_i f_i(x_i) + (τ/2) Σ_i Σ_m ‖x_i − z_m‖².
+///
+/// The naive evaluation is O(N·s·p) per sample (every agent's loss over its
+/// whole shard) — measured at ~200µs/activation on the Fig. 5 workload,
+/// ~70% on top of the actual local update (EXPERIMENTS.md §Perf). This
+/// tracker makes it O(changed agents · s·p + M·dim):
+///
+/// * per-agent losses are cached and recomputed only for agents whose block
+///   changed since the last sample (dirty set);
+/// * the pairwise penalty uses the expansion
+///   Σ_i Σ_m ‖x_i − z_m‖² = M·Σ_i‖x_i‖² − 2⟨Σ_i x_i, Σ_m z_m⟩ + N·Σ_m‖z_m‖²,
+///   with Σ_i x_i and Σ_i‖x_i‖² maintained incrementally (f64) on every
+///   block update.
+#[derive(Debug, Clone)]
+pub struct ObjectiveTracker {
+    task: Task,
+    losses: Vec<f64>,
+    dirty: Vec<bool>,
+    sum_x: Vec<f64>,
+    sum_x_sq: f64,
+    loss_sum_valid: bool,
+    loss_sum: f64,
+}
+
+impl ObjectiveTracker {
+    /// Start at x_i = 0 ∀i (the algorithms' init).
+    pub fn new(task: Task, n_agents: usize, dim: usize) -> ObjectiveTracker {
+        ObjectiveTracker {
+            task,
+            losses: vec![0.0; n_agents],
+            dirty: vec![true; n_agents],
+            sum_x: vec![0.0; dim],
+            sum_x_sq: 0.0,
+            loss_sum_valid: false,
+            loss_sum: 0.0,
+        }
+    }
+
+    /// Record that agent `i`'s block moved from `old_x` to `new_x`.
+    pub fn block_updated(&mut self, i: usize, old_x: &[f32], new_x: &[f32]) {
+        for j in 0..self.sum_x.len() {
+            let (o, n) = (old_x[j] as f64, new_x[j] as f64);
+            self.sum_x[j] += n - o;
+            self.sum_x_sq += n * n - o * o;
+        }
+        self.dirty[i] = true;
+        self.loss_sum_valid = false;
+    }
+
+    /// Evaluate F(x, z). Only dirty agents' losses are recomputed.
+    pub fn objective(
+        &mut self,
+        shards: &[AgentData],
+        xs: &[Vec<f32>],
+        zs: &[Vec<f32>],
+        tau: f64,
+    ) -> f64 {
+        for i in 0..self.losses.len() {
+            if self.dirty[i] {
+                self.losses[i] = task_loss(self.task, &shards[i], &xs[i]);
+                self.dirty[i] = false;
+                self.loss_sum_valid = false;
+            }
+        }
+        if !self.loss_sum_valid {
+            self.loss_sum = self.losses.iter().sum();
+            self.loss_sum_valid = true;
+        }
+        let m = zs.len() as f64;
+        let n = xs.len() as f64;
+        let mut cross = 0.0f64;
+        let mut z_sq = 0.0f64;
+        let dim = self.sum_x.len();
+        let mut sum_z = vec![0.0f64; dim];
+        for z in zs {
+            for j in 0..dim {
+                let zj = z[j] as f64;
+                sum_z[j] += zj;
+                z_sq += zj * zj;
+            }
+        }
+        for j in 0..dim {
+            cross += self.sum_x[j] * sum_z[j];
+        }
+        let pen = m * self.sum_x_sq - 2.0 * cross + n * z_sq;
+        self.loss_sum + 0.5 * tau * pen
+    }
+}
+
+/// The penalty objective F(x, z) = Σ_i f_i(x_i) + (τ/2) Σ_i Σ_m ‖x_i − z_m‖²
+/// (eq. (3) with M = 1, eq. (10) in general).
+pub fn penalty_objective(
+    task: Task,
+    shards: &[AgentData],
+    xs: &[Vec<f32>],
+    zs: &[Vec<f32>],
+    tau: f64,
+) -> f64 {
+    let mut f = 0.0f64;
+    for (shard, x) in shards.iter().zip(xs) {
+        f += task_loss(task, shard, x);
+    }
+    let mut pen = 0.0f64;
+    for x in xs {
+        for z in zs {
+            pen += dist2(x, z) as f64;
+        }
+    }
+    f + 0.5 * tau * pen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, DatasetProfile, Partition, shard::PartitionKind};
+
+    fn setup(name: &str) -> (Dataset, Partition) {
+        let ds = Dataset::load(DatasetProfile::by_name(name).unwrap(), "/nonexistent", 2).unwrap();
+        let n = 2;
+        let part = Partition::new(&ds, n, PartitionKind::Iid).unwrap();
+        (ds, part)
+    }
+
+    #[test]
+    fn nmse_of_zero_model_is_one() {
+        let (ds, _) = setup("test_ls");
+        let prob = Problem::from_dataset(&ds);
+        let w = vec![0.0f32; ds.profile.features];
+        assert!((prob.nmse(&w) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nmse_decreases_with_fitted_model() {
+        let (ds, part) = setup("test_ls");
+        let prob = Problem::from_dataset(&ds);
+        // Fit ridge on shard 0 — should beat the zero model on test NMSE.
+        let s = &part.shards[0];
+        let mat = crate::linalg::Mat {
+            rows: s.rows,
+            cols: s.features,
+            data: s.x.clone(),
+        };
+        let mut g = mat.gram_weighted(&s.mask);
+        for i in 0..s.features {
+            let v = g.get(i, i) + 1.0;
+            g.set(i, i, v);
+        }
+        let masked_y: Vec<f32> = s.y.iter().zip(&s.mask).map(|(y, m)| y * m).collect();
+        let mut b = vec![0.0; s.features];
+        mat.tmatvec(&masked_y, &mut b);
+        let w = crate::linalg::cholesky_solve(&g, &b).unwrap();
+        assert!(prob.nmse(&w) < 0.9);
+    }
+
+    #[test]
+    fn logit_loss_at_zero_is_ln2() {
+        let (_, part) = setup("test_logit");
+        let w = vec![0.0f32; 4];
+        let loss = logit_loss(&part.shards[0], &w);
+        assert!((loss - (2.0f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn smax_loss_at_zero_is_lnc() {
+        let (_, part) = setup("test_smax");
+        let w = vec![0.0f32; 4 * 3];
+        let loss = smax_loss(&part.shards[0], &w);
+        assert!((loss - (3.0f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn penalty_objective_accounts_tokens() {
+        let (_, part) = setup("test_ls");
+        let p = 4;
+        let xs = vec![vec![0.0f32; p]; 2];
+        let zs = vec![vec![1.0f32; p], vec![0.0f32; p]];
+        let f0 = penalty_objective(Task::Regression, &part.shards, &xs, &zs, 0.0);
+        let f1 = penalty_objective(Task::Regression, &part.shards, &xs, &zs, 2.0);
+        // penalty = (τ/2)·Σ_i Σ_m ‖x_i − z_m‖² = (2/2)·(2 agents · 4) = 8
+        assert!((f1 - f0 - 8.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn accuracy_bounds() {
+        let (ds, _) = setup("test_smax");
+        let prob = Problem::from_dataset(&ds);
+        let w = vec![0.1f32; ds.profile.features * 3];
+        let acc = prob.metric(&w);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,244 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT exporter
+//! and the rust runtime. The runtime is driven entirely by this file: entry
+//! names, HLO file paths, input order/shape, output shape.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// Empty = rank-0 scalar.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub profile: String,
+    pub task: String,
+    /// "prox" or "grad".
+    pub kind: String,
+    /// Inner iteration count for prox entries.
+    pub k: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+#[derive(Debug, Clone)]
+pub struct ProfileInfo {
+    pub task: String,
+    pub shard_rows: usize,
+    pub features: usize,
+    pub classes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub block_rows: usize,
+    pub default_k: usize,
+    pub entries: Vec<Entry>,
+    pub profiles: BTreeMap<String, ProfileInfo>,
+}
+
+fn spec_from(j: &Json, name_key: &str) -> anyhow::Result<TensorSpec> {
+    let name = j
+        .get(name_key)
+        .and_then(Json::as_str)
+        .unwrap_or("out")
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("tensor spec missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(TensorSpec { name, shape })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing version"))?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+
+        let block_rows = root
+            .get("block_rows")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing block_rows"))?;
+        let default_k = root
+            .get("default_k")
+            .and_then(Json::as_usize)
+            .unwrap_or(5);
+
+        let mut profiles = BTreeMap::new();
+        if let Some(obj) = root.get("profiles").and_then(Json::as_obj) {
+            for (name, v) in obj {
+                profiles.insert(
+                    name.clone(),
+                    ProfileInfo {
+                        task: v
+                            .get("task")
+                            .and_then(Json::as_str)
+                            .unwrap_or("ls")
+                            .to_string(),
+                        shard_rows: v
+                            .get("shard_rows")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow::anyhow!("profile {name}: shard_rows"))?,
+                        features: v
+                            .get("features")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow::anyhow!("profile {name}: features"))?,
+                        classes: v.get("classes").and_then(Json::as_usize).unwrap_or(1),
+                    },
+                );
+            }
+        }
+
+        let mut entries = Vec::new();
+        for e in root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?
+        {
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("entry missing inputs"))?
+                .iter()
+                .map(|i| spec_from(i, "name"))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let output = spec_from(
+                e.get("output")
+                    .ok_or_else(|| anyhow::anyhow!("entry missing output"))?,
+                "name",
+            )?;
+            let static_ = e.get("static");
+            entries.push(Entry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("entry missing name"))?
+                    .to_string(),
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("entry missing file"))?
+                    .to_string(),
+                profile: e
+                    .get("profile")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                task: e.get("task").and_then(Json::as_str).unwrap_or("").to_string(),
+                kind: static_
+                    .and_then(|s| s.get("kind"))
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                k: static_.and_then(|s| s.get("k")).and_then(Json::as_usize),
+                inputs,
+                output,
+            });
+        }
+        Ok(Manifest {
+            block_rows,
+            default_k,
+            entries,
+            profiles,
+        })
+    }
+
+    pub fn load(dir: &str) -> anyhow::Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    /// Find the entry for `(profile, kind)` — e.g. ("cpusmall", "prox").
+    pub fn entry(&self, profile: &str, kind: &str) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.profile == profile && e.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "block_rows": 128,
+      "default_k": 5,
+      "profiles": {
+        "test_ls": {"task": "ls", "n_total": 160, "features": 4,
+                     "agents": 1, "classes": 1, "shard_rows": 128}
+      },
+      "entries": [
+        {"name": "test_ls_ls_prox_k5", "file": "test_ls_ls_prox_k5.hlo.txt",
+         "profile": "test_ls", "task": "ls",
+         "inputs": [
+            {"name": "x", "dtype": "f32", "shape": [128, 4]},
+            {"name": "y", "dtype": "f32", "shape": [128]},
+            {"name": "mask", "dtype": "f32", "shape": [128]},
+            {"name": "w0", "dtype": "f32", "shape": [4]},
+            {"name": "tzsum", "dtype": "f32", "shape": [4]},
+            {"name": "tau_m", "dtype": "f32", "shape": []}
+         ],
+         "output": {"dtype": "f32", "shape": [4]},
+         "static": {"kind": "prox", "k": 5},
+         "sha256": "x"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.block_rows, 128);
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.kind, "prox");
+        assert_eq!(e.k, Some(5));
+        assert_eq!(e.inputs[0].shape, vec![128, 4]);
+        assert_eq!(e.inputs[5].shape, Vec::<usize>::new());
+        assert_eq!(e.inputs[5].elements(), 1); // rank-0 = one element
+        assert_eq!(m.profiles["test_ls"].shard_rows, 128);
+    }
+
+    #[test]
+    fn entry_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.entry("test_ls", "prox").is_some());
+        assert!(m.entry("test_ls", "grad").is_none());
+        assert!(m.entry("nope", "prox").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let text = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&text).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Integration with the actual exporter output when present.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.entry("test_ls", "prox").is_some());
+            assert!(m.entry("test_ls", "grad").is_some());
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! rust hot path. Python never runs here — `make artifacts` produced the
+//! HLO files once; this module compiles them on the PJRT CPU client at
+//! startup and executes per-update.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Two hot-path optimizations on top:
+//! executables are compile-once cached, and per-agent constant inputs
+//! (`x`, `y`, `mask`) are uploaded once as device buffers and reused across
+//! every activation (`execute_b`).
+
+pub mod manifest;
+
+pub use manifest::{Entry, Manifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// One argument to an artifact call.
+pub enum Arg<'a> {
+    /// Dense f32 tensor (data, dims). Rank-0 scalar = (&[v], &[]).
+    Host(&'a [f32], &'a [usize]),
+    /// Reference to a cached device buffer (see [`Engine::cache_buffer`]).
+    Cached(CacheKey),
+}
+
+/// Key for per-agent constant device buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub agent: usize,
+    /// Input slot label: 0 = x, 1 = y/y_onehot, 2 = mask.
+    pub slot: u8,
+}
+
+/// Compile-once, execute-many PJRT engine. Not `Send` (the PJRT client is
+/// `Rc`-based) — shared across threads via [`crate::solver::service`].
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: String,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    buffers: HashMap<CacheKey, xla::PjRtBuffer>,
+    /// Cumulative statistics for the perf report.
+    pub stats: EngineStats,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+    pub upload_secs: f64,
+}
+
+impl Engine {
+    /// Open the artifact directory: parse the manifest, create the CPU
+    /// client. Executables compile lazily on first use.
+    pub fn open(dir: &str) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            dir: dir.to_string(),
+            manifest,
+            executables: HashMap::new(),
+            buffers: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch the cached) executable for a manifest entry.
+    fn executable(&mut self, name: &str) -> anyhow::Result<()> {
+        if !self.executables.contains_key(name) {
+            let entry = self
+                .manifest
+                .entries
+                .iter()
+                .find(|e| e.name == name)
+                .ok_or_else(|| anyhow::anyhow!("no manifest entry '{name}'"))?;
+            let path = format!("{}/{}", self.dir, entry.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            self.stats.compile_secs += t0.elapsed().as_secs_f64();
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    /// Pre-compile every entry for a profile (startup, off the hot path).
+    pub fn warmup(&mut self, profile: &str) -> anyhow::Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| e.profile == profile)
+            .map(|e| e.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Upload a constant tensor once; later calls pass `Arg::Cached(key)`.
+    pub fn cache_buffer(
+        &mut self,
+        key: CacheKey,
+        data: &[f32],
+        dims: &[usize],
+    ) -> anyhow::Result<()> {
+        if self.buffers.contains_key(&key) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload: {e:?}"))?;
+        self.stats.upload_secs += t0.elapsed().as_secs_f64();
+        self.buffers.insert(key, buf);
+        Ok(())
+    }
+
+    pub fn has_cached(&self, key: CacheKey) -> bool {
+        self.buffers.contains_key(&key)
+    }
+
+    /// Execute a manifest entry. Inputs must match the manifest order and
+    /// shapes; the (tuple-wrapped) f32 output is flattened.
+    pub fn execute(&mut self, name: &str, args: &[Arg]) -> anyhow::Result<Vec<f32>> {
+        // Validate against the manifest before touching PJRT.
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no manifest entry '{name}'"))?;
+        anyhow::ensure!(
+            args.len() == entry.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            entry.inputs.len(),
+            args.len()
+        );
+        for (i, (arg, spec)) in args.iter().zip(&entry.inputs).enumerate() {
+            if let Arg::Host(data, dims) = arg {
+                anyhow::ensure!(
+                    *dims == spec.shape.as_slice(),
+                    "{name} input {i} ({}): shape {:?} != manifest {:?}",
+                    spec.name,
+                    dims,
+                    spec.shape
+                );
+                anyhow::ensure!(
+                    data.len() == spec.elements(),
+                    "{name} input {i}: {} elements for shape {:?}",
+                    data.len(),
+                    spec.shape
+                );
+            }
+        }
+        let out_len = entry.output.elements();
+
+        // Materialize host args as device buffers (cached ones are reused).
+        let t_up = Instant::now();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<Result<usize, CacheKey>> = Vec::new();
+        for arg in args {
+            match arg {
+                Arg::Host(data, dims) => {
+                    let buf = self
+                        .client
+                        .buffer_from_host_buffer(*data, dims, None)
+                        .map_err(|e| anyhow::anyhow!("upload arg: {e:?}"))?;
+                    order.push(Ok(owned.len()));
+                    owned.push(buf);
+                }
+                Arg::Cached(key) => {
+                    anyhow::ensure!(
+                        self.buffers.contains_key(key),
+                        "cache miss for agent {} slot {}",
+                        key.agent,
+                        key.slot
+                    );
+                    order.push(Err(*key));
+                }
+            }
+        }
+        self.stats.upload_secs += t_up.elapsed().as_secs_f64();
+
+        self.executable(name)?; // ensure compiled
+        let refs: Vec<&xla::PjRtBuffer> = order
+            .iter()
+            .map(|slot| match slot {
+                Ok(i) => &owned[*i],
+                Err(key) => &self.buffers[key],
+            })
+            .collect();
+
+        let exe = &self.executables[name];
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let inner = literal
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let out = inner
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        self.stats.execute_secs += t0.elapsed().as_secs_f64();
+        self.stats.executions += 1;
+        anyhow::ensure!(
+            out.len() == out_len,
+            "{name}: output {} elements, manifest says {out_len}",
+            out.len()
+        );
+        Ok(out)
+    }
+}

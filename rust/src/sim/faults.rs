@@ -1,0 +1,205 @@
+//! Failure injection: unreliable links and agent dropout.
+//!
+//! The paper assumes reliable links; a deployable decentralized system
+//! cannot. This module models the two failure classes that matter for a
+//! token-walk protocol and the recovery mechanisms the coordinator uses:
+//!
+//! * **Link loss** — a token transmission is dropped with probability
+//!   `drop_prob`. Recovery: sender-side retransmission. The sender holds
+//!   the token until the (implicit) ack; each retry costs one comm unit
+//!   and one latency draw plus an ack-timeout penalty — so lossy links
+//!   show up in *both* figure axes, which is exactly the trade-off the
+//!   incremental methods are sensitive to.
+//! * **Agent dropout** — an agent leaves for a time window (device churn).
+//!   A token routed to a dropped agent is re-routed to another neighbor of
+//!   the sender (the membership view a real deployment gets from its
+//!   failure detector).
+//!
+//! Deterministic under the run's seeded RNG like everything else.
+
+use crate::util::rng::Rng;
+
+/// Link reliability model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultModel {
+    /// Probability a transmission is lost (per attempt).
+    pub drop_prob: f64,
+    /// Extra delay incurred per lost attempt before retransmission
+    /// (ack timeout), seconds.
+    pub retry_timeout: f64,
+    /// Fraction of agents that churn (drop out and return).
+    pub dropout_frac: f64,
+    /// Mean dropout duration in *activations* (exponential-ish window).
+    pub dropout_len: f64,
+}
+
+impl FaultModel {
+    pub const NONE: FaultModel = FaultModel {
+        drop_prob: 0.0,
+        retry_timeout: 0.0,
+        dropout_frac: 0.0,
+        dropout_len: 0.0,
+    };
+
+    pub fn lossy(drop_prob: f64) -> FaultModel {
+        FaultModel {
+            drop_prob,
+            retry_timeout: 2e-4, // 2× the worst-case link latency
+            ..Self::NONE
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.drop_prob == 0.0 && self.dropout_frac == 0.0
+    }
+
+    /// Simulate one transmission with retransmissions: returns
+    /// (attempts, extra_delay). `attempts ≥ 1`; each attempt is one comm
+    /// unit. Bounded at 16 tries (then the link is declared dead and the
+    /// last try is forced through — keeps walks alive under adversarial
+    /// settings).
+    pub fn transmit(&self, rng: &mut Rng) -> (u64, f64) {
+        let mut attempts = 1u64;
+        let mut delay = 0.0;
+        while attempts < 16 && rng.next_f64() < self.drop_prob {
+            delay += self.retry_timeout;
+            attempts += 1;
+        }
+        (attempts, delay)
+    }
+}
+
+/// Agent membership over virtual time: tracks who is currently dropped out.
+#[derive(Debug, Clone)]
+pub struct Membership {
+    /// `down_until[i] > now` ⇒ agent i is out.
+    down_until: Vec<f64>,
+    model: FaultModel,
+}
+
+impl Membership {
+    pub fn new(n: usize, model: FaultModel, rng: &mut Rng) -> Membership {
+        let mut down_until = vec![f64::NEG_INFINITY; n];
+        if model.dropout_frac > 0.0 {
+            // Schedule initial dropout windows for a random subset; windows
+            // recur implicitly via `maybe_drop`.
+            let k = ((n as f64) * model.dropout_frac).round() as usize;
+            for _ in 0..k {
+                let i = rng.below(n);
+                down_until[i] = rng.next_f64() * model.dropout_len;
+            }
+        }
+        Membership { down_until, model }
+    }
+
+    pub fn is_up(&self, agent: usize, now: f64) -> bool {
+        self.down_until[agent] <= now
+    }
+
+    /// Occasionally (per routing decision) knock an agent out for a window.
+    pub fn maybe_drop(&mut self, agent: usize, now: f64, rng: &mut Rng) {
+        if self.model.dropout_frac > 0.0
+            && rng.next_f64() < self.model.dropout_frac * 0.01
+        {
+            self.down_until[agent] = now + rng.next_f64() * self.model.dropout_len;
+        }
+    }
+
+    /// Pick a live neighbor of `from`, preferring `preferred`; falls back
+    /// to any live neighbor, then to `preferred` itself (never strands a
+    /// token).
+    pub fn route_live(
+        &self,
+        topo: &crate::graph::Topology,
+        from: usize,
+        preferred: usize,
+        now: f64,
+        rng: &mut Rng,
+    ) -> usize {
+        if self.is_up(preferred, now) {
+            return preferred;
+        }
+        let live: Vec<usize> = topo
+            .neighbors(from)
+            .iter()
+            .copied()
+            .filter(|&j| self.is_up(j, now))
+            .collect();
+        if live.is_empty() {
+            preferred
+        } else {
+            live[rng.below(live.len())]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reliable_link_is_one_attempt() {
+        let mut rng = Rng::new(1);
+        let (attempts, delay) = FaultModel::NONE.transmit(&mut rng);
+        assert_eq!((attempts, delay), (1, 0.0));
+    }
+
+    #[test]
+    fn lossy_link_retries_cost_time_and_comm() {
+        let mut rng = Rng::new(2);
+        let model = FaultModel::lossy(0.5);
+        let mut total_attempts = 0u64;
+        let mut total_delay = 0.0;
+        let n = 10_000;
+        for _ in 0..n {
+            let (a, d) = model.transmit(&mut rng);
+            assert!(a >= 1 && a <= 16);
+            total_attempts += a;
+            total_delay += d;
+        }
+        let mean_attempts = total_attempts as f64 / n as f64;
+        // E[attempts] for p=0.5 ≈ 2.
+        assert!((mean_attempts - 2.0).abs() < 0.1, "{mean_attempts}");
+        assert!(total_delay > 0.0);
+    }
+
+    #[test]
+    fn transmit_bounded_under_adversarial_loss() {
+        let mut rng = Rng::new(3);
+        let model = FaultModel::lossy(1.0);
+        let (attempts, _) = model.transmit(&mut rng);
+        assert_eq!(attempts, 16);
+    }
+
+    #[test]
+    fn membership_routes_around_dead_agents() {
+        let mut rng = Rng::new(4);
+        let topo = crate::graph::Topology::complete(5);
+        let model = FaultModel {
+            dropout_frac: 0.5,
+            dropout_len: 100.0,
+            ..FaultModel::NONE
+        };
+        let mut mem = Membership::new(5, model, &mut rng);
+        // Force agent 2 down.
+        mem.down_until[2] = 1e9;
+        for _ in 0..50 {
+            let next = mem.route_live(&topo, 0, 2, 0.0, &mut rng);
+            assert_ne!(next, 2, "routed to a dead agent");
+            assert!(topo.has_edge(0, next));
+        }
+        // After the window it is reachable again.
+        mem.down_until[2] = -1.0;
+        assert_eq!(mem.route_live(&topo, 0, 2, 0.0, &mut rng), 2);
+    }
+
+    #[test]
+    fn never_strands_token_when_all_neighbors_down() {
+        let mut rng = Rng::new(5);
+        let topo = crate::graph::Topology::ring(3);
+        let mut mem = Membership::new(3, FaultModel::NONE, &mut rng);
+        mem.down_until = vec![1e9; 3];
+        // Everyone down → falls back to the preferred next hop.
+        assert_eq!(mem.route_live(&topo, 0, 1, 0.0, &mut rng), 1);
+    }
+}

@@ -1,0 +1,213 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper's "running time" axis (§5) is *modelled*: per-hop communication
+//! latency ~ U(10⁻⁵, 10⁻⁴) s and local computation time measured on the
+//! device. This module provides exactly that: a deterministic event queue,
+//! the latency model, and a pluggable computation-timing model (measured
+//! wall-clock of the real PJRT execution, or fixed/calibrated values for
+//! reproducible tests).
+//!
+//! Asynchrony semantics (API-BCD, Alg. 2): each of the `M` tokens is an
+//! independent event stream; an agent is *busy* while computing, so a token
+//! arriving at a busy agent queues (FIFO) until the agent frees — this is
+//! the physical constraint that makes parallel walks interact, and it is
+//! what the event queue models beyond simple per-token accounting.
+
+pub mod faults;
+
+pub use faults::{FaultModel, Membership};
+
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Per-hop link latency model. The paper draws U(1e-5, 1e-4) seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyModel {
+    Uniform { lo: f64, hi: f64 },
+    Fixed(f64),
+}
+
+impl LatencyModel {
+    /// The paper's §5 model.
+    pub fn paper() -> LatencyModel {
+        LatencyModel::Uniform { lo: 1e-5, hi: 1e-4 }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::Uniform { lo, hi } => rng.uniform(lo, hi),
+            LatencyModel::Fixed(v) => v,
+        }
+    }
+}
+
+/// Where a local update's simulated duration comes from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TimingModel {
+    /// Wall-clock of the actual solver call (PJRT execute) — realistic.
+    Measured,
+    /// Constant seconds per update — deterministic tests.
+    Fixed(f64),
+    /// Constant plus multiplicative jitter U(1−j, 1+j).
+    Jittered { mean: f64, jitter: f64 },
+}
+
+impl TimingModel {
+    /// Simulated duration of an update that took `measured_secs` of real
+    /// wall-clock.
+    pub fn duration(&self, measured_secs: f64, rng: &mut Rng) -> f64 {
+        match *self {
+            TimingModel::Measured => measured_secs,
+            TimingModel::Fixed(v) => v,
+            TimingModel::Jittered { mean, jitter } => {
+                mean * rng.uniform(1.0 - jitter, 1.0 + jitter)
+            }
+        }
+    }
+}
+
+/// A scheduled event: token `token` arrives at `agent` at `time`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub time: f64,
+    /// Tie-break sequence number — keeps the DES fully deterministic.
+    pub seq: u64,
+    pub token: usize,
+    pub agent: usize,
+}
+
+impl Eq for Arrival {}
+
+impl Ord for Arrival {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap by (time, seq) via reversed comparison.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Arrival {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic min-time event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Arrival>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, time: f64, token: usize, agent: usize) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Arrival {
+            time,
+            seq,
+            token,
+            agent,
+        });
+    }
+
+    pub fn pop(&mut self) -> Option<Arrival> {
+        self.heap.pop()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Agent busy-state bookkeeping: serializes token service at each agent.
+#[derive(Debug, Clone)]
+pub struct AgentAvailability {
+    free_at: Vec<f64>,
+}
+
+impl AgentAvailability {
+    pub fn new(n: usize) -> AgentAvailability {
+        AgentAvailability {
+            free_at: vec![0.0; n],
+        }
+    }
+
+    /// Serve a token that arrived at `arrival` needing `compute` seconds on
+    /// `agent`; returns (service_start, service_end).
+    pub fn serve(&mut self, agent: usize, arrival: f64, compute: f64) -> (f64, f64) {
+        let start = arrival.max(self.free_at[agent]);
+        let end = start + compute;
+        self.free_at[agent] = end;
+        (start, end)
+    }
+
+    pub fn free_at(&self, agent: usize) -> f64 {
+        self.free_at[agent]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_orders_by_time_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(2.0, 0, 0);
+        q.push(1.0, 1, 1);
+        q.push(1.0, 2, 2);
+        let a = q.pop().unwrap();
+        let b = q.pop().unwrap();
+        let c = q.pop().unwrap();
+        assert_eq!(a.token, 1); // earliest time
+        assert_eq!(b.token, 2); // same time, later seq after earlier seq
+        assert_eq!(c.token, 0);
+        assert!(a.seq < b.seq);
+    }
+
+    #[test]
+    fn availability_serializes_same_agent() {
+        let mut av = AgentAvailability::new(2);
+        let (s1, e1) = av.serve(0, 0.0, 1.0);
+        let (s2, e2) = av.serve(0, 0.5, 1.0); // arrives while busy
+        assert_eq!((s1, e1), (0.0, 1.0));
+        assert_eq!((s2, e2), (1.0, 2.0)); // waits for the agent
+        let (s3, _) = av.serve(1, 0.5, 1.0); // different agent: no wait
+        assert_eq!(s3, 0.5);
+    }
+
+    #[test]
+    fn latency_paper_range() {
+        let mut rng = Rng::new(1);
+        let m = LatencyModel::paper();
+        for _ in 0..1000 {
+            let v = m.sample(&mut rng);
+            assert!((1e-5..1e-4).contains(&v));
+        }
+    }
+
+    #[test]
+    fn timing_models() {
+        let mut rng = Rng::new(2);
+        assert_eq!(TimingModel::Measured.duration(0.3, &mut rng), 0.3);
+        assert_eq!(TimingModel::Fixed(0.5).duration(0.3, &mut rng), 0.5);
+        let j = TimingModel::Jittered { mean: 1.0, jitter: 0.1 };
+        for _ in 0..100 {
+            let v = j.duration(0.0, &mut rng);
+            assert!((0.9..1.1).contains(&v));
+        }
+    }
+}

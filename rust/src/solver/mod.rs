@@ -1,0 +1,88 @@
+//! Local-update engines: how an active agent computes its block update.
+//!
+//! Two interchangeable implementations of [`LocalSolver`]:
+//!
+//! * [`PjrtSolver`] — the production path: executes the AOT artifacts
+//!   (Layer-2 JAX functions wrapping the Layer-1 Pallas kernels) through the
+//!   PJRT engine. Per-agent constant tensors are uploaded once.
+//! * [`NativeSolver`] — bit-compatible pure-rust math (same CG-K /
+//!   K-step-prox updates). Used by artifact-less unit tests, as the
+//!   cross-check oracle in integration tests, and as the fallback when
+//!   `artifacts/` has not been built.
+//!
+//! Both return measured wall-clock per call — the computation-time input to
+//! the DES timing model.
+
+pub mod native;
+pub mod pjrt;
+pub mod service;
+
+pub use native::NativeSolver;
+pub use pjrt::PjrtSolver;
+pub use service::{SolverClient, SolverService};
+
+use crate::data::AgentData;
+use crate::model::Task;
+
+/// Result of one local update: the new block value and the measured
+/// computation wall-clock.
+#[derive(Debug, Clone)]
+pub struct SolveOut {
+    pub w: Vec<f32>,
+    pub wall_secs: f64,
+}
+
+/// The two local operations every algorithm in the family reduces to.
+pub trait LocalSolver {
+    /// Proximal block update (paper eq. (7) / (12a)):
+    /// `argmin_w f_i(w) + (τ/2) Σ_m ‖w − ẑ_m‖²`, parameterized by the
+    /// pre-scaled token sum `tzsum = τ·Σ_m ẑ_m` and `tau_m = τ·M`, warm
+    /// started at `w0` (the agent's current block x_iᵏ).
+    fn prox(
+        &mut self,
+        shard: &AgentData,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+    ) -> anyhow::Result<SolveOut>;
+
+    /// Mean-loss gradient `∇f_i(w)` (WPG eq. (19), gAPI-BCD eq. (15), DGD).
+    fn grad(&mut self, shard: &AgentData, w: &[f32]) -> anyhow::Result<SolveOut>;
+
+    fn task(&self) -> Task;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Inner gradient step size for the non-quadratic prox subproblems:
+/// 1/(L̂ + τM) with L̂ the smoothness bound of the mean loss
+/// (‖X‖²_F/(4d) for logistic, ‖X‖²_F/(2d) for softmax).
+pub fn prox_step_size(task: Task, frob_sq: f32, active: usize, tau_m: f32) -> f32 {
+    let d = active.max(1) as f32;
+    let lhat = match task {
+        Task::Regression => frob_sq / d, // not used by the CG path
+        Task::Binary => frob_sq / (4.0 * d),
+        Task::Multiclass(_) => frob_sq / (2.0 * d),
+    };
+    1.0 / (lhat + tau_m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_size_shrinks_with_tau() {
+        let s1 = prox_step_size(Task::Binary, 100.0, 50, 0.1);
+        let s2 = prox_step_size(Task::Binary, 100.0, 50, 10.0);
+        assert!(s1 > s2);
+        assert!(s1 > 0.0 && s2 > 0.0);
+    }
+
+    #[test]
+    fn softmax_step_smaller_than_logistic() {
+        let sl = prox_step_size(Task::Binary, 100.0, 50, 0.1);
+        let sm = prox_step_size(Task::Multiclass(10), 100.0, 50, 0.1);
+        assert!(sm < sl);
+    }
+}

@@ -1,0 +1,307 @@
+//! Pure-rust local solver — the same math as the AOT artifacts
+//! (`python/compile/model.py`), kept in lock-step so the integration tests
+//! can assert PJRT ≈ native to float tolerance.
+
+use super::{prox_step_size, LocalSolver, SolveOut};
+use crate::data::AgentData;
+use crate::linalg::{axpy, dot};
+use crate::model::Task;
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct NativeSolver {
+    task: Task,
+    /// Inner iterations (CG steps for LS, gradient steps otherwise) —
+    /// matches the K baked into the artifacts.
+    pub inner_k: usize,
+    /// Per-agent ‖X‖²_F cache (step-size bound input).
+    frob_cache: HashMap<usize, f32>,
+    /// Reused scratch (residual-sized) to keep the hot loop allocation-free.
+    scratch_rows: Vec<f32>,
+}
+
+impl NativeSolver {
+    pub fn new(task: Task, inner_k: usize) -> NativeSolver {
+        NativeSolver {
+            task,
+            inner_k,
+            frob_cache: HashMap::new(),
+            scratch_rows: Vec::new(),
+        }
+    }
+
+    fn frob_sq(&mut self, shard: &AgentData) -> f32 {
+        *self
+            .frob_cache
+            .entry(shard.agent)
+            .or_insert_with(|| shard.frob_sq())
+    }
+
+    /// q = XᵀD X v / d + tau_m·v over the active rows.
+    fn normal_op(&mut self, shard: &AgentData, v: &[f32], tau_m: f32, q: &mut [f32]) {
+        let p = shard.features;
+        let d = shard.active.max(1) as f32;
+        self.scratch_rows.resize(shard.active, 0.0);
+        for r in 0..shard.active {
+            self.scratch_rows[r] = dot(&shard.x[r * p..(r + 1) * p], v);
+        }
+        q.fill(0.0);
+        for r in 0..shard.active {
+            axpy(self.scratch_rows[r], &shard.x[r * p..(r + 1) * p], q);
+        }
+        for j in 0..p {
+            q[j] = q[j] / d + tau_m * v[j];
+        }
+    }
+
+    /// LS prox via `inner_k` CG iterations on
+    /// [(1/d)XᵀDX + τM·I] w = (1/d)XᵀDy + tzsum (mirrors ls_prox_update).
+    fn ls_prox(&mut self, shard: &AgentData, w0: &[f32], tzsum: &[f32], tau_m: f32) -> Vec<f32> {
+        let p = shard.features;
+        let d = shard.active.max(1) as f32;
+        // b = (1/d) XᵀDy + tzsum
+        let mut b = vec![0.0f32; p];
+        for r in 0..shard.active {
+            axpy(shard.y[r], &shard.x[r * p..(r + 1) * p], &mut b);
+        }
+        for j in 0..p {
+            b[j] = b[j] / d + tzsum[j];
+        }
+        let mut w = w0.to_vec();
+        let mut q = vec![0.0f32; p];
+        self.normal_op(shard, &w, tau_m, &mut q);
+        let mut r: Vec<f32> = b.iter().zip(&q).map(|(bi, qi)| bi - qi).collect();
+        let mut p_dir = r.clone();
+        let mut rs = dot(&r, &r);
+        for _ in 0..self.inner_k {
+            self.normal_op(shard, &p_dir, tau_m, &mut q);
+            let denom = dot(&p_dir, &q);
+            let alpha = if denom > 1e-30 { rs / denom.max(1e-30) } else { 0.0 };
+            axpy(alpha, &p_dir, &mut w);
+            axpy(-alpha, &q, &mut r);
+            let rs_new = dot(&r, &r);
+            let beta = if rs > 1e-30 { rs_new / rs.max(1e-30) } else { 0.0 };
+            for j in 0..p {
+                p_dir[j] = r[j] + beta * p_dir[j];
+            }
+            rs = rs_new;
+        }
+        w
+    }
+
+    /// Raw mean-loss gradient into `g` (length p·c).
+    fn loss_grad(&mut self, shard: &AgentData, w: &[f32], g: &mut [f32]) {
+        let p = shard.features;
+        let c = shard.classes;
+        let d = shard.active.max(1) as f32;
+        g.fill(0.0);
+        match self.task {
+            Task::Regression => {
+                for r in 0..shard.active {
+                    let row = &shard.x[r * p..(r + 1) * p];
+                    let e = dot(row, w) - shard.y[r];
+                    axpy(e, row, g);
+                }
+            }
+            Task::Binary => {
+                for r in 0..shard.active {
+                    let row = &shard.x[r * p..(r + 1) * p];
+                    let e = crate::linalg::sigmoid(dot(row, w)) - shard.y[r];
+                    axpy(e, row, g);
+                }
+            }
+            Task::Multiclass(_) => {
+                let mut logits = vec![0.0f32; c];
+                for r in 0..shard.active {
+                    let row = &shard.x[r * p..(r + 1) * p];
+                    for k in 0..c {
+                        let mut z = 0.0f32;
+                        for j in 0..p {
+                            z += row[j] * w[j * c + k];
+                        }
+                        logits[k] = z;
+                    }
+                    crate::linalg::softmax_inplace(&mut logits);
+                    for k in 0..c {
+                        let e = logits[k] - shard.y_onehot[r * c + k];
+                        if e != 0.0 {
+                            for j in 0..p {
+                                g[j * c + k] += e * row[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for v in g.iter_mut() {
+            *v /= d;
+        }
+    }
+
+    /// K-step proximal gradient for the non-quadratic losses
+    /// (mirrors logit_prox_update / smax_prox_update).
+    fn gd_prox(&mut self, shard: &AgentData, w0: &[f32], tzsum: &[f32], tau_m: f32) -> Vec<f32> {
+        let frob = self.frob_sq(shard);
+        let step = prox_step_size(self.task, frob, shard.active, tau_m);
+        let mut w = w0.to_vec();
+        let mut g = vec![0.0f32; w.len()];
+        for _ in 0..self.inner_k {
+            self.loss_grad(shard, &w, &mut g);
+            for j in 0..w.len() {
+                g[j] += tau_m * w[j] - tzsum[j];
+                w[j] -= step * g[j];
+            }
+        }
+        w
+    }
+}
+
+impl LocalSolver for NativeSolver {
+    fn prox(
+        &mut self,
+        shard: &AgentData,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+    ) -> anyhow::Result<SolveOut> {
+        let t0 = Instant::now();
+        let w = match self.task {
+            Task::Regression => self.ls_prox(shard, w0, tzsum, tau_m),
+            _ => self.gd_prox(shard, w0, tzsum, tau_m),
+        };
+        Ok(SolveOut {
+            w,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn grad(&mut self, shard: &AgentData, w: &[f32]) -> anyhow::Result<SolveOut> {
+        let t0 = Instant::now();
+        let mut g = vec![0.0f32; w.len()];
+        self.loss_grad(shard, w, &mut g);
+        Ok(SolveOut {
+            w: g,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn task(&self) -> Task {
+        self.task
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard::PartitionKind, Dataset, DatasetProfile, Partition};
+    use crate::linalg::{cholesky_solve, Mat};
+
+    fn shard(name: &str) -> AgentData {
+        let ds =
+            Dataset::load(DatasetProfile::by_name(name).unwrap(), "/nonexistent", 3).unwrap();
+        Partition::new(&ds, 1, PartitionKind::Iid)
+            .unwrap()
+            .shards
+            .remove(0)
+    }
+
+    #[test]
+    fn ls_prox_with_enough_cg_matches_closed_form() {
+        let s = shard("test_ls");
+        let p = s.features;
+        let (tau, m) = (0.5f32, 2usize);
+        let zsum: Vec<f32> = (0..p).map(|j| 0.1 * j as f32).collect();
+        let tzsum: Vec<f32> = zsum.iter().map(|z| tau * z).collect();
+        let tau_m = tau * m as f32;
+
+        let mut solver = NativeSolver::new(Task::Regression, p + 2); // exact
+        let got = solver.prox(&s, &vec![0.0; p], &tzsum, tau_m).unwrap().w;
+
+        // closed form: [(1/d)XᵀDX + τM I] w = (1/d)XᵀDy + τ Σẑ
+        let d = s.active as f32;
+        let mat = Mat { rows: s.rows, cols: p, data: s.x.clone() };
+        let mut a = mat.gram_weighted(&s.mask);
+        for i in 0..p {
+            for j in 0..p {
+                a.set(i, j, a.get(i, j) / d);
+            }
+            let v = a.get(i, i) + tau_m;
+            a.set(i, i, v);
+        }
+        let masked_y: Vec<f32> = s.y.iter().zip(&s.mask).map(|(y, m)| y * m).collect();
+        let mut b = vec![0.0; p];
+        mat.tmatvec(&masked_y, &mut b);
+        for j in 0..p {
+            b[j] = b[j] / d + tzsum[j];
+        }
+        let want = cholesky_solve(&a, &b).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn prox_descends_its_subproblem() {
+        for name in ["test_ls", "test_logit", "test_smax"] {
+            let s = shard(name);
+            let task = DatasetProfile::by_name(name).unwrap().task;
+            let dim = s.features * s.classes;
+            let (tau, m) = (0.5f32, 2usize);
+            let zs: Vec<Vec<f32>> = (0..m)
+                .map(|k| (0..dim).map(|j| 0.05 * (j + k) as f32).collect())
+                .collect();
+            let mut tzsum = vec![0.0f32; dim];
+            for z in &zs {
+                axpy(tau, z, &mut tzsum);
+            }
+            let w0 = vec![0.2f32; dim];
+            let mut solver = NativeSolver::new(task, 5);
+            let w1 = solver.prox(&s, &w0, &tzsum, tau * m as f32).unwrap().w;
+
+            let obj = |w: &[f32]| {
+                let mut pen = 0.0f64;
+                for z in &zs {
+                    pen += crate::linalg::dist2(w, z) as f64;
+                }
+                crate::model::task_loss(task, &s, w) + 0.5 * tau as f64 * pen
+            };
+            assert!(
+                obj(&w1) <= obj(&w0) + 1e-7,
+                "{name}: {} -> {}",
+                obj(&w0),
+                obj(&w1)
+            );
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        for name in ["test_ls", "test_logit", "test_smax"] {
+            let s = shard(name);
+            let task = DatasetProfile::by_name(name).unwrap().task;
+            let dim = s.features * s.classes;
+            let w: Vec<f32> = (0..dim).map(|j| 0.1 * (j as f32) - 0.2).collect();
+            let mut solver = NativeSolver::new(task, 5);
+            let g = solver.grad(&s, &w).unwrap().w;
+            let eps = 1e-3f32;
+            for j in [0usize, dim / 2, dim - 1] {
+                let mut wp = w.clone();
+                wp[j] += eps;
+                let mut wm = w.clone();
+                wm[j] -= eps;
+                let fd = (crate::model::task_loss(task, &s, &wp)
+                    - crate::model::task_loss(task, &s, &wm))
+                    / (2.0 * eps as f64);
+                assert!(
+                    (g[j] as f64 - fd).abs() < 5e-3,
+                    "{name} coord {j}: {} vs fd {fd}",
+                    g[j]
+                );
+            }
+        }
+    }
+}

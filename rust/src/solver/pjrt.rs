@@ -1,0 +1,237 @@
+//! PJRT-backed local solver: executes the AOT artifacts on the hot path.
+//!
+//! Per-agent constant tensors (x, y/y_onehot, mask) are uploaded to the
+//! device once (first activation of that agent) and referenced by cache key
+//! afterwards — only the small model-sized vectors (w0, tzsum) and two
+//! scalars move per update.
+
+use super::{prox_step_size, LocalSolver, SolveOut};
+use crate::data::AgentData;
+use crate::model::Task;
+use crate::runtime::{Arg, CacheKey, Engine};
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct PjrtSolver {
+    engine: Engine,
+    task: Task,
+    prox_name: String,
+    grad_name: String,
+    frob_cache: HashMap<usize, f32>,
+    /// Agents whose constant tensors are already on device.
+    uploaded: std::collections::HashSet<usize>,
+    pub inner_k: usize,
+    /// Reuse per-agent device buffers for the constant tensors (x, y,
+    /// mask). On by default; disable to measure the upload cost it saves
+    /// (EXPERIMENTS.md §Perf).
+    pub cache_inputs: bool,
+    /// Device-buffer cache for the rank-0 scalars (τ·M, step): constant per
+    /// run, keyed by bit pattern. Slot 3 in the engine cache namespace.
+    scalar_cache: HashMap<u32, CacheKey>,
+}
+
+impl PjrtSolver {
+    /// Open the artifact dir and resolve the (prox, grad) entries for
+    /// `profile`. Compiles both eagerly (startup cost, keeps the first
+    /// activation off the compile path).
+    pub fn new(artifacts_dir: &str, profile: &str, task: Task) -> anyhow::Result<PjrtSolver> {
+        let mut engine = Engine::open(artifacts_dir)?;
+        let prox = engine
+            .manifest()
+            .entry(profile, "prox")
+            .ok_or_else(|| {
+                anyhow::anyhow!("no prox artifact for profile '{profile}' (run `make artifacts`)")
+            })?
+            .clone();
+        let grad = engine
+            .manifest()
+            .entry(profile, "grad")
+            .ok_or_else(|| anyhow::anyhow!("no grad artifact for profile '{profile}'"))?
+            .clone();
+        let inner_k = prox.k.unwrap_or(engine.manifest().default_k);
+        engine.warmup(profile)?;
+        Ok(PjrtSolver {
+            engine,
+            task,
+            prox_name: prox.name,
+            grad_name: grad.name,
+            frob_cache: HashMap::new(),
+            uploaded: std::collections::HashSet::new(),
+            inner_k,
+            cache_inputs: true,
+            scalar_cache: HashMap::new(),
+        })
+    }
+
+    pub fn stats(&self) -> crate::runtime::EngineStats {
+        self.engine.stats
+    }
+
+    fn ensure_uploaded(&mut self, shard: &AgentData) -> anyhow::Result<()> {
+        if self.uploaded.contains(&shard.agent) {
+            return Ok(());
+        }
+        let s = shard.rows;
+        let p = shard.features;
+        let c = shard.classes;
+        self.engine.cache_buffer(
+            CacheKey { agent: shard.agent, slot: 0 },
+            &shard.x,
+            &[s, p],
+        )?;
+        match self.task {
+            Task::Multiclass(_) => self.engine.cache_buffer(
+                CacheKey { agent: shard.agent, slot: 1 },
+                &shard.y_onehot,
+                &[s, c],
+            )?,
+            _ => self.engine.cache_buffer(
+                CacheKey { agent: shard.agent, slot: 1 },
+                &shard.y,
+                &[s],
+            )?,
+        }
+        self.engine.cache_buffer(
+            CacheKey { agent: shard.agent, slot: 2 },
+            &shard.mask,
+            &[s],
+        )?;
+        self.uploaded.insert(shard.agent);
+        Ok(())
+    }
+
+    fn model_dims(&self, shard: &AgentData) -> Vec<usize> {
+        match self.task {
+            Task::Multiclass(_) => vec![shard.features, shard.classes],
+            _ => vec![shard.features],
+        }
+    }
+
+    /// Cached device buffer for a rank-0 scalar (keyed by bit pattern).
+    fn scalar_arg(&mut self, v: f32) -> anyhow::Result<Arg<'static>> {
+        let bits = v.to_bits();
+        if let Some(key) = self.scalar_cache.get(&bits) {
+            return Ok(Arg::Cached(*key));
+        }
+        // Slot 3 namespace; the bit pattern doubles as the "agent" id.
+        let key = CacheKey { agent: bits as usize, slot: 3 };
+        self.engine.cache_buffer(key, &[v], &[])?;
+        self.scalar_cache.insert(bits, key);
+        Ok(Arg::Cached(key))
+    }
+
+    /// The three constant-data arguments: cached device buffers when
+    /// `cache_inputs` (the default), fresh host uploads otherwise.
+    fn data_args<'a>(
+        &self,
+        shard: &'a AgentData,
+        dims_x: &'a [usize; 2],
+        dims_rows: &'a [usize; 1],
+        dims_yoh: &'a [usize; 2],
+    ) -> [Arg<'a>; 3] {
+        if self.cache_inputs {
+            [
+                Arg::Cached(CacheKey { agent: shard.agent, slot: 0 }),
+                Arg::Cached(CacheKey { agent: shard.agent, slot: 1 }),
+                Arg::Cached(CacheKey { agent: shard.agent, slot: 2 }),
+            ]
+        } else {
+            let y_arg = match self.task {
+                Task::Multiclass(_) => Arg::Host(&shard.y_onehot, dims_yoh),
+                _ => Arg::Host(&shard.y, dims_rows),
+            };
+            [
+                Arg::Host(&shard.x, dims_x),
+                y_arg,
+                Arg::Host(&shard.mask, dims_rows),
+            ]
+        }
+    }
+}
+
+impl LocalSolver for PjrtSolver {
+    fn prox(
+        &mut self,
+        shard: &AgentData,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+    ) -> anyhow::Result<SolveOut> {
+        let t0 = Instant::now();
+        if self.cache_inputs {
+            self.ensure_uploaded(shard)?;
+        }
+        let dims = self.model_dims(shard);
+        let dims_x = [shard.rows, shard.features];
+        let dims_rows = [shard.rows];
+        let dims_yoh = [shard.rows, shard.classes];
+        let tau_arg = self.scalar_arg(tau_m)?;
+        let [a0, a1, a2] = self.data_args(shard, &dims_x, &dims_rows, &dims_yoh);
+        let w = match self.task {
+            Task::Regression => self.engine.execute(
+                &self.prox_name,
+                &[
+                    a0,
+                    a1,
+                    a2,
+                    Arg::Host(w0, &dims),
+                    Arg::Host(tzsum, &dims),
+                    tau_arg,
+                ],
+            )?,
+            _ => {
+                let frob = *self
+                    .frob_cache
+                    .entry(shard.agent)
+                    .or_insert_with(|| shard.frob_sq());
+                let step_arg =
+                    self.scalar_arg(prox_step_size(self.task, frob, shard.active, tau_m))?;
+                let [a0, a1, a2] = self.data_args(shard, &dims_x, &dims_rows, &dims_yoh);
+                self.engine.execute(
+                    &self.prox_name,
+                    &[
+                        a0,
+                        a1,
+                        a2,
+                        Arg::Host(w0, &dims),
+                        Arg::Host(tzsum, &dims),
+                        tau_arg,
+                        step_arg,
+                    ],
+                )?
+            }
+        };
+        Ok(SolveOut {
+            w,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn grad(&mut self, shard: &AgentData, w: &[f32]) -> anyhow::Result<SolveOut> {
+        let t0 = Instant::now();
+        if self.cache_inputs {
+            self.ensure_uploaded(shard)?;
+        }
+        let dims = self.model_dims(shard);
+        let dims_x = [shard.rows, shard.features];
+        let dims_rows = [shard.rows];
+        let dims_yoh = [shard.rows, shard.classes];
+        let [a0, a1, a2] = self.data_args(shard, &dims_x, &dims_rows, &dims_yoh);
+        let g = self.engine.execute(
+            &self.grad_name,
+            &[a0, a1, a2, Arg::Host(w, &dims)],
+        )?;
+        Ok(SolveOut {
+            w: g,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn task(&self) -> Task {
+        self.task
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,213 @@
+//! Solver service: makes the (not-`Send`) PJRT engine usable from the
+//! multi-threaded executor.
+//!
+//! One dedicated OS thread owns the [`LocalSolver`]; agent threads talk to
+//! it over an mpsc request channel and get results back on per-request
+//! reply channels. This is the "leader owns the runtime" topology: the
+//! compute device is a serialized resource, exactly like a real accelerator
+//! queue, and the *coordination* concurrency (token walks, queuing at busy
+//! agents) lives in the agents.
+
+use super::{LocalSolver, SolveOut};
+use crate::data::AgentData;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+enum Op {
+    Prox {
+        agent: usize,
+        w0: Vec<f32>,
+        tzsum: Vec<f32>,
+        tau_m: f32,
+    },
+    Grad {
+        agent: usize,
+        w: Vec<f32>,
+    },
+    Shutdown,
+}
+
+struct Request {
+    op: Op,
+    reply: mpsc::Sender<anyhow::Result<SolveOut>>,
+}
+
+/// Cloneable handle agents use to submit local updates.
+#[derive(Clone)]
+pub struct SolverClient {
+    tx: mpsc::Sender<Request>,
+}
+
+impl SolverClient {
+    pub fn prox(
+        &self,
+        agent: usize,
+        w0: Vec<f32>,
+        tzsum: Vec<f32>,
+        tau_m: f32,
+    ) -> anyhow::Result<SolveOut> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                op: Op::Prox { agent, w0, tzsum, tau_m },
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("solver service is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("solver service dropped the reply"))?
+    }
+
+    pub fn grad(&self, agent: usize, w: Vec<f32>) -> anyhow::Result<SolveOut> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                op: Op::Grad { agent, w },
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("solver service is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("solver service dropped the reply"))?
+    }
+}
+
+/// The running service; dropping it (or calling [`SolverService::shutdown`])
+/// stops the thread.
+pub struct SolverService {
+    tx: mpsc::Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl SolverService {
+    /// Spawn the service thread. `factory` builds the solver *inside* the
+    /// thread (required: PJRT clients are not `Send`). `shards` holds every
+    /// agent's data; requests reference agents by index.
+    pub fn spawn<F>(factory: F, shards: Arc<Vec<AgentData>>) -> anyhow::Result<SolverService>
+    where
+        F: FnOnce() -> anyhow::Result<Box<dyn LocalSolver>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("solver-service".into())
+            .spawn(move || {
+                let mut solver = match factory() {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req.op {
+                        Op::Prox { agent, w0, tzsum, tau_m } => {
+                            let out = solver.prox(&shards[agent], &w0, &tzsum, tau_m);
+                            let _ = req.reply.send(out);
+                        }
+                        Op::Grad { agent, w } => {
+                            let out = solver.grad(&shards[agent], &w);
+                            let _ = req.reply.send(out);
+                        }
+                        Op::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("solver service died during startup"))??;
+        Ok(SolverService {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn client(&self) -> SolverClient {
+        SolverClient { tx: self.tx.clone() }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        let (reply, _rx) = mpsc::channel();
+        let _ = self.tx.send(Request { op: Op::Shutdown, reply });
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SolverService {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard::PartitionKind, Dataset, DatasetProfile, Partition};
+    use crate::model::Task;
+    use crate::solver::NativeSolver;
+
+    fn shards() -> Arc<Vec<AgentData>> {
+        let ds = Dataset::load(
+            DatasetProfile::by_name("test_ls").unwrap(),
+            "/nonexistent",
+            1,
+        )
+        .unwrap();
+        Arc::new(Partition::new(&ds, 1, PartitionKind::Iid).unwrap().shards)
+    }
+
+    #[test]
+    fn service_round_trip_matches_direct_call() {
+        let shards = shards();
+        let svc = SolverService::spawn(
+            || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
+            shards.clone(),
+        )
+        .unwrap();
+        let client = svc.client();
+        let p = shards[0].features;
+        let got = client.prox(0, vec![0.0; p], vec![0.1; p], 1.0).unwrap();
+
+        let mut direct = NativeSolver::new(Task::Regression, 5);
+        let want = direct.prox(&shards[0], &vec![0.0; p], &vec![0.1; p], 1.0).unwrap();
+        assert_eq!(got.w, want.w);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_answers() {
+        let shards = shards();
+        let svc = SolverService::spawn(
+            || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
+            shards.clone(),
+        )
+        .unwrap();
+        let p = shards[0].features;
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let client = svc.client();
+            joins.push(std::thread::spawn(move || {
+                let w0 = vec![0.01 * t as f32; 4];
+                client.prox(0, w0, vec![0.0; p], 0.5).unwrap().w
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap().len(), p);
+        }
+    }
+
+    #[test]
+    fn factory_error_propagates() {
+        let shards = shards();
+        let res = SolverService::spawn(|| Err(anyhow::anyhow!("boom")), shards);
+        assert!(res.is_err());
+    }
+}

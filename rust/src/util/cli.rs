@@ -1,0 +1,124 @@
+//! Tiny CLI argument helper (no clap in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and an accumulated usage/error report.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_TRUE: &str = "true";
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), FLAG_TRUE.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["figure", "fig3", "--agents", "20", "--walks=4", "--quiet"]);
+        assert_eq!(a.positional, vec!["figure", "fig3"]);
+        assert_eq!(a.usize_or("agents", 0).unwrap(), 20);
+        assert_eq!(a.usize_or("walks", 0).unwrap(), 4);
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("agents", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("tau", 0.1).unwrap(), 0.1);
+        assert_eq!(a.str_or("algo", "api-bcd"), "api-bcd");
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["--agents", "twenty"]);
+        assert!(a.usize_or("agents", 0).is_err());
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse(&["--quiet", "run"]);
+        // "run" is consumed as the value of --quiet per the grammar; callers
+        // put positionals first (documented in main.rs usage).
+        assert_eq!(a.str_opt("quiet"), Some("run"));
+    }
+}

@@ -1,0 +1,31 @@
+//! Small self-contained substrates the offline build cannot pull from
+//! crates.io: a counter-based RNG, a JSON parser for the artifact manifest,
+//! a CLI argument helper, and a micro property-test harness.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Format a float duration (seconds) for human-readable tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(5e-6), "5.0µs");
+        assert_eq!(fmt_secs(2.5e-3), "2.50ms");
+        assert_eq!(fmt_secs(1.25), "1.250s");
+    }
+}

@@ -1,0 +1,82 @@
+//! Micro property-test harness (the proptest crate is not in the offline
+//! vendor set).
+//!
+//! `run_prop` drives a closure over `cases` randomized inputs drawn from a
+//! seeded [`Rng`]; on failure it retries with the *same* seed stream replayed
+//! case-by-case, reporting the failing case index and seed so the exact
+//! counterexample is reproducible from the test log. Shrinking is manual
+//! (properties here operate on small generated structures already).
+
+use super::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xA1B2_C3D4,
+        }
+    }
+}
+
+/// Run `prop` against `cfg.cases` generated inputs. `gen` draws one input
+/// from the RNG; `prop` returns `Err(reason)` on violation.
+pub fn run_prop<T, G, P>(name: &str, cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_rng_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_rng_seed);
+        let input = gen(&mut case_rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (case seed {case_rng_seed:#x}):\n  \
+                 reason: {reason}\n  input: {input:?}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop(
+            "addition commutes",
+            PropConfig { cases: 32, seed: 1 },
+            |r| (r.below(100) as i64, r.below(100) as i64),
+            |&(a, b)| {
+                count += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        run_prop(
+            "always fails",
+            PropConfig { cases: 4, seed: 2 },
+            |r| r.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+}

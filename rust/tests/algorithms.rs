@@ -1,0 +1,338 @@
+//! Integration tests over the algorithm family (native solver — fast,
+//! artifact-free). Checks the paper's qualitative claims on the tiny test
+//! profiles: everything converges, API-BCD's parallel walks buy simulated
+//! time, incremental methods are cheaper in communication than gossip,
+//! runs are deterministic per seed.
+
+use apibcd::algo::AlgoKind;
+use apibcd::config::{ExperimentConfig, Preset, RoutingRule, StopRule};
+use apibcd::data::shard::PartitionKind;
+
+fn base_ls() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.tau_api = 0.1;
+    cfg.stop = StopRule {
+        max_activations: 1500,
+        ..Default::default()
+    };
+    cfg.eval_every = 25;
+    cfg
+}
+
+#[test]
+fn every_algorithm_converges_on_regression() {
+    let mut cfg = base_ls();
+    cfg.algos = AlgoKind::all().to_vec();
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    assert_eq!(report.traces.len(), 7);
+    for t in &report.traces {
+        assert!(
+            t.last_metric() < 0.55,
+            "{} stuck at NMSE {}",
+            t.name,
+            t.last_metric()
+        );
+        // Every trace must improve on the zero model (NMSE 1.0).
+        assert!(t.points[0].metric > 0.99);
+    }
+}
+
+#[test]
+fn core_methods_reach_low_nmse() {
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::IBcd, AlgoKind::ApiBcd, AlgoKind::Wpg, AlgoKind::Wadmm];
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    for t in &report.traces {
+        assert!(
+            t.last_metric() < 0.25,
+            "{} final NMSE {}",
+            t.name,
+            t.last_metric()
+        );
+    }
+}
+
+#[test]
+fn classification_improves_over_majority() {
+    let mut cfg = ExperimentConfig::preset(Preset::TestLogit);
+    cfg.algos = vec![AlgoKind::IBcd, AlgoKind::ApiBcd, AlgoKind::GApiBcd, AlgoKind::Wpg];
+    cfg.stop.max_activations = 1200;
+    cfg.tau_api = 0.1;
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    for t in &report.traces {
+        let first = t.points[0].metric;
+        let last = t.last_metric();
+        assert!(
+            last >= first && last > 0.7,
+            "{}: accuracy {first} -> {last}",
+            t.name
+        );
+    }
+}
+
+#[test]
+fn multiclass_runs_and_learns() {
+    let mut cfg = ExperimentConfig::preset(Preset::TestLogit);
+    cfg.profile = "test_smax".into();
+    cfg.algos = vec![AlgoKind::ApiBcd, AlgoKind::Wpg];
+    cfg.stop.max_activations = 800;
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    for t in &report.traces {
+        assert!(
+            t.last_metric() > 0.8,
+            "{}: multiclass accuracy {}",
+            t.name,
+            t.last_metric()
+        );
+    }
+}
+
+#[test]
+fn api_bcd_parallel_walks_cut_simulated_time() {
+    // Same activation budget, M=1 vs M=4: wall-clock-per-activation is the
+    // same, but 4 concurrent walks finish the budget in less simulated time.
+    let run = |walks: usize| {
+        let mut cfg = base_ls();
+        cfg.agents = 8;
+        cfg.walks = walks;
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        cfg.timing = apibcd::sim::TimingModel::Fixed(1e-3);
+        cfg.stop.max_activations = 400;
+        apibcd::run_experiment(&cfg).unwrap().traces[0]
+            .last()
+            .unwrap()
+            .time
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    assert!(
+        t4 < 0.5 * t1,
+        "M=4 should cut simulated time well below M=1: {t4} vs {t1}"
+    );
+}
+
+#[test]
+fn incremental_methods_use_less_comm_than_gossip() {
+    let mut cfg = base_ls();
+    // At N = 10, |E| = ξ·45 ≈ 36 → DGD transmits 2·36/10 ≈ 7 units per
+    // virtual activation vs 1 for the token methods (the gap the paper's
+    // intro leans on; it widens with N).
+    cfg.agents = 10;
+    cfg.algos = vec![AlgoKind::IBcd, AlgoKind::Dgd];
+    cfg.stop.max_activations = 600;
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    let ibcd = &report.traces[0];
+    let dgd = &report.traces[1];
+    // Same virtual-iteration budget: gossip transmits 2|E| per round (≫ 1
+    // per activation for the token methods).
+    assert!(
+        dgd.last().unwrap().comm > 3 * ibcd.last().unwrap().comm,
+        "DGD comm {} should dwarf I-BCD comm {}",
+        dgd.last().unwrap().comm,
+        ibcd.last().unwrap().comm
+    );
+}
+
+#[test]
+fn runs_are_deterministic_per_seed() {
+    let cfg = {
+        let mut c = base_ls();
+        c.algos = vec![AlgoKind::ApiBcd, AlgoKind::IBcd];
+        c.stop.max_activations = 300;
+        c
+    };
+    let a = apibcd::run_experiment(&cfg).unwrap();
+    let b = apibcd::run_experiment(&cfg).unwrap();
+    for (ta, tb) in a.traces.iter().zip(&b.traces) {
+        assert_eq!(ta.points.len(), tb.points.len());
+        for (pa, pb) in ta.points.iter().zip(&tb.points) {
+            assert_eq!(pa.iter, pb.iter);
+            assert_eq!(pa.comm, pb.comm);
+            assert!((pa.metric - pb.metric).abs() < 1e-12);
+            assert!((pa.time - pb.time).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn different_seeds_change_the_run() {
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.routing = RoutingRule::Uniform;
+    cfg.stop.max_activations = 200;
+    let a = apibcd::run_experiment(&cfg).unwrap();
+    cfg.seed ^= 0xFFFF;
+    let b = apibcd::run_experiment(&cfg).unwrap();
+    let la = a.traces[0].last().unwrap();
+    let lb = b.traces[0].last().unwrap();
+    assert!(
+        (la.time - lb.time).abs() > 1e-12 || (la.metric - lb.metric).abs() > 1e-12,
+        "different seeds should differ somewhere"
+    );
+}
+
+#[test]
+fn all_routing_rules_converge() {
+    for routing in [RoutingRule::Cycle, RoutingRule::Uniform, RoutingRule::Metropolis] {
+        let mut cfg = base_ls();
+        cfg.routing = routing;
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        let report = apibcd::run_experiment(&cfg).unwrap();
+        assert!(
+            report.traces[0].last_metric() < 0.3,
+            "{routing:?}: NMSE {}",
+            report.traces[0].last_metric()
+        );
+    }
+}
+
+#[test]
+fn objective_decreases_for_ibcd() {
+    // Theorem 1 end-to-end: the recorded penalty objective is monotonically
+    // non-increasing for I-BCD (exact-ish inner solve: inner_k ≥ p).
+    let mut cfg = base_ls();
+    cfg.inner_k = 8; // > p = 4 → exact CG
+    cfg.algos = vec![AlgoKind::IBcd];
+    cfg.stop.max_activations = 400;
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    let pts = &report.traces[0].points;
+    for w in pts.windows(2) {
+        assert!(
+            w[1].objective <= w[0].objective + 1e-4,
+            "objective rose: {} -> {} at iter {}",
+            w[0].objective,
+            w[1].objective,
+            w[1].iter
+        );
+    }
+}
+
+#[test]
+fn comm_equals_hops_for_token_methods() {
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::IBcd, AlgoKind::Wpg];
+    cfg.stop.max_activations = 250;
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    for t in &report.traces {
+        // Cycle routing on a connected graph never self-loops → one comm
+        // unit per activation.
+        let last = t.last().unwrap();
+        assert_eq!(last.comm, last.iter, "{}", t.name);
+    }
+}
+
+#[test]
+fn contiguous_partition_still_converges() {
+    let mut cfg = base_ls();
+    cfg.partition = PartitionKind::Contiguous;
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    assert!(report.traces[0].last_metric() < 0.5);
+}
+
+#[test]
+fn stop_rule_on_comm_budget() {
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::IBcd];
+    cfg.stop = StopRule {
+        max_activations: u64::MAX,
+        max_sim_time: f64::INFINITY,
+        max_comm: 100,
+    };
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    let last = report.traces[0].last().unwrap();
+    assert!(last.comm <= 101, "comm budget overrun: {}", last.comm);
+}
+
+#[test]
+fn stop_rule_on_sim_time() {
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.timing = apibcd::sim::TimingModel::Fixed(1e-3);
+    cfg.stop = StopRule {
+        max_activations: u64::MAX,
+        max_sim_time: 0.05,
+        max_comm: u64::MAX,
+    };
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    let last = report.traces[0].last().unwrap();
+    assert!(last.time <= 0.06, "time budget overrun: {}", last.time);
+}
+
+#[test]
+fn api_bcd_survives_lossy_links() {
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.faults = apibcd::sim::FaultModel::lossy(0.10);
+    cfg.stop.max_activations = 1000;
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    let t = &report.traces[0];
+    assert!(t.last_metric() < 0.3, "lossy-link NMSE {}", t.last_metric());
+    // Retransmissions must show up in the comm accounting (E[attempts] ≈ 1.11).
+    let last = t.last().unwrap();
+    assert!(
+        last.comm > last.iter,
+        "retries should inflate comm: {} vs {} activations",
+        last.comm,
+        last.iter
+    );
+}
+
+#[test]
+fn api_bcd_survives_agent_churn() {
+    let mut cfg = base_ls();
+    cfg.agents = 8;
+    cfg.algos = vec![AlgoKind::ApiBcd, AlgoKind::IBcd];
+    cfg.faults = apibcd::sim::FaultModel {
+        dropout_frac: 0.3,
+        dropout_len: 0.005,
+        ..apibcd::sim::FaultModel::NONE
+    };
+    cfg.stop.max_activations = 1200;
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    for t in &report.traces {
+        assert!(t.last_metric() < 0.4, "{} churn NMSE {}", t.name, t.last_metric());
+    }
+}
+
+#[test]
+fn lossy_links_slow_convergence_but_not_accuracy() {
+    // Same budget: loss costs time/comm, not final quality (the retransmit
+    // recovery preserves the token walk semantics).
+    let run = |p: f64| {
+        let mut cfg = base_ls();
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        cfg.faults = if p > 0.0 {
+            apibcd::sim::FaultModel::lossy(p)
+        } else {
+            apibcd::sim::FaultModel::NONE
+        };
+        cfg.timing = apibcd::sim::TimingModel::Fixed(1e-5);
+        cfg.stop.max_activations = 800;
+        let r = apibcd::run_experiment(&cfg).unwrap();
+        let last = r.traces[0].last().cloned().unwrap();
+        (r.traces[0].last_metric(), last.time, last.comm)
+    };
+    let (m0, t0, c0) = run(0.0);
+    let (m1, t1, c1) = run(0.3);
+    assert!(c1 > c0, "comm should grow under loss: {c1} vs {c0}");
+    assert!(t1 > t0, "time should grow under loss: {t1} vs {t0}");
+    assert!((m1 - m0).abs() < 0.1, "quality should survive: {m0} vs {m1}");
+}
+
+#[test]
+fn api_bcd_converges_on_every_topology_family() {
+    for topo in ["random", "ring", "grid", "star", "complete", "small-world"] {
+        let mut cfg = base_ls();
+        cfg.agents = 8;
+        cfg.topology = topo.to_string();
+        cfg.algos = vec![AlgoKind::ApiBcd];
+        cfg.stop.max_activations = 1000;
+        let report = apibcd::run_experiment(&cfg).unwrap();
+        assert!(
+            report.traces[0].last_metric() < 0.4,
+            "{topo}: NMSE {}",
+            report.traces[0].last_metric()
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Cross-module integration: driver plumbing, report files, the thread
+//! executor, and the CLI binary surface.
+
+use apibcd::algo::AlgoKind;
+use apibcd::config::{ExperimentConfig, Preset};
+use apibcd::exec::run_api_bcd_threads;
+use apibcd::solver::{LocalSolver, NativeSolver, SolverService};
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> String {
+    let d = format!(
+        "{}/apibcd_it_{tag}_{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn report_files_round_trip() {
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.algos = vec![AlgoKind::IBcd, AlgoKind::ApiBcd];
+    cfg.stop.max_activations = 120;
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    let dir = tmpdir("report");
+    let files = report.write_files(&dir).unwrap();
+    assert_eq!(files.len(), 3); // 2 CSVs + 1 JSON
+
+    // CSV has a header and the right row count.
+    let csv = std::fs::read_to_string(&files[0]).unwrap();
+    assert!(csv.starts_with("iter,time_s,comm_units,objective,metric"));
+    assert_eq!(csv.lines().count(), report.traces[0].points.len() + 1);
+
+    // JSON parses back with our own parser.
+    let json_text = std::fs::read_to_string(files.last().unwrap()).unwrap();
+    let doc = apibcd::util::json::Json::parse(&json_text).unwrap();
+    assert_eq!(
+        doc.get("experiment").and_then(|j| j.as_str()),
+        Some("test_ls")
+    );
+    assert_eq!(doc.get("traces").and_then(|t| t.as_arr()).unwrap().len(), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn workload_build_rejects_unknown_profile() {
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.profile = "not_a_dataset".into();
+    assert!(apibcd::run_experiment(&cfg).is_err());
+}
+
+#[test]
+fn thread_executor_converges_like_the_des() {
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.agents = 5;
+    cfg.walks = 2;
+    cfg.tau_api = 0.1;
+    cfg.stop.max_activations = 800;
+    cfg.eval_every = 40;
+
+    let workload = apibcd::algo::driver::Workload::build(&cfg).unwrap();
+    let shards = Arc::new(workload.partition.shards.clone());
+    let task = workload.profile.task;
+    let k = cfg.inner_k;
+    let service = SolverService::spawn(
+        move || Ok(Box::new(NativeSolver::new(task, k)) as Box<dyn LocalSolver>),
+        shards.clone(),
+    )
+    .unwrap();
+    let trace =
+        run_api_bcd_threads(&cfg, &workload.topo, shards, &workload.problem, service.client())
+            .unwrap();
+    assert!(
+        trace.last_metric() < 0.35,
+        "threaded NMSE {}",
+        trace.last_metric()
+    );
+    // And the DES agrees on the convergence band.
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    let des = apibcd::run_experiment(&cfg).unwrap();
+    assert!(
+        (des.traces[0].last_metric() - trace.last_metric()).abs() < 0.25,
+        "DES {} vs threads {}",
+        des.traces[0].last_metric(),
+        trace.last_metric()
+    );
+}
+
+#[test]
+fn cli_binary_runs_core_commands() {
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let run = |args: &[&str]| {
+        let out = std::process::Command::new(bin).args(args).output().unwrap();
+        assert!(
+            out.status.success(),
+            "repro {args:?} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+
+    let topo = run(&["topology", "--agents", "12", "--xi", "0.5"]);
+    assert!(topo.contains("connected         true"), "{topo}");
+
+    let train = run(&[
+        "train", "--preset", "test_ls", "--algos", "i-bcd,api-bcd",
+        "--activations", "150", "--solver", "native",
+    ]);
+    assert!(train.contains("I-BCD") && train.contains("API-BCD"), "{train}");
+
+    let timeline = run(&["timeline", "--activations", "8"]);
+    assert!(timeline.contains("token"), "{timeline}");
+
+    let help = run(&["help"]);
+    assert!(help.contains("USAGE"));
+
+    // Unknown command exits non-zero.
+    let out = std::process::Command::new(bin).arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn sweep_over_walks_runs() {
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(bin)
+        .args([
+            "sweep", "--param", "walks", "--values", "1,3", "--preset", "test_ls",
+            "--activations", "120", "--solver", "native",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = text.lines().collect();
+    // header + 2 values × 3 default algos
+    assert!(lines.len() >= 5, "{text}");
+}
+
+#[test]
+fn cli_run_config_and_compare() {
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let dir = tmpdir("cli_cfg");
+    let cfg_path = format!("{dir}/exp.toml");
+    std::fs::write(
+        &cfg_path,
+        "preset = \"test_ls\"\nname = \"cfgrun\"\nwalks = 2\nactivations = 150\n\
+         algos = \"api-bcd\"\nsolver = \"native\"\n",
+    )
+    .unwrap();
+    let out = std::process::Command::new(bin)
+        .args(["run", "--config", &cfg_path, "--out", &dir])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = format!("{dir}/cfgrun.json");
+    assert!(std::path::Path::new(&json).exists());
+
+    // compare a report against itself: exit 0, no regression.
+    let out = std::process::Command::new(bin)
+        .args(["compare", &json, &json])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("ok"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_replicate_runs() {
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(bin)
+        .args([
+            "replicate", "--preset", "test_ls", "--seeds", "2",
+            "--activations", "100", "--solver", "native", "--target", "0.5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("±"), "{text}");
+}
+
+#[test]
+fn shipped_experiment_configs_parse() {
+    for f in std::fs::read_dir("experiments").unwrap() {
+        let path = f.unwrap().path();
+        if path.extension().map(|e| e == "toml").unwrap_or(false) {
+            apibcd::config::file::load(path.to_str().unwrap())
+                .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        }
+    }
+}

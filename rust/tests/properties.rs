@@ -1,0 +1,649 @@
+//! Property-based tests over the coordinator's invariants (hand-rolled
+//! harness in `apibcd::util::proptest`; the proptest crate is not in the
+//! offline vendor set).
+//!
+//! Covered invariants:
+//! * topology: connectivity, edge budget, symmetric adjacency, valid
+//!   traversal cycles, stochastic Metropolis rows — over random (n, ξ);
+//! * routing: every hop of every rule is a graph edge;
+//! * DES: event ordering, per-agent service serialization;
+//! * token algebra: the I-BCD invariant z = mean(x) under arbitrary update
+//!   sequences (eq. 8);
+//! * theory: the Theorem 1 descent inequality for exact prox steps on
+//!   random convex LS problems;
+//! * serialization: JSON writer/parser round trip on random documents.
+
+use apibcd::config::RoutingRule;
+use apibcd::data::{shard::PartitionKind, Dataset, DatasetProfile, Partition};
+use apibcd::graph::Topology;
+use apibcd::linalg::{axpy, dist2};
+use apibcd::model::{penalty_objective, Task};
+use apibcd::sim::{AgentAvailability, EventQueue};
+use apibcd::solver::{LocalSolver, NativeSolver};
+use apibcd::util::proptest::{run_prop, PropConfig};
+use apibcd::util::rng::Rng;
+
+fn cfg(cases: usize, seed: u64) -> PropConfig {
+    PropConfig { cases, seed }
+}
+
+#[test]
+fn prop_random_topology_well_formed() {
+    run_prop(
+        "random topology well-formed",
+        cfg(60, 101),
+        |r| {
+            let n = 2 + r.below(40);
+            let xi = r.next_f64();
+            (n, xi, r.next_u64())
+        },
+        |&(n, xi, seed)| {
+            let mut rng = Rng::new(seed);
+            let g = Topology::random_connected(n, xi, &mut rng);
+            if !g.is_connected() {
+                return Err("disconnected".into());
+            }
+            let max_edges = n * (n - 1) / 2;
+            let target = ((xi * max_edges as f64).round() as usize).clamp(n - 1, max_edges);
+            if g.num_edges() != target {
+                return Err(format!("edges {} != target {target}", g.num_edges()));
+            }
+            for i in 0..n {
+                for &j in g.neighbors(i) {
+                    if !g.neighbors(j).contains(&i) {
+                        return Err(format!("asymmetric edge {i}-{j}"));
+                    }
+                    if i == j {
+                        return Err(format!("self loop at {i}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_traversal_cycle_covers_and_walks_edges() {
+    run_prop(
+        "traversal cycle valid",
+        cfg(40, 202),
+        |r| {
+            let n = 3 + r.below(30);
+            let xi = 0.1 + 0.9 * r.next_f64();
+            (n, xi, r.next_u64())
+        },
+        |&(n, xi, seed)| {
+            let mut rng = Rng::new(seed);
+            let g = Topology::random_connected(n, xi, &mut rng);
+            let cyc = g.traversal_cycle();
+            let mut seen = vec![false; n];
+            for &u in &cyc {
+                seen[u] = true;
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("cycle misses an agent".into());
+            }
+            for w in cyc.windows(2) {
+                if !g.has_edge(w[0], w[1]) {
+                    return Err(format!("hop {:?} not an edge", w));
+                }
+            }
+            if cyc.len() > 1 && !g.has_edge(*cyc.last().unwrap(), cyc[0]) {
+                return Err("wrap-around hop not an edge".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_metropolis_rows_stochastic_and_supported() {
+    run_prop(
+        "metropolis rows",
+        cfg(40, 303),
+        |r| (2 + r.below(25), r.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Rng::new(seed);
+            let g = Topology::random_connected(n, 0.5, &mut rng);
+            for i in 0..n {
+                let row = g.metropolis_row(i);
+                let sum: f64 = row.iter().map(|&(_, p)| p).sum();
+                if (sum - 1.0).abs() > 1e-9 {
+                    return Err(format!("row {i} sums to {sum}"));
+                }
+                for &(j, p) in &row {
+                    if p < -1e-12 {
+                        return Err(format!("negative probability {p}"));
+                    }
+                    if j != i && !g.has_edge(i, j) {
+                        return Err(format!("mass on non-edge {i}-{j}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_routing_hops_are_edges() {
+    run_prop(
+        "routing hops are edges",
+        cfg(30, 404),
+        |r| {
+            let n = 3 + r.below(20);
+            let rule = match r.below(3) {
+                0 => RoutingRule::Cycle,
+                1 => RoutingRule::Uniform,
+                _ => RoutingRule::Metropolis,
+            };
+            (n, rule, r.next_u64())
+        },
+        |&(n, rule, seed)| {
+            use apibcd::algo::common::Router;
+            let mut rng = Rng::new(seed);
+            let g = Topology::random_connected(n, 0.4, &mut rng);
+            let mut router = Router::new(rule, &g, 2);
+            for m in 0..2 {
+                let mut at = router.start(m, &g, &mut rng);
+                for _ in 0..3 * n {
+                    let next = router.next(m, at, &g, &mut rng);
+                    if !g.has_edge(at, next) {
+                        return Err(format!("{rule:?} walk {m}: {at}->{next} not an edge"));
+                    }
+                    at = next;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_queue_pops_in_time_order() {
+    run_prop(
+        "event queue ordering",
+        cfg(50, 505),
+        |r| {
+            let n = 1 + r.below(200);
+            (0..n)
+                .map(|_| (r.next_f64() * 100.0, r.below(8), r.below(16)))
+                .collect::<Vec<_>>()
+        },
+        |events| {
+            let mut q = EventQueue::new();
+            for &(t, tok, ag) in events {
+                q.push(t, tok, ag);
+            }
+            let mut last = f64::NEG_INFINITY;
+            let mut count = 0;
+            while let Some(e) = q.pop() {
+                if e.time < last {
+                    return Err(format!("time went backwards: {} < {last}", e.time));
+                }
+                last = e.time;
+                count += 1;
+            }
+            if count != events.len() {
+                return Err("lost events".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_agent_availability_serializes() {
+    run_prop(
+        "agent service serialization",
+        cfg(50, 606),
+        |r| {
+            let n_agents = 1 + r.below(5);
+            let jobs: Vec<(usize, f64, f64)> = (0..(1 + r.below(50)))
+                .map(|_| (r.below(n_agents), r.next_f64(), r.next_f64() * 0.1))
+                .collect();
+            (n_agents, jobs)
+        },
+        |(n_agents, jobs)| {
+            let mut av = AgentAvailability::new(*n_agents);
+            let mut sorted = jobs.clone();
+            sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let mut last_end = vec![0.0f64; *n_agents];
+            for &(agent, arrival, dur) in &sorted {
+                let (start, end) = av.serve(agent, arrival, dur);
+                if start + 1e-15 < arrival {
+                    return Err("service before arrival".into());
+                }
+                if start + 1e-15 < last_end[agent] {
+                    return Err("overlapping service at one agent".into());
+                }
+                if (end - start - dur).abs() > 1e-12 {
+                    return Err("wrong service duration".into());
+                }
+                last_end[agent] = end;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ibcd_token_tracks_block_mean() {
+    // eq. (8): if z⁰ = mean(x⁰), then z = mean(x) after any update sequence.
+    run_prop(
+        "I-BCD token algebra",
+        cfg(50, 707),
+        |r| {
+            let n = 2 + r.below(10);
+            let dim = 1 + r.below(8);
+            let steps: Vec<(usize, Vec<f32>)> = (0..(1 + r.below(60)))
+                .map(|_| {
+                    (
+                        r.below(n),
+                        (0..dim).map(|_| r.normal_f32()).collect::<Vec<f32>>(),
+                    )
+                })
+                .collect();
+            (n, dim, steps)
+        },
+        |(n, dim, steps)| {
+            let mut xs = vec![vec![0.0f32; *dim]; *n];
+            let mut z = vec![0.0f32; *dim];
+            for (agent, x_new) in steps {
+                for j in 0..*dim {
+                    z[j] += (x_new[j] - xs[*agent][j]) / *n as f32;
+                }
+                xs[*agent] = x_new.clone();
+            }
+            let mut mean = vec![0.0f32; *dim];
+            for x in &xs {
+                axpy(1.0 / *n as f32, x, &mut mean);
+            }
+            if dist2(&z, &mean) > 1e-6 {
+                return Err(format!("drift ‖z − mean(x)‖² = {}", dist2(&z, &mean)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_theorem1_descent_holds() {
+    // Exact prox step at a random state descends F by at least the Theorem 1
+    // quantity (up to f32 slack).
+    let ds = Dataset::load(
+        DatasetProfile::by_name("test_ls").unwrap(),
+        "/nonexistent",
+        9,
+    )
+    .unwrap();
+    let part = Partition::new(&ds, 2, PartitionKind::Iid).unwrap();
+    let dim = ds.profile.features;
+
+    run_prop(
+        "Theorem 1 descent",
+        cfg(40, 808),
+        |r| {
+            let agent = r.below(2);
+            let xs: Vec<Vec<f32>> = (0..2)
+                .map(|_| (0..dim).map(|_| r.normal_f32()).collect())
+                .collect();
+            // Theorem 1 holds along the algorithm's trajectory, where the
+            // token invariant z = mean(x) is maintained (the proof's step
+            // (b) uses z^{k+1} = (1/N)Σ x_i^{k+1}) — generate states on
+            // that manifold.
+            let mut z = vec![0.0f32; dim];
+            for x in &xs {
+                axpy(0.5, x, &mut z);
+            }
+            let tau = 0.2 + r.next_f64() as f32 * 2.0;
+            (agent, xs, z, tau)
+        },
+        |(agent, xs, z, tau)| {
+            let mut solver = NativeSolver::new(Task::Regression, dim + 3); // exact CG
+            let tzsum: Vec<f32> = z.iter().map(|v| tau * v).collect();
+            let out = solver
+                .prox(&part.shards[*agent], &xs[*agent], &tzsum, *tau)
+                .map_err(|e| e.to_string())?;
+
+            // z update (eq. 8), N = 2.
+            let mut z_new = z.clone();
+            for j in 0..dim {
+                z_new[j] += (out.w[j] - xs[*agent][j]) / 2.0;
+            }
+            let mut xs_new = xs.clone();
+            xs_new[*agent] = out.w.clone();
+
+            let f_old = penalty_objective(
+                Task::Regression,
+                &part.shards,
+                xs,
+                std::slice::from_ref(z),
+                *tau as f64,
+            );
+            let f_new = penalty_objective(
+                Task::Regression,
+                &part.shards,
+                &xs_new,
+                std::slice::from_ref(&z_new),
+                *tau as f64,
+            );
+            let bound = -(*tau as f64) / 2.0 * dist2(&out.w, &xs[*agent]) as f64
+                - (*tau as f64) * 2.0 / 2.0 * dist2(&z_new, z) as f64;
+            // f_new − f_old ≤ bound up to f32 slack: the CG solve and the
+            // objective evaluation are f32, so allow a relative tolerance.
+            let slack = 1e-3 + 1e-2 * bound.abs();
+            if f_new - f_old > bound + slack {
+                return Err(format!(
+                    "descent violated: Δ={} bound={bound}",
+                    f_new - f_old
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use apibcd::util::json::{to_string, Json};
+    fn gen_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.below(2) == 0),
+            2 => Json::Num((r.below(2_000_000) as f64 - 1_000_000.0) / 64.0),
+            3 => Json::Str(format!("s{}τ", r.below(1000))),
+            4 => Json::Arr((0..r.below(5)).map(|_| gen_json(r, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..r.below(5))
+                    .map(|i| (format!("k{i}"), gen_json(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    run_prop(
+        "json round trip",
+        cfg(80, 909),
+        |r| gen_json(r, 3),
+        |doc| {
+            let text = to_string(doc);
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            if &parsed != doc {
+                return Err(format!("round trip mismatch: {text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partition_conserves_rows() {
+    run_prop(
+        "partition row conservation",
+        cfg(20, 111),
+        |r| (1 + r.below(4), r.next_u64()),
+        |&(n_agents, seed)| {
+            let ds = Dataset::load(
+                DatasetProfile::by_name("test_ls").unwrap(),
+                "/nonexistent",
+                seed,
+            )
+            .map_err(|e| e.to_string())?;
+            let part =
+                Partition::new(&ds, n_agents, PartitionKind::Iid).map_err(|e| e.to_string())?;
+            if part.total_active() != ds.n_train() {
+                return Err(format!(
+                    "active {} != train {}",
+                    part.total_active(),
+                    ds.n_train()
+                ));
+            }
+            for s in &part.shards {
+                let mask_sum: f32 = s.mask.iter().sum();
+                if mask_sum as usize != s.active {
+                    return Err("mask/active mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_theorem2_descent_holds() {
+    // API-BCD with fresh token sharing (Theorem 2): at states where all
+    // local copies equal the live tokens AND z_m = mean(x) ∀m (the
+    // trajectory manifold), one exact block update descends F(x, z) by at
+    // least (τM/2)‖Δx‖² + (τN/2)Σ_m‖Δz_m‖².
+    let ds = Dataset::load(
+        DatasetProfile::by_name("test_ls").unwrap(),
+        "/nonexistent",
+        13,
+    )
+    .unwrap();
+    let part = Partition::new(&ds, 2, PartitionKind::Iid).unwrap();
+    let dim = ds.profile.features;
+
+    run_prop(
+        "Theorem 2 descent",
+        cfg(40, 1212),
+        |r| {
+            let agent = r.below(2);
+            let m_walks = 1 + r.below(4);
+            let xs: Vec<Vec<f32>> = (0..2)
+                .map(|_| (0..dim).map(|_| r.normal_f32()).collect())
+                .collect();
+            let mut zbar = vec![0.0f32; dim];
+            for x in &xs {
+                axpy(0.5, x, &mut zbar);
+            }
+            let tau = 0.2 + r.next_f64() as f32 * 1.5;
+            (agent, m_walks, xs, zbar, tau)
+        },
+        |(agent, m_walks, xs, zbar, tau)| {
+            let m = *m_walks;
+            let n = 2usize;
+            // Fresh sharing: every token (and copy) equals z̄ = mean(x).
+            let zs: Vec<Vec<f32>> = (0..m).map(|_| zbar.clone()).collect();
+            let mut solver = NativeSolver::new(Task::Regression, dim + 3);
+            let mut tzsum = vec![0.0f32; dim];
+            for z in &zs {
+                axpy(*tau, z, &mut tzsum);
+            }
+            let tau_m = *tau * m as f32;
+            let out = solver
+                .prox(&part.shards[*agent], &xs[*agent], &tzsum, tau_m)
+                .map_err(|e| e.to_string())?;
+
+            // Every token takes the (12b) increment in the fresh-sharing
+            // regime (all copies are synchronized).
+            let mut zs_new = zs.clone();
+            for z in zs_new.iter_mut() {
+                for j in 0..dim {
+                    z[j] += (out.w[j] - xs[*agent][j]) / n as f32;
+                }
+            }
+            let mut xs_new = xs.clone();
+            xs_new[*agent] = out.w.clone();
+
+            let f_old =
+                penalty_objective(Task::Regression, &part.shards, xs, &zs, *tau as f64);
+            let f_new =
+                penalty_objective(Task::Regression, &part.shards, &xs_new, &zs_new, *tau as f64);
+            let dz: f64 = zs_new
+                .iter()
+                .zip(&zs)
+                .map(|(a, b)| dist2(a, b) as f64)
+                .sum();
+            let bound = -(*tau as f64) * m as f64 / 2.0 * dist2(&out.w, &xs[*agent]) as f64
+                - (*tau as f64) * n as f64 / 2.0 * dz;
+            let slack = 1e-3 + 1e-2 * bound.abs();
+            if f_new - f_old > bound + slack {
+                return Err(format!(
+                    "Theorem 2 violated (M={m}): Δ={} bound={bound}",
+                    f_new - f_old
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_theorem3_descent_holds() {
+    // gAPI-BCD (eq. 15) under fresh sharing: descent with the weaker
+    // Theorem 3 constant (τM/2 + ρ − L/2), given ρ ≥ L.
+    let ds = Dataset::load(
+        DatasetProfile::by_name("test_ls").unwrap(),
+        "/nonexistent",
+        21,
+    )
+    .unwrap();
+    let part = Partition::new(&ds, 2, PartitionKind::Iid).unwrap();
+    let dim = ds.profile.features;
+
+    run_prop(
+        "Theorem 3 descent",
+        cfg(40, 1313),
+        |r| {
+            let agent = r.below(2);
+            let m_walks = 1 + r.below(3);
+            let xs: Vec<Vec<f32>> = (0..2)
+                .map(|_| (0..dim).map(|_| 0.5 * r.normal_f32()).collect())
+                .collect();
+            let mut zbar = vec![0.0f32; dim];
+            for x in &xs {
+                axpy(0.5, x, &mut zbar);
+            }
+            let tau = 0.2 + r.next_f64() as f32;
+            (agent, m_walks, xs, zbar, tau)
+        },
+        |(agent, m_walks, xs, zbar, tau)| {
+            let m = *m_walks;
+            let n = 2usize;
+            let shard = &part.shards[*agent];
+            let d = shard.active.max(1) as f32;
+            let lhat = shard.frob_sq() / d; // L upper bound for LS
+            let rho = lhat; // ρ ≥ L ⇒ Theorem 3 constant positive
+            let zs: Vec<Vec<f32>> = (0..m).map(|_| zbar.clone()).collect();
+
+            let mut solver = NativeSolver::new(Task::Regression, 5);
+            let g = solver
+                .grad(shard, &xs[*agent])
+                .map_err(|e| e.to_string())?;
+            let tau_m = *tau * m as f32;
+            let denom = rho + tau_m;
+            let mut x_new = vec![0.0f32; dim];
+            let mut tzsum = vec![0.0f32; dim];
+            for z in &zs {
+                axpy(*tau, z, &mut tzsum);
+            }
+            for j in 0..dim {
+                x_new[j] = (rho * xs[*agent][j] + tzsum[j] - g.w[j]) / denom;
+            }
+
+            let mut zs_new = zs.clone();
+            for z in zs_new.iter_mut() {
+                for j in 0..dim {
+                    z[j] += (x_new[j] - xs[*agent][j]) / n as f32;
+                }
+            }
+            let mut xs_new = xs.clone();
+            xs_new[*agent] = x_new.clone();
+
+            let f_old =
+                penalty_objective(Task::Regression, &part.shards, xs, &zs, *tau as f64);
+            let f_new =
+                penalty_objective(Task::Regression, &part.shards, &xs_new, &zs_new, *tau as f64);
+            let dz: f64 = zs_new
+                .iter()
+                .zip(&zs)
+                .map(|(a, b)| dist2(a, b) as f64)
+                .sum();
+            let coeff = (*tau as f64) * m as f64 / 2.0 + rho as f64 - lhat as f64 / 2.0;
+            let bound = -coeff * dist2(&x_new, &xs[*agent]) as f64
+                - (*tau as f64) * n as f64 / 2.0 * dz;
+            let slack = 1e-3 + 1e-2 * (f_old.abs() + bound.abs());
+            if f_new - f_old > bound + slack {
+                return Err(format!(
+                    "Theorem 3 violated (M={m}): Δ={} bound={bound}",
+                    f_new - f_old
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fault_transmit_expected_attempts() {
+    use apibcd::sim::FaultModel;
+    run_prop(
+        "geometric retransmission count",
+        cfg(20, 1414),
+        |r| (r.next_f64() * 0.6, r.next_u64()),
+        |&(p, seed)| {
+            let model = FaultModel::lossy(p);
+            let mut rng = Rng::new(seed);
+            let n = 4000;
+            let mut total = 0u64;
+            for _ in 0..n {
+                let (a, _) = model.transmit(&mut rng);
+                total += a;
+            }
+            let mean = total as f64 / n as f64;
+            let expect = 1.0 / (1.0 - p); // geometric mean attempts
+            if (mean - expect).abs() > 0.15 * expect + 0.05 {
+                return Err(format!("p={p}: mean {mean} vs expected {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_objective_tracker_matches_naive() {
+    // The incremental tracker must agree with the direct O(N·s·p)
+    // evaluation after arbitrary update sequences.
+    let ds = Dataset::load(
+        DatasetProfile::by_name("test_ls").unwrap(),
+        "/nonexistent",
+        31,
+    )
+    .unwrap();
+    let part = Partition::new(&ds, 4, PartitionKind::Iid).unwrap();
+    let dim = ds.profile.features;
+
+    run_prop(
+        "objective tracker vs naive",
+        cfg(30, 1515),
+        |r| {
+            let steps: Vec<(usize, Vec<f32>)> = (0..(1 + r.below(40)))
+                .map(|_| (r.below(4), (0..dim).map(|_| r.normal_f32()).collect()))
+                .collect();
+            let m = 1 + r.below(3);
+            let zs: Vec<Vec<f32>> = (0..m)
+                .map(|_| (0..dim).map(|_| r.normal_f32()).collect())
+                .collect();
+            let tau = 0.1 + r.next_f64();
+            (steps, zs, tau)
+        },
+        |(steps, zs, tau)| {
+            use apibcd::model::ObjectiveTracker;
+            let mut xs = vec![vec![0.0f32; dim]; 4];
+            let mut tracker = ObjectiveTracker::new(Task::Regression, 4, dim);
+            for (agent, x_new) in steps {
+                tracker.block_updated(*agent, &xs[*agent], x_new);
+                xs[*agent] = x_new.clone();
+            }
+            let fast = tracker.objective(&part.shards, &xs, zs, *tau);
+            let naive = penalty_objective(Task::Regression, &part.shards, &xs, zs, *tau);
+            let tol = 1e-6 + 1e-9 * naive.abs() + 1e-4;
+            if (fast - naive).abs() > tol {
+                return Err(format!("tracker {fast} vs naive {naive}"));
+            }
+            Ok(())
+        },
+    );
+}

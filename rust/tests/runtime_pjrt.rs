@@ -1,0 +1,224 @@
+//! PJRT runtime integration: the rust coordinator executing the AOT
+//! artifacts. These tests require `make artifacts` to have run; they skip
+//! (with a note) when `artifacts/manifest.json` is absent so `cargo test`
+//! stays green on a fresh checkout.
+//!
+//! The core assertion: the PJRT path computes the SAME updates as the
+//! native solver (the artifacts implement the same math as
+//! `solver::native`), to f32 tolerance — which is what makes the native
+//! solver a valid oracle for everything else.
+
+use apibcd::data::{shard::PartitionKind, Dataset, DatasetProfile, Partition};
+use apibcd::model::Task;
+use apibcd::runtime::{Arg, CacheKey, Engine};
+use apibcd::solver::{LocalSolver, NativeSolver, PjrtSolver};
+
+const DIR: &str = "artifacts";
+
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new(&format!("{DIR}/manifest.json")).exists();
+    if !ok {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+    }
+    ok
+}
+
+fn shard_for(profile: &str) -> apibcd::data::AgentData {
+    let ds = Dataset::load(DatasetProfile::by_name(profile).unwrap(), "/nonexistent", 5).unwrap();
+    Partition::new(&ds, 1, PartitionKind::Iid)
+        .unwrap()
+        .shards
+        .remove(0)
+}
+
+#[test]
+fn manifest_loads_and_covers_all_profiles() {
+    if !artifacts_available() {
+        return;
+    }
+    let engine = Engine::open(DIR).unwrap();
+    for profile in ["test_ls", "test_logit", "test_smax", "cpusmall", "cadata", "ijcnn1", "usps"] {
+        assert!(
+            engine.manifest().entry(profile, "prox").is_some(),
+            "missing prox for {profile}"
+        );
+        assert!(
+            engine.manifest().entry(profile, "grad").is_some(),
+            "missing grad for {profile}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_matches_native_ls_prox_and_grad() {
+    if !artifacts_available() {
+        return;
+    }
+    let shard = shard_for("test_ls");
+    let p = shard.features;
+    let mut pjrt = PjrtSolver::new(DIR, "test_ls", Task::Regression).unwrap();
+    let mut native = NativeSolver::new(Task::Regression, pjrt.inner_k);
+
+    let w0: Vec<f32> = (0..p).map(|j| 0.1 * j as f32 - 0.2).collect();
+    let tzsum: Vec<f32> = (0..p).map(|j| 0.05 * j as f32).collect();
+    for tau_m in [0.2f32, 1.0, 4.0] {
+        let a = pjrt.prox(&shard, &w0, &tzsum, tau_m).unwrap().w;
+        let b = native.prox(&shard, &w0, &tzsum, tau_m).unwrap().w;
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-4, "prox τM={tau_m}: {x} vs {y}");
+        }
+    }
+    let a = pjrt.grad(&shard, &w0).unwrap().w;
+    let b = native.grad(&shard, &w0).unwrap().w;
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 2e-4, "grad: {x} vs {y}");
+    }
+}
+
+#[test]
+fn pjrt_matches_native_logit() {
+    if !artifacts_available() {
+        return;
+    }
+    let shard = shard_for("test_logit");
+    let p = shard.features;
+    let mut pjrt = PjrtSolver::new(DIR, "test_logit", Task::Binary).unwrap();
+    let mut native = NativeSolver::new(Task::Binary, pjrt.inner_k);
+    let w0 = vec![0.1f32; p];
+    let tzsum = vec![0.02f32; p];
+    let a = pjrt.prox(&shard, &w0, &tzsum, 0.5).unwrap().w;
+    let b = native.prox(&shard, &w0, &tzsum, 0.5).unwrap().w;
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 2e-4, "logit prox: {x} vs {y}");
+    }
+}
+
+#[test]
+fn pjrt_matches_native_smax() {
+    if !artifacts_available() {
+        return;
+    }
+    let shard = shard_for("test_smax");
+    let dim = shard.features * shard.classes;
+    let mut pjrt = PjrtSolver::new(DIR, "test_smax", Task::Multiclass(3)).unwrap();
+    let mut native = NativeSolver::new(Task::Multiclass(3), pjrt.inner_k);
+    let w0: Vec<f32> = (0..dim).map(|j| 0.01 * (j % 7) as f32).collect();
+    let tzsum = vec![0.0f32; dim];
+    let a = pjrt.prox(&shard, &w0, &tzsum, 1.0).unwrap().w;
+    let b = native.prox(&shard, &w0, &tzsum, 1.0).unwrap().w;
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 5e-4, "smax prox: {x} vs {y}");
+    }
+    let a = pjrt.grad(&shard, &w0).unwrap().w;
+    let b = native.grad(&shard, &w0).unwrap().w;
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 5e-4, "smax grad: {x} vs {y}");
+    }
+}
+
+#[test]
+fn engine_validates_shapes() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut engine = Engine::open(DIR).unwrap();
+    let entry = engine.manifest().entry("test_ls", "grad").unwrap().clone();
+    // Wrong arity.
+    let err = engine.execute(&entry.name, &[]);
+    assert!(err.is_err());
+    // Wrong shape.
+    let bad = vec![0.0f32; 4];
+    let err = engine.execute(
+        &entry.name,
+        &[
+            Arg::Host(&bad, &[2, 2]),
+            Arg::Host(&bad, &[4]),
+            Arg::Host(&bad, &[4]),
+            Arg::Host(&bad, &[4]),
+        ],
+    );
+    assert!(err.is_err(), "shape mismatch must be rejected");
+    // Unknown entry.
+    assert!(engine.execute("nope", &[]).is_err());
+    // Cache miss.
+    let err = engine.execute(
+        &entry.name,
+        &[
+            Arg::Cached(CacheKey { agent: 99, slot: 0 }),
+            Arg::Host(&bad, &[4]),
+            Arg::Host(&bad, &[4]),
+            Arg::Host(&bad, &[4]),
+        ],
+    );
+    assert!(err.is_err(), "cache miss must be rejected");
+}
+
+#[test]
+fn engine_caches_buffers_and_counts_executions() {
+    if !artifacts_available() {
+        return;
+    }
+    let shard = shard_for("test_ls");
+    let mut engine = Engine::open(DIR).unwrap();
+    let entry = engine.manifest().entry("test_ls", "grad").unwrap().clone();
+    let key = CacheKey { agent: 0, slot: 0 };
+    engine
+        .cache_buffer(key, &shard.x, &[shard.rows, shard.features])
+        .unwrap();
+    assert!(engine.has_cached(key));
+    // Re-cache is a no-op.
+    engine
+        .cache_buffer(key, &shard.x, &[shard.rows, shard.features])
+        .unwrap();
+
+    let w = vec![0.0f32; shard.features];
+    for _ in 0..3 {
+        let out = engine
+            .execute(
+                &entry.name,
+                &[
+                    Arg::Cached(key),
+                    Arg::Host(&shard.y, &[shard.rows]),
+                    Arg::Host(&shard.mask, &[shard.rows]),
+                    Arg::Host(&w, &[shard.features]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), shard.features);
+    }
+    assert_eq!(engine.stats.executions, 3);
+    assert!(engine.stats.execute_secs > 0.0);
+}
+
+#[test]
+fn full_experiment_on_pjrt_solver() {
+    if !artifacts_available() {
+        return;
+    }
+    use apibcd::algo::AlgoKind;
+    use apibcd::config::{ExperimentConfig, Preset, SolverChoice};
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.solver = SolverChoice::Pjrt;
+    cfg.algos = vec![AlgoKind::IBcd, AlgoKind::ApiBcd];
+    cfg.stop.max_activations = 300;
+    cfg.tau_api = 0.1;
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    for t in &report.traces {
+        assert!(t.last_metric() < 0.3, "{}: {}", t.name, t.last_metric());
+    }
+
+    // And the PJRT run must match the native run exactly on the metric
+    // (same math, same order of operations at f32 → identical floats is too
+    // strong across backends; require tight agreement instead).
+    cfg.solver = SolverChoice::Native;
+    let native = apibcd::run_experiment(&cfg).unwrap();
+    for (tp, tn) in report.traces.iter().zip(&native.traces) {
+        assert!(
+            (tp.last_metric() - tn.last_metric()).abs() < 1e-3,
+            "{}: pjrt {} vs native {}",
+            tp.name,
+            tp.last_metric(),
+            tn.last_metric()
+        );
+    }
+}
