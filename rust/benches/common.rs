@@ -1,7 +1,12 @@
 //! Shared micro-bench harness for the `cargo bench` targets (criterion is
 //! not in the offline vendor set; this provides the same warmup +
-//! measured-iterations + percentile reporting discipline).
+//! measured-iterations + percentile reporting discipline), plus the
+//! machine-readable suite output: every run emits a `BENCH_<suite>.json`
+//! next to the text report so perf PRs leave a comparable trajectory
+//! (EXPERIMENTS.md §Perf).
 
+use apibcd::util::json::{to_string, Json};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -9,6 +14,7 @@ pub struct BenchResult {
     pub iters: usize,
     pub mean_ns: f64,
     pub p50_ns: f64,
+    pub p95_ns: f64,
     pub p99_ns: f64,
 }
 
@@ -32,12 +38,14 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |q: usize| samples[(samples.len() * q / 100).min(samples.len() - 1)];
     BenchResult {
         name: name.to_string(),
         iters,
         mean_ns: mean,
         p50_ns: samples[samples.len() / 2],
-        p99_ns: samples[(samples.len() * 99 / 100).min(samples.len() - 1)],
+        p95_ns: pct(95),
+        p99_ns: pct(99),
     }
 }
 
@@ -56,18 +64,82 @@ pub fn fmt_ns(ns: f64) -> String {
 pub fn print_header(title: &str) {
     println!("\n== {title} ==");
     println!(
-        "{:<44} {:>8} {:>12} {:>12} {:>12}",
-        "benchmark", "iters", "mean", "p50", "p99"
+        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "p50", "p95", "p99"
     );
 }
 
 pub fn print_result(r: &BenchResult) {
     println!(
-        "{:<44} {:>8} {:>12} {:>12} {:>12}",
+        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
         r.name,
         r.iters,
         fmt_ns(r.mean_ns),
         fmt_ns(r.p50_ns),
+        fmt_ns(r.p95_ns),
         fmt_ns(r.p99_ns)
     );
+}
+
+/// Collects every [`BenchResult`] of a bench binary (printing as it goes)
+/// plus named derived metrics (e.g. ns-per-activation), and serializes the
+/// lot as `BENCH_<suite>.json` for trend tracking across PRs.
+pub struct Suite {
+    name: String,
+    results: Vec<BenchResult>,
+    derived: BTreeMap<String, f64>,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Suite {
+        Suite {
+            name: name.to_string(),
+            results: Vec::new(),
+            derived: BTreeMap::new(),
+        }
+    }
+
+    /// Print and record one result.
+    pub fn push(&mut self, r: BenchResult) {
+        print_result(&r);
+        self.results.push(r);
+    }
+
+    /// Record a derived scalar metric (units in the key, e.g. `..._ns`).
+    pub fn derive(&mut self, key: &str, value: f64) {
+        self.derived.insert(key.to_string(), value);
+    }
+
+    /// `$BENCH_JSON_PATH` override or `BENCH_<suite>.json` in the cwd.
+    pub fn default_path(&self) -> String {
+        std::env::var("BENCH_JSON_PATH").unwrap_or_else(|_| format!("BENCH_{}.json", self.name))
+    }
+
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut root = BTreeMap::new();
+        root.insert("suite".to_string(), Json::Str(self.name.clone()));
+        root.insert("schema_version".to_string(), Json::Num(1.0));
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(r.name.clone()));
+                o.insert("iters".to_string(), Json::Num(r.iters as f64));
+                o.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+                o.insert("p50_ns".to_string(), Json::Num(r.p50_ns));
+                o.insert("p95_ns".to_string(), Json::Num(r.p95_ns));
+                o.insert("p99_ns".to_string(), Json::Num(r.p99_ns));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("results".to_string(), Json::Arr(results));
+        let derived: BTreeMap<String, Json> = self
+            .derived
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v)))
+            .collect();
+        root.insert("derived".to_string(), Json::Obj(derived));
+        std::fs::write(path, to_string(&Json::Obj(root)))
+    }
 }

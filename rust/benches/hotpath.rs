@@ -1,12 +1,17 @@
 //! Hot-path micro-benchmarks: the per-activation costs that bound
-//! end-to-end throughput. Feeds EXPERIMENTS.md §Perf.
+//! end-to-end throughput. Feeds EXPERIMENTS.md §Perf and emits
+//! `BENCH_hotpath.json` (override the path with `BENCH_JSON_PATH`) so every
+//! perf PR leaves a machine-readable trajectory.
 //!
 //! Sections:
 //! * native solver: prox/grad per dataset profile;
 //! * PJRT solver: the same updates through the AOT artifacts (cached
 //!   device buffers vs cold uploads) — requires `make artifacts`;
 //! * coordinator substrate: DES event handling, token routing, recorder
-//!   evaluation.
+//!   evaluation — with derived ns-per-activation metrics.
+//!
+//! `APIBCD_BENCH_SMOKE=1` runs a seconds-long subset (CI smoke: checks the
+//! JSON artifact is produced and well-formed, not the numbers).
 
 #[path = "common.rs"]
 mod common;
@@ -24,54 +29,69 @@ fn shard_for(profile: &str, seed: u64) -> apibcd::data::AgentData {
         .remove(0)
 }
 
-fn bench_native() {
+fn bench_native(suite: &mut Suite, smoke: bool) {
     print_header("native solver (per activation)");
-    for profile in ["test_ls", "cpusmall", "cadata", "ijcnn1", "usps"] {
+    let profiles: &[&str] = if smoke {
+        &["test_ls", "test_smax"]
+    } else {
+        &["test_ls", "cpusmall", "cadata", "ijcnn1", "usps"]
+    };
+    let iters = if smoke { 30 } else { 200 };
+    for profile in profiles {
         let prof = DatasetProfile::by_name(profile).unwrap();
         let shard = shard_for(profile, 1);
         let dim = prof.dim();
         let mut solver = NativeSolver::new(prof.task, 5);
         let w0 = vec![0.1f32; dim];
         let tz = vec![0.05f32; dim];
-        let r = bench(&format!("native/prox/{profile}"), 200, || {
-            let _ = solver.prox(&shard, &w0, &tz, 0.5).unwrap();
+        // prox_into/grad_into with reused buffers — the steady-state
+        // (allocation-free) path the algorithms run.
+        let mut out = vec![0.0f32; dim];
+        let r = bench(&format!("native/prox/{profile}"), iters, || {
+            solver.prox_into(&shard, &w0, &tz, 0.5, &mut out).unwrap();
         });
-        print_result(&r);
-        let r = bench(&format!("native/grad/{profile}"), 200, || {
-            let _ = solver.grad(&shard, &w0).unwrap();
+        suite.push(r);
+        let r = bench(&format!("native/grad/{profile}"), iters, || {
+            solver.grad_into(&shard, &w0, &mut out).unwrap();
         });
-        print_result(&r);
+        suite.push(r);
     }
 }
 
-fn bench_pjrt() {
+fn bench_pjrt(suite: &mut Suite, smoke: bool) {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("\n== PJRT solver: skipped (run `make artifacts`) ==");
         return;
     }
     print_header("PJRT solver (per activation, artifacts)");
-    for profile in ["test_ls", "cpusmall", "ijcnn1", "usps"] {
+    let profiles: &[&str] = if smoke {
+        &["test_ls"]
+    } else {
+        &["test_ls", "cpusmall", "ijcnn1", "usps"]
+    };
+    let iters = if smoke { 20 } else { 100 };
+    for profile in profiles {
         let prof = DatasetProfile::by_name(profile).unwrap();
         let shard = shard_for(profile, 1);
         let dim = prof.dim();
         let mut solver = PjrtSolver::new("artifacts", profile, prof.task).unwrap();
         let w0 = vec![0.1f32; dim];
         let tz = vec![0.05f32; dim];
-        let r = bench(&format!("pjrt/prox/{profile}"), 100, || {
+        let r = bench(&format!("pjrt/prox/{profile}"), iters, || {
             let _ = solver.prox(&shard, &w0, &tz, 0.5).unwrap();
         });
-        print_result(&r);
-        let r = bench(&format!("pjrt/grad/{profile}"), 100, || {
+        suite.push(r);
+        let r = bench(&format!("pjrt/grad/{profile}"), iters, || {
             let _ = solver.grad(&shard, &w0).unwrap();
         });
-        print_result(&r);
+        suite.push(r);
         // Before/after for the constant-buffer cache (EXPERIMENTS §Perf):
         // with the cache off, x/y/mask re-upload on every activation.
         solver.cache_inputs = false;
-        let r = bench(&format!("pjrt/prox/{profile} (no input cache)"), 100, || {
+        let r = bench(&format!("pjrt/prox/{profile} (no input cache)"), iters, || {
             let _ = solver.prox(&shard, &w0, &tz, 0.5).unwrap();
         });
-        print_result(&r);
+        suite.push(r);
         solver.cache_inputs = true;
         let stats = solver.stats();
         println!(
@@ -84,7 +104,7 @@ fn bench_pjrt() {
     }
 }
 
-fn bench_coordinator() {
+fn bench_coordinator(suite: &mut Suite, smoke: bool) {
     use apibcd::algo::AlgoKind;
     use apibcd::config::{ExperimentConfig, Preset};
     use apibcd::sim::TimingModel;
@@ -93,53 +113,76 @@ fn bench_coordinator() {
 
     // Full API-BCD DES activation (native compute, fixed timing) — the
     // end-to-end per-activation cost excluding the solver.
+    let activations: u64 = if smoke { 200 } else { 2_000 };
     let mut cfg = ExperimentConfig::preset(Preset::TestLs);
     cfg.algos = vec![AlgoKind::ApiBcd];
     cfg.walks = 4;
     cfg.agents = 8;
     cfg.timing = TimingModel::Fixed(0.0);
     cfg.eval_every = u64::MAX; // isolate the event loop from evaluation
-    cfg.stop.max_activations = 2_000;
-    let r = bench("des/api-bcd 2000 activations (no eval)", 20, || {
-        let _ = apibcd::run_experiment(&cfg).unwrap();
-    });
-    print_result(&r);
-    println!(
-        "  → {:.2}µs per activation",
-        r.mean_ns / 1e3 / cfg.stop.max_activations as f64
+    cfg.stop.max_activations = activations;
+    let r = bench(
+        &format!("des/api-bcd {activations} activations (no eval)"),
+        if smoke { 5 } else { 20 },
+        || {
+            let _ = apibcd::run_experiment(&cfg).unwrap();
+        },
     );
+    let per_act = r.mean_ns / activations as f64;
+    suite.push(r);
+    println!("  → {:.2}µs per activation", per_act / 1e3);
+    suite.derive("des/api-bcd ns_per_activation (no eval)", per_act);
 
     cfg.eval_every = 10;
-    let r = bench("des/api-bcd 2000 activations (eval@10)", 10, || {
-        let _ = apibcd::run_experiment(&cfg).unwrap();
-    });
-    print_result(&r);
+    let r = bench(
+        &format!("des/api-bcd {activations} activations (eval@10)"),
+        if smoke { 3 } else { 10 },
+        || {
+            let _ = apibcd::run_experiment(&cfg).unwrap();
+        },
+    );
+    suite.derive(
+        "des/api-bcd ns_per_activation (eval@10)",
+        r.mean_ns / activations as f64,
+    );
+    suite.push(r);
 
     // Topology + routing.
     let mut rng = apibcd::util::rng::Rng::new(7);
-    let r = bench("graph/random_connected N=50 ξ=0.7", 200, || {
+    let iters = if smoke { 30 } else { 200 };
+    let r = bench("graph/random_connected N=50 ξ=0.7", iters, || {
         let g = apibcd::graph::Topology::random_connected(50, 0.7, &mut rng);
         std::hint::black_box(g.num_edges());
     });
-    print_result(&r);
+    suite.push(r);
     let g = apibcd::graph::Topology::random_connected(50, 0.7, &mut rng);
-    let r = bench("graph/traversal_cycle N=50", 200, || {
+    let r = bench("graph/traversal_cycle N=50", iters, || {
         std::hint::black_box(g.traversal_cycle().len());
     });
-    print_result(&r);
-    let r = bench("graph/metropolis_next x1000", 200, || {
+    suite.push(r);
+    let r = bench("graph/metropolis_next x1000", iters, || {
         let mut at = 0;
         for _ in 0..1000 {
             at = g.metropolis_next(at, &mut rng);
         }
         std::hint::black_box(at);
     });
-    print_result(&r);
+    suite.push(r);
 }
 
 fn main() {
-    println!("apibcd hot-path benchmarks (hand-rolled harness; criterion unavailable offline)");
-    bench_native();
-    bench_pjrt();
-    bench_coordinator();
+    let smoke = std::env::var("APIBCD_BENCH_SMOKE").is_ok();
+    println!(
+        "apibcd hot-path benchmarks (hand-rolled harness; criterion unavailable offline){}",
+        if smoke { " [smoke subset]" } else { "" }
+    );
+    let mut suite = Suite::new("hotpath");
+    bench_native(&mut suite, smoke);
+    bench_pjrt(&mut suite, smoke);
+    bench_coordinator(&mut suite, smoke);
+    let path = suite.default_path();
+    match suite.write_json(&path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

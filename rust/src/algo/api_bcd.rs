@@ -18,7 +18,7 @@
 //! parallel walks from M independent runs. The virtual counter `k` counts
 //! activations across all walks (paper footnote 1).
 
-use super::common::{mean_vec, Recorder, Router, should_stop};
+use super::common::{mean_vec_into, Recorder, Router, should_stop};
 use super::{AlgoContext, AlgoKind, Algorithm};
 use crate::linalg::axpy;
 use crate::metrics::Trace;
@@ -99,10 +99,20 @@ impl ApiBcd {
         let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
         let mut recorder = Recorder::new(kind.name(), ctx.cfg.eval_every, tau as f64);
         let (mut comm, mut k) = (0u64, 0u64);
-        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, &zs, &mean_vec(&xs));
 
+        // Reused per-activation scratch: with the solver's `prox_into`
+        // these make the steady-state loop allocation-free (EXPERIMENTS.md
+        // §Perf) — `x_new` swaps with the active block instead of
+        // replacing it, `g_buf` serves the gradient variant, `eval_w`
+        // the recording cadence.
         let mut events = Vec::new();
         let mut tzsum = vec![0.0f32; dim];
+        let mut x_new = vec![0.0f32; dim];
+        let mut g_buf = vec![0.0f32; dim];
+        let mut eval_w = vec![0.0f32; dim];
+
+        mean_vec_into(&xs, &mut eval_w);
+        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, &zs, &eval_w);
 
         while let Some(ev) = queue.pop() {
             if should_stop(&ctx.cfg.stop, k, ev.time, comm) {
@@ -118,19 +128,18 @@ impl ApiBcd {
             for zm in &zhat[i] {
                 axpy(tau, zm, &mut tzsum);
             }
-            let (x_new, wall) = if self.gradient_variant {
+            let wall = if self.gradient_variant {
                 // eq. (15) closed form.
-                let g = ctx.solver.grad(&ctx.shards[i], &xs[i])?;
+                let wall = ctx.solver.grad_into(&ctx.shards[i], &xs[i], &mut g_buf)?;
                 let rho = rhos[i];
                 let denom = rho + tau_m;
-                let mut w = vec![0.0f32; dim];
                 for j in 0..dim {
-                    w[j] = (rho * xs[i][j] + tzsum[j] - g.w[j]) / denom;
+                    x_new[j] = (rho * xs[i][j] + tzsum[j] - g_buf[j]) / denom;
                 }
-                (w, g.wall_secs)
+                wall
             } else {
-                let out = ctx.solver.prox(&ctx.shards[i], &xs[i], &tzsum, tau_m)?;
-                (out.w, out.wall_secs)
+                ctx.solver
+                    .prox_into(&ctx.shards[i], &xs[i], &tzsum, tau_m, &mut x_new)?
             };
             let compute = ctx.cfg.timing.duration(wall, &mut rng);
             let (start, end) = avail.serve(i, ev.time, compute);
@@ -141,7 +150,9 @@ impl ApiBcd {
             }
             zhat[i][m].copy_from_slice(&zs[m]);
             tracker.block_updated(i, &xs[i], &x_new);
-            xs[i] = x_new;
+            // Swap instead of assign: the displaced block becomes the next
+            // activation's output buffer.
+            std::mem::swap(&mut xs[i], &mut x_new);
             k += 1;
             events.push(WalkEvent {
                 k,
@@ -170,7 +181,8 @@ impl ApiBcd {
             queue.push(t_next, m, next);
 
             if recorder.due(k) {
-                recorder.record(ctx, k, end, comm, &mut tracker, &xs, &zs, &mean_vec(&xs));
+                mean_vec_into(&xs, &mut eval_w);
+                recorder.record(ctx, k, end, comm, &mut tracker, &xs, &zs, &eval_w);
             }
         }
         Ok((recorder.finish(), events))

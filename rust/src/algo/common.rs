@@ -132,14 +132,22 @@ pub fn should_stop(cfg: &crate::config::StopRule, k: u64, time: f64, comm: u64) 
     k >= cfg.max_activations || time >= cfg.max_sim_time || comm >= cfg.max_comm
 }
 
-/// Mean of a set of equal-length vectors.
-pub fn mean_vec(vs: &[Vec<f32>]) -> Vec<f32> {
+/// Mean of a set of equal-length vectors into a reused buffer (the hot
+/// loops evaluate this at recording cadence and must not allocate).
+pub fn mean_vec_into(vs: &[Vec<f32>], out: &mut Vec<f32>) {
     let dim = vs[0].len();
-    let mut out = vec![0.0f32; dim];
+    out.resize(dim, 0.0);
+    out.fill(0.0);
     for v in vs {
-        crate::linalg::axpy(1.0, v, &mut out);
+        crate::linalg::axpy(1.0, v, out);
     }
-    crate::linalg::scale(1.0 / vs.len() as f32, &mut out);
+    crate::linalg::scale(1.0 / vs.len() as f32, out);
+}
+
+/// Mean of a set of equal-length vectors (allocating convenience wrapper).
+pub fn mean_vec(vs: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::new();
+    mean_vec_into(vs, &mut out);
     out
 }
 

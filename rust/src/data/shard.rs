@@ -7,12 +7,22 @@
 
 use super::Dataset;
 use crate::model::Task;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide shard identity counter (see [`AgentData::uid`]).
+static NEXT_SHARD_UID: AtomicU64 = AtomicU64::new(1);
 
 /// One agent's padded local dataset, laid out exactly as the AOT artifact
 /// inputs expect (row-major `x`, flat `y`/`y_onehot`, 0/1 `mask`).
 #[derive(Debug, Clone)]
 pub struct AgentData {
     pub agent: usize,
+    /// Process-unique identity of this shard's *data* (clones share it —
+    /// their data is identical). Derived caches (the solvers' ‖X‖²_F
+    /// caches) key on this instead of `agent`, so a solver reused across
+    /// datasets or partitions never serves a stale entry for a same-index
+    /// shard with different data.
+    pub uid: u64,
     /// Padded row capacity `s` (multiple of BLOCK_ROWS).
     pub rows: usize,
     pub features: usize,
@@ -29,17 +39,17 @@ pub struct AgentData {
 }
 
 impl AgentData {
+    /// Allocate a fresh shard identity (monotonic, never reused — unlike a
+    /// data pointer, which a later allocation could recycle).
+    pub fn fresh_uid() -> u64 {
+        NEXT_SHARD_UID.fetch_add(1, Ordering::Relaxed)
+    }
+
     /// Frobenius-norm-squared of the active rows — used for the logistic
     /// step-size bound L̂ = ‖X‖²_F / (4 d).
     pub fn frob_sq(&self) -> f32 {
-        let mut acc = 0.0f64;
-        for r in 0..self.active {
-            for j in 0..self.features {
-                let v = self.x[r * self.features + j] as f64;
-                acc += v * v;
-            }
-        }
-        acc as f32
+        let active = &self.x[..self.active * self.features];
+        crate::linalg::dot(active, active)
     }
 }
 
@@ -105,6 +115,7 @@ impl Partition {
             }
             shards.push(AgentData {
                 agent: a,
+                uid: AgentData::fresh_uid(),
                 rows: capacity,
                 features: p,
                 classes: c,
@@ -186,6 +197,17 @@ mod tests {
         let contig = Partition::new(&ds, 4, PartitionKind::Contiguous).unwrap();
         assert_ne!(iid.shards[0].x, contig.shards[0].x);
         assert_eq!(contig.total_active(), iid.total_active());
+    }
+
+    #[test]
+    fn shard_uids_are_unique_across_partitions() {
+        let ds = dataset("test_ls");
+        let a = Partition::new(&ds, 2, PartitionKind::Iid).unwrap();
+        let b = Partition::new(&ds, 2, PartitionKind::Iid).unwrap();
+        let mut uids: Vec<u64> = a.shards.iter().chain(&b.shards).map(|s| s.uid).collect();
+        uids.sort_unstable();
+        uids.dedup();
+        assert_eq!(uids.len(), 4, "same-index shards must not share identity");
     }
 
     #[test]

@@ -7,6 +7,14 @@
 //! compute path goes through the [`SolverClient`] service (the PJRT engine
 //! is a serialized device resource, like a real accelerator queue).
 //!
+//! Shutdown is deterministic: the agent whose activation trips the stop
+//! rule broadcasts one [`AgentMsg::Stop`] to every inbox, so peers blocked
+//! in `recv` wake immediately instead of spinning on a timeout poll.
+//! Steady-state agents reallocate none of the model-sized vectors — the
+//! three solver buffers circulate through [`SolverClient::prox_buf`] and
+//! the displaced block becomes the next output buffer (the channel round
+//! trips still allocate their small queue nodes).
+//!
 //! Used by the `async_threads_demo` example and the validation test that
 //! checks the DES and the thread executor agree on convergence (same final
 //! metric band, different interleavings).
@@ -28,6 +36,12 @@ struct TokenMsg {
     walk: usize,
     z: Vec<f32>,
     cycle_pos: usize,
+}
+
+/// Agent inbox message: a serviced token, or the shutdown broadcast.
+enum AgentMsg {
+    Token(TokenMsg),
+    Stop,
 }
 
 /// Periodic metric sample sent to the coordinator thread. Carries the
@@ -94,7 +108,7 @@ pub fn run_api_bcd_threads(
     let mut senders = Vec::with_capacity(n);
     let mut receivers = Vec::with_capacity(n);
     for _ in 0..n {
-        let (tx, rx) = mpsc::channel::<TokenMsg>();
+        let (tx, rx) = mpsc::channel::<AgentMsg>();
         senders.push(tx);
         receivers.push(rx);
     }
@@ -129,11 +143,11 @@ pub fn run_api_bcd_threads(
                 (shared.cycle[pos], pos)
             };
             senders[start]
-                .send(TokenMsg {
+                .send(AgentMsg::Token(TokenMsg {
                     walk: m,
                     z: vec![0.0f32; dim],
                     cycle_pos: pos,
-                })
+                }))
                 .map_err(|_| anyhow::anyhow!("agent {start} died before start"))?;
         }
     }
@@ -175,9 +189,9 @@ pub fn run_api_bcd_threads(
 #[allow(clippy::too_many_arguments)]
 fn agent_loop(
     i: usize,
-    rx: mpsc::Receiver<TokenMsg>,
+    rx: mpsc::Receiver<AgentMsg>,
     shared: Arc<Shared>,
-    senders: Arc<Vec<mpsc::Sender<TokenMsg>>>,
+    senders: Arc<Vec<mpsc::Sender<AgentMsg>>>,
     shards: Arc<Vec<AgentData>>,
     solver: SolverClient,
     sample_tx: mpsc::Sender<Sample>,
@@ -187,18 +201,18 @@ fn agent_loop(
     let mut rng = Rng::new(seed);
     let mut x = vec![0.0f32; dim];
     let mut zhat = vec![vec![0.0f32; dim]; shared.walks];
-    let mut tzsum = vec![0.0f32; dim];
+    // The three solver buffers circulate through `prox_buf`; together with
+    // the x/out swap below, no model-sized vector is reallocated in steady
+    // state.
+    let mut w0_buf = vec![0.0f32; dim];
+    let mut tz_buf = vec![0.0f32; dim];
+    let mut out_buf = vec![0.0f32; dim];
 
     loop {
-        let mut msg = match rx.recv_timeout(Duration::from_millis(20)) {
-            Ok(m) => m,
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                if shared.stop.load(Ordering::Relaxed) {
-                    return Ok(());
-                }
-                continue;
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+        let mut msg = match rx.recv() {
+            Ok(AgentMsg::Token(t)) => t,
+            // Stop broadcast, or every sender gone: the walk ends.
+            Ok(AgentMsg::Stop) | Err(mpsc::RecvError) => return Ok(()),
         };
         if shared.stop.load(Ordering::Relaxed) {
             // Drain without forwarding: the token dies, the walk ends.
@@ -207,21 +221,37 @@ fn agent_loop(
 
         // Alg. 2 steps 3–6.
         zhat[msg.walk].copy_from_slice(&msg.z);
-        tzsum.fill(0.0);
+        tz_buf.fill(0.0);
         for zm in &zhat {
-            crate::linalg::axpy(shared.tau, zm, &mut tzsum);
+            crate::linalg::axpy(shared.tau, zm, &mut tz_buf);
         }
-        let out = solver.prox(i, x.clone(), tzsum.clone(), shared.tau_m)?;
+        w0_buf.copy_from_slice(&x);
+        let out = solver.prox_buf(
+            i,
+            std::mem::take(&mut w0_buf),
+            std::mem::take(&mut tz_buf),
+            shared.tau_m,
+            std::mem::take(&mut out_buf),
+        )?;
         let n = shards.len() as f32;
         for j in 0..dim {
             msg.z[j] += (out.w[j] - x[j]) / n;
         }
         zhat[msg.walk].copy_from_slice(&msg.z);
-        x = out.w;
+        // Recycle: the solver result becomes the new block, the displaced
+        // block becomes the next output buffer, and the request buffers
+        // return to the pool.
+        out_buf = std::mem::replace(&mut x, out.w);
+        w0_buf = out.w0;
+        tz_buf = out.tzsum;
 
         let k = shared.activations.fetch_add(1, Ordering::Relaxed) + 1;
-        if k >= shared.max_activations {
-            shared.stop.store(true, Ordering::Relaxed);
+        if k >= shared.max_activations && !shared.stop.swap(true, Ordering::Relaxed) {
+            // First agent to trip the stop rule wakes everyone: peers
+            // blocked in recv exit on Stop instead of a timeout poll.
+            for tx in senders.iter() {
+                let _ = tx.send(AgentMsg::Stop);
+            }
         }
 
         // Route + emulate the link.
@@ -253,7 +283,7 @@ fn agent_loop(
         if shared.stop.load(Ordering::Relaxed) {
             return Ok(()); // token retires
         }
-        if senders[next].send(msg).is_err() {
+        if senders[next].send(AgentMsg::Token(msg)).is_err() {
             return Ok(());
         }
     }

@@ -7,8 +7,10 @@
 //! not a BLAS.
 
 pub mod ops;
+pub mod workspace;
 
 pub use ops::*;
+pub use workspace::Workspace;
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -62,19 +64,14 @@ impl Mat {
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        for i in 0..self.rows {
-            y[i] = dot(self.row(i), x);
-        }
+        gemv(&self.data, self.rows, self.cols, x, y);
     }
 
     /// y = Aᵀ x.
     pub fn tmatvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
         assert_eq!(y.len(), self.cols);
-        y.fill(0.0);
-        for i in 0..self.rows {
-            axpy(x[i], self.row(i), y);
-        }
+        gemv_t(&self.data, self.rows, self.cols, x, y);
     }
 
     /// C = AᵀA (Gram matrix), with per-row weights: C = Aᵀ diag(w) A.

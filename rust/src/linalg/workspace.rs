@@ -1,0 +1,70 @@
+//! Reusable scratch buffers for the per-activation compute path.
+//!
+//! Every activation of the native prox/grad path needs the same handful of
+//! temporaries (a residual-sized row buffer, CG vectors, a gradient, a
+//! logits row). Allocating them per call put 4–6 heap allocations on the
+//! hottest loop in the system; a [`Workspace`] owned by the solver (or the
+//! algorithm driver) amortizes them to zero in steady state — buffers are
+//! `resize`d once to their high-water mark and reused thereafter.
+//!
+//! The fields are deliberately public named buffers (not a pool keyed by
+//! size): callers split-borrow the ones they need simultaneously, which the
+//! borrow checker can verify field-by-field.
+
+/// Scratch buffers reused across activations. All start empty; users call
+/// [`Workspace::resized`] (or `resize` directly) before use — after the
+/// first activation these are no-ops.
+#[derive(Debug, Clone, Default)]
+pub struct Workspace {
+    /// Residual-sized buffer (shard rows s): predictions / weighted rows.
+    pub rows: Vec<f32>,
+    /// Right-hand side of the LS normal system (p).
+    pub b: Vec<f32>,
+    /// Normal-operator output (p).
+    pub q: Vec<f32>,
+    /// CG residual (p).
+    pub r: Vec<f32>,
+    /// CG search direction (p).
+    pub dir: Vec<f32>,
+    /// Loss gradient (p·c).
+    pub grad: Vec<f32>,
+    /// Per-sample logits row (c).
+    pub logits: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Resize `buf` to `len` (zero-filling growth) and return it as a slice.
+    /// Steady-state this never allocates: capacity only ratchets up.
+    #[inline]
+    pub fn resized(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+        buf.resize(len, 0.0);
+        &mut buf[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_keep_capacity_across_shrink() {
+        let mut ws = Workspace::new();
+        Workspace::resized(&mut ws.grad, 128);
+        let cap = ws.grad.capacity();
+        Workspace::resized(&mut ws.grad, 16);
+        Workspace::resized(&mut ws.grad, 128);
+        assert!(ws.grad.capacity() >= cap, "capacity must only ratchet up");
+        assert_eq!(ws.grad.len(), 128);
+    }
+
+    #[test]
+    fn resized_zero_fills_growth() {
+        let mut v = vec![1.0f32; 4];
+        let s = Workspace::resized(&mut v, 8);
+        assert_eq!(&s[4..], &[0.0; 4]);
+    }
+}

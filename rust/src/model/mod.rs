@@ -114,21 +114,20 @@ impl Problem {
     pub fn accuracy_multiclass(&self, w: &[f32], c: usize) -> f64 {
         assert_eq!(w.len(), self.features * c);
         let p = self.features;
+        // One logits buffer per evaluation (not per row); the per-row
+        // product runs over w's contiguous c-length rows via gemv_t instead
+        // of the strided w[j*c+k] walk.
+        let mut logits = vec![0.0f32; c];
         let mut correct = 0usize;
-        for i in 0..self.n_test {
-            let row = &self.x_test[i * p..(i + 1) * p];
-            // logits_k = row · w[:, k]  (w stored row-major p×c)
+        for (row, &y) in self.x_test.chunks_exact(p).zip(&self.y_test) {
+            linalg::gemv_t(w, p, c, row, &mut logits);
             let mut best = (0usize, f32::NEG_INFINITY);
-            for k in 0..c {
-                let mut z = 0.0f32;
-                for j in 0..p {
-                    z += row[j] * w[j * c + k];
-                }
+            for (k, &z) in logits.iter().enumerate() {
                 if z > best.1 {
                     best = (k, z);
                 }
             }
-            if best.0 == self.y_test[i] as usize {
+            if best.0 == y as usize {
                 correct += 1;
             }
         }
@@ -175,13 +174,8 @@ pub fn smax_loss(shard: &AgentData, w: &[f32]) -> f64 {
     let mut logits = vec![0.0f32; c];
     for r in 0..shard.active {
         let row = &shard.x[r * p..(r + 1) * p];
-        for k in 0..c {
-            let mut z = 0.0f32;
-            for j in 0..p {
-                z += row[j] * w[j * c + k];
-            }
-            logits[k] = z;
-        }
+        // logits = Wᵀ row over W's contiguous c-length rows.
+        linalg::gemv_t(w, p, c, row, &mut logits);
         let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let lse: f32 = logits.iter().map(|&z| (z - max).exp()).sum::<f32>().ln() + max;
         let k_true = shard.y[r] as usize;
@@ -222,6 +216,9 @@ pub struct ObjectiveTracker {
     sum_x_sq: f64,
     loss_sum_valid: bool,
     loss_sum: f64,
+    /// Reused Σ_m z_m scratch — [`ObjectiveTracker::objective`] runs on the
+    /// recording path of every algorithm's hot loop and must not allocate.
+    scratch_sum_z: Vec<f64>,
 }
 
 impl ObjectiveTracker {
@@ -235,6 +232,7 @@ impl ObjectiveTracker {
             sum_x_sq: 0.0,
             loss_sum_valid: false,
             loss_sum: 0.0,
+            scratch_sum_z: vec![0.0; dim],
         }
     }
 
@@ -273,16 +271,18 @@ impl ObjectiveTracker {
         let mut cross = 0.0f64;
         let mut z_sq = 0.0f64;
         let dim = self.sum_x.len();
-        let mut sum_z = vec![0.0f64; dim];
+        let sum_z = &mut self.scratch_sum_z;
+        sum_z.resize(dim, 0.0);
+        sum_z.fill(0.0);
         for z in zs {
-            for j in 0..dim {
-                let zj = z[j] as f64;
-                sum_z[j] += zj;
+            for (sj, &zf) in sum_z.iter_mut().zip(&z[..dim]) {
+                let zj = zf as f64;
+                *sj += zj;
                 z_sq += zj * zj;
             }
         }
-        for j in 0..dim {
-            cross += self.sum_x[j] * sum_z[j];
+        for (&sx, &sz) in self.sum_x.iter().zip(&*sum_z) {
+            cross += sx * sz;
         }
         let pen = m * self.sum_x_sq - 2.0 * cross + n * z_sq;
         self.loss_sum + 0.5 * tau * pen

@@ -19,7 +19,7 @@ pub mod service;
 
 pub use native::NativeSolver;
 pub use pjrt::PjrtSolver;
-pub use service::{SolverClient, SolverService};
+pub use service::{ProxBufOut, SolverClient, SolverService};
 
 use crate::data::AgentData;
 use crate::model::Task;
@@ -48,6 +48,40 @@ pub trait LocalSolver {
 
     /// Mean-loss gradient `∇f_i(w)` (WPG eq. (19), gAPI-BCD eq. (15), DGD).
     fn grad(&mut self, shard: &AgentData, w: &[f32]) -> anyhow::Result<SolveOut>;
+
+    /// Allocation-free variant of [`LocalSolver::prox`]: overwrites `out`
+    /// (resizing it to the model dimension) with the updated block and
+    /// returns the measured compute wall-clock. Steady-state hot loops pass
+    /// a reused buffer so no per-activation allocation happens. Solvers
+    /// with internal scratch (the native solver) override this; the default
+    /// delegates to `prox` and copies.
+    fn prox_into(
+        &mut self,
+        shard: &AgentData,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<f64> {
+        let o = self.prox(shard, w0, tzsum, tau_m)?;
+        out.clear();
+        out.extend_from_slice(&o.w);
+        Ok(o.wall_secs)
+    }
+
+    /// Allocation-free variant of [`LocalSolver::grad`]; same contract as
+    /// [`LocalSolver::prox_into`].
+    fn grad_into(
+        &mut self,
+        shard: &AgentData,
+        w: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<f64> {
+        let o = self.grad(shard, w)?;
+        out.clear();
+        out.extend_from_slice(&o.w);
+        Ok(o.wall_secs)
+    }
 
     fn task(&self) -> Task;
 

@@ -1,10 +1,18 @@
 //! Pure-rust local solver — the same math as the AOT artifacts
 //! (`python/compile/model.py`), kept in lock-step so the integration tests
 //! can assert PJRT ≈ native to float tolerance.
+//!
+//! Hot-path structure (EXPERIMENTS.md §Perf): every per-row product goes
+//! through the blocked [`crate::linalg`] kernels over *contiguous* memory —
+//! `gemv`/`gemv_t` over the shard's row-major X, and for multiclass over
+//! the row-major (p × c) weight matrix, so the old strided `w[j*c+k]` inner
+//! loops are gone — and every temporary lives in a reused
+//! [`Workspace`], so a steady-state `prox_into`/`grad_into` call performs
+//! zero heap allocations.
 
 use super::{prox_step_size, LocalSolver, SolveOut};
 use crate::data::AgentData;
-use crate::linalg::{axpy, dot};
+use crate::linalg::{axpy_scale, dot, gemv, gemv_t, ger, sigmoid, softmax_inplace, Workspace};
 use crate::model::Task;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -14,10 +22,13 @@ pub struct NativeSolver {
     /// Inner iterations (CG steps for LS, gradient steps otherwise) —
     /// matches the K baked into the artifacts.
     pub inner_k: usize,
-    /// Per-agent ‖X‖²_F cache (step-size bound input).
-    frob_cache: HashMap<usize, f32>,
-    /// Reused scratch (residual-sized) to keep the hot loop allocation-free.
-    scratch_rows: Vec<f32>,
+    /// ‖X‖²_F cache (step-size bound input), keyed by [`AgentData::uid`] —
+    /// shard *identity*, not agent index, so a solver reused across
+    /// datasets/partitions never sees a stale entry.
+    frob_cache: HashMap<u64, f32>,
+    /// Reused scratch buffers — the per-activation zero-allocation
+    /// guarantee.
+    ws: Workspace,
 }
 
 impl NativeSolver {
@@ -26,110 +37,122 @@ impl NativeSolver {
             task,
             inner_k,
             frob_cache: HashMap::new(),
-            scratch_rows: Vec::new(),
+            ws: Workspace::new(),
         }
     }
 
     fn frob_sq(&mut self, shard: &AgentData) -> f32 {
         *self
             .frob_cache
-            .entry(shard.agent)
+            .entry(shard.uid)
             .or_insert_with(|| shard.frob_sq())
     }
 
-    /// q = XᵀD X v / d + tau_m·v over the active rows.
-    fn normal_op(&mut self, shard: &AgentData, v: &[f32], tau_m: f32, q: &mut [f32]) {
+    /// q = XᵀX v / d + tau_m·v over the active rows (free function so the
+    /// CG loop can split-borrow the workspace it runs in).
+    fn normal_op(shard: &AgentData, v: &[f32], tau_m: f32, q: &mut [f32], rows: &mut Vec<f32>) {
         let p = shard.features;
-        let d = shard.active.max(1) as f32;
-        self.scratch_rows.resize(shard.active, 0.0);
-        for r in 0..shard.active {
-            self.scratch_rows[r] = dot(&shard.x[r * p..(r + 1) * p], v);
-        }
-        q.fill(0.0);
-        for r in 0..shard.active {
-            axpy(self.scratch_rows[r], &shard.x[r * p..(r + 1) * p], q);
-        }
-        for j in 0..p {
-            q[j] = q[j] / d + tau_m * v[j];
+        let a = shard.active;
+        let d = a.max(1) as f32;
+        let x = &shard.x[..a * p];
+        Workspace::resized(rows, a);
+        gemv(x, a, p, v, rows);
+        gemv_t(x, a, p, rows, q);
+        for (qj, &vj) in q.iter_mut().zip(v) {
+            *qj = *qj / d + tau_m * vj;
         }
     }
 
     /// LS prox via `inner_k` CG iterations on
     /// [(1/d)XᵀDX + τM·I] w = (1/d)XᵀDy + tzsum (mirrors ls_prox_update).
-    fn ls_prox(&mut self, shard: &AgentData, w0: &[f32], tzsum: &[f32], tau_m: f32) -> Vec<f32> {
+    fn ls_prox_into(
+        &mut self,
+        shard: &AgentData,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+        out: &mut Vec<f32>,
+    ) {
         let p = shard.features;
-        let d = shard.active.max(1) as f32;
-        // b = (1/d) XᵀDy + tzsum
-        let mut b = vec![0.0f32; p];
-        for r in 0..shard.active {
-            axpy(shard.y[r], &shard.x[r * p..(r + 1) * p], &mut b);
+        let a = shard.active;
+        let d = a.max(1) as f32;
+        let x = &shard.x[..a * p];
+        let Workspace { rows, b, q, r, dir, .. } = &mut self.ws;
+        Workspace::resized(b, p);
+        Workspace::resized(q, p);
+        Workspace::resized(r, p);
+        Workspace::resized(dir, p);
+
+        // b = (1/d) XᵀDy + tzsum (active rows only; the mask is the row
+        // prefix by construction).
+        gemv_t(x, a, p, &shard.y[..a], b);
+        for (bj, &tz) in b.iter_mut().zip(tzsum) {
+            *bj = *bj / d + tz;
         }
-        for j in 0..p {
-            b[j] = b[j] / d + tzsum[j];
+
+        out.clear();
+        out.extend_from_slice(w0);
+        Self::normal_op(shard, out, tau_m, q, rows);
+        for ((rj, &bj), &qj) in r.iter_mut().zip(&*b).zip(&*q) {
+            *rj = bj - qj;
         }
-        let mut w = w0.to_vec();
-        let mut q = vec![0.0f32; p];
-        self.normal_op(shard, &w, tau_m, &mut q);
-        let mut r: Vec<f32> = b.iter().zip(&q).map(|(bi, qi)| bi - qi).collect();
-        let mut p_dir = r.clone();
-        let mut rs = dot(&r, &r);
+        dir.copy_from_slice(r);
+        let mut rs = dot(r, r);
         for _ in 0..self.inner_k {
-            self.normal_op(shard, &p_dir, tau_m, &mut q);
-            let denom = dot(&p_dir, &q);
+            Self::normal_op(shard, dir, tau_m, q, rows);
+            let denom = dot(dir, q);
             let alpha = if denom > 1e-30 { rs / denom.max(1e-30) } else { 0.0 };
-            axpy(alpha, &p_dir, &mut w);
-            axpy(-alpha, &q, &mut r);
-            let rs_new = dot(&r, &r);
+            crate::linalg::axpy(alpha, dir, out);
+            crate::linalg::axpy(-alpha, q, r);
+            let rs_new = dot(r, r);
             let beta = if rs > 1e-30 { rs_new / rs.max(1e-30) } else { 0.0 };
-            for j in 0..p {
-                p_dir[j] = r[j] + beta * p_dir[j];
-            }
+            axpy_scale(1.0, r, beta, dir); // dir = r + β·dir
             rs = rs_new;
         }
-        w
     }
 
-    /// Raw mean-loss gradient into `g` (length p·c).
-    fn loss_grad(&mut self, shard: &AgentData, w: &[f32], g: &mut [f32]) {
+    /// Raw mean-loss gradient into `g` (length p·c). Two blocked passes
+    /// over X (predict, then accumulate) instead of interleaved per-row
+    /// dot/axpy; multiclass runs entirely over contiguous c-length rows.
+    fn loss_grad_into(&mut self, shard: &AgentData, w: &[f32], g: &mut [f32]) {
         let p = shard.features;
         let c = shard.classes;
-        let d = shard.active.max(1) as f32;
-        g.fill(0.0);
+        let a = shard.active;
+        let d = a.max(1) as f32;
+        let x = &shard.x[..a * p];
         match self.task {
             Task::Regression => {
-                for r in 0..shard.active {
-                    let row = &shard.x[r * p..(r + 1) * p];
-                    let e = dot(row, w) - shard.y[r];
-                    axpy(e, row, g);
+                let rows = &mut self.ws.rows;
+                Workspace::resized(rows, a);
+                gemv(x, a, p, w, rows); // e = X w
+                for (e, &y) in rows.iter_mut().zip(&shard.y[..a]) {
+                    *e -= y; // e = X w − y
                 }
+                gemv_t(x, a, p, rows, g); // g = Xᵀ e (zero-fills g)
             }
             Task::Binary => {
-                for r in 0..shard.active {
-                    let row = &shard.x[r * p..(r + 1) * p];
-                    let e = crate::linalg::sigmoid(dot(row, w)) - shard.y[r];
-                    axpy(e, row, g);
+                let rows = &mut self.ws.rows;
+                Workspace::resized(rows, a);
+                gemv(x, a, p, w, rows);
+                for (e, &y) in rows.iter_mut().zip(&shard.y[..a]) {
+                    *e = sigmoid(*e) - y;
                 }
+                gemv_t(x, a, p, rows, g);
             }
             Task::Multiclass(_) => {
-                let mut logits = vec![0.0f32; c];
-                for r in 0..shard.active {
-                    let row = &shard.x[r * p..(r + 1) * p];
-                    for k in 0..c {
-                        let mut z = 0.0f32;
-                        for j in 0..p {
-                            z += row[j] * w[j * c + k];
-                        }
-                        logits[k] = z;
+                let logits = &mut self.ws.logits;
+                Workspace::resized(logits, c);
+                g.fill(0.0);
+                for r in 0..a {
+                    let row = &x[r * p..(r + 1) * p];
+                    // logits = Wᵀ row over W's contiguous (c-length) rows.
+                    gemv_t(w, p, c, row, logits);
+                    softmax_inplace(logits);
+                    let onehot = &shard.y_onehot[r * c..(r + 1) * c];
+                    for (l, &t) in logits.iter_mut().zip(onehot) {
+                        *l -= t; // e = softmax(logits) − y
                     }
-                    crate::linalg::softmax_inplace(&mut logits);
-                    for k in 0..c {
-                        let e = logits[k] - shard.y_onehot[r * c + k];
-                        if e != 0.0 {
-                            for j in 0..p {
-                                g[j * c + k] += e * row[j];
-                            }
-                        }
-                    }
+                    ger(row, logits, g); // G += row ⊗ e
                 }
             }
         }
@@ -140,19 +163,30 @@ impl NativeSolver {
 
     /// K-step proximal gradient for the non-quadratic losses
     /// (mirrors logit_prox_update / smax_prox_update).
-    fn gd_prox(&mut self, shard: &AgentData, w0: &[f32], tzsum: &[f32], tau_m: f32) -> Vec<f32> {
+    fn gd_prox_into(
+        &mut self,
+        shard: &AgentData,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+        out: &mut Vec<f32>,
+    ) {
         let frob = self.frob_sq(shard);
         let step = prox_step_size(self.task, frob, shard.active, tau_m);
-        let mut w = w0.to_vec();
-        let mut g = vec![0.0f32; w.len()];
+        out.clear();
+        out.extend_from_slice(w0);
+        // Take the gradient buffer out of the workspace so `loss_grad_into`
+        // (which borrows the workspace's other buffers) can run against it.
+        let mut g = std::mem::take(&mut self.ws.grad);
+        g.resize(w0.len(), 0.0);
         for _ in 0..self.inner_k {
-            self.loss_grad(shard, &w, &mut g);
-            for j in 0..w.len() {
-                g[j] += tau_m * w[j] - tzsum[j];
-                w[j] -= step * g[j];
+            self.loss_grad_into(shard, out, &mut g);
+            // Fused subproblem step: w ← w − step·(∇f + τM·w − tzsum).
+            for ((wj, &gj), &tz) in out.iter_mut().zip(&g).zip(tzsum) {
+                *wj -= step * (gj + tau_m * *wj - tz);
             }
         }
-        w
+        self.ws.grad = g;
     }
 }
 
@@ -164,25 +198,43 @@ impl LocalSolver for NativeSolver {
         tzsum: &[f32],
         tau_m: f32,
     ) -> anyhow::Result<SolveOut> {
-        let t0 = Instant::now();
-        let w = match self.task {
-            Task::Regression => self.ls_prox(shard, w0, tzsum, tau_m),
-            _ => self.gd_prox(shard, w0, tzsum, tau_m),
-        };
-        Ok(SolveOut {
-            w,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        })
+        let mut w = Vec::with_capacity(w0.len());
+        let wall_secs = self.prox_into(shard, w0, tzsum, tau_m, &mut w)?;
+        Ok(SolveOut { w, wall_secs })
     }
 
     fn grad(&mut self, shard: &AgentData, w: &[f32]) -> anyhow::Result<SolveOut> {
+        let mut g = Vec::with_capacity(w.len());
+        let wall_secs = self.grad_into(shard, w, &mut g)?;
+        Ok(SolveOut { w: g, wall_secs })
+    }
+
+    fn prox_into(
+        &mut self,
+        shard: &AgentData,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<f64> {
         let t0 = Instant::now();
-        let mut g = vec![0.0f32; w.len()];
-        self.loss_grad(shard, w, &mut g);
-        Ok(SolveOut {
-            w: g,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        })
+        match self.task {
+            Task::Regression => self.ls_prox_into(shard, w0, tzsum, tau_m, out),
+            _ => self.gd_prox_into(shard, w0, tzsum, tau_m, out),
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn grad_into(
+        &mut self,
+        shard: &AgentData,
+        w: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<f64> {
+        let t0 = Instant::now();
+        out.resize(w.len(), 0.0);
+        self.loss_grad_into(shard, w, out);
+        Ok(t0.elapsed().as_secs_f64())
     }
 
     fn task(&self) -> Task {
@@ -198,7 +250,7 @@ impl LocalSolver for NativeSolver {
 mod tests {
     use super::*;
     use crate::data::{shard::PartitionKind, Dataset, DatasetProfile, Partition};
-    use crate::linalg::{cholesky_solve, Mat};
+    use crate::linalg::{axpy, cholesky_solve, Mat};
 
     fn shard(name: &str) -> AgentData {
         let ds =
@@ -303,5 +355,60 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn prox_into_reuses_buffer_and_matches_prox() {
+        let s = shard("test_smax");
+        let dim = s.features * s.classes;
+        let w0 = vec![0.1f32; dim];
+        let tz = vec![0.05f32; dim];
+        let mut a = NativeSolver::new(Task::Multiclass(3), 5);
+        let mut b = NativeSolver::new(Task::Multiclass(3), 5);
+        let want = a.prox(&s, &w0, &tz, 1.0).unwrap().w;
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            // repeated calls reuse `out` and the internal workspace
+            b.prox_into(&s, &w0, &tz, 1.0, &mut out).unwrap();
+            assert_eq!(out, want);
+        }
+        let cap = out.capacity();
+        b.prox_into(&s, &w0, &tz, 1.0, &mut out).unwrap();
+        assert_eq!(out.capacity(), cap, "steady-state call must not realloc");
+    }
+
+    #[test]
+    fn frob_cache_keyed_by_shard_identity() {
+        // Regression test: the cache used to be keyed by `shard.agent`
+        // only, so a solver reused across partitions returned a stale
+        // ‖X‖²_F (wrong prox step size). Shards from different partitions
+        // share agent index 0 but have different data.
+        let ds = Dataset::load(
+            DatasetProfile::by_name("test_logit").unwrap(),
+            "/nonexistent",
+            3,
+        )
+        .unwrap();
+        let big = Partition::new(&ds, 1, PartitionKind::Iid)
+            .unwrap()
+            .shards
+            .remove(0);
+        let small = Partition::new(&ds, 2, PartitionKind::Iid)
+            .unwrap()
+            .shards
+            .remove(0);
+        assert_eq!(big.agent, small.agent);
+        assert_ne!(big.uid, small.uid);
+        assert!((big.frob_sq() - small.frob_sq()).abs() > 1e-3);
+
+        let dim = big.features;
+        let w0 = vec![0.1f32; dim];
+        let tz = vec![0.05f32; dim];
+        let mut reused = NativeSolver::new(Task::Binary, 5);
+        let _ = reused.prox(&big, &w0, &tz, 1.0).unwrap(); // caches big's frob
+        let got = reused.prox(&small, &w0, &tz, 1.0).unwrap().w;
+        let mut fresh = NativeSolver::new(Task::Binary, 5);
+        let want = fresh.prox(&small, &w0, &tz, 1.0).unwrap().w;
+        assert_eq!(got, want, "reused solver must not apply big's step size");
     }
 }

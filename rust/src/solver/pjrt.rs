@@ -17,9 +17,13 @@ pub struct PjrtSolver {
     task: Task,
     prox_name: String,
     grad_name: String,
-    frob_cache: HashMap<usize, f32>,
-    /// Agents whose constant tensors are already on device.
-    uploaded: std::collections::HashSet<usize>,
+    /// ‖X‖²_F cache keyed by [`AgentData::uid`] (shard identity, not agent
+    /// index — same staleness guard as the native solver).
+    frob_cache: HashMap<u64, f32>,
+    /// Shards (by [`AgentData::uid`]) whose constant tensors are already on
+    /// device — identity-keyed like `frob_cache`, so reuse across
+    /// partitions never serves another shard's x/y/mask buffers.
+    uploaded: std::collections::HashSet<u64>,
     pub inner_k: usize,
     /// Reuse per-agent device buffers for the constant tensors (x, y,
     /// mask). On by default; disable to measure the upload cost it saves
@@ -68,35 +72,36 @@ impl PjrtSolver {
     }
 
     fn ensure_uploaded(&mut self, shard: &AgentData) -> anyhow::Result<()> {
-        if self.uploaded.contains(&shard.agent) {
+        if self.uploaded.contains(&shard.uid) {
             return Ok(());
         }
         let s = shard.rows;
         let p = shard.features;
         let c = shard.classes;
+        let key = shard.uid as usize;
         self.engine.cache_buffer(
-            CacheKey { agent: shard.agent, slot: 0 },
+            CacheKey { agent: key, slot: 0 },
             &shard.x,
             &[s, p],
         )?;
         match self.task {
             Task::Multiclass(_) => self.engine.cache_buffer(
-                CacheKey { agent: shard.agent, slot: 1 },
+                CacheKey { agent: key, slot: 1 },
                 &shard.y_onehot,
                 &[s, c],
             )?,
             _ => self.engine.cache_buffer(
-                CacheKey { agent: shard.agent, slot: 1 },
+                CacheKey { agent: key, slot: 1 },
                 &shard.y,
                 &[s],
             )?,
         }
         self.engine.cache_buffer(
-            CacheKey { agent: shard.agent, slot: 2 },
+            CacheKey { agent: key, slot: 2 },
             &shard.mask,
             &[s],
         )?;
-        self.uploaded.insert(shard.agent);
+        self.uploaded.insert(shard.uid);
         Ok(())
     }
 
@@ -130,10 +135,11 @@ impl PjrtSolver {
         dims_yoh: &'a [usize; 2],
     ) -> [Arg<'a>; 3] {
         if self.cache_inputs {
+            let key = shard.uid as usize;
             [
-                Arg::Cached(CacheKey { agent: shard.agent, slot: 0 }),
-                Arg::Cached(CacheKey { agent: shard.agent, slot: 1 }),
-                Arg::Cached(CacheKey { agent: shard.agent, slot: 2 }),
+                Arg::Cached(CacheKey { agent: key, slot: 0 }),
+                Arg::Cached(CacheKey { agent: key, slot: 1 }),
+                Arg::Cached(CacheKey { agent: key, slot: 2 }),
             ]
         } else {
             let y_arg = match self.task {
@@ -182,7 +188,7 @@ impl LocalSolver for PjrtSolver {
             _ => {
                 let frob = *self
                     .frob_cache
-                    .entry(shard.agent)
+                    .entry(shard.uid)
                     .or_insert_with(|| shard.frob_sq());
                 let step_arg =
                     self.scalar_arg(prox_step_size(self.task, frob, shard.active, tau_m))?;

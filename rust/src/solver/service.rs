@@ -21,6 +21,18 @@ enum Op {
         tzsum: Vec<f32>,
         tau_m: f32,
     },
+    /// Buffer-recycling prox: the service computes into `out` (via the
+    /// solver's `prox_into`) and hands every buffer back in the reply, so
+    /// none of the three model-sized vectors is reallocated per call (the
+    /// mpsc round trip itself still allocates its small reply-channel
+    /// nodes).
+    ProxBuf {
+        agent: usize,
+        w0: Vec<f32>,
+        tzsum: Vec<f32>,
+        tau_m: f32,
+        out: Vec<f32>,
+    },
     Grad {
         agent: usize,
         w: Vec<f32>,
@@ -28,9 +40,23 @@ enum Op {
     Shutdown,
 }
 
+enum Reply {
+    Out(mpsc::Sender<anyhow::Result<SolveOut>>),
+    Buf(mpsc::Sender<anyhow::Result<ProxBufOut>>),
+}
+
 struct Request {
     op: Op,
-    reply: mpsc::Sender<anyhow::Result<SolveOut>>,
+    reply: Reply,
+}
+
+/// Result of [`SolverClient::prox_buf`]: the updated block in `w` plus the
+/// caller's request buffers handed back for reuse.
+pub struct ProxBufOut {
+    pub w: Vec<f32>,
+    pub wall_secs: f64,
+    pub w0: Vec<f32>,
+    pub tzsum: Vec<f32>,
 }
 
 /// Cloneable handle agents use to submit local updates.
@@ -51,7 +77,28 @@ impl SolverClient {
         self.tx
             .send(Request {
                 op: Op::Prox { agent, w0, tzsum, tau_m },
-                reply,
+                reply: Reply::Out(reply),
+            })
+            .map_err(|_| anyhow::anyhow!("solver service is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("solver service dropped the reply"))?
+    }
+
+    /// Buffer-recycling prox (see [`Op::ProxBuf`]): pass owned buffers, get
+    /// all of them back. `out` is overwritten with the updated block.
+    pub fn prox_buf(
+        &self,
+        agent: usize,
+        w0: Vec<f32>,
+        tzsum: Vec<f32>,
+        tau_m: f32,
+        out: Vec<f32>,
+    ) -> anyhow::Result<ProxBufOut> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                op: Op::ProxBuf { agent, w0, tzsum, tau_m, out },
+                reply: Reply::Buf(reply),
             })
             .map_err(|_| anyhow::anyhow!("solver service is down"))?;
         rx.recv()
@@ -63,7 +110,7 @@ impl SolverClient {
         self.tx
             .send(Request {
                 op: Op::Grad { agent, w },
-                reply,
+                reply: Reply::Out(reply),
             })
             .map_err(|_| anyhow::anyhow!("solver service is down"))?;
         rx.recv()
@@ -102,16 +149,33 @@ impl SolverService {
                     }
                 };
                 while let Ok(req) = rx.recv() {
-                    match req.op {
-                        Op::Prox { agent, w0, tzsum, tau_m } => {
+                    match (req.op, req.reply) {
+                        (Op::Prox { agent, w0, tzsum, tau_m }, Reply::Out(reply)) => {
                             let out = solver.prox(&shards[agent], &w0, &tzsum, tau_m);
-                            let _ = req.reply.send(out);
+                            let _ = reply.send(out);
                         }
-                        Op::Grad { agent, w } => {
+                        (
+                            Op::ProxBuf { agent, w0, tzsum, tau_m, mut out },
+                            Reply::Buf(reply),
+                        ) => {
+                            let wall = solver
+                                .prox_into(&shards[agent], &w0, &tzsum, tau_m, &mut out);
+                            let res = wall.map(|wall_secs| ProxBufOut {
+                                w: out,
+                                wall_secs,
+                                w0,
+                                tzsum,
+                            });
+                            let _ = reply.send(res);
+                        }
+                        (Op::Grad { agent, w }, Reply::Out(reply)) => {
                             let out = solver.grad(&shards[agent], &w);
-                            let _ = req.reply.send(out);
+                            let _ = reply.send(out);
                         }
-                        Op::Shutdown => break,
+                        (Op::Shutdown, _) => break,
+                        // Op/reply pairs are constructed together in
+                        // SolverClient; a mismatch is unreachable.
+                        _ => break,
                     }
                 }
             })?;
@@ -134,7 +198,10 @@ impl SolverService {
 
     fn stop(&mut self) {
         let (reply, _rx) = mpsc::channel();
-        let _ = self.tx.send(Request { op: Op::Shutdown, reply });
+        let _ = self.tx.send(Request {
+            op: Op::Shutdown,
+            reply: Reply::Out(reply),
+        });
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -179,6 +246,27 @@ mod tests {
         let mut direct = NativeSolver::new(Task::Regression, 5);
         let want = direct.prox(&shards[0], &vec![0.0; p], &vec![0.1; p], 1.0).unwrap();
         assert_eq!(got.w, want.w);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn prox_buf_recycles_buffers_and_matches_prox() {
+        let shards = shards();
+        let svc = SolverService::spawn(
+            || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
+            shards.clone(),
+        )
+        .unwrap();
+        let client = svc.client();
+        let p = shards[0].features;
+        let want = client.prox(0, vec![0.0; p], vec![0.1; p], 1.0).unwrap();
+        let got = client
+            .prox_buf(0, vec![0.0; p], vec![0.1; p], 1.0, Vec::new())
+            .unwrap();
+        assert_eq!(got.w, want.w);
+        // the request buffers come back for reuse
+        assert_eq!(got.w0, vec![0.0; p]);
+        assert_eq!(got.tzsum, vec![0.1; p]);
         svc.shutdown();
     }
 

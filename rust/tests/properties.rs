@@ -11,6 +11,10 @@
 //!   sequences (eq. 8);
 //! * theory: the Theorem 1 descent inequality for exact prox steps on
 //!   random convex LS problems;
+//! * linalg kernels: the blocked/multi-accumulator `dot`/`axpy`/
+//!   `axpy_scale`/`dist2` and `gemv`/`gemv_t`/`ger` agree with scalar f64
+//!   references over arbitrary lengths (including sub-lane/sub-block
+//!   tails);
 //! * serialization: JSON writer/parser round trip on random documents.
 
 use apibcd::config::RoutingRule;
@@ -339,6 +343,137 @@ fn prop_theorem1_descent_holds() {
                     "descent violated: Δ={} bound={bound}",
                     f_new - f_old
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_kernels_match_scalar_reference() {
+    // The chunked multi-accumulator kernels must agree with a plain f64
+    // scalar reference to 1e-5 relative tolerance, for every length
+    // including the sub-lane (<8) and sub-block (<128) tails.
+    use apibcd::linalg::{axpy_scale, dot};
+    run_prop(
+        "blocked kernels ≈ scalar reference",
+        cfg(80, 1616),
+        |r| {
+            let n = r.below(300); // covers 0, <lane, <block, >block
+            let a: Vec<f32> = (0..n).map(|_| r.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| r.normal_f32()).collect();
+            let alpha = r.normal_f32();
+            let beta = r.normal_f32();
+            (a, b, alpha, beta)
+        },
+        |(a, b, alpha, beta)| {
+            // dot: |got − Σ aᵢbᵢ| ≤ 1e-5·(1 + Σ|aᵢbᵢ|)
+            let want: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let mag: f64 = a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| (x as f64 * y as f64).abs())
+                .sum();
+            let got = dot(a, b) as f64;
+            if (got - want).abs() > 1e-5 * (1.0 + mag) {
+                return Err(format!("dot {got} vs {want} (n={})", a.len()));
+            }
+            // dist2: magnitude equals the (all-positive) reference.
+            let want: f64 = a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let d = x as f64 - y as f64;
+                    d * d
+                })
+                .sum();
+            let got = dist2(a, b) as f64;
+            if (got - want).abs() > 1e-5 * (1.0 + want) {
+                return Err(format!("dist2 {got} vs {want}"));
+            }
+            // axpy, element-wise.
+            let mut y = b.clone();
+            axpy(*alpha, a, &mut y);
+            for i in 0..a.len() {
+                let want = b[i] as f64 + *alpha as f64 * a[i] as f64;
+                if (y[i] as f64 - want).abs() > 1e-5 * (1.0 + want.abs()) {
+                    return Err(format!("axpy[{i}] {} vs {want}", y[i]));
+                }
+            }
+            // fused axpy_scale, element-wise.
+            let mut y = b.clone();
+            axpy_scale(*alpha, a, *beta, &mut y);
+            for i in 0..a.len() {
+                let want = *alpha as f64 * a[i] as f64 + *beta as f64 * b[i] as f64;
+                if (y[i] as f64 - want).abs() > 1e-5 * (1.0 + want.abs()) {
+                    return Err(format!("axpy_scale[{i}] {} vs {want}", y[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gemv_family_matches_scalar_reference() {
+    // gemv / gemv_t / ger over random shapes (including 0 rows and
+    // col counts below the lane/block widths) vs naive f64 loops.
+    use apibcd::linalg::{gemv, gemv_t, ger};
+    run_prop(
+        "gemv family ≈ scalar reference",
+        cfg(60, 1717),
+        |r| {
+            let rows = r.below(20);
+            let cols = 1 + r.below(150);
+            let a: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32()).collect();
+            let x: Vec<f32> = (0..cols).map(|_| r.normal_f32()).collect();
+            let xt: Vec<f32> = (0..rows).map(|_| r.normal_f32()).collect();
+            (rows, cols, a, x, xt)
+        },
+        |(rows, cols, a, x, xt)| {
+            let (rows, cols) = (*rows, *cols);
+            let tol = |mag: f64| 1e-5 * (1.0 + mag);
+            // y = A x
+            let mut y = vec![0.0f32; rows];
+            gemv(a, rows, cols, x, &mut y);
+            for i in 0..rows {
+                let mut want = 0.0f64;
+                let mut mag = 0.0f64;
+                for j in 0..cols {
+                    let t = a[i * cols + j] as f64 * x[j] as f64;
+                    want += t;
+                    mag += t.abs();
+                }
+                if (y[i] as f64 - want).abs() > tol(mag) {
+                    return Err(format!("gemv[{i}] {} vs {want}", y[i]));
+                }
+            }
+            // y = Aᵀ x
+            let mut yt = vec![0.0f32; cols];
+            gemv_t(a, rows, cols, xt, &mut yt);
+            for j in 0..cols {
+                let mut want = 0.0f64;
+                let mut mag = 0.0f64;
+                for i in 0..rows {
+                    let t = a[i * cols + j] as f64 * xt[i] as f64;
+                    want += t;
+                    mag += t.abs();
+                }
+                if (yt[j] as f64 - want).abs() > tol(mag) {
+                    return Err(format!("gemv_t[{j}] {} vs {want}", yt[j]));
+                }
+            }
+            // A += xt ⊗ x (rank-1)
+            let mut g = a.clone();
+            ger(xt, x, &mut g);
+            for i in 0..rows {
+                for j in 0..cols {
+                    let want = a[i * cols + j] as f64 + xt[i] as f64 * x[j] as f64;
+                    let got = g[i * cols + j] as f64;
+                    if (got - want).abs() > tol(want.abs()) {
+                        return Err(format!("ger[{i},{j}] {got} vs {want}"));
+                    }
+                }
             }
             Ok(())
         },
