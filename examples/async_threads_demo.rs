@@ -1,20 +1,17 @@
-//! Real asynchrony: API-BCD with every agent as an OS thread.
+//! Real asynchrony: every agent as an OS thread — for *any* algorithm.
 //!
-//! Where the DES *models* the paper's asynchronous execution, this demo
-//! *implements* it: agents are threads, tokens are mpsc messages, link
-//! latency is an injected U(10⁻⁵,10⁻⁴)s sleep, and all local updates go
-//! through the solver service (one thread owning the compute engine — the
-//! same topology a real accelerator deployment has). Compare the wall-clock
-//! trace with `repro train --preset test_ls --algos api-bcd`.
+//! Where the DES *models* the paper's asynchronous execution, the thread
+//! substrate *implements* it: agents are threads, tokens are mpsc
+//! messages, link latency is an injected U(10⁻⁵,10⁻⁴)s sleep, and all
+//! local updates go through the solver service (one thread owning the
+//! compute engine — the same topology a real accelerator deployment has).
+//! Since the engine redesign this is one builder call, and the single
+//! source of each algorithm's math in `algo/` runs unchanged on both
+//! substrates — here API-BCD and I-BCD side by side.
 //!
 //! Run: `cargo run --release --example async_threads_demo`
 
-use apibcd::algo::driver::Workload;
-use apibcd::config::{ExperimentConfig, Preset};
-use apibcd::exec::run_api_bcd_threads;
-use apibcd::model::Task;
-use apibcd::solver::{LocalSolver, NativeSolver, SolverService};
-use std::sync::Arc;
+use apibcd::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::preset(Preset::TestLs);
@@ -23,49 +20,39 @@ fn main() -> anyhow::Result<()> {
     cfg.tau_api = 0.1;
     cfg.stop.max_activations = 900;
     cfg.eval_every = 60;
-
-    let workload = Workload::build(&cfg)?;
-    let shards = Arc::new(workload.partition.shards.clone());
-    let task = workload.profile.task;
-    let inner_k = cfg.inner_k;
-
-    // The solver service owns the engine; agent threads are pure
-    // coordination. (Use PjrtSolver::new(...) in the factory to run the
-    // artifacts instead — same closure shape.)
-    let service = SolverService::spawn(
-        move || {
-            let s: Box<dyn LocalSolver> = Box::new(NativeSolver::new(task, inner_k));
-            Ok(s)
-        },
-        shards.clone(),
-    )?;
+    cfg.algos = vec![AlgoKind::ApiBcd, AlgoKind::IBcd];
 
     println!(
-        "spawning {} agent threads, {} tokens (task {:?})",
-        cfg.agents, cfg.walks, task
+        "spawning {} agent threads per run, {} tokens (API-BCD) / 1 token (I-BCD)",
+        cfg.agents, cfg.walks
     );
-    let trace = run_api_bcd_threads(&cfg, &workload.topo, shards, &workload.problem, service.client())?;
+    let report = Experiment::builder(cfg.clone())
+        .substrate(Substrate::Threads)
+        .run()?;
 
-    println!("{:>8} {:>12} {:>8} {:>10}", "iter", "wall", "comm", "NMSE");
-    for p in &trace.points {
+    for trace in &report.traces {
+        println!("\n-- {} --", trace.name);
+        println!("{:>8} {:>12} {:>8} {:>10}", "iter", "wall", "comm", "NMSE");
+        for p in &trace.points {
+            println!(
+                "{:>8} {:>12} {:>8} {:>10.4}",
+                p.iter,
+                apibcd::util::fmt_secs(p.time),
+                p.comm,
+                p.metric
+            );
+        }
         println!(
-            "{:>8} {:>12} {:>8} {:>10.4}",
-            p.iter,
-            apibcd::util::fmt_secs(p.time),
-            p.comm,
-            p.metric
+            "{} activations across {} threads in {} wall",
+            trace.last().map_or(0, |p| p.iter),
+            cfg.agents,
+            apibcd::util::fmt_secs(trace.wall_secs)
+        );
+        assert!(
+            trace.last_metric() < 0.5,
+            "{} failed to converge on real threads",
+            trace.name
         );
     }
-    println!(
-        "\n{} activations across {} threads in {} wall",
-        trace.points.last().map(|p| p.iter).unwrap_or(0),
-        cfg.agents,
-        apibcd::util::fmt_secs(trace.wall_secs)
-    );
-    assert!(
-        matches!(task, Task::Regression) && trace.last_metric() < 0.5,
-        "threaded API-BCD failed to converge"
-    );
-    service.shutdown();
     Ok(())
 }

@@ -20,7 +20,7 @@ fn run(name: &str, preset: Preset, activations: u64, target: f64) -> anyhow::Res
         "== {name}: N={}, ξ={}, M={}, τ_IS={}, τ_API={}",
         cfg.agents, cfg.xi, cfg.walks, cfg.tau_ibcd, cfg.tau_api
     );
-    let report = apibcd::run_experiment(&cfg)?;
+    let report = Experiment::builder(cfg).run()?;
     println!("{}", report.summary_table(Some(target)));
     report.write_files("results")?;
     Ok(())

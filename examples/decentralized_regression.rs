@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         "cpusmall profile: N={} agents, ξ={}, M={} walks, τ_IS={}, τ_API={}, α={}",
         cfg.agents, cfg.xi, cfg.walks, cfg.tau_ibcd, cfg.tau_api, cfg.alpha
     );
-    let report = apibcd::run_experiment(&cfg)?;
+    let report = Experiment::builder(cfg).run()?;
     println!("{}", report.summary_table(Some(0.05)));
 
     // The two figure axes, per algorithm, at a few checkpoints.

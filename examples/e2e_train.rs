@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("=== E2E (PJRT artifacts): cpusmall, N=20, M=5, {} activations ===",
              cfg.stop.max_activations);
-    let report = apibcd::run_experiment(&cfg)?;
+    let report = Experiment::builder(cfg.clone()).run()?;
 
     println!("loss curve (API-BCD): iter  sim-time  comm  objective  NMSE");
     let api = &report.traces[0];
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     cfg.stop.max_activations = 3_000;
     cfg.eval_every = 200;
     println!("\n=== E2E (PJRT artifacts): ijcnn1 logistic, N=50, M=5 ===");
-    let report2 = apibcd::run_experiment(&cfg)?;
+    let report2 = Experiment::builder(cfg).run()?;
     println!("{}", report2.summary_table(Some(0.90)));
     report2.write_files("results")?;
     anyhow::ensure!(

@@ -19,7 +19,9 @@ fn main() -> anyhow::Result<()> {
     cfg.stop.max_activations = 600;
     cfg.eval_every = 50;
 
-    let report = apibcd::run_experiment(&cfg)?;
+    let report = Experiment::builder(cfg.clone())
+        .substrate(Substrate::Des)
+        .run()?;
     let trace = &report.traces[0];
     println!("API-BCD on {} agents, {} walks:", cfg.agents, cfg.walks);
     println!("{:>6} {:>12} {:>10} {:>10}", "iter", "sim time", "comm", "NMSE");

@@ -10,186 +10,27 @@
 //!    or the linearized closed form (eq. 15) for gAPI-BCD:
 //!    `x⁺ = (ρ·x + τ·Σ_{m'} ẑ_{i,m'} − ∇f_i(x)) / (ρ + τM)`,
 //! 3. `z_m ← z_m + (x_i⁺ − x_i)/N` (eq. 12b), `ẑ_{i,m} ← z_m` (eq. 12c),
-//! 4. forward `z_m` to the next agent on walk `m`.
+//! 4. the engine forwards `z_m` to the next agent on walk `m`.
 //!
-//! The asynchrony is simulated with the DES: each token is an independent
-//! event stream; an agent busy computing makes a concurrently-arriving
-//! token queue (FIFO) until it frees — the interaction that distinguishes
-//! parallel walks from M independent runs. The virtual counter `k` counts
-//! activations across all walks (paper footnote 1).
+//! The asynchrony semantics — independent event streams per token, FIFO
+//! queuing at busy agents, the virtual counter `k` across all walks (paper
+//! footnote 1) — live in the engine substrates and are shared with every
+//! other algorithm; this file is the per-activation math only.
 
-use super::common::{mean_vec_into, Recorder, Router, should_stop};
-use super::{AlgoContext, AlgoKind, Algorithm};
+use super::behavior::{
+    smoothness_bound, ActivationCtx, AgentBehavior, BehaviorEnv, BehaviorSpec, EvalModel, Served,
+    TokenMsg,
+};
+use super::AlgoKind;
+use crate::config::ExperimentConfig;
 use crate::linalg::axpy;
-use crate::metrics::Trace;
-use crate::sim::{AgentAvailability, EventQueue};
 
-pub struct ApiBcd {
+pub struct ApiBcdSpec {
     /// false → API-BCD (Alg. 2); true → gAPI-BCD (eq. 15).
     pub gradient_variant: bool,
 }
 
-/// One token-service record (the Fig. 2 timeline view).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct WalkEvent {
-    pub k: u64,
-    pub token: usize,
-    pub agent: usize,
-    pub arrival: f64,
-    pub start: f64,
-    pub end: f64,
-}
-
-impl ApiBcd {
-    /// Run and also return the walk-event log (used by `repro timeline` to
-    /// reproduce the Fig. 2 local-copy evolution illustration).
-    pub fn run_with_events(
-        &self,
-        ctx: &mut AlgoContext,
-    ) -> anyhow::Result<(Trace, Vec<WalkEvent>)> {
-        let dim = ctx.dim();
-        let n = ctx.n();
-        let m_walks = ctx.cfg.walks.max(1);
-        let kind = if self.gradient_variant {
-            AlgoKind::GApiBcd
-        } else {
-            AlgoKind::ApiBcd
-        };
-        let tau = ctx.cfg.tau_for(kind) as f32;
-        let tau_m = tau * m_walks as f32;
-        let mut rng = ctx.rng.fork(2);
-
-        // gAPI-BCD damping: Theorem 3 needs τM/2 + ρ − L/2 > 0 for descent.
-        // We floor the configured ρ at each agent's smoothness bound L̂
-        // (‖X‖²_F-based, the same bound the prox step sizes use) so the
-        // linearized update is stable for any configuration.
-        let rhos: Vec<f32> = if self.gradient_variant {
-            ctx.shards
-                .iter()
-                .map(|s| {
-                    let d = s.active.max(1) as f32;
-                    let lhat = match ctx.task {
-                        crate::model::Task::Regression => s.frob_sq() / d,
-                        crate::model::Task::Binary => s.frob_sq() / (4.0 * d),
-                        crate::model::Task::Multiclass(_) => s.frob_sq() / (2.0 * d),
-                    };
-                    (ctx.cfg.rho as f32).max(lhat)
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
-
-        // State: blocks x_i, tokens z_m, local copies ẑ_{i,m} (all zero —
-        // Alg. 2 line 1).
-        let mut xs = vec![vec![0.0f32; dim]; n];
-        let mut zs = vec![vec![0.0f32; dim]; m_walks];
-        let mut zhat = vec![vec![vec![0.0f32; dim]; m_walks]; n];
-
-        let mut router = Router::new(ctx.cfg.routing, ctx.topo, m_walks);
-        let mut queue = EventQueue::new();
-        for m in 0..m_walks {
-            let at = router.start(m, ctx.topo, &mut rng);
-            queue.push(0.0, m, at);
-        }
-        let mut avail = AgentAvailability::new(n);
-        let faults = ctx.cfg.faults;
-        let mut membership = crate::sim::Membership::new(n, faults, &mut rng);
-
-        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
-        let mut recorder = Recorder::new(kind.name(), ctx.cfg.eval_every, tau as f64);
-        let (mut comm, mut k) = (0u64, 0u64);
-
-        // Reused per-activation scratch: with the solver's `prox_into`
-        // these make the steady-state loop allocation-free (EXPERIMENTS.md
-        // §Perf) — `x_new` swaps with the active block instead of
-        // replacing it, `g_buf` serves the gradient variant, `eval_w`
-        // the recording cadence.
-        let mut events = Vec::new();
-        let mut tzsum = vec![0.0f32; dim];
-        let mut x_new = vec![0.0f32; dim];
-        let mut g_buf = vec![0.0f32; dim];
-        let mut eval_w = vec![0.0f32; dim];
-
-        mean_vec_into(&xs, &mut eval_w);
-        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, &zs, &eval_w);
-
-        while let Some(ev) = queue.pop() {
-            if should_stop(&ctx.cfg.stop, k, ev.time, comm) {
-                break;
-            }
-            let (i, m) = (ev.agent, ev.token);
-
-            // (1) refresh the local copy from the arriving token.
-            zhat[i][m].copy_from_slice(&zs[m]);
-
-            // (2) block update against Σ_{m'} ẑ_{i,m'}.
-            tzsum.fill(0.0);
-            for zm in &zhat[i] {
-                axpy(tau, zm, &mut tzsum);
-            }
-            let wall = if self.gradient_variant {
-                // eq. (15) closed form.
-                let wall = ctx.solver.grad_into(&ctx.shards[i], &xs[i], &mut g_buf)?;
-                let rho = rhos[i];
-                let denom = rho + tau_m;
-                for j in 0..dim {
-                    x_new[j] = (rho * xs[i][j] + tzsum[j] - g_buf[j]) / denom;
-                }
-                wall
-            } else {
-                ctx.solver
-                    .prox_into(&ctx.shards[i], &xs[i], &tzsum, tau_m, &mut x_new)?
-            };
-            let compute = ctx.cfg.timing.duration(wall, &mut rng);
-            let (start, end) = avail.serve(i, ev.time, compute);
-
-            // (3) token + copy update (eqs. 12b, 12c).
-            for j in 0..dim {
-                zs[m][j] += (x_new[j] - xs[i][j]) / n as f32;
-            }
-            zhat[i][m].copy_from_slice(&zs[m]);
-            tracker.block_updated(i, &xs[i], &x_new);
-            // Swap instead of assign: the displaced block becomes the next
-            // activation's output buffer.
-            std::mem::swap(&mut xs[i], &mut x_new);
-            k += 1;
-            events.push(WalkEvent {
-                k,
-                token: m,
-                agent: i,
-                arrival: ev.time,
-                start,
-                end,
-            });
-
-            // (4) forward token m (with fault handling: retransmissions on
-            // lossy links, re-routing around dropped agents).
-            let preferred = router.next(m, i, ctx.topo, &mut rng);
-            let next = if faults.is_none() {
-                preferred
-            } else {
-                membership.maybe_drop(i, end, &mut rng);
-                membership.route_live(ctx.topo, i, preferred, end, &mut rng)
-            };
-            let mut t_next = end;
-            if next != i {
-                let (attempts, retry_delay) = faults.transmit(&mut rng);
-                comm += attempts;
-                t_next += retry_delay + ctx.cfg.latency.sample(&mut rng);
-            }
-            queue.push(t_next, m, next);
-
-            if recorder.due(k) {
-                mean_vec_into(&xs, &mut eval_w);
-                recorder.record(ctx, k, end, comm, &mut tracker, &xs, &zs, &eval_w);
-            }
-        }
-        Ok((recorder.finish(), events))
-    }
-}
-
-impl Algorithm for ApiBcd {
+impl BehaviorSpec for ApiBcdSpec {
     fn kind(&self) -> AlgoKind {
         if self.gradient_variant {
             AlgoKind::GApiBcd
@@ -198,7 +39,104 @@ impl Algorithm for ApiBcd {
         }
     }
 
-    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
-        self.run_with_events(ctx).map(|(t, _)| t)
+    fn walks(&self, cfg: &ExperimentConfig) -> usize {
+        cfg.walks.max(1)
+    }
+
+    fn eval_model(&self) -> EvalModel {
+        EvalModel::AgentMean
+    }
+
+    fn record_tau(&self, cfg: &ExperimentConfig) -> f64 {
+        cfg.tau_for(self.kind())
+    }
+
+    fn make_agent(&self, agent: usize, env: &BehaviorEnv<'_>) -> Box<dyn AgentBehavior> {
+        let m_walks = self.walks(env.cfg);
+        let tau = env.cfg.tau_for(self.kind()) as f32;
+        // gAPI-BCD damping: Theorem 3 needs τM/2 + ρ − L/2 > 0 for descent.
+        // Floor the configured ρ at the agent's smoothness bound L̂ so the
+        // linearized update is stable for any configuration.
+        let rho = if self.gradient_variant {
+            (env.cfg.rho as f32).max(smoothness_bound(env.task, &env.shards[agent]))
+        } else {
+            0.0
+        };
+        Box::new(ApiBcdAgent {
+            gradient_variant: self.gradient_variant,
+            tau,
+            tau_m: tau * m_walks as f32,
+            rho,
+            n: env.n as f32,
+            x: vec![0.0; env.dim],
+            zhat: vec![vec![0.0; env.dim]; m_walks],
+            tz_buf: vec![0.0; env.dim],
+            x_new: vec![0.0; env.dim],
+            g_buf: vec![0.0; env.dim],
+        })
+    }
+}
+
+struct ApiBcdAgent {
+    gradient_variant: bool,
+    tau: f32,
+    tau_m: f32,
+    rho: f32,
+    n: f32,
+    /// Block x_i and local copies ẑ_{i,m} (all zero — Alg. 2 line 1).
+    x: Vec<f32>,
+    zhat: Vec<Vec<f32>>,
+    /// Reused per-activation scratch: the steady-state loop is
+    /// allocation-free — `x_new` swaps with the active block instead of
+    /// replacing it, `g_buf` serves the gradient variant.
+    tz_buf: Vec<f32>,
+    x_new: Vec<f32>,
+    g_buf: Vec<f32>,
+}
+
+impl AgentBehavior for ApiBcdAgent {
+    fn on_activation(
+        &mut self,
+        msg: &mut TokenMsg,
+        ctx: &mut ActivationCtx<'_>,
+    ) -> anyhow::Result<Served> {
+        let m = msg.id;
+        let dim = self.x.len();
+
+        // (1) refresh the local copy from the arriving token.
+        self.zhat[m].copy_from_slice(&msg.payload);
+
+        // (2) block update against Σ_{m'} ẑ_{i,m'}.
+        self.tz_buf.fill(0.0);
+        for zm in &self.zhat {
+            axpy(self.tau, zm, &mut self.tz_buf);
+        }
+        let wall = if self.gradient_variant {
+            // eq. (15) closed form.
+            let wall = ctx.compute.grad_into(ctx.agent, &self.x, &mut self.g_buf)?;
+            let denom = self.rho + self.tau_m;
+            for j in 0..dim {
+                self.x_new[j] = (self.rho * self.x[j] + self.tz_buf[j] - self.g_buf[j]) / denom;
+            }
+            wall
+        } else {
+            ctx.compute
+                .prox_into(ctx.agent, &self.x, &self.tz_buf, self.tau_m, &mut self.x_new)?
+        };
+
+        // (3) token + copy update (eqs. 12b, 12c).
+        for j in 0..dim {
+            msg.payload[j] += (self.x_new[j] - self.x[j]) / self.n;
+        }
+        self.zhat[m].copy_from_slice(&msg.payload);
+        ctx.block_updated(&self.x, &self.x_new);
+        // Swap instead of assign: the displaced block becomes the next
+        // activation's output buffer.
+        std::mem::swap(&mut self.x, &mut self.x_new);
+        Ok(Served::update(wall))
+    }
+
+    fn block(&self) -> &[f32] {
+        &self.x
     }
 }

@@ -1,0 +1,205 @@
+//! The algorithm/runtime boundary: message-driven agent behaviors.
+//!
+//! Every algorithm in the family is expressed as a per-agent state machine
+//! ([`AgentBehavior`]): the runtime (a [`crate::engine`] substrate)
+//! delivers a [`TokenMsg`] to an agent, the behavior performs the local
+//! update through the substrate-provided [`Compute`] interface, mutates the
+//! token payload in place and/or emits [`Outgoing`] unicasts, and reports
+//! what happened in a [`Served`]. The runtime owns everything that is *not*
+//! algorithm math: routing, latency, fault injection, busy-agent queuing,
+//! activation counting, recording and stop rules — once, for all
+//! algorithms, on both the DES and the real-thread substrate.
+//!
+//! Token-walk methods (I-BCD, API-BCD, gAPI-BCD, WPG, WADMM, PW-ADMM) set
+//! `Served::forward` and let the engine route the serviced token. The
+//! gossip method (DGD) declares `walks() == 0`; the engine kicks it off by
+//! broadcasting every agent's round-0 block and the behavior re-broadcasts
+//! via [`Outgoing`] unicasts whenever a round completes.
+
+use super::AlgoKind;
+use crate::config::{ExperimentConfig, RoutingRule};
+use crate::data::AgentData;
+use crate::graph::Topology;
+use crate::model::{ObjectiveTracker, Task};
+
+/// A message in flight between agents: a walking token, or one gossip
+/// exchange.
+#[derive(Debug)]
+pub struct TokenMsg {
+    /// Walk id for token algorithms; the *sender's* agent id for gossip.
+    pub id: usize,
+    /// Gossip round (token algorithms leave this 0).
+    pub round: u64,
+    /// The vector riding the message: the token z_m, or a neighbor's block.
+    pub payload: Vec<f32>,
+    /// Position on the shared traversal cycle. The thread substrate carries
+    /// routing state with the token; the DES router tracks it centrally and
+    /// ignores this field.
+    pub cycle_pos: usize,
+}
+
+/// A directed send produced by a behavior (gossip broadcasts). Token
+/// forwarding does not go through this — the engine routes the serviced
+/// message itself when [`Served::forward`] is set.
+#[derive(Debug)]
+pub struct Outgoing {
+    pub dest: usize,
+    pub msg: TokenMsg,
+}
+
+/// What one delivery did at the agent.
+#[derive(Debug, Clone, Copy)]
+pub struct Served {
+    /// Local updates performed (0 = the message only buffered; a gossip
+    /// agent can complete more than one round on a single straggler
+    /// arrival). Each update advances the virtual activation counter k.
+    pub updates: u32,
+    /// Measured compute wall-clock across those updates (seconds).
+    pub compute_secs: f64,
+    /// Forward the serviced token along its walk (engine picks the next
+    /// agent via the routing rule + fault model).
+    pub forward: bool,
+}
+
+impl Served {
+    /// One local update; token forwarded.
+    pub fn update(compute_secs: f64) -> Served {
+        Served { updates: 1, compute_secs, forward: true }
+    }
+
+    /// Message buffered only; nothing computed, nothing forwarded.
+    pub fn buffered() -> Served {
+        Served { updates: 0, compute_secs: 0.0, forward: false }
+    }
+}
+
+/// The local compute operations a behavior may invoke, abstracted over the
+/// substrate: the DES calls the solver directly on the coordinator thread;
+/// the thread substrate goes through the [`crate::solver::SolverClient`]
+/// service with buffer recycling. Both return measured wall-clock seconds.
+pub trait Compute {
+    /// Proximal block update (paper eq. (7)/(12a)) into `out`.
+    fn prox_into(
+        &mut self,
+        agent: usize,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<f64>;
+
+    /// Mean-loss gradient ∇f_i(w) into `out`.
+    fn grad_into(&mut self, agent: usize, w: &[f32], out: &mut Vec<f32>) -> anyhow::Result<f64>;
+}
+
+/// Per-activation context handed to [`AgentBehavior::on_activation`].
+pub struct ActivationCtx<'a> {
+    /// The agent being activated (index into the shard set).
+    pub agent: usize,
+    /// Substrate compute path.
+    pub compute: &'a mut dyn Compute,
+    /// Incremental objective bookkeeping (DES substrate only; the thread
+    /// substrate never assembles global state while running).
+    pub tracker: Option<&'a mut ObjectiveTracker>,
+    /// Outgoing unicasts (engine-owned, drained after the activation).
+    pub out: &'a mut Vec<Outgoing>,
+}
+
+impl ActivationCtx<'_> {
+    /// Report that this agent's block moved from `old` to `new` (feeds the
+    /// recorded penalty objective on the DES substrate).
+    pub fn block_updated(&mut self, old: &[f32], new: &[f32]) {
+        if let Some(t) = self.tracker.as_deref_mut() {
+            t.block_updated(self.agent, old, new);
+        }
+    }
+}
+
+/// One agent's algorithm state machine. Implementations own the agent's
+/// block x_i and any per-agent auxiliaries (local token copies ẑ_{i,·},
+/// ADMM duals y_i, gossip round buffers) — state is *distributed by
+/// construction*, which is what lets the same behavior run under the DES
+/// and as a real OS thread.
+pub trait AgentBehavior: Send {
+    /// Service one incoming message. Mutate `msg.payload` in place for
+    /// token updates; push gossip sends to `ctx.out`.
+    fn on_activation(
+        &mut self,
+        msg: &mut TokenMsg,
+        ctx: &mut ActivationCtx<'_>,
+    ) -> anyhow::Result<Served>;
+
+    /// The agent's current block x_i (metric evaluation / consensus
+    /// estimates).
+    fn block(&self) -> &[f32];
+}
+
+/// How the recorded figure model is assembled from the run state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalModel {
+    /// Mean of the agents' blocks (API-BCD family, PW-ADMM, DGD).
+    AgentMean,
+    /// The (single) token vector (I-BCD, WPG, WADMM).
+    Token,
+}
+
+/// Everything a behavior constructor may need.
+pub struct BehaviorEnv<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub topo: &'a Topology,
+    pub shards: &'a [AgentData],
+    pub task: Task,
+    /// Flattened model dimension p·c.
+    pub dim: usize,
+    /// Agent count N.
+    pub n: usize,
+}
+
+/// Per-algorithm factory + run-level metadata: how many tokens walk, which
+/// routing rule applies, how the trace is evaluated, and how each agent's
+/// behavior is built.
+pub trait BehaviorSpec: Send + Sync {
+    fn kind(&self) -> AlgoKind;
+
+    /// Independent token walks (0 = gossip: no tokens, neighbor
+    /// broadcasts).
+    fn walks(&self, cfg: &ExperimentConfig) -> usize;
+
+    /// Routing rule (WPG pins the deterministic cycle of [17]).
+    fn routing(&self, cfg: &ExperimentConfig) -> RoutingRule {
+        cfg.routing
+    }
+
+    fn eval_model(&self) -> EvalModel;
+
+    /// τ used for the recorded penalty-objective column.
+    fn record_tau(&self, cfg: &ExperimentConfig) -> f64;
+
+    /// Build agent `i`'s behavior (initial state x_i = 0).
+    fn make_agent(&self, agent: usize, env: &BehaviorEnv<'_>) -> Box<dyn AgentBehavior>;
+}
+
+/// The per-agent smoothness bound L̂ of the mean loss (the same
+/// ‖X‖²_F-based bound the prox step sizes use) — shared by the gAPI-BCD
+/// damping floor and the DGD step clamp.
+pub fn smoothness_bound(task: Task, shard: &AgentData) -> f32 {
+    let d = shard.active.max(1) as f32;
+    match task {
+        Task::Regression => shard.frob_sq() / d,
+        Task::Binary => shard.frob_sq() / (4.0 * d),
+        Task::Multiclass(_) => shard.frob_sq() / (2.0 * d),
+    }
+}
+
+/// Instantiate the behavior spec for an algorithm.
+pub fn spec_for(kind: AlgoKind) -> Box<dyn BehaviorSpec> {
+    match kind {
+        AlgoKind::IBcd => Box::new(super::i_bcd::IBcdSpec),
+        AlgoKind::ApiBcd => Box::new(super::api_bcd::ApiBcdSpec { gradient_variant: false }),
+        AlgoKind::GApiBcd => Box::new(super::api_bcd::ApiBcdSpec { gradient_variant: true }),
+        AlgoKind::Wpg => Box::new(super::wpg::WpgSpec),
+        AlgoKind::Dgd => Box::new(super::dgd::DgdSpec::default()),
+        AlgoKind::Wadmm => Box::new(super::wadmm::WadmmSpec),
+        AlgoKind::PwAdmm => Box::new(super::pwadmm::PwAdmmSpec),
+    }
+}

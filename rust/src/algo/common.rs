@@ -1,136 +1,6 @@
-//! Shared machinery for the algorithm family: token routing, trace
-//! recording/evaluation cadence, and stop-rule checking.
-
-use super::AlgoContext;
-use crate::config::RoutingRule;
-use crate::graph::Topology;
-use crate::metrics::{Trace, TracePoint};
-use crate::util::rng::Rng;
-
-/// Token router: deterministic cycle or a Markov chain per walk.
-pub struct Router {
-    rule: RoutingRule,
-    /// Traversal cycle (only for `Cycle`); `positions[m]` is walk m's index.
-    cycle: Vec<usize>,
-    positions: Vec<usize>,
-}
-
-impl Router {
-    /// `walks` independent token streams on `topo`. For the deterministic
-    /// rule, walk m starts at offset `m·|cycle|/M` around the shared cycle
-    /// (spreads tokens out, matching the parallel-walk illustrations).
-    pub fn new(rule: RoutingRule, topo: &Topology, walks: usize) -> Router {
-        let cycle = match rule {
-            RoutingRule::Cycle => topo.traversal_cycle(),
-            _ => Vec::new(),
-        };
-        let positions = (0..walks)
-            .map(|m| {
-                if cycle.is_empty() {
-                    0
-                } else {
-                    m * cycle.len() / walks
-                }
-            })
-            .collect();
-        Router {
-            rule,
-            cycle,
-            positions,
-        }
-    }
-
-    /// Walk m's starting agent.
-    pub fn start(&self, m: usize, topo: &Topology, rng: &mut Rng) -> usize {
-        match self.rule {
-            RoutingRule::Cycle => self.cycle[self.positions[m]],
-            _ => rng.below(topo.n()),
-        }
-    }
-
-    /// Advance walk m from `current`; returns the next agent (always a
-    /// neighbor — a hop over one link).
-    pub fn next(&mut self, m: usize, current: usize, topo: &Topology, rng: &mut Rng) -> usize {
-        match self.rule {
-            RoutingRule::Cycle => {
-                let pos = &mut self.positions[m];
-                if self.cycle[*pos] != current {
-                    // Fault rerouting moved the token off the cycle —
-                    // resync to the first occurrence of `current`.
-                    if let Some(p) = self.cycle.iter().position(|&u| u == current) {
-                        *pos = p;
-                    }
-                }
-                *pos = (*pos + 1) % self.cycle.len();
-                self.cycle[*pos]
-            }
-            RoutingRule::Uniform => topo.uniform_next(current, rng),
-            RoutingRule::Metropolis => topo.metropolis_next(current, rng),
-        }
-    }
-}
-
-/// Records trace points at the configured cadence; owns the evaluation of
-/// the penalty objective and the test metric.
-pub struct Recorder {
-    trace: Trace,
-    eval_every: u64,
-    tau: f64,
-    started: std::time::Instant,
-}
-
-impl Recorder {
-    pub fn new(name: &str, eval_every: u64, tau: f64) -> Recorder {
-        Recorder {
-            trace: Trace::new(name),
-            eval_every: eval_every.max(1),
-            tau,
-            started: std::time::Instant::now(),
-        }
-    }
-
-    /// Should iteration `k` be evaluated?
-    pub fn due(&self, k: u64) -> bool {
-        k % self.eval_every == 0
-    }
-
-    /// Record a point. `eval_w` is the model the figure tracks (token /
-    /// token-mean / agent-mean depending on the algorithm); the penalty
-    /// objective comes from the caller's incremental
-    /// [`crate::model::ObjectiveTracker`].
-    #[allow(clippy::too_many_arguments)]
-    pub fn record(
-        &mut self,
-        ctx: &AlgoContext,
-        k: u64,
-        time: f64,
-        comm: u64,
-        tracker: &mut crate::model::ObjectiveTracker,
-        xs: &[Vec<f32>],
-        zs: &[Vec<f32>],
-        eval_w: &[f32],
-    ) {
-        let objective = tracker.objective(ctx.shards, xs, zs, self.tau);
-        let metric = ctx.problem.metric(eval_w);
-        self.trace.push(TracePoint {
-            iter: k,
-            time,
-            comm,
-            objective,
-            metric,
-        });
-    }
-
-    pub fn finish(mut self) -> Trace {
-        self.trace.wall_secs = self.started.elapsed().as_secs_f64();
-        self.trace
-    }
-}
-
-/// Stop-rule evaluation.
-pub fn should_stop(cfg: &crate::config::StopRule, k: u64, time: f64, comm: u64) -> bool {
-    k >= cfg.max_activations || time >= cfg.max_sim_time || comm >= cfg.max_comm
-}
+//! Small shared vector helpers for the algorithm family. (Token routing,
+//! recording cadence and stop rules are engine scaffolding and live in
+//! [`crate::engine`], owned once for all algorithms and substrates.)
 
 /// Mean of a set of equal-length vectors into a reused buffer (the hot
 /// loops evaluate this at recording cadence and must not allocate).
@@ -144,74 +14,16 @@ pub fn mean_vec_into(vs: &[Vec<f32>], out: &mut Vec<f32>) {
     crate::linalg::scale(1.0 / vs.len() as f32, out);
 }
 
-/// Mean of a set of equal-length vectors (allocating convenience wrapper).
-pub fn mean_vec(vs: &[Vec<f32>]) -> Vec<f32> {
-    let mut out = Vec::new();
-    mean_vec_into(vs, &mut out);
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::StopRule;
 
     #[test]
-    fn cycle_router_follows_cycle() {
-        let topo = Topology::ring(6);
-        let mut rng = Rng::new(1);
-        let mut router = Router::new(RoutingRule::Cycle, &topo, 1);
-        let mut at = router.start(0, &topo, &mut rng);
-        for _ in 0..12 {
-            let next = router.next(0, at, &topo, &mut rng);
-            assert!(topo.has_edge(at, next));
-            at = next;
-        }
-    }
-
-    #[test]
-    fn parallel_cycle_walks_spread_out() {
-        let topo = Topology::ring(8);
-        let mut rng = Rng::new(2);
-        let router = Router::new(RoutingRule::Cycle, &topo, 4);
-        let starts: Vec<usize> = (0..4).map(|m| router.start(m, &topo, &mut rng)).collect();
-        let mut uniq = starts.clone();
-        uniq.sort_unstable();
-        uniq.dedup();
-        assert!(uniq.len() >= 3, "walks should start spread out: {starts:?}");
-    }
-
-    #[test]
-    fn markov_router_stays_on_edges() {
-        let mut rng = Rng::new(3);
-        let topo = Topology::random_connected(10, 0.4, &mut rng);
-        for rule in [RoutingRule::Uniform, RoutingRule::Metropolis] {
-            let mut router = Router::new(rule, &topo, 2);
-            let mut at = router.start(0, &topo, &mut rng);
-            for _ in 0..50 {
-                let next = router.next(0, at, &topo, &mut rng);
-                assert!(topo.has_edge(at, next), "{rule:?}: {at}->{next}");
-                at = next;
-            }
-        }
-    }
-
-    #[test]
-    fn stop_rules() {
-        let stop = StopRule {
-            max_activations: 10,
-            max_sim_time: 1.0,
-            max_comm: 100,
-        };
-        assert!(!should_stop(&stop, 5, 0.5, 50));
-        assert!(should_stop(&stop, 10, 0.5, 50));
-        assert!(should_stop(&stop, 5, 1.5, 50));
-        assert!(should_stop(&stop, 5, 0.5, 100));
-    }
-
-    #[test]
-    fn mean_vec_averages() {
-        let out = mean_vec(&[vec![1.0, 3.0], vec![3.0, 5.0]]);
+    fn mean_vec_into_averages_and_resizes() {
+        let mut out = Vec::new();
+        mean_vec_into(&[vec![1.0, 3.0], vec![3.0, 5.0]], &mut out);
         assert_eq!(out, vec![2.0, 4.0]);
+        mean_vec_into(&[vec![6.0]], &mut out);
+        assert_eq!(out, vec![6.0]);
     }
 }

@@ -1,98 +1,185 @@
 //! DGD — Decentralized Gradient Descent [12], the gossip baseline the
 //! paper's introduction argues against on communication cost.
 //!
-//! Synchronous rounds: every agent exchanges its model with *all* neighbors
-//! (2|E| unicast transmissions per round under the paper's cost model),
-//! then updates `x_i ← Σ_j W_ij x_j − α ∇f_i(x_i)` with Metropolis weights.
-//! Per-round simulated time = max over agents of compute time + the round's
-//! slowest link (synchronization barrier).
+//! Message-driven formulation: every agent broadcasts its block to all
+//! neighbors each round (2|E| unicast transmissions per round under the
+//! paper's cost model) and updates
+//! `x_i ← Σ_j W_ij x_j − α ∇f_i(x_i)` (Metropolis weights) once the full
+//! round-`r` neighborhood has arrived. Messages carry their round tag, so
+//! the update is exactly synchronous DGD regardless of delivery order —
+//! a straggler link only delays, never corrupts, the mixing step. An
+//! arrival can complete more than one round at once (the straggler case),
+//! which the behavior reports via `Served::updates`.
+//!
+//! The engine kicks gossip off by broadcasting every agent's round-0 block
+//! (zeros); each round-completing update re-broadcasts via [`Outgoing`].
+//!
+//! Fault-model scope: lossy links apply in full (every unicast pays
+//! retransmission attempts and retry delay on both substrates). Agent
+//! *churn* does not — synchronous gossip needs its complete round-`r`
+//! neighborhood by construction, and re-routing a fixed neighbor exchange
+//! has no meaning, so `dropout-frac`/`dropout-len` are inert for DGD (they
+//! only affect the token-walk methods).
 
-use super::common::{mean_vec, Recorder, should_stop};
-use super::{AlgoContext, AlgoKind, Algorithm};
-use crate::metrics::Trace;
+use super::behavior::{
+    smoothness_bound, ActivationCtx, AgentBehavior, BehaviorEnv, BehaviorSpec, EvalModel,
+    Outgoing, Served, TokenMsg,
+};
+use super::AlgoKind;
+use crate::config::ExperimentConfig;
+use crate::linalg::axpy;
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
-pub struct Dgd;
+#[derive(Default)]
+pub struct DgdSpec {
+    /// max_i L̂_i, computed once per run (`make_agent` is called once per
+    /// agent; rescanning every shard each time would be O(N²·shard)).
+    l_max: OnceLock<f32>,
+}
 
-impl Algorithm for Dgd {
+impl BehaviorSpec for DgdSpec {
     fn kind(&self) -> AlgoKind {
         AlgoKind::Dgd
     }
 
-    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
-        let dim = ctx.dim();
-        let n = ctx.n();
+    /// Gossip: no walking tokens.
+    fn walks(&self, _cfg: &ExperimentConfig) -> usize {
+        0
+    }
+
+    fn eval_model(&self) -> EvalModel {
+        EvalModel::AgentMean
+    }
+
+    /// DGD has no tokens; the recorder's z-slot gets the agent mean so the
+    /// penalty-objective column stays defined (τ from the config).
+    fn record_tau(&self, cfg: &ExperimentConfig) -> f64 {
+        cfg.tau_ibcd
+    }
+
+    fn make_agent(&self, agent: usize, env: &BehaviorEnv<'_>) -> Box<dyn AgentBehavior> {
         // DGD's stability window is α < 2/L; the figure presets tune α for
         // WPG (token-gradient steps against z), which can exceed it. Clamp
         // to the per-agent smoothness bound so the baseline never diverges
         // on a preset tuned for a different method.
-        let l_max = ctx
-            .shards
-            .iter()
-            .map(|s| {
-                let d = s.active.max(1) as f32;
-                match ctx.task {
-                    crate::model::Task::Regression => s.frob_sq() / d,
-                    crate::model::Task::Binary => s.frob_sq() / (4.0 * d),
-                    crate::model::Task::Multiclass(_) => s.frob_sq() / (2.0 * d),
-                }
-            })
-            .fold(0.0f32, f32::max);
-        let alpha = (ctx.cfg.alpha as f32).min(0.9 / l_max.max(1e-6));
-        let mut rng = ctx.rng.fork(4);
+        let l_max = *self.l_max.get_or_init(|| {
+            env.shards
+                .iter()
+                .map(|s| smoothness_bound(env.task, s))
+                .fold(0.0f32, f32::max)
+        });
+        let alpha = (env.cfg.alpha as f32).min(0.9 / l_max.max(1e-6));
+        Box::new(DgdAgent {
+            me: agent,
+            alpha,
+            weights: env.topo.metropolis_row(agent),
+            neighbors: env.topo.neighbors(agent).to_vec(),
+            round: 0,
+            x: vec![0.0; env.dim],
+            x_new: vec![0.0; env.dim],
+            g_buf: vec![0.0; env.dim],
+            pending: BTreeMap::new(),
+        })
+    }
+}
 
-        let mut xs = vec![vec![0.0f32; dim]; n];
-        // Metropolis mixing rows (agent-major), computed once.
-        let weights: Vec<Vec<(usize, f64)>> =
-            (0..n).map(|i| ctx.topo.metropolis_row(i)).collect();
+/// One round's neighbor blocks, indexed by neighbor slot.
+struct RoundBuf {
+    got: usize,
+    slots: Vec<Option<Vec<f32>>>,
+}
 
-        // DGD has no tokens; the recorder's z-slot gets the agent mean so
-        // the penalty-objective column stays defined (τ from the config).
-        let tau = ctx.cfg.tau_ibcd;
-        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
-        let mut recorder = Recorder::new("DGD", ctx.cfg.eval_every, tau);
-        let (mut time, mut comm, mut k) = (0.0f64, 0u64, 0u64);
-        let zbar = vec![mean_vec(&xs)];
-        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, &zbar, &zbar[0]);
+struct DgdAgent {
+    me: usize,
+    alpha: f32,
+    /// Metropolis mixing row (includes the self weight), computed once.
+    weights: Vec<(usize, f64)>,
+    neighbors: Vec<usize>,
+    /// My current round r: x = x^r, waiting on the round-r neighborhood.
+    round: u64,
+    x: Vec<f32>,
+    x_new: Vec<f32>,
+    g_buf: Vec<f32>,
+    /// Round-tagged neighbor blocks. Adjacent agents stay within one round
+    /// of each other, so this holds at most two live rounds.
+    pending: BTreeMap<u64, RoundBuf>,
+}
 
-        // One DGD round = N activations on the paper's virtual counter
-        // (every agent updates once).
-        while !should_stop(&ctx.cfg.stop, k, time, comm) {
-            // Gradient phase (parallel across agents → time = max).
-            let mut grads = Vec::with_capacity(n);
-            let mut max_compute = 0.0f64;
-            for i in 0..n {
-                let g = ctx.solver.grad(&ctx.shards[i], &xs[i])?;
-                max_compute = max_compute.max(ctx.cfg.timing.duration(g.wall_secs, &mut rng));
-                grads.push(g.w);
+impl DgdAgent {
+    fn slot_of(&self, agent: usize) -> Option<usize> {
+        self.neighbors.iter().position(|&j| j == agent)
+    }
+}
+
+impl AgentBehavior for DgdAgent {
+    fn on_activation(
+        &mut self,
+        msg: &mut TokenMsg,
+        ctx: &mut ActivationCtx<'_>,
+    ) -> anyhow::Result<Served> {
+        let deg = self.neighbors.len();
+        let slot = match self.slot_of(msg.id) {
+            Some(s) => s,
+            None => return Ok(Served::buffered()), // not a neighbor (stale membership)
+        };
+        let entry = self.pending.entry(msg.round).or_insert_with(|| RoundBuf {
+            got: 0,
+            slots: (0..deg).map(|_| None).collect(),
+        });
+        if entry.slots[slot].replace(std::mem::take(&mut msg.payload)).is_none() {
+            entry.got += 1;
+        }
+
+        // Complete every round the buffer now allows (a straggler arrival
+        // can unlock the current round *and* an already-buffered next one).
+        let mut updates = 0u32;
+        let mut compute_secs = 0.0f64;
+        while self
+            .pending
+            .get(&self.round)
+            .is_some_and(|b| b.got == deg)
+        {
+            let buf = self.pending.remove(&self.round).unwrap();
+            let wall = ctx.compute.grad_into(ctx.agent, &self.x, &mut self.g_buf)?;
+            compute_secs += wall;
+            // Mix + descend: x⁺ = Σ_j W_ij x_j − α ∇f_i(x_i).
+            self.x_new.fill(0.0);
+            for &(j, w) in &self.weights {
+                let xj: &[f32] = if j == self.me {
+                    &self.x
+                } else {
+                    let s = self.slot_of(j).expect("weight row entry is a neighbor");
+                    buf.slots[s].as_deref().expect("round complete")
+                };
+                axpy(w as f32, xj, &mut self.x_new);
             }
-            // Exchange phase: both directions on every link.
-            comm += 2 * ctx.topo.num_edges() as u64;
-            let mut max_latency = 0.0f64;
-            for _ in 0..ctx.topo.num_edges() {
-                max_latency = max_latency.max(ctx.cfg.latency.sample(&mut rng));
-            }
-            time += max_compute + max_latency;
-
-            // Mix + descend.
-            let mut new_xs = vec![vec![0.0f32; dim]; n];
-            for i in 0..n {
-                for &(j, w) in &weights[i] {
-                    crate::linalg::axpy(w as f32, &xs[j], &mut new_xs[i]);
-                }
-                crate::linalg::axpy(-alpha, &grads[i], &mut new_xs[i]);
-            }
-            for i in 0..n {
-                tracker.block_updated(i, &xs[i], &new_xs[i]);
-            }
-            xs = new_xs;
-            k += n as u64;
-
-            if recorder.due(k) || true {
-                // Rounds are coarse (N activations); record every round.
-                let zbar = vec![mean_vec(&xs)];
-                recorder.record(ctx, k, time, comm, &mut tracker, &xs, &zbar, &zbar[0]);
+            axpy(-self.alpha, &self.g_buf, &mut self.x_new);
+            ctx.block_updated(&self.x, &self.x_new);
+            std::mem::swap(&mut self.x, &mut self.x_new);
+            self.round += 1;
+            updates += 1;
+            // Broadcast the new block for the next round.
+            for &j in &self.neighbors {
+                ctx.out.push(Outgoing {
+                    dest: j,
+                    msg: TokenMsg {
+                        id: self.me,
+                        round: self.round,
+                        payload: self.x.clone(),
+                        cycle_pos: 0,
+                    },
+                });
             }
         }
-        Ok(recorder.finish())
+        Ok(Served {
+            updates,
+            compute_secs,
+            forward: false,
+        })
+    }
+
+    fn block(&self) -> &[f32] {
+        &self.x
     }
 }

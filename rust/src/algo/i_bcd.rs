@@ -6,75 +6,77 @@
 //! along the routing rule. One agent and one link active per iteration —
 //! minimal communication, serial time.
 
-use super::common::{mean_vec, Recorder, Router, should_stop};
-use super::{AlgoContext, AlgoKind, Algorithm};
-use crate::metrics::Trace;
+use super::behavior::{
+    ActivationCtx, AgentBehavior, BehaviorEnv, BehaviorSpec, EvalModel, Served, TokenMsg,
+};
+use super::AlgoKind;
+use crate::config::ExperimentConfig;
 
-pub struct IBcd;
+pub struct IBcdSpec;
 
-impl Algorithm for IBcd {
+impl BehaviorSpec for IBcdSpec {
     fn kind(&self) -> AlgoKind {
         AlgoKind::IBcd
     }
 
-    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
-        let dim = ctx.dim();
-        let n = ctx.n();
-        let tau = ctx.cfg.tau_for(AlgoKind::IBcd) as f32;
-        let mut rng = ctx.rng.fork(1);
+    fn walks(&self, _cfg: &ExperimentConfig) -> usize {
+        1
+    }
 
-        // x_i⁰ = 0, z⁰ = mean(x⁰) = 0 (paper init, eq. 6 / Alg. 1 line 1).
-        let mut xs = vec![vec![0.0f32; dim]; n];
-        let mut z = vec![0.0f32; dim];
-        let mut tzsum = vec![0.0f32; dim];
+    fn eval_model(&self) -> EvalModel {
+        EvalModel::Token
+    }
 
-        let mut router = Router::new(ctx.cfg.routing, ctx.topo, 1);
-        let mut agent = router.start(0, ctx.topo, &mut rng);
-        let faults = ctx.cfg.faults;
-        let mut membership = crate::sim::Membership::new(n, faults, &mut rng);
+    fn record_tau(&self, cfg: &ExperimentConfig) -> f64 {
+        cfg.tau_ibcd
+    }
 
-        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
-        let mut recorder = Recorder::new("I-BCD", ctx.cfg.eval_every, tau as f64);
-        let (mut time, mut comm, mut k) = (0.0f64, 0u64, 0u64);
-        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, std::slice::from_ref(&z), &z);
+    fn make_agent(&self, _agent: usize, env: &BehaviorEnv<'_>) -> Box<dyn AgentBehavior> {
+        Box::new(IBcdAgent {
+            tau: env.cfg.tau_for(AlgoKind::IBcd) as f32,
+            n: env.n as f32,
+            x: vec![0.0; env.dim],
+            tz_buf: vec![0.0; env.dim],
+            x_new: vec![0.0; env.dim],
+        })
+    }
+}
 
-        while !should_stop(&ctx.cfg.stop, k, time, comm) {
-            // eq. (7): x_i ← argmin f_i(x) + (τ/2)‖x − zᵏ‖².
-            for (t, zj) in tzsum.iter_mut().zip(&z) {
-                *t = tau * zj;
-            }
-            let out = ctx.solver.prox(&ctx.shards[agent], &xs[agent], &tzsum, tau)?;
-            let compute = ctx.cfg.timing.duration(out.wall_secs, &mut rng);
+struct IBcdAgent {
+    tau: f32,
+    n: f32,
+    /// Block x_i (x_i⁰ = 0; z⁰ = mean(x⁰) = 0 — paper init, eq. 6).
+    x: Vec<f32>,
+    /// Reused scratch: τ·z and the solver output (the steady-state loop is
+    /// allocation-free; the displaced block becomes the next output buffer).
+    tz_buf: Vec<f32>,
+    x_new: Vec<f32>,
+}
 
-            // eq. (8): z ← z + (x⁺ − x)/N.
-            for j in 0..dim {
-                z[j] += (out.w[j] - xs[agent][j]) / n as f32;
-            }
-            tracker.block_updated(agent, &xs[agent], &out.w);
-            xs[agent] = out.w;
-            time += compute;
-            k += 1;
-
-            // Forward the token (Alg. 1 lines 6–7), with fault handling.
-            let preferred = router.next(0, agent, ctx.topo, &mut rng);
-            let next = if faults.is_none() {
-                preferred
-            } else {
-                membership.maybe_drop(agent, time, &mut rng);
-                membership.route_live(ctx.topo, agent, preferred, time, &mut rng)
-            };
-            if next != agent {
-                let (attempts, retry_delay) = faults.transmit(&mut rng);
-                comm += attempts;
-                time += retry_delay + ctx.cfg.latency.sample(&mut rng);
-            }
-            agent = next;
-
-            if recorder.due(k) {
-                recorder.record(ctx, k, time, comm, &mut tracker, &xs, std::slice::from_ref(&z), &z);
-            }
+impl AgentBehavior for IBcdAgent {
+    fn on_activation(
+        &mut self,
+        msg: &mut TokenMsg,
+        ctx: &mut ActivationCtx<'_>,
+    ) -> anyhow::Result<Served> {
+        let z = &mut msg.payload;
+        // eq. (7): x_i ← argmin f_i(x) + (τ/2)‖x − zᵏ‖².
+        for (t, zj) in self.tz_buf.iter_mut().zip(z.iter()) {
+            *t = self.tau * zj;
         }
-        let _ = mean_vec(&xs); // (kept for symmetry; the figure tracks z)
-        Ok(recorder.finish())
+        let wall = ctx
+            .compute
+            .prox_into(ctx.agent, &self.x, &self.tz_buf, self.tau, &mut self.x_new)?;
+        // eq. (8): z ← z + (x⁺ − x)/N.
+        for j in 0..z.len() {
+            z[j] += (self.x_new[j] - self.x[j]) / self.n;
+        }
+        ctx.block_updated(&self.x, &self.x_new);
+        std::mem::swap(&mut self.x, &mut self.x_new);
+        Ok(Served::update(wall))
+    }
+
+    fn block(&self) -> &[f32] {
+        &self.x
     }
 }

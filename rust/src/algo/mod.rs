@@ -2,29 +2,23 @@
 //! gAPI-BCD) plus the baselines its evaluation and motivation compare
 //! against (WPG; gossip DGD; incremental-ADMM WADMM / PW-ADMM).
 //!
-//! Every algorithm runs against the same [`AlgoContext`]: the topology, the
-//! per-agent shards, a [`LocalSolver`] (PJRT artifacts or native), the
-//! latency/timing models, and a deterministic RNG — and produces a
-//! [`Trace`] of the test metric against simulated time and communication
-//! cost (the two x-axes of Figs. 3–6).
+//! Every algorithm is a message-driven [`behavior::AgentBehavior`]: a
+//! per-agent state machine the runtime activates on token arrival. The
+//! runtime itself — routing, latency, fault injection, busy-agent queuing,
+//! recording and stop rules, on either the DES or the real-thread
+//! substrate — lives in [`crate::engine`] and is shared by all seven
+//! algorithms; the files in this module contain only the per-activation
+//! math of each method.
 
 pub mod api_bcd;
+pub mod behavior;
 pub mod common;
 pub mod dgd;
-pub mod driver;
 pub mod i_bcd;
 pub mod pwadmm;
 pub mod replicate;
 pub mod wadmm;
 pub mod wpg;
-
-use crate::config::ExperimentConfig;
-use crate::data::AgentData;
-use crate::graph::Topology;
-use crate::metrics::Trace;
-use crate::model::{Problem, Task};
-use crate::solver::LocalSolver;
-use crate::util::rng::Rng;
 
 /// Algorithm selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,8 +41,14 @@ pub enum AlgoKind {
 }
 
 impl AlgoKind {
+    /// The canonical names accepted by [`AlgoKind::by_name`] (one per
+    /// algorithm; aliases exist too). Quoted by config/CLI parse errors.
+    pub const VALID_NAMES: &'static str =
+        "i-bcd, api-bcd, gapi-bcd, wpg, dgd, wadmm, pw-admm";
+
+    /// Case-insensitive lookup by canonical name or alias.
     pub fn by_name(s: &str) -> Option<AlgoKind> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "i-bcd" | "ibcd" => Some(AlgoKind::IBcd),
             "api-bcd" | "apibcd" => Some(AlgoKind::ApiBcd),
             "gapi-bcd" | "gapibcd" => Some(AlgoKind::GApiBcd),
@@ -85,47 +85,20 @@ impl AlgoKind {
     }
 }
 
-/// Everything an algorithm needs to run one experiment.
-pub struct AlgoContext<'a> {
-    pub topo: &'a Topology,
-    pub shards: &'a [AgentData],
-    pub problem: &'a Problem,
-    pub task: Task,
-    pub cfg: &'a ExperimentConfig,
-    pub solver: &'a mut dyn LocalSolver,
-    pub rng: Rng,
-}
-
-impl<'a> AlgoContext<'a> {
-    /// Flattened model dimension p·c.
-    pub fn dim(&self) -> usize {
-        self.shards[0].features * self.shards[0].classes
-    }
-
-    pub fn n(&self) -> usize {
-        self.shards.len()
-    }
-}
-
-/// A runnable decentralized-learning algorithm.
-pub trait Algorithm {
-    fn kind(&self) -> AlgoKind;
-
-    /// Execute until the config's stop rule trips; return the metric trace.
-    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace>;
-}
-
-/// Instantiate an algorithm by kind.
-pub fn make(kind: AlgoKind) -> Box<dyn Algorithm> {
-    match kind {
-        AlgoKind::IBcd => Box::new(i_bcd::IBcd),
-        AlgoKind::ApiBcd => Box::new(api_bcd::ApiBcd { gradient_variant: false }),
-        AlgoKind::GApiBcd => Box::new(api_bcd::ApiBcd { gradient_variant: true }),
-        AlgoKind::Wpg => Box::new(wpg::Wpg),
-        AlgoKind::Dgd => Box::new(dgd::Dgd),
-        AlgoKind::Wadmm => Box::new(wadmm::Wadmm),
-        AlgoKind::PwAdmm => Box::new(pwadmm::PwAdmm),
-    }
+/// Parse a comma-separated algorithm list; the error names every valid
+/// algorithm (shared by the config-file and CLI parsers).
+pub fn parse_algo_list(list: &str) -> anyhow::Result<Vec<AlgoKind>> {
+    list.split(',')
+        .map(|a| {
+            let a = a.trim();
+            AlgoKind::by_name(a).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown algorithm '{a}' (valid: {})",
+                    AlgoKind::VALID_NAMES
+                )
+            })
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -145,8 +118,26 @@ mod tests {
                 AlgoKind::PwAdmm => "pw-admm",
             };
             assert_eq!(AlgoKind::by_name(name), Some(k));
-            assert_eq!(make(k).kind(), k);
+            assert_eq!(behavior::spec_for(k).kind(), k);
+            assert!(AlgoKind::VALID_NAMES.contains(name));
         }
         assert_eq!(AlgoKind::by_name("sgd"), None);
+    }
+
+    #[test]
+    fn by_name_is_case_insensitive() {
+        assert_eq!(AlgoKind::by_name("API-BCD"), Some(AlgoKind::ApiBcd));
+        assert_eq!(AlgoKind::by_name("Walkman"), Some(AlgoKind::Wadmm));
+        assert_eq!(AlgoKind::by_name("GAPI-bcd"), Some(AlgoKind::GApiBcd));
+    }
+
+    #[test]
+    fn algo_list_errors_name_the_valid_set() {
+        let err = parse_algo_list("api-bcd,sgd").unwrap_err().to_string();
+        assert!(err.contains("sgd") && err.contains("i-bcd") && err.contains("pw-admm"), "{err}");
+        assert_eq!(
+            parse_algo_list("API-BCD, wpg").unwrap(),
+            vec![AlgoKind::ApiBcd, AlgoKind::Wpg]
+        );
     }
 }

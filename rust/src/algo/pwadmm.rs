@@ -14,90 +14,94 @@
 //! z_m⁺     = z_m + (1/N)[(x_i⁺ + y_i⁺/β) − (x_i + y_i/β)]
 //! ```
 //!
-//! Asynchrony semantics (event queue + agent busy-locks) are shared with
-//! API-BCD. See DESIGN.md §3 for how this maps to [18].
+//! Asynchrony semantics (event queue + agent busy-locks) are engine-owned
+//! and shared with API-BCD. See DESIGN.md §3 for how this maps to [18].
 
-use super::common::{mean_vec, Recorder, Router, should_stop};
-use super::{AlgoContext, AlgoKind, Algorithm};
-use crate::metrics::Trace;
-use crate::sim::{AgentAvailability, EventQueue};
+use super::behavior::{
+    ActivationCtx, AgentBehavior, BehaviorEnv, BehaviorSpec, EvalModel, Served, TokenMsg,
+};
+use super::common::mean_vec_into;
+use super::AlgoKind;
+use crate::config::ExperimentConfig;
 
-pub struct PwAdmm;
+pub struct PwAdmmSpec;
 
-impl Algorithm for PwAdmm {
+impl BehaviorSpec for PwAdmmSpec {
     fn kind(&self) -> AlgoKind {
         AlgoKind::PwAdmm
     }
 
-    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
-        let dim = ctx.dim();
-        let n = ctx.n();
-        let m_walks = ctx.cfg.walks.max(1);
-        let beta = ctx.cfg.beta as f32;
-        let mut rng = ctx.rng.fork(6);
+    fn walks(&self, cfg: &ExperimentConfig) -> usize {
+        cfg.walks.max(1)
+    }
 
-        let mut xs = vec![vec![0.0f32; dim]; n];
-        let mut ys = vec![vec![0.0f32; dim]; n];
-        let mut zs = vec![vec![0.0f32; dim]; m_walks];
-        let mut zhat = vec![vec![vec![0.0f32; dim]; m_walks]; n];
+    fn eval_model(&self) -> EvalModel {
+        EvalModel::AgentMean
+    }
 
-        let mut router = Router::new(ctx.cfg.routing, ctx.topo, m_walks);
-        let mut queue = EventQueue::new();
-        for m in 0..m_walks {
-            queue.push(0.0, m, router.start(m, ctx.topo, &mut rng));
+    fn record_tau(&self, cfg: &ExperimentConfig) -> f64 {
+        cfg.beta
+    }
+
+    fn make_agent(&self, _agent: usize, env: &BehaviorEnv<'_>) -> Box<dyn AgentBehavior> {
+        let m_walks = self.walks(env.cfg);
+        Box::new(PwAdmmAgent {
+            beta: env.cfg.beta as f32,
+            n: env.n as f32,
+            x: vec![0.0; env.dim],
+            y: vec![0.0; env.dim],
+            zhat: vec![vec![0.0; env.dim]; m_walks],
+            zbar_buf: vec![0.0; env.dim],
+            tz_buf: vec![0.0; env.dim],
+            x_new: vec![0.0; env.dim],
+        })
+    }
+}
+
+struct PwAdmmAgent {
+    beta: f32,
+    n: f32,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    zhat: Vec<Vec<f32>>,
+    zbar_buf: Vec<f32>,
+    tz_buf: Vec<f32>,
+    x_new: Vec<f32>,
+}
+
+impl AgentBehavior for PwAdmmAgent {
+    fn on_activation(
+        &mut self,
+        msg: &mut TokenMsg,
+        ctx: &mut ActivationCtx<'_>,
+    ) -> anyhow::Result<Served> {
+        let m = msg.id;
+        let beta = self.beta;
+        self.zhat[m].copy_from_slice(&msg.payload);
+
+        // v = mean(ẑ) − y/β; prox with M=1 at center v.
+        mean_vec_into(&self.zhat, &mut self.zbar_buf);
+        for j in 0..self.x.len() {
+            self.tz_buf[j] = beta * (self.zbar_buf[j] - self.y[j] / beta);
         }
-        let mut avail = AgentAvailability::new(n);
+        let wall = ctx
+            .compute
+            .prox_into(ctx.agent, &self.x, &self.tz_buf, beta, &mut self.x_new)?;
 
-        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
-        let mut recorder = Recorder::new("PW-ADMM", ctx.cfg.eval_every, beta as f64);
-        let (mut comm, mut k) = (0u64, 0u64);
-        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, &zs, &mean_vec(&xs));
-
-        let mut tzsum = vec![0.0f32; dim];
-        while let Some(ev) = queue.pop() {
-            if should_stop(&ctx.cfg.stop, k, ev.time, comm) {
-                break;
-            }
-            let (i, m) = (ev.agent, ev.token);
-            zhat[i][m].copy_from_slice(&zs[m]);
-
-            // v = mean(ẑ) − y/β; prox with M=1 at center v.
-            let zbar = mean_vec(&zhat[i]);
-            for j in 0..dim {
-                tzsum[j] = beta * (zbar[j] - ys[i][j] / beta);
-            }
-            let out = ctx.solver.prox(&ctx.shards[i], &xs[i], &tzsum, beta)?;
-            let compute = ctx.cfg.timing.duration(out.wall_secs, &mut rng);
-            let (_, end) = avail.serve(i, ev.time, compute);
-
-            let x_new = out.w;
-            let mut y_new = vec![0.0f32; dim];
-            for j in 0..dim {
-                y_new[j] = ys[i][j] + beta * (x_new[j] - zbar[j]);
-            }
-            for j in 0..dim {
-                let after = x_new[j] + y_new[j] / beta;
-                let before = xs[i][j] + ys[i][j] / beta;
-                zs[m][j] += (after - before) / n as f32;
-            }
-            zhat[i][m].copy_from_slice(&zs[m]);
-            tracker.block_updated(i, &xs[i], &x_new);
-            xs[i] = x_new;
-            ys[i] = y_new;
-            k += 1;
-
-            let next = router.next(m, i, ctx.topo, &mut rng);
-            let mut t_next = end;
-            if next != i {
-                comm += 1;
-                t_next += ctx.cfg.latency.sample(&mut rng);
-            }
-            queue.push(t_next, m, next);
-
-            if recorder.due(k) {
-                recorder.record(ctx, k, end, comm, &mut tracker, &xs, &zs, &mean_vec(&xs));
-            }
+        for j in 0..self.x.len() {
+            let y_new = self.y[j] + beta * (self.x_new[j] - self.zbar_buf[j]);
+            let after = self.x_new[j] + y_new / beta;
+            let before = self.x[j] + self.y[j] / beta;
+            msg.payload[j] += (after - before) / self.n;
+            self.y[j] = y_new;
         }
-        Ok(recorder.finish())
+        self.zhat[m].copy_from_slice(&msg.payload);
+        ctx.block_updated(&self.x, &self.x_new);
+        std::mem::swap(&mut self.x, &mut self.x_new);
+        Ok(Served::update(wall))
+    }
+
+    fn block(&self) -> &[f32] {
+        &self.x
     }
 }

@@ -39,7 +39,7 @@ pub fn replicate(
     for &seed in seeds {
         let mut c = cfg.clone();
         c.seed = seed;
-        reports.push(crate::algo::driver::run_experiment(&c)?);
+        reports.push(crate::engine::run_experiment(&c)?);
     }
     let lower = reports[0].lower_is_better;
     let n_algos = reports[0].traces.len();

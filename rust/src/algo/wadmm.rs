@@ -13,73 +13,82 @@
 //! The x-update is exactly our proximal kernel with M = 1, center
 //! `v = z − y/β` (tzsum = β·v, tau_m = β) — artifact reuse by construction.
 
-use super::common::{Recorder, Router, should_stop};
-use super::{AlgoContext, AlgoKind, Algorithm};
-use crate::metrics::Trace;
+use super::behavior::{
+    ActivationCtx, AgentBehavior, BehaviorEnv, BehaviorSpec, EvalModel, Served, TokenMsg,
+};
+use super::AlgoKind;
+use crate::config::ExperimentConfig;
 
-pub struct Wadmm;
+pub struct WadmmSpec;
 
-impl Algorithm for Wadmm {
+impl BehaviorSpec for WadmmSpec {
     fn kind(&self) -> AlgoKind {
         AlgoKind::Wadmm
     }
 
-    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
-        let dim = ctx.dim();
-        let n = ctx.n();
-        let beta = ctx.cfg.beta as f32;
-        let mut rng = ctx.rng.fork(5);
+    fn walks(&self, _cfg: &ExperimentConfig) -> usize {
+        1
+    }
 
-        let mut xs = vec![vec![0.0f32; dim]; n];
-        let mut ys = vec![vec![0.0f32; dim]; n];
-        let mut z = vec![0.0f32; dim];
+    fn eval_model(&self) -> EvalModel {
+        EvalModel::Token
+    }
 
-        let mut router = Router::new(ctx.cfg.routing, ctx.topo, 1);
-        let mut agent = router.start(0, ctx.topo, &mut rng);
+    fn record_tau(&self, cfg: &ExperimentConfig) -> f64 {
+        cfg.beta
+    }
 
-        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
-        let mut recorder = Recorder::new("WADMM", ctx.cfg.eval_every, beta as f64);
-        let (mut time, mut comm, mut k) = (0.0f64, 0u64, 0u64);
-        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, std::slice::from_ref(&z), &z);
+    fn make_agent(&self, _agent: usize, env: &BehaviorEnv<'_>) -> Box<dyn AgentBehavior> {
+        Box::new(WadmmAgent {
+            beta: env.cfg.beta as f32,
+            n: env.n as f32,
+            x: vec![0.0; env.dim],
+            y: vec![0.0; env.dim],
+            tz_buf: vec![0.0; env.dim],
+            x_new: vec![0.0; env.dim],
+        })
+    }
+}
 
-        let mut tzsum = vec![0.0f32; dim];
-        while !should_stop(&ctx.cfg.stop, k, time, comm) {
-            let i = agent;
-            // x-update: prox at center v = z − y_i/β.
-            for j in 0..dim {
-                tzsum[j] = beta * (z[j] - ys[i][j] / beta);
-            }
-            let out = ctx.solver.prox(&ctx.shards[i], &xs[i], &tzsum, beta)?;
-            let compute = ctx.cfg.timing.duration(out.wall_secs, &mut rng);
+struct WadmmAgent {
+    beta: f32,
+    n: f32,
+    x: Vec<f32>,
+    /// Dual variable y_i.
+    y: Vec<f32>,
+    tz_buf: Vec<f32>,
+    x_new: Vec<f32>,
+}
 
-            // y- and z-updates.
-            let x_new = out.w;
-            let mut y_new = vec![0.0f32; dim];
-            for j in 0..dim {
-                y_new[j] = ys[i][j] + beta * (x_new[j] - z[j]);
-            }
-            for j in 0..dim {
-                let after = x_new[j] + y_new[j] / beta;
-                let before = xs[i][j] + ys[i][j] / beta;
-                z[j] += (after - before) / n as f32;
-            }
-            tracker.block_updated(i, &xs[i], &x_new);
-            xs[i] = x_new;
-            ys[i] = y_new;
-            time += compute;
-            k += 1;
-
-            let next = router.next(0, i, ctx.topo, &mut rng);
-            if next != i {
-                comm += 1;
-                time += ctx.cfg.latency.sample(&mut rng);
-            }
-            agent = next;
-
-            if recorder.due(k) {
-                recorder.record(ctx, k, time, comm, &mut tracker, &xs, std::slice::from_ref(&z), &z);
-            }
+impl AgentBehavior for WadmmAgent {
+    fn on_activation(
+        &mut self,
+        msg: &mut TokenMsg,
+        ctx: &mut ActivationCtx<'_>,
+    ) -> anyhow::Result<Served> {
+        let z = &mut msg.payload;
+        let beta = self.beta;
+        // x-update: prox at center v = z − y_i/β.
+        for j in 0..z.len() {
+            self.tz_buf[j] = beta * (z[j] - self.y[j] / beta);
         }
-        Ok(recorder.finish())
+        let wall = ctx
+            .compute
+            .prox_into(ctx.agent, &self.x, &self.tz_buf, beta, &mut self.x_new)?;
+        // y- and z-updates (element-wise, in place).
+        for j in 0..z.len() {
+            let y_new = self.y[j] + beta * (self.x_new[j] - z[j]);
+            let after = self.x_new[j] + y_new / beta;
+            let before = self.x[j] + self.y[j] / beta;
+            z[j] += (after - before) / self.n;
+            self.y[j] = y_new;
+        }
+        ctx.block_updated(&self.x, &self.x_new);
+        std::mem::swap(&mut self.x, &mut self.x_new);
+        Ok(Served::update(wall))
+    }
+
+    fn block(&self) -> &[f32] {
+        &self.x
     }
 }

@@ -7,67 +7,79 @@
 //! a full proximal subproblem per activation, WPG does one gradient
 //! evaluation — cheaper per step, slower per unit progress.
 
-use super::common::{Recorder, Router, should_stop};
-use super::{AlgoContext, AlgoKind, Algorithm};
-use crate::config::RoutingRule;
-use crate::metrics::Trace;
+use super::behavior::{
+    ActivationCtx, AgentBehavior, BehaviorEnv, BehaviorSpec, EvalModel, Served, TokenMsg,
+};
+use super::AlgoKind;
+use crate::config::{ExperimentConfig, RoutingRule};
 
-pub struct Wpg;
+pub struct WpgSpec;
 
-impl Algorithm for Wpg {
+impl BehaviorSpec for WpgSpec {
     fn kind(&self) -> AlgoKind {
         AlgoKind::Wpg
     }
 
-    fn run(&self, ctx: &mut AlgoContext) -> anyhow::Result<Trace> {
-        let dim = ctx.dim();
-        let n = ctx.n();
-        let alpha = ctx.cfg.alpha as f32;
-        let mut rng = ctx.rng.fork(3);
+    fn walks(&self, _cfg: &ExperimentConfig) -> usize {
+        1
+    }
 
-        let mut xs = vec![vec![0.0f32; dim]; n];
-        let mut z = vec![0.0f32; dim];
+    /// WPG is defined on a predetermined cycle ([17]'s Hamiltonian
+    /// assumption) — force Cycle routing regardless of the config rule.
+    fn routing(&self, _cfg: &ExperimentConfig) -> RoutingRule {
+        RoutingRule::Cycle
+    }
 
-        // WPG is defined on a predetermined cycle ([17]'s Hamiltonian
-        // assumption) — force Cycle routing regardless of the config rule.
-        let mut router = Router::new(RoutingRule::Cycle, ctx.topo, 1);
-        let mut agent = router.start(0, ctx.topo, &mut rng);
+    fn eval_model(&self) -> EvalModel {
+        EvalModel::Token
+    }
 
-        // The penalty objective for WPG's trace uses the paper's τ_IS so the
-        // objective column is comparable with I-BCD's.
-        let tau = ctx.cfg.tau_ibcd;
-        let mut tracker = crate::model::ObjectiveTracker::new(ctx.task, n, dim);
-        let mut recorder = Recorder::new("WPG", ctx.cfg.eval_every, tau);
-        let (mut time, mut comm, mut k) = (0.0f64, 0u64, 0u64);
-        recorder.record(ctx, 0, 0.0, 0, &mut tracker, &xs, std::slice::from_ref(&z), &z);
+    /// The penalty objective for WPG's trace uses the paper's τ_IS so the
+    /// objective column is comparable with I-BCD's.
+    fn record_tau(&self, cfg: &ExperimentConfig) -> f64 {
+        cfg.tau_ibcd
+    }
 
-        while !should_stop(&ctx.cfg.stop, k, time, comm) {
-            // eq. (19): x_i ← zᵏ − α ∇f_i(zᵏ).
-            let g = ctx.solver.grad(&ctx.shards[agent], &z)?;
-            let compute = ctx.cfg.timing.duration(g.wall_secs, &mut rng);
-            let mut x_new = vec![0.0f32; dim];
-            for j in 0..dim {
-                x_new[j] = z[j] - alpha * g.w[j];
-            }
-            for j in 0..dim {
-                z[j] += (x_new[j] - xs[agent][j]) / n as f32;
-            }
-            tracker.block_updated(agent, &xs[agent], &x_new);
-            xs[agent] = x_new;
-            time += compute;
-            k += 1;
+    fn make_agent(&self, _agent: usize, env: &BehaviorEnv<'_>) -> Box<dyn AgentBehavior> {
+        Box::new(WpgAgent {
+            alpha: env.cfg.alpha as f32,
+            n: env.n as f32,
+            x: vec![0.0; env.dim],
+            x_new: vec![0.0; env.dim],
+            g_buf: vec![0.0; env.dim],
+        })
+    }
+}
 
-            let next = router.next(0, agent, ctx.topo, &mut rng);
-            if next != agent {
-                comm += 1;
-                time += ctx.cfg.latency.sample(&mut rng);
-            }
-            agent = next;
+struct WpgAgent {
+    alpha: f32,
+    n: f32,
+    x: Vec<f32>,
+    x_new: Vec<f32>,
+    g_buf: Vec<f32>,
+}
 
-            if recorder.due(k) {
-                recorder.record(ctx, k, time, comm, &mut tracker, &xs, std::slice::from_ref(&z), &z);
-            }
+impl AgentBehavior for WpgAgent {
+    fn on_activation(
+        &mut self,
+        msg: &mut TokenMsg,
+        ctx: &mut ActivationCtx<'_>,
+    ) -> anyhow::Result<Served> {
+        let z = &mut msg.payload;
+        // eq. (19): x_i ← zᵏ − α ∇f_i(zᵏ).
+        let wall = ctx.compute.grad_into(ctx.agent, z, &mut self.g_buf)?;
+        for j in 0..z.len() {
+            self.x_new[j] = z[j] - self.alpha * self.g_buf[j];
         }
-        Ok(recorder.finish())
+        for j in 0..z.len() {
+            z[j] += (self.x_new[j] - self.x[j]) / self.n;
+        }
+        ctx.block_updated(&self.x, &self.x_new);
+        std::mem::swap(&mut self.x, &mut self.x_new);
+        Ok(Served::update(wall))
+    }
+
+    fn block(&self) -> &[f32] {
+        &self.x
     }
 }

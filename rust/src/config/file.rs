@@ -15,7 +15,6 @@
 //! unknown keys are an error (config typos should fail loudly).
 
 use super::{ExperimentConfig, Preset, RoutingRule, SolverChoice};
-use crate::algo::AlgoKind;
 
 /// Parse a config file into (key, value) pairs.
 fn parse_kv(text: &str) -> anyhow::Result<Vec<(String, String)>> {
@@ -45,14 +44,15 @@ pub fn load(path: &str) -> anyhow::Result<ExperimentConfig> {
 pub fn from_str(text: &str) -> anyhow::Result<ExperimentConfig> {
     let kvs = parse_kv(text)?;
     let mut cfg = match kvs.iter().find(|(k, _)| k == "preset") {
-        Some((_, p)) => ExperimentConfig::preset(
-            Preset::by_name(p).ok_or_else(|| anyhow::anyhow!("unknown preset '{p}'"))?,
-        ),
+        Some((_, p)) => ExperimentConfig::preset(Preset::by_name(p).ok_or_else(|| {
+            anyhow::anyhow!("unknown preset '{p}' (valid: {})", Preset::VALID_NAMES)
+        })?),
         None => ExperimentConfig::default(),
     };
     for (k, v) in &kvs {
         apply(&mut cfg, k, v)?;
     }
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -127,15 +127,7 @@ fn apply(cfg: &mut ExperimentConfig, key: &str, v: &str) -> anyhow::Result<()> {
                 crate::sim::TimingModel::Fixed(v.parse().map_err(|_| bad("number"))?)
             }
         }
-        "algos" => {
-            cfg.algos = v
-                .split(',')
-                .map(|a| {
-                    AlgoKind::by_name(a.trim())
-                        .ok_or_else(|| anyhow::anyhow!("unknown algorithm '{a}'"))
-                })
-                .collect::<anyhow::Result<Vec<_>>>()?;
-        }
+        "algos" => cfg.algos = crate::algo::parse_algo_list(v)?,
         other => anyhow::bail!("unknown config key '{other}'"),
     }
     Ok(())
@@ -182,6 +174,27 @@ mod tests {
     #[test]
     fn unknown_key_fails_loudly() {
         assert!(from_str("walsk = 3\n").is_err());
+    }
+
+    #[test]
+    fn algo_and_preset_names_are_case_insensitive() {
+        let cfg = from_str("preset = \"FIG3\"\nalgos = \"API-BCD,Wpg\"\n").unwrap();
+        assert_eq!(cfg.profile, "cpusmall");
+        assert_eq!(cfg.algos.len(), 2);
+    }
+
+    #[test]
+    fn unknown_names_list_the_valid_set() {
+        let err = from_str("preset = \"fig9\"\n").unwrap_err().to_string();
+        assert!(err.contains("fig9") && err.contains("fig3"), "{err}");
+        let err = from_str("algos = \"sgd\"\n").unwrap_err().to_string();
+        assert!(err.contains("sgd") && err.contains("api-bcd"), "{err}");
+    }
+
+    #[test]
+    fn degenerate_agent_count_rejected_at_load() {
+        let err = from_str("agents = 1\n").unwrap_err().to_string();
+        assert!(err.contains("agents") && err.contains(">= 2"), "{err}");
     }
 
     #[test]

@@ -148,8 +148,14 @@ pub enum Preset {
 }
 
 impl Preset {
+    /// The names accepted by [`Preset::by_name`] — quoted by config/CLI
+    /// parse errors.
+    pub const VALID_NAMES: &'static str =
+        "fig3/cpusmall, fig4/cadata, fig5/ijcnn1, fig6/usps, test_ls, test_logit";
+
+    /// Case-insensitive lookup by figure or dataset name.
     pub fn by_name(s: &str) -> Option<Preset> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "fig3" | "cpusmall" => Some(Preset::Fig3Cpusmall),
             "fig4" | "cadata" => Some(Preset::Fig4Cadata),
             "fig5" | "ijcnn1" => Some(Preset::Fig5Ijcnn1),
@@ -264,6 +270,32 @@ impl ExperimentConfig {
         }
     }
 
+    /// Reject configurations the runtime cannot honor. Called at config
+    /// load and by the experiment builder, so a bad value fails loudly
+    /// instead of silently desyncing (e.g. `agents < 2` used to build the
+    /// topology on a clamped agent count while partitioning data on the
+    /// raw one).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.agents >= 2,
+            "config: `agents` must be >= 2 for a decentralized run (got {}); \
+             a single agent has no graph to walk and the data partition \
+             would not match the topology",
+            self.agents
+        );
+        anyhow::ensure!(
+            self.walks >= 1,
+            "config: `walks` must be >= 1 (got {})",
+            self.walks
+        );
+        anyhow::ensure!(
+            self.eval_every >= 1,
+            "config: `eval-every` must be >= 1 (got {})",
+            self.eval_every
+        );
+        Ok(())
+    }
+
     /// τ for a given algorithm (the paper tunes I-BCD and API-BCD
     /// separately; gossip/ADMM baselines use their own parameters).
     pub fn tau_for(&self, kind: AlgoKind) -> f64 {
@@ -301,6 +333,24 @@ mod tests {
         assert_eq!(Preset::by_name("fig4"), Some(Preset::Fig4Cadata));
         assert_eq!(Preset::by_name("usps"), Some(Preset::Fig6Usps));
         assert_eq!(Preset::by_name("nope"), None);
+    }
+
+    #[test]
+    fn preset_lookup_is_case_insensitive() {
+        assert_eq!(Preset::by_name("FIG3"), Some(Preset::Fig3Cpusmall));
+        assert_eq!(Preset::by_name("Test_LS"), Some(Preset::TestLs));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.validate().is_ok());
+        cfg.agents = 1;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("agents") && err.contains(">= 2"), "{err}");
+        cfg.agents = 2;
+        cfg.walks = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

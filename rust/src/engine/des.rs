@@ -1,0 +1,290 @@
+//! The discrete-event substrate: one deterministic event loop for every
+//! algorithm in the family.
+//!
+//! The paper's "running time" axis (§5) is *modelled*: per-hop latency
+//! ~ U(10⁻⁵,10⁻⁴) s, local computation timed by the
+//! [`crate::sim::TimingModel`]. Asynchrony semantics (API-BCD Alg. 2):
+//! each token is an independent event stream and an agent busy computing
+//! makes a concurrently-arriving token queue (FIFO) until it frees — the
+//! interaction that distinguishes parallel walks from M independent runs.
+//! The virtual counter `k` counts local updates across all walks (paper
+//! footnote 1).
+//!
+//! This loop owns — once, for all seven algorithms — token routing
+//! ([`Router`]), fault injection (retransmissions on lossy links,
+//! re-routing around dropped agents via [`Membership`]), the busy-agent
+//! queue ([`AgentAvailability`]), activation counting, recording cadence
+//! and stop rules. The algorithms only see [`TokenMsg`]s through their
+//! [`AgentBehavior::on_activation`] callbacks.
+
+use super::{should_stop, Recorder, Router};
+use crate::algo::behavior::{
+    spec_for, ActivationCtx, AgentBehavior, BehaviorEnv, Compute, EvalModel, Outgoing, TokenMsg,
+};
+use crate::algo::common::mean_vec_into;
+use crate::algo::AlgoKind;
+use crate::config::ExperimentConfig;
+use crate::data::AgentData;
+use crate::graph::Topology;
+use crate::metrics::Trace;
+use crate::model::{ObjectiveTracker, Problem, Task};
+use crate::sim::{AgentAvailability, EventQueue, Membership};
+use crate::solver::LocalSolver;
+use crate::util::rng::Rng;
+
+/// One token-service record (the Fig. 2 timeline view).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WalkEvent {
+    pub k: u64,
+    pub token: usize,
+    pub agent: usize,
+    pub arrival: f64,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// DES compute path: the solver is called directly on the coordinator
+/// thread (PJRT artifacts or native — both behind [`LocalSolver`]).
+struct DirectCompute<'a> {
+    solver: &'a mut dyn LocalSolver,
+    shards: &'a [AgentData],
+}
+
+impl Compute for DirectCompute<'_> {
+    fn prox_into(
+        &mut self,
+        agent: usize,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<f64> {
+        self.solver
+            .prox_into(&self.shards[agent], w0, tzsum, tau_m, out)
+    }
+
+    fn grad_into(&mut self, agent: usize, w: &[f32], out: &mut Vec<f32>) -> anyhow::Result<f64> {
+        self.solver.grad_into(&self.shards[agent], w, out)
+    }
+}
+
+/// In-flight message store: the event queue carries (time, slot, agent)
+/// and the payloads live here. Token slots are stable (walk m ↔ slot m, for
+/// the whole run — which also makes the store the engine's view of every
+/// token's current value); gossip slots recycle through a free list.
+#[derive(Default)]
+struct MsgStore {
+    slots: Vec<Option<TokenMsg>>,
+    free: Vec<usize>,
+}
+
+impl MsgStore {
+    fn insert(&mut self, msg: TokenMsg) -> usize {
+        match self.free.pop() {
+            Some(slot) => {
+                self.slots[slot] = Some(msg);
+                slot
+            }
+            None => {
+                self.slots.push(Some(msg));
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    fn take(&mut self, slot: usize) -> TokenMsg {
+        self.slots[slot].take().expect("message slot occupied")
+    }
+
+    fn put(&mut self, slot: usize, msg: TokenMsg) {
+        debug_assert!(self.slots[slot].is_none());
+        self.slots[slot] = Some(msg);
+    }
+
+    fn release(&mut self, slot: usize) {
+        debug_assert!(self.slots[slot].is_none());
+        self.free.push(slot);
+    }
+
+    fn payload(&self, slot: usize) -> &[f32] {
+        &self.slots[slot].as_ref().expect("token slot occupied").payload
+    }
+}
+
+/// Run one algorithm on the DES substrate. `collect_events` additionally
+/// returns the per-activation [`WalkEvent`] log (timeline illustration);
+/// normal runs skip it so the hot loop stays allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run(
+    cfg: &ExperimentConfig,
+    topo: &Topology,
+    shards: &[AgentData],
+    problem: &Problem,
+    task: Task,
+    solver: &mut dyn LocalSolver,
+    kind: AlgoKind,
+    collect_events: bool,
+) -> anyhow::Result<(Trace, Vec<WalkEvent>)> {
+    let spec = spec_for(kind);
+    let dim = shards[0].features * shards[0].classes;
+    let n = shards.len();
+    let walks = spec.walks(cfg);
+    let routing = spec.routing(cfg);
+    let mut rng = Rng::new(cfg.seed ^ ((kind as u64) << 8)).fork(kind as u64 + 1);
+
+    let env = BehaviorEnv {
+        cfg,
+        topo,
+        shards,
+        task,
+        dim,
+        n,
+    };
+    let mut agents: Vec<Box<dyn AgentBehavior>> =
+        (0..n).map(|i| spec.make_agent(i, &env)).collect();
+
+    let faults = cfg.faults;
+    let mut membership = Membership::new(n, faults, &mut rng);
+    let mut avail = AgentAvailability::new(n);
+    let mut queue = EventQueue::new();
+    let mut store = MsgStore::default();
+    let mut router = Router::new(routing, topo, walks.max(1));
+    let mut tracker = ObjectiveTracker::new(task, n, dim);
+    let mut recorder = Recorder::new(kind.name(), cfg.eval_every, spec.record_tau(cfg));
+    let eval_model = spec.eval_model();
+    let (mut comm, mut k) = (0u64, 0u64);
+
+    // Recording scratch (cadence-bound; reused across records).
+    let mut eval_w = vec![0.0f32; dim];
+    let mut xs_snap = vec![vec![0.0f32; dim]; n];
+    let mut zs_snap = vec![vec![0.0f32; dim]; walks.max(1)];
+
+    // Initial point: all state is zero (paper init).
+    {
+        let objective = tracker.objective(shards, &xs_snap, &zs_snap, recorder.tau());
+        recorder.record(0, 0.0, 0, objective, problem.metric(&eval_w));
+    }
+
+    // Inject the initial messages: M zero tokens (token walks), or every
+    // agent's round-0 block to each neighbor (gossip kickoff).
+    if walks > 0 {
+        for m in 0..walks {
+            let at = router.start(m, topo, &mut rng);
+            let slot = store.insert(TokenMsg {
+                id: m,
+                round: 0,
+                payload: vec![0.0; dim],
+                cycle_pos: 0,
+            });
+            debug_assert_eq!(slot, m);
+            queue.push(0.0, slot, at);
+        }
+    } else {
+        for i in 0..n {
+            for &j in topo.neighbors(i) {
+                let (attempts, retry) = faults.transmit(&mut rng);
+                comm += attempts;
+                let slot = store.insert(TokenMsg {
+                    id: i,
+                    round: 0,
+                    payload: vec![0.0; dim],
+                    cycle_pos: 0,
+                });
+                queue.push(retry + cfg.latency.sample(&mut rng), slot, j);
+            }
+        }
+    }
+
+    let mut sends: Vec<Outgoing> = Vec::new();
+    let mut compute = DirectCompute { solver, shards };
+    let mut events = Vec::new();
+
+    while let Some(ev) = queue.pop() {
+        if should_stop(&cfg.stop, k, ev.time, comm) {
+            break;
+        }
+        let (i, slot) = (ev.agent, ev.token);
+        let mut msg = store.take(slot);
+        let served = {
+            let mut ctx = ActivationCtx {
+                agent: i,
+                compute: &mut compute,
+                tracker: Some(&mut tracker),
+                out: &mut sends,
+            };
+            agents[i].on_activation(&mut msg, &mut ctx)?
+        };
+
+        // Busy-agent FIFO: service starts when the agent frees.
+        let (start, end) = if served.updates > 0 {
+            let dur = cfg.timing.duration(served.compute_secs, &mut rng);
+            avail.serve(i, ev.time, dur)
+        } else {
+            (ev.time, ev.time)
+        };
+        k += served.updates as u64;
+        if collect_events && served.updates > 0 {
+            events.push(WalkEvent {
+                k,
+                token: msg.id,
+                agent: i,
+                arrival: ev.time,
+                start,
+                end,
+            });
+        }
+
+        // Forward the serviced token (with fault handling: retransmissions
+        // on lossy links, re-routing around dropped agents).
+        if served.forward {
+            let preferred = router.next(msg.id, i, topo, &mut rng);
+            let next = if faults.is_none() {
+                preferred
+            } else {
+                membership.maybe_drop(i, end, &mut rng);
+                membership.route_live(topo, i, preferred, end, &mut rng)
+            };
+            let mut t_next = end;
+            if next != i {
+                let (attempts, retry) = faults.transmit(&mut rng);
+                comm += attempts;
+                t_next += retry + cfg.latency.sample(&mut rng);
+            }
+            store.put(slot, msg);
+            queue.push(t_next, slot, next);
+        } else {
+            drop(msg);
+            store.release(slot);
+        }
+
+        // Gossip unicasts emitted by the behavior.
+        for out in sends.drain(..) {
+            let (attempts, retry) = faults.transmit(&mut rng);
+            comm += attempts;
+            let s = store.insert(out.msg);
+            queue.push(end + retry + cfg.latency.sample(&mut rng), s, out.dest);
+        }
+
+        if recorder.due_span(k, served.updates) {
+            for (snap, a) in xs_snap.iter_mut().zip(&agents) {
+                snap.copy_from_slice(a.block());
+            }
+            match eval_model {
+                EvalModel::AgentMean => mean_vec_into(&xs_snap, &mut eval_w),
+                EvalModel::Token => eval_w.copy_from_slice(store.payload(0)),
+            }
+            if walks > 0 {
+                for (m, snap) in zs_snap.iter_mut().enumerate() {
+                    snap.copy_from_slice(store.payload(m));
+                }
+            } else {
+                // Gossip has no tokens; the penalty column uses the agent
+                // mean as the single consensus vector.
+                zs_snap[0].copy_from_slice(&eval_w);
+            }
+            let objective = tracker.objective(shards, &xs_snap, &zs_snap, recorder.tau());
+            recorder.record(k, end, comm, objective, problem.metric(&eval_w));
+        }
+    }
+    Ok((recorder.finish(), events))
+}

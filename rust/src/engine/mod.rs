@@ -1,0 +1,439 @@
+//! The unified agent-engine runtime.
+//!
+//! One event-driven runtime, every algorithm on both substrates: the
+//! algorithms are per-agent [`crate::algo::behavior::AgentBehavior`] state
+//! machines, and this module owns *everything else* — exactly once:
+//!
+//! * [`des`] — the deterministic discrete-event substrate: event queue,
+//!   latency model, busy-agent FIFO queuing, token routing, fault
+//!   injection ([`crate::sim::FaultModel`]/[`crate::sim::Membership`]),
+//!   recording and stop rules.
+//! * [`threads`] — the real-asynchrony substrate: each agent an OS thread,
+//!   tokens as mpsc messages, compute through the
+//!   [`crate::solver::SolverClient`] service with buffer recycling.
+//!
+//! The public entry point is the builder:
+//!
+//! ```no_run
+//! use apibcd::prelude::*;
+//!
+//! let cfg = ExperimentConfig::preset(Preset::Fig3Cpusmall);
+//! let report = Experiment::builder(cfg)
+//!     .substrate(Substrate::Des)
+//!     .run()
+//!     .unwrap();
+//! println!("final NMSE: {:.4}", report.traces[0].last_metric());
+//! ```
+
+pub mod des;
+pub mod threads;
+
+pub use des::WalkEvent;
+
+use crate::algo::AlgoKind;
+use crate::config::{ExperimentConfig, RoutingRule, SolverChoice};
+use crate::data::{Dataset, DatasetProfile, Partition};
+use crate::graph::Topology;
+use crate::metrics::{RunReport, Trace, TracePoint};
+use crate::model::Problem;
+use crate::solver::{LocalSolver, NativeSolver, PjrtSolver, SolverService};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Which runtime executes the behaviors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Substrate {
+    /// Deterministic discrete-event simulation (the paper's §5 model:
+    /// simulated time and communication axes, reproducible per seed).
+    #[default]
+    Des,
+    /// Real OS threads: wall-clock time axis, true interleavings, the
+    /// solver behind a serialized service thread.
+    Threads,
+}
+
+/// Namespace for the builder-style experiment API.
+pub struct Experiment;
+
+impl Experiment {
+    pub fn builder(cfg: ExperimentConfig) -> ExperimentBuilder {
+        ExperimentBuilder {
+            cfg,
+            substrate: Substrate::Des,
+        }
+    }
+}
+
+/// Configures and launches one experiment: every configured algorithm runs
+/// on the chosen substrate and contributes one trace to the report.
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+    substrate: Substrate,
+}
+
+impl ExperimentBuilder {
+    pub fn substrate(mut self, s: Substrate) -> Self {
+        self.substrate = s;
+        self
+    }
+
+    /// Override the algorithm list from the config.
+    pub fn algos(mut self, algos: &[AlgoKind]) -> Self {
+        self.cfg.algos = algos.to_vec();
+        self
+    }
+
+    pub fn run(self) -> anyhow::Result<RunReport> {
+        let cfg = self.cfg;
+        // Workload::build validates the config — every entry path goes
+        // through it.
+        let workload = Workload::build(&cfg)?;
+        let mut traces = Vec::new();
+        match self.substrate {
+            Substrate::Des => {
+                let mut solver = build_solver(&cfg, workload.profile)?;
+                for &kind in &cfg.algos {
+                    let (trace, _) = des::run(
+                        &cfg,
+                        &workload.topo,
+                        &workload.partition.shards,
+                        &workload.problem,
+                        workload.profile.task,
+                        solver.as_mut(),
+                        kind,
+                        false,
+                    )?;
+                    traces.push(trace);
+                }
+            }
+            Substrate::Threads => {
+                anyhow::ensure!(
+                    cfg.stop.max_activations < u64::MAX
+                        || cfg.stop.max_comm < u64::MAX
+                        || cfg.stop.max_sim_time.is_finite(),
+                    "the thread substrate needs a finite `activations`, `max-comm`, or \
+                     `max-sim-time` stop rule"
+                );
+                let shards = Arc::new(workload.partition.shards.clone());
+                let profile = workload.profile;
+                let cfg2 = cfg.clone();
+                let service =
+                    SolverService::spawn(move || build_solver(&cfg2, profile), shards.clone())?;
+                for &kind in &cfg.algos {
+                    traces.push(threads::run(
+                        &cfg,
+                        kind,
+                        &workload.topo,
+                        shards.clone(),
+                        &workload.problem,
+                        workload.profile.task,
+                        service.client(),
+                    )?);
+                }
+                service.shutdown();
+            }
+        }
+        Ok(RunReport {
+            experiment: cfg.name.clone(),
+            traces,
+            metric_name: workload.profile.task.metric_name(),
+            lower_is_better: workload.profile.task.lower_is_better(),
+        })
+    }
+}
+
+/// Run one experiment on the DES substrate — shorthand for
+/// `Experiment::builder(cfg.clone()).run()`, kept for callers that don't
+/// need builder options.
+pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunReport> {
+    Experiment::builder(cfg.clone()).run()
+}
+
+/// Run a single algorithm on the DES substrate and also return the
+/// walk-event log (used by `repro timeline` to reproduce the Fig. 2
+/// local-copy evolution illustration).
+pub fn run_with_events(
+    cfg: &ExperimentConfig,
+    kind: AlgoKind,
+) -> anyhow::Result<(Trace, Vec<WalkEvent>)> {
+    let workload = Workload::build(cfg)?;
+    let mut solver = build_solver(cfg, workload.profile)?;
+    des::run(
+        cfg,
+        &workload.topo,
+        &workload.partition.shards,
+        &workload.problem,
+        workload.profile.task,
+        solver.as_mut(),
+        kind,
+        true,
+    )
+}
+
+/// Resolved (data, topology, problem) for a config — shared by both
+/// substrates and the benches.
+pub struct Workload {
+    pub profile: DatasetProfile,
+    pub dataset: Dataset,
+    pub partition: Partition,
+    pub topo: Topology,
+    pub problem: Problem,
+}
+
+impl Workload {
+    pub fn build(cfg: &ExperimentConfig) -> anyhow::Result<Workload> {
+        cfg.validate()?;
+        let profile = DatasetProfile::by_name(&cfg.profile)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset profile '{}'", cfg.profile))?;
+        let dataset = Dataset::load(profile, &cfg.data_dir, cfg.seed)?;
+        let partition = Partition::new(&dataset, cfg.agents, cfg.partition)?;
+        let mut rng = Rng::new(cfg.seed ^ 0x70_70);
+        let topo = Topology::by_kind(&cfg.topology, cfg.agents, cfg.xi, &mut rng)?;
+        let problem = Problem::from_dataset(&dataset);
+        Ok(Workload {
+            profile,
+            dataset,
+            partition,
+            topo,
+            problem,
+        })
+    }
+}
+
+/// Build the configured solver (artifact-backed when possible).
+pub fn build_solver(
+    cfg: &ExperimentConfig,
+    profile: DatasetProfile,
+) -> anyhow::Result<Box<dyn LocalSolver>> {
+    let manifest_path = format!("{}/manifest.json", cfg.artifacts_dir);
+    let artifacts_present = std::path::Path::new(&manifest_path).exists();
+    match cfg.solver {
+        SolverChoice::Native => Ok(Box::new(NativeSolver::new(profile.task, cfg.inner_k))),
+        SolverChoice::Pjrt => Ok(Box::new(PjrtSolver::new(
+            &cfg.artifacts_dir,
+            profile.name,
+            profile.task,
+        )?)),
+        SolverChoice::Auto => {
+            if artifacts_present {
+                match PjrtSolver::new(&cfg.artifacts_dir, profile.name, profile.task) {
+                    Ok(s) => Ok(Box::new(s)),
+                    Err(e) => {
+                        eprintln!(
+                            "note: PJRT solver unavailable for '{}' ({e}); using native",
+                            profile.name
+                        );
+                        Ok(Box::new(NativeSolver::new(profile.task, cfg.inner_k)))
+                    }
+                }
+            } else {
+                Ok(Box::new(NativeSolver::new(profile.task, cfg.inner_k)))
+            }
+        }
+    }
+}
+
+/// Token router: deterministic cycle or a Markov chain per walk. Owned by
+/// the DES engine; the thread substrate carries cycle positions with the
+/// tokens instead.
+pub struct Router {
+    rule: RoutingRule,
+    /// Traversal cycle (only for `Cycle`); `positions[m]` is walk m's index.
+    cycle: Vec<usize>,
+    positions: Vec<usize>,
+}
+
+impl Router {
+    /// `walks` independent token streams on `topo`. For the deterministic
+    /// rule, walk m starts at offset `m·|cycle|/M` around the shared cycle
+    /// (spreads tokens out, matching the parallel-walk illustrations).
+    pub fn new(rule: RoutingRule, topo: &Topology, walks: usize) -> Router {
+        let cycle = match rule {
+            RoutingRule::Cycle => topo.traversal_cycle(),
+            _ => Vec::new(),
+        };
+        let positions = (0..walks)
+            .map(|m| {
+                if cycle.is_empty() {
+                    0
+                } else {
+                    m * cycle.len() / walks
+                }
+            })
+            .collect();
+        Router {
+            rule,
+            cycle,
+            positions,
+        }
+    }
+
+    /// Walk m's starting agent.
+    pub fn start(&self, m: usize, topo: &Topology, rng: &mut Rng) -> usize {
+        match self.rule {
+            RoutingRule::Cycle => self.cycle[self.positions[m]],
+            _ => rng.below(topo.n()),
+        }
+    }
+
+    /// Advance walk m from `current`; returns the next agent (always a
+    /// neighbor — a hop over one link).
+    pub fn next(&mut self, m: usize, current: usize, topo: &Topology, rng: &mut Rng) -> usize {
+        match self.rule {
+            RoutingRule::Cycle => {
+                let pos = &mut self.positions[m];
+                cycle_resync(&self.cycle, pos, current);
+                cycle_advance(&self.cycle, pos)
+            }
+            RoutingRule::Uniform => topo.uniform_next(current, rng),
+            RoutingRule::Metropolis => topo.metropolis_next(current, rng),
+        }
+    }
+}
+
+/// Re-anchor a walk's cycle position to `current` when fault rerouting
+/// moved the token off the cycle (first occurrence wins). Shared by the
+/// DES [`Router`] and the thread substrate's token-carried positions so
+/// the resync invariant cannot drift between them.
+pub fn cycle_resync(cycle: &[usize], pos: &mut usize, current: usize) {
+    if cycle[*pos] != current {
+        if let Some(p) = cycle.iter().position(|&u| u == current) {
+            *pos = p;
+        }
+    }
+}
+
+/// Advance one hop along the traversal cycle; returns the next agent.
+pub fn cycle_advance(cycle: &[usize], pos: &mut usize) -> usize {
+    *pos = (*pos + 1) % cycle.len();
+    cycle[*pos]
+}
+
+/// Records trace points at the configured cadence. The engine computes the
+/// objective/metric values; the recorder owns the trace and the cadence.
+pub struct Recorder {
+    trace: Trace,
+    eval_every: u64,
+    tau: f64,
+    started: std::time::Instant,
+}
+
+impl Recorder {
+    pub fn new(name: &str, eval_every: u64, tau: f64) -> Recorder {
+        Recorder {
+            trace: Trace::new(name),
+            eval_every: eval_every.max(1),
+            tau,
+            started: std::time::Instant::now(),
+        }
+    }
+
+    /// τ used for the recorded penalty objective.
+    pub fn tau(&self) -> f64 {
+        self.tau
+    }
+
+    /// Did the activation counter cross an evaluation boundary while
+    /// advancing by `updates` to reach `k`?
+    pub fn due_span(&self, k: u64, updates: u32) -> bool {
+        eval_due(k, updates, self.eval_every)
+    }
+
+    pub fn record(&mut self, k: u64, time: f64, comm: u64, objective: f64, metric: f64) {
+        self.trace.push(TracePoint {
+            iter: k,
+            time,
+            comm,
+            objective,
+            metric,
+        });
+    }
+
+    pub fn finish(mut self) -> Trace {
+        self.trace.wall_secs = self.started.elapsed().as_secs_f64();
+        self.trace
+    }
+}
+
+/// Stop-rule evaluation (shared by both substrates).
+pub fn should_stop(cfg: &crate::config::StopRule, k: u64, time: f64, comm: u64) -> bool {
+    k >= cfg.max_activations || time >= cfg.max_sim_time || comm >= cfg.max_comm
+}
+
+/// Evaluation-cadence test shared by both substrates: did the activation
+/// counter cross a multiple of `eval_every` while advancing by `updates`
+/// to reach `k`? (One delivery can complete several gossip rounds, so
+/// this is a span test, not `k % eval_every == 0`.)
+pub fn eval_due(k: u64, updates: u32, eval_every: u64) -> bool {
+    let eval_every = eval_every.max(1);
+    updates > 0 && (k / eval_every) != ((k - updates as u64) / eval_every)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StopRule;
+
+    #[test]
+    fn cycle_router_follows_cycle() {
+        let topo = Topology::ring(6);
+        let mut rng = Rng::new(1);
+        let mut router = Router::new(RoutingRule::Cycle, &topo, 1);
+        let mut at = router.start(0, &topo, &mut rng);
+        for _ in 0..12 {
+            let next = router.next(0, at, &topo, &mut rng);
+            assert!(topo.has_edge(at, next));
+            at = next;
+        }
+    }
+
+    #[test]
+    fn parallel_cycle_walks_spread_out() {
+        let topo = Topology::ring(8);
+        let mut rng = Rng::new(2);
+        let router = Router::new(RoutingRule::Cycle, &topo, 4);
+        let starts: Vec<usize> = (0..4).map(|m| router.start(m, &topo, &mut rng)).collect();
+        let mut uniq = starts.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() >= 3, "walks should start spread out: {starts:?}");
+    }
+
+    #[test]
+    fn markov_router_stays_on_edges() {
+        let mut rng = Rng::new(3);
+        let topo = Topology::random_connected(10, 0.4, &mut rng);
+        for rule in [RoutingRule::Uniform, RoutingRule::Metropolis] {
+            let mut router = Router::new(rule, &topo, 2);
+            let mut at = router.start(0, &topo, &mut rng);
+            for _ in 0..50 {
+                let next = router.next(0, at, &topo, &mut rng);
+                assert!(topo.has_edge(at, next), "{rule:?}: {at}->{next}");
+                at = next;
+            }
+        }
+    }
+
+    #[test]
+    fn stop_rules() {
+        let stop = StopRule {
+            max_activations: 10,
+            max_sim_time: 1.0,
+            max_comm: 100,
+        };
+        assert!(!should_stop(&stop, 5, 0.5, 50));
+        assert!(should_stop(&stop, 10, 0.5, 50));
+        assert!(should_stop(&stop, 5, 1.5, 50));
+        assert!(should_stop(&stop, 5, 0.5, 100));
+    }
+
+    #[test]
+    fn recorder_due_span_matches_cadence() {
+        let r = Recorder::new("t", 5, 1.0);
+        assert!(r.due_span(5, 1)); // crossed 5
+        assert!(!r.due_span(6, 1));
+        assert!(r.due_span(7, 4)); // 3 → 7 crosses 5
+        assert!(!r.due_span(4, 4)); // 0 → 4 crosses nothing
+        assert!(!r.due_span(4, 0)); // no update, never due
+    }
+}

@@ -1,0 +1,537 @@
+//! Real-asynchrony substrate: every agent an OS thread, every algorithm.
+//!
+//! The DES ([`super::des`]) *models* asynchrony; this substrate
+//! *implements* it: each agent is a thread owning its behavior state
+//! (block `x_i`, local copies `ẑ_{i,·}`, duals, gossip buffers), tokens
+//! are messages on per-agent mpsc channels, link latency is an injected
+//! sleep drawn from the same U(10⁻⁵,10⁻⁴) model, and the compute path
+//! goes through the [`SolverClient`] service (the PJRT engine is a
+//! serialized device resource, like a real accelerator queue). The fault
+//! model applies here too: lossy links cost retransmission attempts and
+//! ack-timeout sleeps; agent churn re-routes tokens through the shared
+//! membership view.
+//!
+//! Shutdown is deterministic: the agent whose activation trips the stop
+//! rule broadcasts one `AgentMsg::Stop` to every inbox, so peers blocked
+//! in `recv` wake immediately instead of spinning on a timeout poll.
+//! Steady-state agents reallocate none of the model-sized vectors on the
+//! prox path — the three solver buffers circulate through
+//! [`SolverClient::prox_buf`] and the result vector swaps with the
+//! behavior's output buffer (gossip broadcasts and the channel round trips
+//! still allocate).
+//!
+//! Returns a [`Trace`] whose `time` axis is *wall-clock seconds* (this
+//! mode measures reality instead of simulating it; the objective column is
+//! NaN — global state is never assembled while running, that is the point
+//! of the asynchronous design).
+
+use crate::algo::behavior::{
+    spec_for, ActivationCtx, AgentBehavior, BehaviorEnv, Compute, EvalModel, Outgoing, TokenMsg,
+};
+use crate::algo::AlgoKind;
+use crate::config::{ExperimentConfig, RoutingRule};
+use crate::data::AgentData;
+use crate::graph::Topology;
+use crate::metrics::{Trace, TracePoint};
+use crate::model::{Problem, Task};
+use crate::sim::{FaultModel, LatencyModel, Membership};
+use crate::solver::SolverClient;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Agent inbox message: a token/gossip delivery, or the shutdown broadcast.
+enum AgentMsg {
+    Token(TokenMsg),
+    Stop,
+}
+
+/// Periodic metric sample sent to the coordinator thread. Carries the
+/// evaluation vector for the trace point: the sampling agent's current
+/// block (agent-mean algorithms — the monitor assembles the consensus
+/// estimate from last-known blocks without ever pausing the agents) or the
+/// just-serviced token (token-tracking algorithms).
+struct Sample {
+    k: u64,
+    comm: u64,
+    agent: usize,
+    x: Vec<f32>,
+    /// Exit flush: updates the monitor's final state without pushing a
+    /// trace point (every agent sends one on exit so the final consensus
+    /// covers all blocks, not just the ones the cadence happened to hit).
+    flush: bool,
+}
+
+struct Shared {
+    topo: Topology,
+    cycle: Vec<usize>,
+    routing: RoutingRule,
+    activations: AtomicU64,
+    comm: AtomicU64,
+    stop: AtomicBool,
+    max_activations: u64,
+    max_comm: u64,
+    /// Wall-clock bound (this substrate's time axis is real seconds).
+    max_sim_time: f64,
+    eval_every: u64,
+    latency: LatencyModel,
+    faults: FaultModel,
+    /// Shared failure-detector view (wall-clock seconds since start).
+    membership: Mutex<Membership>,
+    started: Instant,
+    eval_model: EvalModel,
+}
+
+/// Thread-substrate compute path: requests go to the solver service with
+/// full buffer recycling — the three model-sized prox buffers circulate
+/// through the service and the caller's output vector swaps with the
+/// returned result, so the steady-state prox path allocates nothing.
+struct ServiceCompute {
+    client: SolverClient,
+    w0: Vec<f32>,
+    tz: Vec<f32>,
+    out: Vec<f32>,
+}
+
+impl ServiceCompute {
+    fn new(client: SolverClient, dim: usize) -> ServiceCompute {
+        ServiceCompute {
+            client,
+            w0: Vec::with_capacity(dim),
+            tz: Vec::with_capacity(dim),
+            out: vec![0.0; dim],
+        }
+    }
+}
+
+impl Compute for ServiceCompute {
+    fn prox_into(
+        &mut self,
+        agent: usize,
+        w0: &[f32],
+        tzsum: &[f32],
+        tau_m: f32,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<f64> {
+        self.w0.clear();
+        self.w0.extend_from_slice(w0);
+        self.tz.clear();
+        self.tz.extend_from_slice(tzsum);
+        let res = self.client.prox_buf(
+            agent,
+            std::mem::take(&mut self.w0),
+            std::mem::take(&mut self.tz),
+            tau_m,
+            std::mem::take(&mut self.out),
+        )?;
+        self.w0 = res.w0;
+        self.tz = res.tzsum;
+        // Hand the result vector to the caller; the caller's displaced
+        // buffer becomes the next request's output buffer.
+        self.out = std::mem::replace(out, res.w);
+        Ok(res.wall_secs)
+    }
+
+    fn grad_into(&mut self, agent: usize, w: &[f32], out: &mut Vec<f32>) -> anyhow::Result<f64> {
+        self.w0.clear();
+        self.w0.extend_from_slice(w);
+        let res = self.client.grad_buf(
+            agent,
+            std::mem::take(&mut self.w0),
+            std::mem::take(&mut self.out),
+        )?;
+        self.w0 = res.w_in;
+        self.out = std::mem::replace(out, res.w);
+        Ok(res.wall_secs)
+    }
+}
+
+/// Run one algorithm with every agent as an OS thread.
+pub(crate) fn run(
+    cfg: &ExperimentConfig,
+    kind: AlgoKind,
+    topo: &Topology,
+    shards: Arc<Vec<AgentData>>,
+    problem: &Problem,
+    task: Task,
+    client: SolverClient,
+) -> anyhow::Result<Trace> {
+    let spec = spec_for(kind);
+    let n = shards.len();
+    let dim = shards[0].features * shards[0].classes;
+    let walks = spec.walks(cfg);
+    let routing = spec.routing(cfg);
+    let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+
+    let shared = Arc::new(Shared {
+        topo: topo.clone(),
+        cycle: if routing == RoutingRule::Cycle {
+            topo.traversal_cycle()
+        } else {
+            Vec::new()
+        },
+        routing,
+        activations: AtomicU64::new(0),
+        comm: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        max_activations: cfg.stop.max_activations,
+        max_comm: cfg.stop.max_comm,
+        max_sim_time: cfg.stop.max_sim_time,
+        eval_every: cfg.eval_every.max(1),
+        latency: cfg.latency,
+        faults: cfg.faults,
+        membership: Mutex::new(Membership::new(n, cfg.faults, &mut rng)),
+        started: Instant::now(),
+        eval_model: spec.eval_model(),
+    });
+
+    // Behaviors are built on the coordinator (they need the shard set for
+    // smoothness bounds) and moved into their threads.
+    let behaviors: Vec<Box<dyn AgentBehavior>> = {
+        let env = BehaviorEnv {
+            cfg,
+            topo,
+            shards: &shards,
+            task,
+            dim,
+            n,
+        };
+        (0..n).map(|i| spec.make_agent(i, &env)).collect()
+    };
+
+    // Per-agent inboxes.
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel::<AgentMsg>();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let senders = Arc::new(senders);
+    let (sample_tx, sample_rx) = mpsc::channel::<Sample>();
+
+    let mut handles = Vec::with_capacity(n);
+    for (i, (rx, behavior)) in receivers.into_iter().zip(behaviors).enumerate() {
+        let shared = shared.clone();
+        let senders = senders.clone();
+        let compute = ServiceCompute::new(client.clone(), dim);
+        let sample_tx = sample_tx.clone();
+        let seed = cfg.seed ^ ((i as u64 + 1) << 16);
+        handles.push(std::thread::Builder::new().name(format!("agent-{i}")).spawn(
+            move || -> anyhow::Result<()> {
+                agent_loop(i, rx, shared, senders, behavior, compute, sample_tx, seed)
+            },
+        )?);
+    }
+    drop(sample_tx);
+
+    // Inject the initial messages: M zero tokens, or the gossip kickoff
+    // (every agent's round-0 block to each neighbor).
+    if walks > 0 {
+        for m in 0..walks {
+            let (start, pos) = if shared.cycle.is_empty() {
+                (rng.below(n), 0)
+            } else {
+                let pos = m * shared.cycle.len() / walks;
+                (shared.cycle[pos], pos)
+            };
+            senders[start]
+                .send(AgentMsg::Token(TokenMsg {
+                    id: m,
+                    round: 0,
+                    payload: vec![0.0f32; dim],
+                    cycle_pos: pos,
+                }))
+                .map_err(|_| anyhow::anyhow!("agent {start} died before start"))?;
+        }
+    } else {
+        for i in 0..n {
+            for &j in topo.neighbors(i) {
+                // Same kickoff accounting as the DES: lossy links cost
+                // retransmission attempts from the first round on.
+                let (attempts, _retry) = shared.faults.transmit(&mut rng);
+                shared.comm.fetch_add(attempts, Ordering::Relaxed);
+                senders[j]
+                    .send(AgentMsg::Token(TokenMsg {
+                        id: i,
+                        round: 0,
+                        payload: vec![0.0f32; dim],
+                        cycle_pos: 0,
+                    }))
+                    .map_err(|_| anyhow::anyhow!("agent {j} died before start"))?;
+            }
+        }
+    }
+
+    // Collect samples until every agent exits.
+    let mut trace = Trace::new(format!("{}(threads)", kind.name()));
+    trace.push(TracePoint {
+        iter: 0,
+        time: 0.0,
+        comm: 0,
+        objective: f64::NAN,
+        metric: problem.metric(&vec![0.0f32; dim]),
+    });
+    // Monitor state: last-known block per agent (x⁰ = 0 before first sight).
+    let mut latest = vec![vec![0.0f32; dim]; n];
+    let mut consensus = vec![0.0f32; dim];
+    let mut final_token: Option<(u64, Vec<f32>)> = None;
+    let consensus_metric =
+        |latest: &[Vec<f32>], consensus: &mut Vec<f32>| -> f64 {
+            consensus.fill(0.0);
+            for x in latest {
+                crate::linalg::axpy(1.0 / n as f32, x, consensus);
+            }
+            problem.metric(consensus)
+        };
+    while let Ok(s) = sample_rx.recv() {
+        if s.flush {
+            match shared.eval_model {
+                EvalModel::AgentMean => latest[s.agent] = s.x,
+                EvalModel::Token => {
+                    let newer = match &final_token {
+                        None => true,
+                        Some((k0, _)) => s.k >= *k0,
+                    };
+                    if newer {
+                        final_token = Some((s.k, s.x));
+                    }
+                }
+            }
+            continue;
+        }
+        let metric = match shared.eval_model {
+            EvalModel::AgentMean => {
+                latest[s.agent] = s.x;
+                consensus_metric(&latest, &mut consensus)
+            }
+            EvalModel::Token => problem.metric(&s.x),
+        };
+        trace.push(TracePoint {
+            iter: s.k,
+            time: shared.started.elapsed().as_secs_f64(),
+            comm: s.comm,
+            objective: f64::NAN,
+            metric,
+        });
+    }
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("agent thread panicked"))??;
+    }
+    // Final point from the exit flushes: the true final consensus (every
+    // agent's last block) or the retired token's final value.
+    let metric = match shared.eval_model {
+        EvalModel::AgentMean => Some(consensus_metric(&latest, &mut consensus)),
+        EvalModel::Token => final_token.map(|(_, x)| problem.metric(&x)),
+    };
+    if let Some(metric) = metric {
+        trace.push(TracePoint {
+            iter: shared.activations.load(Ordering::Relaxed),
+            time: shared.started.elapsed().as_secs_f64(),
+            comm: shared.comm.load(Ordering::Relaxed),
+            objective: f64::NAN,
+            metric,
+        });
+    }
+    trace.wall_secs = shared.started.elapsed().as_secs_f64();
+    Ok(trace)
+}
+
+/// Trip the stop flag (once) and wake every agent blocked in `recv`.
+fn trip_stop(shared: &Shared, senders: &[mpsc::Sender<AgentMsg>]) {
+    if !shared.stop.swap(true, Ordering::Relaxed) {
+        for tx in senders {
+            let _ = tx.send(AgentMsg::Stop);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn agent_loop(
+    i: usize,
+    rx: mpsc::Receiver<AgentMsg>,
+    shared: Arc<Shared>,
+    senders: Arc<Vec<mpsc::Sender<AgentMsg>>>,
+    mut behavior: Box<dyn AgentBehavior>,
+    mut compute: ServiceCompute,
+    sample_tx: mpsc::Sender<Sample>,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let mut rng = Rng::new(seed);
+    // Token-model algorithms: the final token value, captured by the agent
+    // that retires the walk at shutdown.
+    let mut retired_token: Option<Vec<f32>> = None;
+    let res = run_agent(
+        i,
+        &rx,
+        &shared,
+        &senders,
+        behavior.as_mut(),
+        &mut compute,
+        &sample_tx,
+        &mut rng,
+        &mut retired_token,
+    );
+    if res.is_err() {
+        // A dead agent would strand the walks — wake everyone so the run
+        // shuts down and the error propagates through the join.
+        trip_stop(&shared, &senders);
+    }
+    // Exit flush: hand the monitor this agent's final state so the last
+    // trace point reflects every block, not just the sampled ones.
+    let x = match shared.eval_model {
+        EvalModel::AgentMean => Some(behavior.block().to_vec()),
+        EvalModel::Token => retired_token,
+    };
+    if let Some(x) = x {
+        let _ = sample_tx.send(Sample {
+            k: shared.activations.load(Ordering::Relaxed),
+            comm: shared.comm.load(Ordering::Relaxed),
+            agent: i,
+            x,
+            flush: true,
+        });
+    }
+    res
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_agent(
+    i: usize,
+    rx: &mpsc::Receiver<AgentMsg>,
+    shared: &Shared,
+    senders: &[mpsc::Sender<AgentMsg>],
+    behavior: &mut dyn AgentBehavior,
+    compute: &mut ServiceCompute,
+    sample_tx: &mpsc::Sender<Sample>,
+    rng: &mut Rng,
+    retired_token: &mut Option<Vec<f32>>,
+) -> anyhow::Result<()> {
+    let mut sends: Vec<Outgoing> = Vec::new();
+
+    loop {
+        let mut msg = match rx.recv() {
+            Ok(AgentMsg::Token(t)) => t,
+            // Stop broadcast, or every sender gone: the walk ends.
+            Ok(AgentMsg::Stop) | Err(mpsc::RecvError) => return Ok(()),
+        };
+        if shared.stop.load(Ordering::Relaxed) {
+            // Drain without forwarding: the token dies, the walk ends.
+            *retired_token = Some(msg.payload);
+            return Ok(());
+        }
+
+        let served = {
+            let mut ctx = ActivationCtx {
+                agent: i,
+                compute: &mut *compute,
+                tracker: None,
+                out: &mut sends,
+            };
+            behavior.on_activation(&mut msg, &mut ctx)?
+        };
+
+        let k = if served.updates > 0 {
+            let k = shared
+                .activations
+                .fetch_add(served.updates as u64, Ordering::Relaxed)
+                + served.updates as u64;
+            if k >= shared.max_activations
+                || shared.started.elapsed().as_secs_f64() >= shared.max_sim_time
+            {
+                // First agent to trip the stop rule wakes everyone: peers
+                // blocked in recv exit on Stop instead of a timeout poll.
+                trip_stop(shared, senders);
+            }
+            k
+        } else {
+            shared.activations.load(Ordering::Relaxed)
+        };
+
+        // Once the stop flag is up, nothing more will be sent — skip the
+        // routing/link emulation so shutdown neither sleeps a link delay
+        // nor counts transmission attempts for hops that never happen.
+        let stopping = shared.stop.load(Ordering::Relaxed);
+
+        // Route + emulate the links.
+        let mut comm_now = shared.comm.load(Ordering::Relaxed);
+        let forward_to = if served.forward && !stopping {
+            let preferred = match shared.routing {
+                RoutingRule::Cycle => {
+                    // Same advance/resync invariant as the DES Router —
+                    // a fault-rerouted token re-anchors on its next hop.
+                    super::cycle_resync(&shared.cycle, &mut msg.cycle_pos, i);
+                    super::cycle_advance(&shared.cycle, &mut msg.cycle_pos)
+                }
+                RoutingRule::Uniform => shared.topo.uniform_next(i, rng),
+                RoutingRule::Metropolis => shared.topo.metropolis_next(i, rng),
+            };
+            let next = if shared.faults.is_none() {
+                preferred
+            } else {
+                let now = shared.started.elapsed().as_secs_f64();
+                let mut mem = shared.membership.lock().unwrap();
+                mem.maybe_drop(i, now, rng);
+                mem.route_live(&shared.topo, i, preferred, now, rng)
+            };
+            if next != i {
+                let (attempts, retry) = shared.faults.transmit(rng);
+                std::thread::sleep(Duration::from_secs_f64(
+                    retry + shared.latency.sample(rng),
+                ));
+                comm_now = shared.comm.fetch_add(attempts, Ordering::Relaxed) + attempts;
+            }
+            Some(next)
+        } else {
+            None
+        };
+        // Gossip broadcast: per-link transmission costs, one sleep for the
+        // batch (the slowest link).
+        if !sends.is_empty() && !stopping {
+            let mut delay = 0.0f64;
+            let mut attempts_total = 0u64;
+            for _ in 0..sends.len() {
+                let (attempts, retry) = shared.faults.transmit(rng);
+                attempts_total += attempts;
+                delay = delay.max(retry + shared.latency.sample(rng));
+            }
+            std::thread::sleep(Duration::from_secs_f64(delay));
+            comm_now = shared.comm.fetch_add(attempts_total, Ordering::Relaxed) + attempts_total;
+        }
+        if comm_now >= shared.max_comm {
+            trip_stop(shared, senders);
+        }
+
+        // Sample at the evaluation cadence.
+        if super::eval_due(k, served.updates, shared.eval_every) {
+            let x = match shared.eval_model {
+                EvalModel::AgentMean => behavior.block().to_vec(),
+                EvalModel::Token => msg.payload.clone(),
+            };
+            let _ = sample_tx.send(Sample {
+                k,
+                comm: comm_now,
+                agent: i,
+                x,
+                flush: false,
+            });
+        }
+
+        if shared.stop.load(Ordering::Relaxed) {
+            *retired_token = Some(msg.payload);
+            return Ok(()); // token retires
+        }
+        if let Some(next) = forward_to {
+            if senders[next].send(AgentMsg::Token(msg)).is_err() {
+                return Ok(());
+            }
+        }
+        for out in sends.drain(..) {
+            if senders[out.dest].send(AgentMsg::Token(out.msg)).is_err() {
+                return Ok(());
+            }
+        }
+    }
+}

@@ -9,11 +9,24 @@
 //!
 //! ## Architecture (three layers, Python never on the hot path)
 //!
-//! * **Layer 3 (this crate)** — the coordinator: graph/topology substrate
-//!   ([`graph`]), token routing and the asynchronous runtime (discrete-event
-//!   simulator in [`sim`], real-thread execution in [`exec`]), the algorithm
-//!   family ([`algo`]): I-BCD, API-BCD, gAPI-BCD and the baselines WPG, DGD,
-//!   WADMM, PW-ADMM.
+//! * **Layer 3 (this crate)** — the coordinator, split along the
+//!   algorithm/runtime boundary:
+//!   - [`algo`] — the algorithm family (I-BCD, API-BCD, gAPI-BCD and the
+//!     baselines WPG, DGD, WADMM, PW-ADMM), each expressed as a per-agent
+//!     message-driven [`algo::behavior::AgentBehavior`]: local state plus an
+//!     `on_activation(token) → sends` callback. Pure per-activation math.
+//!   - [`engine`] — one event-driven runtime that executes any behavior on
+//!     two substrates: [`engine::des`] (deterministic event queue owning
+//!     routing, latency, [`sim::FaultModel`] injection, busy-agent FIFO
+//!     queuing, recording and stop rules — the paper's §5 simulation) and
+//!     [`engine::threads`] (real asynchrony: each agent an OS thread,
+//!     tokens as mpsc messages, compute through the serialized
+//!     [`solver::SolverClient`] service). Faults, routing rules and both
+//!     substrates therefore apply uniformly to every [`algo::AlgoKind`]
+//!     (one scoped exception: agent churn is token-walk-specific — see
+//!     `algo/dgd.rs`).
+//!   - substrate primitives in [`graph`] (topologies) and [`sim`] (event
+//!     queue, latency/timing models, failure injection).
 //! * **Layer 2/1 (build-time JAX + Pallas)** — the per-agent local updates,
 //!   AOT-lowered to HLO text in `artifacts/` and executed through the PJRT C
 //!   API by [`runtime`]; [`solver`] routes each algorithm's update through
@@ -26,14 +39,17 @@
 //! use apibcd::prelude::*;
 //!
 //! let cfg = ExperimentConfig::preset(Preset::Fig3Cpusmall);
-//! let report = apibcd::run_experiment(&cfg).unwrap();
+//! let report = Experiment::builder(cfg)
+//!     .substrate(Substrate::Des) // or Substrate::Threads for real threads
+//!     .run()
+//!     .unwrap();
 //! println!("final NMSE: {:.4}", report.traces[0].last_metric());
 //! ```
 
 pub mod algo;
 pub mod config;
 pub mod data;
-pub mod exec;
+pub mod engine;
 pub mod graph;
 pub mod linalg;
 pub mod metrics;
@@ -45,9 +61,11 @@ pub mod util;
 
 pub mod prelude {
     //! Convenience re-exports for downstream users and the examples.
-    pub use crate::algo::{AlgoKind, Algorithm};
+    pub use crate::algo::behavior::{AgentBehavior, BehaviorSpec};
+    pub use crate::algo::AlgoKind;
     pub use crate::config::{ExperimentConfig, Preset, RoutingRule, StopRule};
     pub use crate::data::{Dataset, DatasetProfile, Partition};
+    pub use crate::engine::{Experiment, ExperimentBuilder, Substrate};
     pub use crate::graph::Topology;
     pub use crate::metrics::{Trace, TracePoint};
     pub use crate::model::{Problem, Task};
@@ -56,11 +74,14 @@ pub mod prelude {
 }
 
 pub use config::{ExperimentConfig, Preset};
+pub use engine::{Experiment, Substrate};
 pub use metrics::RunReport;
 
-/// Run one experiment end-to-end: build data + topology from the config,
-/// construct the solver (PJRT artifacts when available, native fallback
-/// otherwise), run every configured algorithm and collect traces.
+/// Run one experiment end-to-end on the DES substrate: build data +
+/// topology from the config, construct the solver (PJRT artifacts when
+/// available, native fallback otherwise), run every configured algorithm
+/// and collect traces. Shorthand for
+/// `Experiment::builder(cfg.clone()).run()`.
 pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunReport> {
-    crate::algo::driver::run_experiment(cfg)
+    crate::engine::run_experiment(cfg)
 }

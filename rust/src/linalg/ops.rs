@@ -2,9 +2,9 @@
 //! native solver's CG loop need, written so LLVM auto-vectorizes them.
 //!
 //! Kernel discipline (EXPERIMENTS.md §Perf): reductions run in pure-f32
-//! lanes — [`LANES`] independent accumulators so the loop has no
+//! lanes — `LANES` independent accumulators so the loop has no
 //! loop-carried dependence on a single register — and are folded into an
-//! f64 running total once per [`BLOCK`]-element block. That keeps the
+//! f64 running total once per `BLOCK`-element block. That keeps the
 //! f32-data/f64-accumulate numerics of the JAX artifacts'
 //! `preferred_element_type` (error is O(√BLOCK)·ε_f32 per block, ~2e-6
 //! relative, before the f64 chain takes over) while the inner loops stay

@@ -11,8 +11,8 @@
 //! repro inspect-artifacts [--dir artifacts]
 //! ```
 
-use apibcd::algo::AlgoKind;
 use apibcd::config::{ExperimentConfig, Preset, RoutingRule, SolverChoice};
+use apibcd::engine::{Experiment, Substrate};
 use apibcd::util::cli::Args;
 
 fn main() {
@@ -48,6 +48,7 @@ USAGE:
   repro train  [--preset P | --profile D] [--agents N] [--walks M] [--algos ...]
                [--tau-api T] [--tau-ibcd T] [--alpha A] [--activations K]
                [--routing cycle|uniform|metropolis] [--solver auto|native|pjrt]
+               [--substrate des|threads]   (threads = real OS-thread agents)
   repro run    --config experiment.toml [overrides...]
   repro replicate [--preset P] [--seeds 5] [--target T] [overrides...]
   repro sweep  --param <walks|agents|tau-api|xi|inner-k> --values 1,2,4 [--preset P]
@@ -105,15 +106,24 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()
         };
     }
     if let Some(list) = args.str_opt("algos") {
-        cfg.algos = list
-            .split(',')
-            .map(|a| {
-                AlgoKind::by_name(a.trim())
-                    .ok_or_else(|| anyhow::anyhow!("unknown algorithm '{a}'"))
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
+        cfg.algos = apibcd::algo::parse_algo_list(list)?;
     }
     Ok(())
+}
+
+/// `--substrate des|threads` (default DES).
+fn substrate_arg(args: &Args) -> anyhow::Result<Substrate> {
+    match args.str_opt("substrate") {
+        None | Some("des") => Ok(Substrate::Des),
+        Some("threads") => Ok(Substrate::Threads),
+        Some(other) => anyhow::bail!("unknown substrate '{other}' (valid: des, threads)"),
+    }
+}
+
+fn preset_arg(name: &str) -> anyhow::Result<ExperimentConfig> {
+    Ok(ExperimentConfig::preset(Preset::by_name(name).ok_or_else(
+        || anyhow::anyhow!("unknown preset '{name}' (valid: {})", Preset::VALID_NAMES),
+    )?))
 }
 
 fn cmd_figure(args: &Args) -> anyhow::Result<()> {
@@ -121,9 +131,8 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         .positional
         .get(1)
         .ok_or_else(|| anyhow::anyhow!("figure: which one? fig3|fig4|fig5|fig6"))?;
-    let preset = Preset::by_name(which)
-        .ok_or_else(|| anyhow::anyhow!("unknown figure '{which}'"))?;
-    let mut cfg = ExperimentConfig::preset(preset);
+    let mut cfg = preset_arg(which)
+        .map_err(|_| anyhow::anyhow!("unknown figure '{which}' (valid: fig3|fig4|fig5|fig6)"))?;
     apply_overrides(&mut cfg, args)?;
     eprintln!(
         "== {} — {} agents, ξ={}, M={} walks, algos {:?}",
@@ -133,7 +142,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         cfg.walks,
         cfg.algos.iter().map(|a| a.name()).collect::<Vec<_>>()
     );
-    let report = apibcd::run_experiment(&cfg)?;
+    let report = Experiment::builder(cfg.clone()).run()?;
     let target = args.f64_or("target", default_target(&cfg))?;
     println!("{}", report.summary_table(Some(target)));
     let out = args.str_or("out", "results");
@@ -156,13 +165,13 @@ fn default_target(cfg: &ExperimentConfig) -> f64 {
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let mut cfg = match args.str_opt("preset") {
-        Some(p) => ExperimentConfig::preset(
-            Preset::by_name(p).ok_or_else(|| anyhow::anyhow!("unknown preset '{p}'"))?,
-        ),
+        Some(p) => preset_arg(p)?,
         None => ExperimentConfig::default(),
     };
     apply_overrides(&mut cfg, args)?;
-    let report = apibcd::run_experiment(&cfg)?;
+    let report = Experiment::builder(cfg.clone())
+        .substrate(substrate_arg(args)?)
+        .run()?;
     println!("{}", report.summary_table(None));
     if let Some(out) = args.str_opt("out") {
         for f in report.write_files(out)? {
@@ -178,7 +187,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("run: --config <file> required"))?;
     let mut cfg = apibcd::config::file::load(path)?;
     apply_overrides(&mut cfg, args)?; // CLI flags win over the file
-    let report = apibcd::run_experiment(&cfg)?;
+    let report = Experiment::builder(cfg)
+        .substrate(substrate_arg(args)?)
+        .run()?;
     println!("{}", report.summary_table(args.f64_or("target", f64::NAN).ok().filter(|t| t.is_finite())));
     if let Some(out) = args.str_opt("out") {
         for f in report.write_files(out)? {
@@ -190,9 +201,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_replicate(args: &Args) -> anyhow::Result<()> {
     let mut cfg = match args.str_opt("preset") {
-        Some(p) => ExperimentConfig::preset(
-            Preset::by_name(p).ok_or_else(|| anyhow::anyhow!("unknown preset '{p}'"))?,
-        ),
+        Some(p) => preset_arg(p)?,
         None => ExperimentConfig::preset(Preset::Fig3Cpusmall),
     };
     apply_overrides(&mut cfg, args)?;
@@ -220,9 +229,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         .map(|s| s.trim().to_string())
         .collect();
     let base = match args.str_opt("preset") {
-        Some(p) => ExperimentConfig::preset(
-            Preset::by_name(p).ok_or_else(|| anyhow::anyhow!("unknown preset '{p}'"))?,
-        ),
+        Some(p) => preset_arg(p)?,
         None => ExperimentConfig::preset(Preset::Fig3Cpusmall),
     };
     println!(
@@ -241,7 +248,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             _ => anyhow::bail!("unknown sweep param '{param}'"),
         }
         cfg.name = format!("{}_{}={}", cfg.name, param, v);
-        let report = apibcd::run_experiment(&cfg)?;
+        let report = Experiment::builder(cfg).run()?;
         for t in &report.traces {
             let last = t.last().cloned();
             println!(
@@ -286,21 +293,7 @@ fn cmd_timeline(args: &Args) -> anyhow::Result<()> {
     apply_overrides(&mut cfg, args)?;
     cfg.stop.max_activations = args.u64_or("activations", 12)?;
     cfg.agents = cfg.agents.max(5);
-    let workload = apibcd::algo::driver::Workload::build(&cfg)?;
-    let mut solver = apibcd::algo::driver::build_solver(&cfg, workload.profile)?;
-    let algo = apibcd::algo::api_bcd::ApiBcd {
-        gradient_variant: false,
-    };
-    let mut ctx = apibcd::algo::AlgoContext {
-        topo: &workload.topo,
-        shards: &workload.partition.shards,
-        problem: &workload.problem,
-        task: workload.profile.task,
-        cfg: &cfg,
-        solver: solver.as_mut(),
-        rng: apibcd::util::rng::Rng::new(cfg.seed),
-    };
-    let (_, events) = algo.run_with_events(&mut ctx)?;
+    let (_, events) = apibcd::engine::run_with_events(&cfg, apibcd::algo::AlgoKind::ApiBcd)?;
     println!("k   token  agent  arrival      start        end      (ẑ_{{agent,token}} updated)");
     for e in &events {
         println!(

@@ -19,7 +19,7 @@ pub mod service;
 
 pub use native::NativeSolver;
 pub use pjrt::PjrtSolver;
-pub use service::{ProxBufOut, SolverClient, SolverService};
+pub use service::{GradBufOut, ProxBufOut, SolverClient, SolverService};
 
 use crate::data::AgentData;
 use crate::model::Task;

@@ -37,12 +37,20 @@ enum Op {
         agent: usize,
         w: Vec<f32>,
     },
+    /// Buffer-recycling gradient: same contract as `ProxBuf` for the
+    /// gradient-path algorithms (WPG, gAPI-BCD, DGD).
+    GradBuf {
+        agent: usize,
+        w: Vec<f32>,
+        out: Vec<f32>,
+    },
     Shutdown,
 }
 
 enum Reply {
     Out(mpsc::Sender<anyhow::Result<SolveOut>>),
     Buf(mpsc::Sender<anyhow::Result<ProxBufOut>>),
+    GBuf(mpsc::Sender<anyhow::Result<GradBufOut>>),
 }
 
 struct Request {
@@ -57,6 +65,14 @@ pub struct ProxBufOut {
     pub wall_secs: f64,
     pub w0: Vec<f32>,
     pub tzsum: Vec<f32>,
+}
+
+/// Result of [`SolverClient::grad_buf`]: the gradient in `w` plus the
+/// caller's request buffer handed back for reuse.
+pub struct GradBufOut {
+    pub w: Vec<f32>,
+    pub wall_secs: f64,
+    pub w_in: Vec<f32>,
 }
 
 /// Cloneable handle agents use to submit local updates.
@@ -84,7 +100,7 @@ impl SolverClient {
             .map_err(|_| anyhow::anyhow!("solver service dropped the reply"))?
     }
 
-    /// Buffer-recycling prox (see [`Op::ProxBuf`]): pass owned buffers, get
+    /// Buffer-recycling prox (see `Op::ProxBuf`): pass owned buffers, get
     /// all of them back. `out` is overwritten with the updated block.
     pub fn prox_buf(
         &self,
@@ -111,6 +127,20 @@ impl SolverClient {
             .send(Request {
                 op: Op::Grad { agent, w },
                 reply: Reply::Out(reply),
+            })
+            .map_err(|_| anyhow::anyhow!("solver service is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("solver service dropped the reply"))?
+    }
+
+    /// Buffer-recycling gradient (see `Op::GradBuf`): pass owned buffers,
+    /// get both back. `out` is overwritten with ∇f_i(w).
+    pub fn grad_buf(&self, agent: usize, w: Vec<f32>, out: Vec<f32>) -> anyhow::Result<GradBufOut> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                op: Op::GradBuf { agent, w, out },
+                reply: Reply::GBuf(reply),
             })
             .map_err(|_| anyhow::anyhow!("solver service is down"))?;
         rx.recv()
@@ -171,6 +201,15 @@ impl SolverService {
                         (Op::Grad { agent, w }, Reply::Out(reply)) => {
                             let out = solver.grad(&shards[agent], &w);
                             let _ = reply.send(out);
+                        }
+                        (Op::GradBuf { agent, w, mut out }, Reply::GBuf(reply)) => {
+                            let wall = solver.grad_into(&shards[agent], &w, &mut out);
+                            let res = wall.map(|wall_secs| GradBufOut {
+                                w: out,
+                                wall_secs,
+                                w_in: w,
+                            });
+                            let _ = reply.send(res);
                         }
                         (Op::Shutdown, _) => break,
                         // Op/reply pairs are constructed together in
@@ -267,6 +306,23 @@ mod tests {
         // the request buffers come back for reuse
         assert_eq!(got.w0, vec![0.0; p]);
         assert_eq!(got.tzsum, vec![0.1; p]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn grad_buf_recycles_buffers_and_matches_grad() {
+        let shards = shards();
+        let svc = SolverService::spawn(
+            || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
+            shards.clone(),
+        )
+        .unwrap();
+        let client = svc.client();
+        let p = shards[0].features;
+        let want = client.grad(0, vec![0.2; p]).unwrap();
+        let got = client.grad_buf(0, vec![0.2; p], Vec::new()).unwrap();
+        assert_eq!(got.w, want.w);
+        assert_eq!(got.w_in, vec![0.2; p]); // request buffer comes back
         svc.shutdown();
     }
 

@@ -1,0 +1,171 @@
+//! Unified-engine regression tests: every algorithm on both substrates,
+//! and uniform fault injection for the baselines that used to be locked to
+//! bespoke DES loops.
+
+use apibcd::algo::AlgoKind;
+use apibcd::config::{ExperimentConfig, Preset, StopRule};
+use apibcd::engine::{Experiment, Substrate};
+use apibcd::sim::FaultModel;
+
+fn base_ls() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.tau_api = 0.1;
+    cfg.eval_every = 25;
+    cfg
+}
+
+#[test]
+fn every_algorithm_runs_on_both_substrates() {
+    let mut cfg = base_ls();
+    cfg.algos = AlgoKind::all().to_vec();
+    cfg.stop.max_activations = 120;
+    cfg.eval_every = 20;
+
+    let des = Experiment::builder(cfg.clone())
+        .substrate(Substrate::Des)
+        .run()
+        .unwrap();
+    let thr = Experiment::builder(cfg)
+        .substrate(Substrate::Threads)
+        .run()
+        .unwrap();
+    assert_eq!(des.traces.len(), 7);
+    assert_eq!(thr.traces.len(), 7);
+    for t in des.traces.iter().chain(thr.traces.iter()) {
+        assert!(t.last_metric().is_finite(), "{}: non-finite metric", t.name);
+        assert!(
+            t.points.len() >= 2,
+            "{}: recorded no progress ({} points)",
+            t.name,
+            t.points.len()
+        );
+        // Every algorithm must improve on the zero model (NMSE 1.0) even
+        // in this short smoke run.
+        assert!(
+            t.last_metric() < t.points[0].metric,
+            "{}: {} -> {}",
+            t.name,
+            t.points[0].metric,
+            t.last_metric()
+        );
+    }
+}
+
+#[test]
+fn wpg_and_wadmm_run_under_fault_injection() {
+    // `lossy_links.toml`-style regression: with the unified engine the
+    // baselines get the exact same FaultModel path (retransmissions +
+    // re-routing around dropped agents) that API-BCD always had.
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::Wpg, AlgoKind::Wadmm];
+    cfg.faults = FaultModel::lossy(0.10);
+    cfg.faults.dropout_frac = 0.2;
+    cfg.faults.dropout_len = 0.005;
+    cfg.stop = StopRule {
+        max_activations: 1200,
+        ..Default::default()
+    };
+    let report = Experiment::builder(cfg).run().unwrap();
+    for t in &report.traces {
+        assert!(
+            t.last_metric() < 0.45,
+            "{}: NMSE {} under faults",
+            t.name,
+            t.last_metric()
+        );
+        let last = t.last().unwrap();
+        assert!(
+            last.comm > last.iter,
+            "{}: retries should inflate comm ({} vs {} activations)",
+            t.name,
+            last.comm,
+            last.iter
+        );
+    }
+}
+
+#[test]
+fn gossip_runs_under_lossy_links() {
+    // DGD under the fault model: lossy links cost retransmissions (comm)
+    // but round-tagged buffering keeps the mixing math intact.
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::Dgd];
+    cfg.faults = FaultModel::lossy(0.10);
+    cfg.stop.max_activations = 1200;
+    let report = Experiment::builder(cfg.clone()).run().unwrap();
+    let t = &report.traces[0];
+    assert!(
+        t.last_metric() < 0.8 && t.last_metric() < t.points[0].metric,
+        "DGD under loss: NMSE {}",
+        t.last_metric()
+    );
+    // Same budget without faults: fewer transmissions.
+    cfg.faults = FaultModel::NONE;
+    let clean = Experiment::builder(cfg).run().unwrap();
+    assert!(
+        t.last().unwrap().comm > clean.traces[0].last().unwrap().comm,
+        "retransmissions should inflate gossip comm: {} vs {}",
+        t.last().unwrap().comm,
+        clean.traces[0].last().unwrap().comm
+    );
+}
+
+#[test]
+fn des_substrate_stays_deterministic_per_seed() {
+    // The engine refactor must preserve the DES's bit-for-bit determinism,
+    // including under fault injection and for the gossip path.
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::ApiBcd, AlgoKind::Dgd, AlgoKind::Wadmm];
+    cfg.faults = FaultModel::lossy(0.05);
+    cfg.stop.max_activations = 300;
+    let a = Experiment::builder(cfg.clone()).run().unwrap();
+    let b = Experiment::builder(cfg).run().unwrap();
+    for (ta, tb) in a.traces.iter().zip(&b.traces) {
+        assert_eq!(ta.points.len(), tb.points.len(), "{}", ta.name);
+        for (pa, pb) in ta.points.iter().zip(&tb.points) {
+            assert_eq!(pa.iter, pb.iter);
+            assert_eq!(pa.comm, pb.comm);
+            assert!((pa.metric - pb.metric).abs() < 1e-12);
+            assert!((pa.time - pb.time).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn builder_validates_config() {
+    let mut cfg = base_ls();
+    cfg.agents = 1;
+    let err = Experiment::builder(cfg).run().unwrap_err().to_string();
+    assert!(err.contains("agents") && err.contains(">= 2"), "{err}");
+}
+
+#[test]
+fn thread_substrate_rejects_unbounded_runs() {
+    let mut cfg = base_ls();
+    cfg.stop = StopRule {
+        max_activations: u64::MAX,
+        max_sim_time: f64::INFINITY,
+        max_comm: u64::MAX,
+    };
+    let err = Experiment::builder(cfg)
+        .substrate(Substrate::Threads)
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("stop rule"), "{err}");
+}
+
+#[test]
+fn timeline_events_cover_all_walks() {
+    let mut cfg = base_ls();
+    cfg.agents = 5;
+    cfg.walks = 2;
+    cfg.stop.max_activations = 24;
+    let (_, events) = apibcd::engine::run_with_events(&cfg, AlgoKind::ApiBcd).unwrap();
+    assert_eq!(events.len(), 24);
+    assert!(events.iter().any(|e| e.token == 0));
+    assert!(events.iter().any(|e| e.token == 1));
+    for e in &events {
+        assert!(e.start >= e.arrival && e.end >= e.start, "{e:?}");
+    }
+}

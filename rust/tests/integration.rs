@@ -1,11 +1,9 @@
-//! Cross-module integration: driver plumbing, report files, the thread
-//! executor, and the CLI binary surface.
+//! Cross-module integration: engine plumbing, report files, the thread
+//! substrate, and the CLI binary surface.
 
 use apibcd::algo::AlgoKind;
-use apibcd::config::{ExperimentConfig, Preset};
-use apibcd::exec::run_api_bcd_threads;
-use apibcd::solver::{LocalSolver, NativeSolver, SolverService};
-use std::sync::Arc;
+use apibcd::config::{ExperimentConfig, Preset, SolverChoice};
+use apibcd::engine::{Experiment, Substrate};
 
 fn tmpdir(tag: &str) -> String {
     let d = format!(
@@ -51,40 +49,69 @@ fn workload_build_rejects_unknown_profile() {
 }
 
 #[test]
-fn thread_executor_converges_like_the_des() {
+fn thread_substrate_converges_like_the_des() {
     let mut cfg = ExperimentConfig::preset(Preset::TestLs);
     cfg.agents = 5;
     cfg.walks = 2;
     cfg.tau_api = 0.1;
     cfg.stop.max_activations = 800;
     cfg.eval_every = 40;
+    cfg.algos = vec![AlgoKind::ApiBcd];
 
-    let workload = apibcd::algo::driver::Workload::build(&cfg).unwrap();
-    let shards = Arc::new(workload.partition.shards.clone());
-    let task = workload.profile.task;
-    let k = cfg.inner_k;
-    let service = SolverService::spawn(
-        move || Ok(Box::new(NativeSolver::new(task, k)) as Box<dyn LocalSolver>),
-        shards.clone(),
-    )
-    .unwrap();
-    let trace =
-        run_api_bcd_threads(&cfg, &workload.topo, shards, &workload.problem, service.client())
-            .unwrap();
+    let thr = Experiment::builder(cfg.clone())
+        .substrate(Substrate::Threads)
+        .run()
+        .unwrap();
+    let trace = &thr.traces[0];
     assert!(
         trace.last_metric() < 0.35,
         "threaded NMSE {}",
         trace.last_metric()
     );
     // And the DES agrees on the convergence band.
-    cfg.algos = vec![AlgoKind::ApiBcd];
-    let des = apibcd::run_experiment(&cfg).unwrap();
+    let des = Experiment::builder(cfg).run().unwrap();
     assert!(
         (des.traces[0].last_metric() - trace.last_metric()).abs() < 0.25,
         "DES {} vs threads {}",
         des.traces[0].last_metric(),
         trace.last_metric()
     );
+}
+
+#[test]
+fn substrates_agree_for_ibcd_and_gapi_bcd_on_fig3_smoke() {
+    // Fig. 3 workload (cpusmall, N=20, M=5), shortened: the DES and the
+    // thread substrate must land in the same final-metric band for every
+    // ported algorithm — not just API-BCD.
+    let mut cfg = ExperimentConfig::preset(Preset::Fig3Cpusmall);
+    cfg.algos = vec![AlgoKind::ApiBcd, AlgoKind::IBcd, AlgoKind::GApiBcd];
+    cfg.stop.max_activations = 800;
+    cfg.eval_every = 40;
+    cfg.solver = SolverChoice::Native;
+
+    let des = Experiment::builder(cfg.clone())
+        .substrate(Substrate::Des)
+        .run()
+        .unwrap();
+    let thr = Experiment::builder(cfg)
+        .substrate(Substrate::Threads)
+        .run()
+        .unwrap();
+    for (d, t) in des.traces.iter().zip(&thr.traces) {
+        assert!(
+            d.last_metric() < 0.8 && d.last_metric() < d.points[0].metric,
+            "{} DES did not improve: {}",
+            d.name,
+            d.last_metric()
+        );
+        assert!(
+            (d.last_metric() - t.last_metric()).abs() < 0.25,
+            "{}: DES {} vs threads {}",
+            d.name,
+            d.last_metric(),
+            t.last_metric()
+        );
+    }
 }
 
 #[test]

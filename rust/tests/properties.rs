@@ -145,7 +145,7 @@ fn prop_routing_hops_are_edges() {
             (n, rule, r.next_u64())
         },
         |&(n, rule, seed)| {
-            use apibcd::algo::common::Router;
+            use apibcd::engine::Router;
             let mut rng = Rng::new(seed);
             let g = Topology::random_connected(n, 0.4, &mut rng);
             let mut router = Router::new(rule, &g, 2);
