@@ -97,6 +97,7 @@ fn apply(cfg: &mut ExperimentConfig, key: &str, v: &str) -> anyhow::Result<()> {
             }
         }
         "dropout-len" => cfg.faults.dropout_len = v.parse().map_err(|_| bad("number"))?,
+        "heterogeneity" => cfg.heterogeneity = crate::sim::Heterogeneity::parse(v)?,
         "routing" => {
             cfg.routing = match v {
                 "cycle" => RoutingRule::Cycle,
@@ -207,6 +208,32 @@ mod tests {
     fn missing_equals_reports_line() {
         let err = from_str("walks 3\n").unwrap_err().to_string();
         assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn heterogeneity_key_parses_and_validates() {
+        let cfg = from_str("heterogeneity = \"bimodal:0.25,4\"\n").unwrap();
+        assert_eq!(
+            cfg.heterogeneity,
+            crate::sim::Heterogeneity::Bimodal { frac: 0.25, slow: 4.0 }
+        );
+        let err = from_str("heterogeneity = \"pareto:-1\"\n").unwrap_err().to_string();
+        assert!(err.contains("alpha"), "{err}");
+        let err = from_str("heterogeneity = \"zipf:2\"\n").unwrap_err().to_string();
+        assert!(err.contains("zipf") && err.contains("bimodal"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_xi_rejected_at_load() {
+        let err = from_str("xi = 0.0\n").unwrap_err().to_string();
+        assert!(err.contains("xi"), "{err}");
+    }
+
+    #[test]
+    fn unknown_topology_rejected_at_load() {
+        let err = from_str("topology = \"torus\"\n").unwrap_err().to_string();
+        assert!(err.contains("torus") && err.contains("geometric"), "{err}");
+        assert_eq!(from_str("topology = \"scale-free\"\n").unwrap().topology, "scale-free");
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub mod file;
 
 use crate::algo::AlgoKind;
 use crate::data::shard::PartitionKind;
-use crate::sim::{LatencyModel, TimingModel};
+use crate::sim::{Heterogeneity, LatencyModel, TimingModel};
 
 /// How tokens pick the next agent.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,6 +91,9 @@ pub struct ExperimentConfig {
     pub eval_every: u64,
     pub timing: TimingModel,
     pub latency: LatencyModel,
+    /// Per-agent compute-speed / link-latency heterogeneity (straggler
+    /// modelling); homogeneous by default.
+    pub heterogeneity: Heterogeneity,
     /// Failure injection (link loss / agent churn); NONE by default.
     pub faults: crate::sim::FaultModel,
     pub partition: PartitionKind,
@@ -121,6 +124,7 @@ impl Default for ExperimentConfig {
             eval_every: 10,
             timing: TimingModel::Measured,
             latency: LatencyModel::paper(),
+            heterogeneity: Heterogeneity::None,
             faults: crate::sim::FaultModel::NONE,
             partition: PartitionKind::Iid,
             data_dir: "data".into(),
@@ -293,6 +297,22 @@ impl ExperimentConfig {
             "config: `eval-every` must be >= 1 (got {})",
             self.eval_every
         );
+        anyhow::ensure!(
+            self.xi.is_finite() && self.xi > 0.0 && self.xi <= 1.0,
+            "config: `xi` must be in (0, 1] (got {}); it is the fraction of \
+             the complete graph's edges the random topology keeps",
+            self.xi
+        );
+        anyhow::ensure!(
+            crate::graph::Topology::known_kind(&self.topology),
+            "config: unknown topology '{}' (valid: {})",
+            self.topology,
+            crate::graph::Topology::VALID_KINDS
+        );
+        self.heterogeneity.validate()?;
+        self.latency.validate()?;
+        self.timing.validate()?;
+        self.faults.validate()?;
         Ok(())
     }
 
@@ -351,6 +371,50 @@ mod tests {
         cfg.agents = 2;
         cfg.walks = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_xi() {
+        let mut cfg = ExperimentConfig { xi: 0.0, ..ExperimentConfig::default() };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("xi") && err.contains("(0, 1]"), "{err}");
+        cfg.xi = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.xi = 1.0;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_topology_listing_valid_kinds() {
+        let mut cfg =
+            ExperimentConfig { topology: "torus".into(), ..ExperimentConfig::default() };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("torus") && err.contains("scale-free"), "{err}");
+        cfg.topology = "geometric".into();
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_distribution_parameters() {
+        let cfg = ExperimentConfig {
+            heterogeneity: Heterogeneity::Pareto { alpha: -1.0 },
+            ..ExperimentConfig::default()
+        };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("alpha"), "{err}");
+
+        let cfg = ExperimentConfig {
+            latency: LatencyModel::Fixed(-1e-4),
+            ..ExperimentConfig::default()
+        };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("latency"), "{err}");
+
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.validate().is_ok());
+        cfg.faults.drop_prob = 1.5;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("drop-prob"), "{err}");
     }
 
     #[test]

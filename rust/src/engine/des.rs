@@ -13,8 +13,9 @@
 //! This loop owns — once, for all seven algorithms — token routing
 //! ([`Router`]), fault injection (retransmissions on lossy links,
 //! re-routing around dropped agents via [`Membership`]), the busy-agent
-//! queue ([`AgentAvailability`]), activation counting, recording cadence
-//! and stop rules. The algorithms only see [`TokenMsg`]s through their
+//! queue ([`AgentAvailability`]), per-agent heterogeneity (compute-speed
+//! and link-latency factors from [`super::hetero_factors`]), activation
+//! counting, recording cadence and stop rules. The algorithms only see [`TokenMsg`]s through their
 //! [`AgentBehavior::on_activation`] callbacks.
 
 use super::{should_stop, Recorder, Router};
@@ -143,6 +144,13 @@ pub(crate) fn run(
     let mut agents: Vec<Box<dyn AgentBehavior>> =
         (0..n).map(|i| spec.make_agent(i, &env)).collect();
 
+    // Per-agent heterogeneity (empty = homogeneous): slow agents stretch
+    // their simulated compute, slow links stretch the latency draw of every
+    // hop *into* them.
+    let (speed, link) = super::hetero_factors(cfg);
+    let speed_of = |i: usize| if speed.is_empty() { 1.0 } else { speed[i] };
+    let link_of = |j: usize| if link.is_empty() { 1.0 } else { link[j] };
+
     let faults = cfg.faults;
     let mut membership = Membership::new(n, faults, &mut rng);
     let mut avail = AgentAvailability::new(n);
@@ -190,7 +198,7 @@ pub(crate) fn run(
                     payload: vec![0.0; dim],
                     cycle_pos: 0,
                 });
-                queue.push(retry + cfg.latency.sample(&mut rng), slot, j);
+                queue.push(retry + cfg.latency.sample(&mut rng) * link_of(j), slot, j);
             }
         }
     }
@@ -217,7 +225,7 @@ pub(crate) fn run(
 
         // Busy-agent FIFO: service starts when the agent frees.
         let (start, end) = if served.updates > 0 {
-            let dur = cfg.timing.duration(served.compute_secs, &mut rng);
+            let dur = cfg.timing.duration(served.compute_secs, &mut rng) * speed_of(i);
             avail.serve(i, ev.time, dur)
         } else {
             (ev.time, ev.time)
@@ -248,7 +256,7 @@ pub(crate) fn run(
             if next != i {
                 let (attempts, retry) = faults.transmit(&mut rng);
                 comm += attempts;
-                t_next += retry + cfg.latency.sample(&mut rng);
+                t_next += retry + cfg.latency.sample(&mut rng) * link_of(next);
             }
             store.put(slot, msg);
             queue.push(t_next, slot, next);
@@ -262,7 +270,11 @@ pub(crate) fn run(
             let (attempts, retry) = faults.transmit(&mut rng);
             comm += attempts;
             let s = store.insert(out.msg);
-            queue.push(end + retry + cfg.latency.sample(&mut rng), s, out.dest);
+            queue.push(
+                end + retry + cfg.latency.sample(&mut rng) * link_of(out.dest),
+                s,
+                out.dest,
+            );
         }
 
         if recorder.due_span(k, served.updates) {

@@ -233,6 +233,21 @@ pub fn build_solver(
     }
 }
 
+/// Per-agent heterogeneity factors `(compute_speed, link_latency)` for a
+/// config — both empty when the config is homogeneous. Drawn from a
+/// dedicated RNG stream keyed only on the seed, so every algorithm and both
+/// substrates see the *same* slow agents and slow links (comparative
+/// claims stay apples-to-apples).
+pub fn hetero_factors(cfg: &ExperimentConfig) -> (Vec<f64>, Vec<f64>) {
+    if cfg.heterogeneity == crate::sim::Heterogeneity::None {
+        return (Vec::new(), Vec::new());
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0x4E7E_0);
+    let speed = cfg.heterogeneity.factors(cfg.agents, &mut rng);
+    let link = cfg.heterogeneity.factors(cfg.agents, &mut rng);
+    (speed, link)
+}
+
 /// Token router: deterministic cycle or a Markov chain per walk. Owned by
 /// the DES engine; the thread substrate carries cycle positions with the
 /// tokens instead.

@@ -34,7 +34,7 @@ use crate::data::AgentData;
 use crate::graph::Topology;
 use crate::metrics::{Trace, TracePoint};
 use crate::model::{Problem, Task};
-use crate::sim::{FaultModel, LatencyModel, Membership};
+use crate::sim::{FaultModel, LatencyModel, Membership, TimingModel};
 use crate::solver::SolverClient;
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -76,6 +76,13 @@ struct Shared {
     max_sim_time: f64,
     eval_every: u64,
     latency: LatencyModel,
+    timing: TimingModel,
+    /// Per-agent compute-speed factors (empty = homogeneous): slow agents
+    /// take a calibrated extra sleep per update.
+    speed: Vec<f64>,
+    /// Per-agent link-latency factors (empty = homogeneous): hops *into* a
+    /// slow agent stretch the injected link sleep.
+    link: Vec<f64>,
     faults: FaultModel,
     /// Shared failure-detector view (wall-clock seconds since start).
     membership: Mutex<Membership>,
@@ -163,6 +170,7 @@ pub(crate) fn run(
     let walks = spec.walks(cfg);
     let routing = spec.routing(cfg);
     let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+    let (speed, link) = super::hetero_factors(cfg);
 
     let shared = Arc::new(Shared {
         topo: topo.clone(),
@@ -180,6 +188,9 @@ pub(crate) fn run(
         max_sim_time: cfg.stop.max_sim_time,
         eval_every: cfg.eval_every.max(1),
         latency: cfg.latency,
+        timing: cfg.timing,
+        speed,
+        link,
         faults: cfg.faults,
         membership: Mutex::new(Membership::new(n, cfg.faults, &mut rng)),
         started: Instant::now(),
@@ -433,6 +444,18 @@ fn run_agent(
             behavior.on_activation(&mut msg, &mut ctx)?
         };
 
+        // Straggler emulation: a slow agent stays busy for a calibrated
+        // extra sleep beyond what the update actually took (the thread
+        // analogue of the DES compute-speed multiplier).
+        if served.updates > 0 && !shared.speed.is_empty() {
+            let extra = shared
+                .timing
+                .hetero_extra(shared.speed[i], served.compute_secs, rng);
+            if extra > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(extra));
+            }
+        }
+
         let k = if served.updates > 0 {
             let k = shared
                 .activations
@@ -478,8 +501,9 @@ fn run_agent(
             };
             if next != i {
                 let (attempts, retry) = shared.faults.transmit(rng);
+                let lf = if shared.link.is_empty() { 1.0 } else { shared.link[next] };
                 std::thread::sleep(Duration::from_secs_f64(
-                    retry + shared.latency.sample(rng),
+                    retry + shared.latency.sample(rng) * lf,
                 ));
                 comm_now = shared.comm.fetch_add(attempts, Ordering::Relaxed) + attempts;
             }
@@ -492,10 +516,11 @@ fn run_agent(
         if !sends.is_empty() && !stopping {
             let mut delay = 0.0f64;
             let mut attempts_total = 0u64;
-            for _ in 0..sends.len() {
+            for out in sends.iter() {
                 let (attempts, retry) = shared.faults.transmit(rng);
                 attempts_total += attempts;
-                delay = delay.max(retry + shared.latency.sample(rng));
+                let lf = if shared.link.is_empty() { 1.0 } else { shared.link[out.dest] };
+                delay = delay.max(retry + shared.latency.sample(rng) * lf);
             }
             std::thread::sleep(Duration::from_secs_f64(delay));
             comm_now = shared.comm.fetch_add(attempts_total, Ordering::Relaxed) + attempts_total;

@@ -160,8 +160,133 @@ impl Topology {
         topo
     }
 
+    /// Barabási–Albert scale-free graph: a seed triangle, then each new
+    /// node attaches 2 edges by preferential attachment (probability ∝
+    /// degree). Produces the hub-dominated degree distribution of real
+    /// peer-to-peer/edge networks — the shape on which token walks and
+    /// gossip diverge most (hubs serialize walks; gossip floods them).
+    /// Connected by construction.
+    pub fn scale_free(n: usize, rng: &mut Rng) -> Topology {
+        assert!(n >= 2);
+        if n <= 3 {
+            return Topology::complete(n);
+        }
+        let m = 2usize;
+        let mut adj = vec![Vec::new(); n];
+        let mut edges = Vec::new();
+        // Each node appears once per incident edge: sampling this list
+        // uniformly is exactly degree-proportional attachment.
+        let mut endpoints: Vec<usize> = Vec::new();
+        for (a, b) in [(0usize, 1usize), (0, 2), (1, 2)] {
+            adj[a].push(b);
+            adj[b].push(a);
+            edges.push((a, b));
+            endpoints.push(a);
+            endpoints.push(b);
+        }
+        for v in 3..n {
+            let mut targets: Vec<usize> = Vec::with_capacity(m);
+            let mut guard = 0;
+            while targets.len() < m && guard < 200 {
+                guard += 1;
+                let t = endpoints[rng.below(endpoints.len())];
+                if t != v && !targets.contains(&t) {
+                    targets.push(t);
+                }
+            }
+            if targets.is_empty() {
+                targets.push(rng.below(v)); // degenerate fallback: stay connected
+            }
+            for &t in &targets {
+                adj[v].push(t);
+                adj[t].push(v);
+                edges.push((t.min(v), t.max(v)));
+                endpoints.push(v);
+                endpoints.push(t);
+            }
+        }
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+        }
+        edges.sort_unstable();
+        Topology { n, adj, edges }
+    }
+
+    /// Random geometric graph: `n` points uniform in the unit square,
+    /// edges between pairs within radius r = √(2 ln n / n) (the standard
+    /// connectivity threshold). Residual components are stitched through
+    /// their globally closest cross-component pair, so the result is
+    /// always connected — the spatially-clustered mesh shape of sensor /
+    /// edge deployments.
+    pub fn geometric(n: usize, rng: &mut Rng) -> Topology {
+        assert!(n >= 2);
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+        let d2 = |i: usize, j: usize| {
+            let (dx, dy) = (pts[i].0 - pts[j].0, pts[i].1 - pts[j].1);
+            dx * dx + dy * dy
+        };
+        let r2 = 2.0 * (n as f64).ln().max(1.0) / n as f64;
+        let mut adj = vec![Vec::new(); n];
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if d2(i, j) <= r2 {
+                    adj[i].push(j);
+                    adj[j].push(i);
+                    edges.push((i, j));
+                }
+            }
+        }
+        // Stitch components: repeatedly join the closest pair of points
+        // living in different components (deterministic given the points).
+        loop {
+            let comp = component_labels(&adj);
+            if comp.iter().all(|&c| c == comp[0]) {
+                break;
+            }
+            let (mut bi, mut bj, mut best) = (0usize, 0usize, f64::INFINITY);
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if comp[i] != comp[j] && d2(i, j) < best {
+                        (bi, bj, best) = (i, j, d2(i, j));
+                    }
+                }
+            }
+            adj[bi].push(bj);
+            adj[bj].push(bi);
+            edges.push((bi, bj));
+        }
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+        }
+        edges.sort_unstable();
+        Topology { n, adj, edges }
+    }
+
+    /// The topology kinds [`Topology::by_kind`] accepts — the single
+    /// source of truth behind [`Topology::known_kind`] and the
+    /// [`Topology::VALID_KINDS`] error text (and `by_kind_dispatch`
+    /// asserts every entry actually dispatches).
+    pub const KINDS: &'static [&'static str] = &[
+        "random", "ring", "grid", "star", "complete", "small-world",
+        "scale-free", "geometric",
+    ];
+
+    /// The kind names joined for error messages — quoted by config/CLI
+    /// parse errors.
+    pub const VALID_KINDS: &'static str =
+        "random, ring, grid, star, complete, small-world, scale-free, geometric";
+
+    /// Is `kind` a name [`Topology::by_kind`] will accept? (Config
+    /// validation — a typo'd topology fails at load time, not at run
+    /// time.)
+    pub fn known_kind(kind: &str) -> bool {
+        Self::KINDS.contains(&kind)
+    }
+
     /// Build by kind name (config files / CLI): "random" (needs ξ), "ring",
-    /// "grid", "star", "complete", "small-world".
+    /// "grid", "star", "complete", "small-world", "scale-free",
+    /// "geometric".
     pub fn by_kind(kind: &str, n: usize, xi: f64, rng: &mut Rng) -> anyhow::Result<Topology> {
         Ok(match kind {
             "random" => Topology::random_connected(n, xi, rng),
@@ -170,7 +295,12 @@ impl Topology {
             "star" => Topology::star(n),
             "complete" => Topology::complete(n),
             "small-world" => Topology::small_world(n, 2, rng),
-            other => anyhow::bail!("unknown topology kind '{other}'"),
+            "scale-free" => Topology::scale_free(n, rng),
+            "geometric" => Topology::geometric(n, rng),
+            other => anyhow::bail!(
+                "unknown topology kind '{other}' (valid: {})",
+                Topology::VALID_KINDS
+            ),
         })
     }
 
@@ -336,6 +466,31 @@ impl Topology {
         }
         total as f64 / pairs as f64
     }
+}
+
+/// Connected-component labels over an adjacency structure (helper for the
+/// geometric generator's stitching pass).
+fn component_labels(adj: &[Vec<usize>]) -> Vec<usize> {
+    let n = adj.len();
+    let mut comp = vec![usize::MAX; n];
+    let mut next = 0;
+    for s in 0..n {
+        if comp[s] != usize::MAX {
+            continue;
+        }
+        comp[s] = next;
+        let mut stack = vec![s];
+        while let Some(u) = stack.pop() {
+            for &v in &adj[u] {
+                if comp[v] == usize::MAX {
+                    comp[v] = next;
+                    stack.push(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
 }
 
 /// Shorten a DFS walk while preserving edge-validity and full coverage:
@@ -529,7 +684,11 @@ mod tests {
     #[test]
     fn by_kind_dispatch() {
         let mut r = rng();
-        for kind in ["random", "ring", "grid", "star", "complete", "small-world"] {
+        // KINDS is the canonical list: the error text must mirror it and
+        // every entry must actually dispatch.
+        assert_eq!(Topology::VALID_KINDS, Topology::KINDS.join(", "));
+        for &kind in Topology::KINDS {
+            assert!(Topology::known_kind(kind), "{kind}");
             let g = Topology::by_kind(kind, 10, 0.5, &mut r).unwrap();
             assert!(g.is_connected(), "{kind}");
             // Traversal cycle must be valid on every topology family —
@@ -539,6 +698,47 @@ mod tests {
                 assert!(g.has_edge(w[0], w[1]), "{kind}: {:?}", w);
             }
         }
-        assert!(Topology::by_kind("torus", 10, 0.5, &mut r).is_err());
+        let err = Topology::by_kind("torus", 10, 0.5, &mut r).unwrap_err().to_string();
+        assert!(err.contains("torus") && err.contains("scale-free"), "{err}");
+        assert!(!Topology::known_kind("torus"));
+    }
+
+    #[test]
+    fn scale_free_structure() {
+        let mut r = rng();
+        let g = Topology::scale_free(30, &mut r);
+        assert!(g.is_connected());
+        // Seed triangle (3 edges) + 2 attachments per later node, minus
+        // the rare guard-bounded shortfall.
+        assert!(g.num_edges() <= 3 + 27 * 2);
+        assert!(g.num_edges() > 3 + 27);
+        let degs: Vec<usize> = (0..30).map(|i| g.degree(i)).collect();
+        // Preferential attachment produces hubs: max degree well above the
+        // attachment count m = 2 every late node gets.
+        assert!(*degs.iter().max().unwrap() > 4, "{degs:?}");
+        assert!(*degs.iter().min().unwrap() >= 2);
+    }
+
+    #[test]
+    fn scale_free_tiny_falls_back_to_complete() {
+        let mut r = rng();
+        let g = Topology::scale_free(3, &mut r);
+        assert_eq!(g.num_edges(), 3);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn geometric_connected_and_deterministic() {
+        let a = Topology::geometric(25, &mut Rng::new(9));
+        let b = Topology::geometric(25, &mut Rng::new(9));
+        assert!(a.is_connected());
+        assert_eq!(a.edges(), b.edges());
+        assert!(a.num_edges() >= 24); // at least a spanning structure
+        // All adjacency symmetric and sorted.
+        for i in 0..25 {
+            for &j in a.neighbors(i) {
+                assert!(a.neighbors(j).contains(&i));
+            }
+        }
     }
 }

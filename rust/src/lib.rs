@@ -25,8 +25,15 @@
 //!     substrates therefore apply uniformly to every [`algo::AlgoKind`]
 //!     (one scoped exception: agent churn is token-walk-specific — see
 //!     `algo/dgd.rs`).
-//!   - substrate primitives in [`graph`] (topologies) and [`sim`] (event
-//!     queue, latency/timing models, failure injection).
+//!   - substrate primitives in [`graph`] (topologies, including scale-free
+//!     and geometric generators) and [`sim`] (event queue, latency/timing
+//!     models, per-agent heterogeneity, failure injection).
+//!   - [`scenario`] — named, seed-reproducible workload compositions over
+//!     the orthogonal axes (topology family × dataset × heterogeneity ×
+//!     fault regime × substrate), and [`validate`] — the executable
+//!     paper-claims harness evaluated over the scenario matrix
+//!     (`repro validate --matrix smoke`, `VALIDATE_report.json`). See
+//!     EXPERIMENTS.md §Scenarios for the axes, presets and report schema.
 //! * **Layer 2/1 (build-time JAX + Pallas)** — the per-agent local updates,
 //!   AOT-lowered to HLO text in `artifacts/` and executed through the PJRT C
 //!   API by [`runtime`]; [`solver`] routes each algorithm's update through
@@ -55,9 +62,11 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod solver;
 pub mod util;
+pub mod validate;
 
 pub mod prelude {
     //! Convenience re-exports for downstream users and the examples.
@@ -69,7 +78,8 @@ pub mod prelude {
     pub use crate::graph::Topology;
     pub use crate::metrics::{Trace, TracePoint};
     pub use crate::model::{Problem, Task};
-    pub use crate::sim::{LatencyModel, TimingModel};
+    pub use crate::scenario::{Matrix, Scenario};
+    pub use crate::sim::{Heterogeneity, LatencyModel, TimingModel};
     pub use crate::solver::{LocalSolver, NativeSolver};
 }
 

@@ -24,6 +24,7 @@ fn main() {
         "run" => cmd_run(&args),
         "replicate" => cmd_replicate(&args),
         "sweep" => cmd_sweep(&args),
+        "validate" => cmd_validate(&args),
         "topology" => cmd_topology(&args),
         "timeline" => cmd_timeline(&args),
         "inspect-artifacts" => cmd_inspect(&args),
@@ -52,6 +53,9 @@ USAGE:
   repro run    --config experiment.toml [overrides...]
   repro replicate [--preset P] [--seeds 5] [--target T] [overrides...]
   repro sweep  --param <walks|agents|tau-api|xi|inner-k> --values 1,2,4 [--preset P]
+  repro validate [--matrix smoke|full | --scenario NAME] [--seed N]
+               [--activations K] [--out VALIDATE_report.json]
+               (paper-claims harness; exits non-zero on any failed claim)
   repro topology  [--agents N] [--xi X] [--seed S]
   repro timeline  [--activations K]   (Fig. 2 token/local-copy illustration)
   repro inspect-artifacts [--dir artifacts]
@@ -88,6 +92,9 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()
     if churn > 0.0 {
         cfg.faults.dropout_frac = churn;
         cfg.faults.dropout_len = args.f64_or("dropout-len", 0.01)?;
+    }
+    if let Some(h) = args.str_opt("heterogeneity") {
+        cfg.heterogeneity = apibcd::sim::Heterogeneity::parse(h)?;
     }
     if let Some(r) = args.str_opt("routing") {
         cfg.routing = match r {
@@ -261,6 +268,45 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_or("seed", 7)?;
+    let budget = if args.has("activations") {
+        Some(args.u64_or("activations", 0)?)
+    } else {
+        None
+    };
+    // `--scenario name` restricts the run to one scenario; otherwise the
+    // whole matrix is evaluated.
+    let report = if let Some(name) = args.str_opt("scenario") {
+        let scn = apibcd::scenario::by_name(name)?;
+        eprintln!("validating paper claims on scenario '{}' (seed {seed})", scn.name);
+        let results = apibcd::validate::run_scenarios(&[scn], seed, budget)?;
+        apibcd::validate::ValidateReport {
+            matrix: format!("scenario:{}", scn.name),
+            seed,
+            results,
+        }
+    } else {
+        let matrix = apibcd::scenario::Matrix::by_name(args.str_or("matrix", "smoke"))?;
+        eprintln!(
+            "validating paper claims over the {} scenarios of the '{}' matrix (seed {seed})",
+            apibcd::scenario::matrix(matrix).len(),
+            matrix.name()
+        );
+        apibcd::validate::run(matrix, seed, budget)?
+    };
+    print!("{}", report.summary_table());
+    let out = args.str_or("out", "VALIDATE_report.json");
+    report.write(out)?;
+    eprintln!("wrote {out}");
+    anyhow::ensure!(
+        report.all_passed(),
+        "{} claim(s) failed — see the table above / {out}",
+        report.failed()
+    );
     Ok(())
 }
 

@@ -1,0 +1,352 @@
+//! Scenario matrix: named, seed-reproducible workload compositions.
+//!
+//! A [`Scenario`] fixes one point on the orthogonal axes the decentralized
+//! setting varies over — **topology family** (every [`crate::graph::Topology`]
+//! kind, including the scale-free and geometric generators), **dataset
+//! profile** (via the base [`Preset`]), **agent heterogeneity**
+//! ([`Heterogeneity`]: uniform, bimodal straggler, Pareto tail — threaded
+//! into the DES latency/busy models and the thread substrate's calibrated
+//! sleeps), **fault regime** ([`FaultModel`]) and **substrate**
+//! ([`Substrate`]). Straggler-resilience studies (arXiv 2306.06559, DIGEST
+//! arXiv 2307.07652) show asynchronous methods' advantages hinge on exactly
+//! these axes; the matrix makes them first-class, enumerable workloads.
+//!
+//! Scenarios compose into matrices ([`Matrix::Smoke`] for CI,
+//! [`Matrix::Full`] for figure-scale runs) that the
+//! [`crate::validate`] harness evaluates the paper's claims over
+//! (`repro validate --matrix smoke`).
+
+use crate::config::{ExperimentConfig, Preset, SolverChoice, StopRule};
+use crate::engine::Substrate;
+use crate::sim::{FaultModel, Heterogeneity, TimingModel};
+
+/// One named point in the scenario space. All fields are `'static` so the
+/// matrices can live in const tables; per-run knobs (seed, activation
+/// budget) are supplied when the scenario is instantiated via
+/// [`Scenario::config`].
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Base preset supplying the dataset profile and step-size parameters.
+    pub base: Preset,
+    /// Topology family ([`crate::graph::Topology::by_kind`] name).
+    pub topology: &'static str,
+    pub agents: usize,
+    /// Parallel walks M for the multi-token methods.
+    pub walks: usize,
+    pub heterogeneity: Heterogeneity,
+    pub faults: FaultModel,
+    pub substrate: Substrate,
+    /// Activation budget of a full-fidelity run.
+    pub activations: u64,
+    /// Metric target the comparative claims measure time/comm to.
+    pub target: f64,
+}
+
+impl Scenario {
+    /// Instantiate the scenario as a runnable config. Deterministic per
+    /// `(scenario, seed)`: fixed simulated compute time (the claims compare
+    /// the simulated time axis), native solver, near-exact inner solve (the
+    /// descent claims assume the prox subproblem is solved accurately).
+    pub fn config(&self, seed: u64, max_activations: u64) -> anyhow::Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::preset(self.base);
+        cfg.name = format!("scn_{}", self.name);
+        cfg.agents = self.agents;
+        cfg.walks = self.walks;
+        cfg.topology = self.topology.to_string();
+        cfg.heterogeneity = self.heterogeneity;
+        cfg.faults = self.faults;
+        cfg.seed = seed;
+        cfg.solver = SolverChoice::Native;
+        cfg.timing = TimingModel::Fixed(1e-4);
+        cfg.inner_k = 16;
+        cfg.tau_api = 0.1;
+        cfg.stop = StopRule {
+            max_activations,
+            ..Default::default()
+        };
+        cfg.eval_every = (max_activations / 40).max(5);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Substrate name for reports.
+    pub fn substrate_name(&self) -> &'static str {
+        match self.substrate {
+            Substrate::Des => "des",
+            Substrate::Threads => "threads",
+        }
+    }
+}
+
+/// Which scenario set to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Matrix {
+    /// CI-sized: every axis exercised on the tiny deterministic profile.
+    Smoke,
+    /// Smoke plus figure-scale (cpusmall, N=20) scenarios.
+    Full,
+}
+
+impl Matrix {
+    /// Names accepted by [`Matrix::by_name`] — quoted by CLI parse errors.
+    pub const VALID_NAMES: &'static str = "smoke, full";
+
+    pub fn by_name(s: &str) -> anyhow::Result<Matrix> {
+        match s.to_ascii_lowercase().as_str() {
+            "smoke" => Ok(Matrix::Smoke),
+            "full" => Ok(Matrix::Full),
+            other => anyhow::bail!(
+                "unknown matrix '{other}' (valid: {})",
+                Matrix::VALID_NAMES
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Matrix::Smoke => "smoke",
+            Matrix::Full => "full",
+        }
+    }
+}
+
+const STRAGGLER: Heterogeneity = Heterogeneity::Bimodal { frac: 0.25, slow: 4.0 };
+const LOSSY_5: FaultModel = FaultModel {
+    drop_prob: 0.05,
+    retry_timeout: 2e-4,
+    dropout_frac: 0.0,
+    dropout_len: 0.0,
+};
+
+/// The CI matrix: ≥ 2 topology families × heterogeneity on/off, a fault
+/// regime, and both substrates, all on the tiny deterministic profile.
+pub static SMOKE: &[Scenario] = &[
+    Scenario {
+        name: "random_base",
+        description: "ξ=0.7 random graph, homogeneous agents (the paper's §5 setting, scaled down)",
+        base: Preset::TestLs,
+        topology: "random",
+        agents: 6,
+        walks: 3,
+        heterogeneity: Heterogeneity::None,
+        faults: FaultModel::NONE,
+        substrate: Substrate::Des,
+        activations: 800,
+        target: 0.65,
+    },
+    Scenario {
+        name: "random_straggler",
+        description: "random graph with a 25% bimodal straggler population (4× slower)",
+        base: Preset::TestLs,
+        topology: "random",
+        agents: 6,
+        walks: 3,
+        heterogeneity: STRAGGLER,
+        faults: FaultModel::NONE,
+        substrate: Substrate::Des,
+        activations: 800,
+        target: 0.65,
+    },
+    Scenario {
+        name: "scale_free_base",
+        description: "Barabási–Albert scale-free graph, homogeneous agents",
+        base: Preset::TestLs,
+        topology: "scale-free",
+        agents: 6,
+        walks: 3,
+        heterogeneity: Heterogeneity::None,
+        faults: FaultModel::NONE,
+        substrate: Substrate::Des,
+        activations: 800,
+        target: 0.65,
+    },
+    Scenario {
+        name: "scale_free_pareto",
+        description: "scale-free graph with Pareto-tailed agent speeds (hub + straggler worst case)",
+        base: Preset::TestLs,
+        topology: "scale-free",
+        agents: 6,
+        walks: 3,
+        heterogeneity: Heterogeneity::Pareto { alpha: 1.5 },
+        faults: FaultModel::NONE,
+        substrate: Substrate::Des,
+        activations: 800,
+        target: 0.65,
+    },
+    Scenario {
+        name: "geometric_uniform_het",
+        description: "random geometric (sensor-mesh) graph with U(1,3) speed spread",
+        base: Preset::TestLs,
+        topology: "geometric",
+        agents: 6,
+        walks: 3,
+        heterogeneity: Heterogeneity::Uniform { spread: 3.0 },
+        faults: FaultModel::NONE,
+        substrate: Substrate::Des,
+        activations: 800,
+        target: 0.65,
+    },
+    Scenario {
+        name: "ring_lossy",
+        description: "ring topology with 5% link loss (retransmissions inflate both figure axes)",
+        base: Preset::TestLs,
+        topology: "ring",
+        agents: 6,
+        walks: 3,
+        heterogeneity: Heterogeneity::None,
+        faults: LOSSY_5,
+        substrate: Substrate::Des,
+        activations: 800,
+        target: 0.65,
+    },
+    Scenario {
+        name: "threads_straggler",
+        description: "real OS-thread substrate under bimodal stragglers (calibrated sleeps)",
+        base: Preset::TestLs,
+        topology: "random",
+        agents: 6,
+        walks: 3,
+        heterogeneity: STRAGGLER,
+        faults: FaultModel::NONE,
+        substrate: Substrate::Threads,
+        activations: 600,
+        target: 0.65,
+    },
+];
+
+/// Figure-scale additions for `--matrix full` (cpusmall, the Fig. 3
+/// workload).
+pub static FULL_EXTRA: &[Scenario] = &[
+    Scenario {
+        name: "fig3_random_straggler",
+        description: "Fig. 3 workload (cpusmall, N=20, M=5) with bimodal stragglers",
+        base: Preset::Fig3Cpusmall,
+        topology: "random",
+        agents: 20,
+        walks: 5,
+        heterogeneity: STRAGGLER,
+        faults: FaultModel::NONE,
+        substrate: Substrate::Des,
+        activations: 4000,
+        target: 0.5,
+    },
+    Scenario {
+        name: "fig3_scale_free",
+        description: "Fig. 3 workload on a scale-free topology",
+        base: Preset::Fig3Cpusmall,
+        topology: "scale-free",
+        agents: 20,
+        walks: 5,
+        heterogeneity: Heterogeneity::None,
+        faults: FaultModel::NONE,
+        substrate: Substrate::Des,
+        activations: 4000,
+        target: 0.5,
+    },
+    Scenario {
+        name: "fig3_geometric_pareto",
+        description: "Fig. 3 workload on a geometric mesh with Pareto-tailed speeds",
+        base: Preset::Fig3Cpusmall,
+        topology: "geometric",
+        agents: 20,
+        walks: 5,
+        heterogeneity: Heterogeneity::Pareto { alpha: 1.5 },
+        faults: FaultModel::NONE,
+        substrate: Substrate::Des,
+        activations: 4000,
+        target: 0.5,
+    },
+    Scenario {
+        name: "fig3_threads",
+        description: "Fig. 3 workload on the real-thread substrate with stragglers",
+        base: Preset::Fig3Cpusmall,
+        topology: "random",
+        agents: 20,
+        walks: 5,
+        heterogeneity: STRAGGLER,
+        faults: FaultModel::NONE,
+        substrate: Substrate::Threads,
+        activations: 2000,
+        target: 0.5,
+    },
+];
+
+/// The scenarios of a matrix, in a stable order.
+pub fn matrix(m: Matrix) -> Vec<&'static Scenario> {
+    match m {
+        Matrix::Smoke => SMOKE.iter().collect(),
+        Matrix::Full => SMOKE.iter().chain(FULL_EXTRA.iter()).collect(),
+    }
+}
+
+/// Every known scenario name (stable order), for error messages and docs.
+pub fn all_names() -> String {
+    SMOKE
+        .iter()
+        .chain(FULL_EXTRA.iter())
+        .map(|s| s.name)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Case-insensitive lookup; the error lists every known scenario name.
+pub fn by_name(name: &str) -> anyhow::Result<&'static Scenario> {
+    SMOKE
+        .iter()
+        .chain(FULL_EXTRA.iter())
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' (valid: {})", all_names())
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_names_are_unique() {
+        let mut names: Vec<&str> = SMOKE.iter().chain(FULL_EXTRA.iter()).map(|s| s.name).collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate scenario names");
+    }
+
+    #[test]
+    fn every_scenario_instantiates_a_valid_config() {
+        for s in matrix(Matrix::Full) {
+            let cfg = s.config(1, 100).unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert_eq!(cfg.agents, s.agents);
+            assert_eq!(cfg.topology, s.topology);
+            assert_eq!(cfg.stop.max_activations, 100);
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive_and_errors_list_names() {
+        assert_eq!(by_name("RANDOM_BASE").unwrap().name, "random_base");
+        let err = by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("random_base"), "{err}");
+        assert!(err.contains("fig3_threads"), "{err}");
+        let err = Matrix::by_name("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus") && err.contains("smoke"), "{err}");
+    }
+
+    #[test]
+    fn smoke_matrix_covers_the_required_axes() {
+        let scns = matrix(Matrix::Smoke);
+        assert!(scns.len() >= 6);
+        let mut fams: Vec<&str> = scns.iter().map(|s| s.topology).collect();
+        fams.sort_unstable();
+        fams.dedup();
+        assert!(fams.len() >= 2, "need >= 2 topology families: {fams:?}");
+        assert!(scns.iter().any(|s| s.heterogeneity == Heterogeneity::None));
+        assert!(scns.iter().any(|s| s.heterogeneity != Heterogeneity::None));
+        assert!(scns.iter().any(|s| s.substrate == Substrate::Des));
+        assert!(scns.iter().any(|s| s.substrate == Substrate::Threads));
+        assert!(scns.iter().any(|s| !s.faults.is_none()));
+    }
+}

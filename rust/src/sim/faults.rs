@@ -53,6 +53,32 @@ impl FaultModel {
         self.drop_prob == 0.0 && self.dropout_frac == 0.0
     }
 
+    /// Reject fault parameters outside their probabilistic/temporal
+    /// domains (checked at config load, like `agents >= 2`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.drop_prob),
+            "faults: drop-prob must be in [0, 1] (got {})",
+            self.drop_prob
+        );
+        anyhow::ensure!(
+            self.retry_timeout.is_finite() && self.retry_timeout >= 0.0,
+            "faults: retry timeout must be non-negative (got {})",
+            self.retry_timeout
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.dropout_frac),
+            "faults: dropout-frac must be in [0, 1] (got {})",
+            self.dropout_frac
+        );
+        anyhow::ensure!(
+            self.dropout_len.is_finite() && self.dropout_len >= 0.0,
+            "faults: dropout-len must be non-negative (got {})",
+            self.dropout_len
+        );
+        Ok(())
+    }
+
     /// Simulate one transmission with retransmissions: returns
     /// (attempts, extra_delay). `attempts ≥ 1`; each attempt is one comm
     /// unit. Bounded at 16 tries (then the link is declared dead and the

@@ -40,6 +40,26 @@ impl LatencyModel {
             LatencyModel::Fixed(v) => v,
         }
     }
+
+    /// Reject latencies the simulation cannot honor (negative or
+    /// non-finite delays would corrupt the event-queue time axis).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            LatencyModel::Uniform { lo, hi } => {
+                anyhow::ensure!(
+                    lo.is_finite() && hi.is_finite() && lo >= 0.0 && hi >= lo,
+                    "latency: uniform bounds must satisfy 0 <= lo <= hi (got lo={lo}, hi={hi})"
+                );
+            }
+            LatencyModel::Fixed(v) => {
+                anyhow::ensure!(
+                    v.is_finite() && v >= 0.0,
+                    "latency: fixed delay must be a non-negative number (got {v})"
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Where a local update's simulated duration comes from.
@@ -64,6 +84,139 @@ impl TimingModel {
                 mean * rng.uniform(1.0 - jitter, 1.0 + jitter)
             }
         }
+    }
+
+    /// Calibrated straggler sleep for the thread substrate: how much longer
+    /// an agent with compute-speed factor `factor` (≥ 1 = slower) should
+    /// appear busy beyond the `measured_secs` the update actually took.
+    pub fn hetero_extra(&self, factor: f64, measured_secs: f64, rng: &mut Rng) -> f64 {
+        (self.duration(measured_secs, rng) * factor - measured_secs).max(0.0)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            TimingModel::Measured => {}
+            TimingModel::Fixed(v) => anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "timing: fixed duration must be a non-negative number (got {v})"
+            ),
+            TimingModel::Jittered { mean, jitter } => anyhow::ensure!(
+                mean.is_finite() && mean >= 0.0 && (0.0..=1.0).contains(&jitter),
+                "timing: jittered model needs mean >= 0 and jitter in [0, 1] \
+                 (got mean={mean}, jitter={jitter})"
+            ),
+        }
+        Ok(())
+    }
+}
+
+/// Per-agent heterogeneity: a distribution of multiplicative factors (≥ 1)
+/// applied to each agent's compute time and link latency. This is the
+/// scenario axis that straggler-resilience studies (arXiv 2306.06559,
+/// arXiv 2307.07652) show asynchronous methods' advantages hinge on. The
+/// factors are drawn once per run from a dedicated seed stream
+/// ([`crate::engine::hetero_factors`]) so every algorithm and both
+/// substrates see the *same* slow agents.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Heterogeneity {
+    /// Homogeneous agents (every factor 1.0).
+    None,
+    /// Factors ~ U(1, `spread`).
+    Uniform { spread: f64 },
+    /// A `frac` fraction of agents are `slow`× slower (bimodal straggler).
+    Bimodal { frac: f64, slow: f64 },
+    /// Heavy Pareto tail: factor = (1 − u)^(−1/α), clipped at
+    /// [`Heterogeneity::PARETO_CAP`] so a single extreme draw cannot turn
+    /// the whole network into one bottleneck.
+    Pareto { alpha: f64 },
+}
+
+impl Heterogeneity {
+    /// Clip for the Pareto tail draw.
+    pub const PARETO_CAP: f64 = 10.0;
+
+    /// The spec forms accepted by [`Heterogeneity::parse`] — quoted by
+    /// config/CLI parse errors.
+    pub const VALID_FORMS: &'static str =
+        "none, uniform:<spread>, bimodal:<frac>,<slow>, pareto:<alpha>";
+
+    /// Draw one factor (≥ 1) per agent.
+    pub fn factors(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n)
+            .map(|_| match *self {
+                Heterogeneity::None => 1.0,
+                Heterogeneity::Uniform { spread } => rng.uniform(1.0, spread.max(1.0)),
+                Heterogeneity::Bimodal { frac, slow } => {
+                    if rng.next_f64() < frac {
+                        slow
+                    } else {
+                        1.0
+                    }
+                }
+                Heterogeneity::Pareto { alpha } => (1.0 - rng.next_f64())
+                    .powf(-1.0 / alpha)
+                    .min(Self::PARETO_CAP),
+            })
+            .collect()
+    }
+
+    /// Parse a spec string: `none`, `uniform:3`, `bimodal:0.25,4`,
+    /// `pareto:1.5` (case-insensitive). Parameters are validated here so a
+    /// bad config fails at load time, not mid-run.
+    pub fn parse(s: &str) -> anyhow::Result<Heterogeneity> {
+        let lower = s.trim().to_ascii_lowercase();
+        let (kind, rest) = match lower.split_once(':') {
+            Some((k, r)) => (k.trim(), r.trim()),
+            None => (lower.as_str(), ""),
+        };
+        let num = |v: &str, what: &str| -> anyhow::Result<f64> {
+            v.parse().map_err(|_| {
+                anyhow::anyhow!("heterogeneity '{s}': bad {what} '{v}' (valid forms: {})",
+                    Self::VALID_FORMS)
+            })
+        };
+        let h = match kind {
+            "none" => Heterogeneity::None,
+            "uniform" => Heterogeneity::Uniform { spread: num(rest, "spread")? },
+            "bimodal" => {
+                let (f, sl) = rest.split_once(',').ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "heterogeneity '{s}': bimodal needs `<frac>,<slow>` (valid forms: {})",
+                        Self::VALID_FORMS
+                    )
+                })?;
+                Heterogeneity::Bimodal { frac: num(f.trim(), "frac")?, slow: num(sl.trim(), "slow")? }
+            }
+            "pareto" => Heterogeneity::Pareto { alpha: num(rest, "alpha")? },
+            other => anyhow::bail!(
+                "unknown heterogeneity '{other}' (valid forms: {})",
+                Self::VALID_FORMS
+            ),
+        };
+        h.validate()?;
+        Ok(h)
+    }
+
+    /// Reject parameters the factor draw cannot honor (factors must stay
+    /// ≥ 1 and finite).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            Heterogeneity::None => {}
+            Heterogeneity::Uniform { spread } => anyhow::ensure!(
+                spread.is_finite() && spread >= 1.0,
+                "heterogeneity: uniform spread must be >= 1 (got {spread})"
+            ),
+            Heterogeneity::Bimodal { frac, slow } => anyhow::ensure!(
+                (0.0..=1.0).contains(&frac) && slow.is_finite() && slow >= 1.0,
+                "heterogeneity: bimodal needs frac in [0, 1] and slow >= 1 \
+                 (got frac={frac}, slow={slow})"
+            ),
+            Heterogeneity::Pareto { alpha } => anyhow::ensure!(
+                alpha.is_finite() && alpha > 0.0,
+                "heterogeneity: pareto alpha must be > 0 (got {alpha})"
+            ),
+        }
+        Ok(())
     }
 }
 
@@ -197,6 +350,82 @@ mod tests {
             let v = m.sample(&mut rng);
             assert!((1e-5..1e-4).contains(&v));
         }
+    }
+
+    #[test]
+    fn heterogeneity_factors_at_least_one() {
+        let mut rng = Rng::new(5);
+        for h in [
+            Heterogeneity::None,
+            Heterogeneity::Uniform { spread: 3.0 },
+            Heterogeneity::Bimodal { frac: 0.25, slow: 4.0 },
+            Heterogeneity::Pareto { alpha: 1.5 },
+        ] {
+            let f = h.factors(200, &mut rng);
+            assert_eq!(f.len(), 200);
+            assert!(
+                f.iter().all(|&v| (1.0..=Heterogeneity::PARETO_CAP).contains(&v)),
+                "{h:?}: factor out of range"
+            );
+        }
+        assert!(Heterogeneity::None.factors(8, &mut rng).iter().all(|&v| v == 1.0));
+        let f = Heterogeneity::Bimodal { frac: 1.0, slow: 4.0 }.factors(16, &mut rng);
+        assert!(f.iter().all(|&v| v == 4.0));
+    }
+
+    #[test]
+    fn heterogeneity_parse_round_trip() {
+        assert_eq!(Heterogeneity::parse("none").unwrap(), Heterogeneity::None);
+        assert_eq!(
+            Heterogeneity::parse("Uniform:3").unwrap(),
+            Heterogeneity::Uniform { spread: 3.0 }
+        );
+        assert_eq!(
+            Heterogeneity::parse("bimodal:0.25,4").unwrap(),
+            Heterogeneity::Bimodal { frac: 0.25, slow: 4.0 }
+        );
+        assert_eq!(
+            Heterogeneity::parse("pareto:1.5").unwrap(),
+            Heterogeneity::Pareto { alpha: 1.5 }
+        );
+    }
+
+    #[test]
+    fn heterogeneity_parse_errors_name_valid_forms() {
+        for bad in ["zipf:2", "uniform:0.5", "bimodal:2,4", "bimodal:0.5,0.5", "pareto:-1", "bimodal:0.5"] {
+            let err = Heterogeneity::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("heterogeneity"),
+                "{bad}: {err}"
+            );
+        }
+        let err = Heterogeneity::parse("zipf:2").unwrap_err().to_string();
+        assert!(err.contains("uniform:<spread>"), "{err}");
+    }
+
+    #[test]
+    fn latency_and_timing_validation() {
+        assert!(LatencyModel::paper().validate().is_ok());
+        assert!(LatencyModel::Fixed(-1.0).validate().is_err());
+        assert!(LatencyModel::Uniform { lo: 2.0, hi: 1.0 }.validate().is_err());
+        assert!(LatencyModel::Uniform { lo: -1e-5, hi: 1e-4 }.validate().is_err());
+        assert!(TimingModel::Measured.validate().is_ok());
+        assert!(TimingModel::Fixed(-0.1).validate().is_err());
+        assert!(TimingModel::Jittered { mean: 1.0, jitter: 2.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn hetero_extra_calibrates_to_the_timing_model() {
+        let mut rng = Rng::new(6);
+        // Measured: a 2× agent sleeps one extra measured duration.
+        let e = TimingModel::Measured.hetero_extra(2.0, 0.3, &mut rng);
+        assert!((e - 0.3).abs() < 1e-12);
+        // Fixed: sleep tops the measured time up to factor × fixed.
+        let e = TimingModel::Fixed(1e-3).hetero_extra(4.0, 1e-4, &mut rng);
+        assert!((e - (4e-3 - 1e-4)).abs() < 1e-12);
+        // Never negative, even when the measured time already exceeds it.
+        let e = TimingModel::Fixed(1e-5).hetero_extra(1.0, 1.0, &mut rng);
+        assert_eq!(e, 0.0);
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Tier-2 executable paper-claims suite: the `repro validate` harness run
+//! as tests, so any engine/algorithm refactor that breaks a §5 claim
+//! (API-BCD beats I-BCD on time, tokens beat gossip on communication,
+//! Theorem 1 descent, bit-exact DES replay, cross-substrate agreement)
+//! fails CI instead of silently bending a figure.
+
+use apibcd::engine::Substrate;
+use apibcd::scenario::{self, Matrix, Scenario};
+use apibcd::util::json::Json;
+use apibcd::validate;
+
+fn tmpdir(tag: &str) -> String {
+    let d = format!(
+        "{}/apibcd_claims_{tag}_{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn smoke_matrix_claims_all_pass_and_report_is_well_formed() {
+    let report = validate::run(Matrix::Smoke, 7, None).unwrap();
+    let failures: Vec<String> = report
+        .results
+        .iter()
+        .filter(|r| !r.passed)
+        .map(|r| format!("{} on {}: {}", r.claim, r.scenario, r.detail))
+        .collect();
+    assert!(failures.is_empty(), "failed claims:\n{}", failures.join("\n"));
+
+    // Coverage: every smoke scenario contributed results, and the claim
+    // set spans the comparative, theory, determinism and substrate axes.
+    let scenarios: std::collections::BTreeSet<&str> =
+        report.results.iter().map(|r| r.scenario).collect();
+    assert!(scenarios.len() >= 6, "{scenarios:?}");
+    let claims: std::collections::BTreeSet<&str> =
+        report.results.iter().map(|r| r.claim).collect();
+    for expect in [
+        "converges",
+        "api_faster_than_ibcd_time",
+        "token_cheaper_than_gossip_comm",
+        "ibcd_objective_nonincreasing",
+        "des_replay_bit_identical",
+        "threads_converge",
+        "des_threads_agree",
+    ] {
+        assert!(claims.contains(expect), "missing claim {expect}: {claims:?}");
+    }
+    let substrates: std::collections::BTreeSet<&str> =
+        report.results.iter().map(|r| r.substrate).collect();
+    assert!(substrates.contains("des") && substrates.contains("threads"));
+
+    // The report round-trips through the JSON writer/parser with the
+    // bench-style schema.
+    let dir = tmpdir("report");
+    let path = format!("{dir}/VALIDATE_report.json");
+    report.write(&path).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("suite").and_then(|j| j.as_str()), Some("validate"));
+    assert_eq!(doc.get("matrix").and_then(|j| j.as_str()), Some("smoke"));
+    let results = doc.get("results").and_then(|j| j.as_arr()).unwrap();
+    assert_eq!(results.len(), report.results.len());
+    for r in results {
+        for key in ["claim", "scenario", "substrate", "passed", "detail"] {
+            assert!(r.get(key).is_some(), "missing {key} in {r:?}");
+        }
+    }
+    let summary = doc.get("summary").unwrap();
+    assert_eq!(
+        summary.get("total").and_then(|j| j.as_usize()),
+        Some(report.results.len())
+    );
+    assert_eq!(summary.get("failed").and_then(|j| j.as_usize()), Some(0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn des_claim_results_are_deterministic_across_reruns() {
+    // The harness itself must be reproducible: the DES portion of the
+    // matrix yields byte-identical claim results (verdicts *and* measured
+    // details) across reruns of the same seed.
+    let des: Vec<&'static Scenario> = scenario::matrix(Matrix::Smoke)
+        .into_iter()
+        .filter(|s| s.substrate == Substrate::Des)
+        .collect();
+    let a = validate::run_scenarios(&des, 7, Some(400)).unwrap();
+    let b = validate::run_scenarios(&des, 7, Some(400)).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.claim, y.claim);
+        assert_eq!(x.scenario, y.scenario);
+        assert_eq!(x.passed, y.passed, "{} on {}: {} vs {}", x.claim, x.scenario, x.detail, y.detail);
+        assert_eq!(x.detail, y.detail, "{} on {}", x.claim, x.scenario);
+    }
+}
+
+#[test]
+fn heterogeneity_factors_shared_across_substrates_and_algos() {
+    // The comparative claims are only meaningful if every algorithm and
+    // both substrates face the *same* stragglers.
+    let scn = scenario::by_name("random_straggler").unwrap();
+    let cfg = scn.config(11, 100).unwrap();
+    let (s1, l1) = apibcd::engine::hetero_factors(&cfg);
+    let (s2, l2) = apibcd::engine::hetero_factors(&cfg);
+    assert_eq!(s1.len(), cfg.agents);
+    assert!((0..cfg.agents).all(|i| s1[i] == s2[i] && l1[i] == l2[i]));
+    // A U(1,3) spread makes every agent strictly slower than 1.0 (the
+    // bimodal draw could legitimately produce zero stragglers on a seed).
+    let uni = scenario::by_name("geometric_uniform_het").unwrap().config(11, 100).unwrap();
+    let (su, _) = apibcd::engine::hetero_factors(&uni);
+    assert!(su.iter().all(|&f| f > 1.0), "{su:?}");
+    // Homogeneous configs draw nothing.
+    let base = scenario::by_name("random_base").unwrap().config(11, 100).unwrap();
+    assert!(apibcd::engine::hetero_factors(&base).0.is_empty());
+}
+
+#[test]
+fn heterogeneity_slows_the_simulated_clock() {
+    // Heterogeneity must actually reach the DES time axis: the same
+    // workload with U(1,3) agent speeds takes strictly longer simulated
+    // time to the same activation count than its homogeneous twin.
+    use apibcd::algo::AlgoKind;
+    use apibcd::engine::Experiment;
+    let scn = scenario::by_name("geometric_uniform_het").unwrap();
+    let mut slow = scn.config(7, 300).unwrap();
+    slow.algos = vec![AlgoKind::ApiBcd];
+    let mut fast = slow.clone();
+    fast.heterogeneity = apibcd::sim::Heterogeneity::None;
+    let t_slow = Experiment::builder(slow).run().unwrap().traces[0].last().unwrap().time;
+    let t_fast = Experiment::builder(fast).run().unwrap().traces[0].last().unwrap().time;
+    assert!(
+        t_slow > t_fast,
+        "heterogeneity should stretch simulated time: {t_slow} vs {t_fast}"
+    );
+}

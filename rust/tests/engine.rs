@@ -155,6 +155,88 @@ fn thread_substrate_rejects_unbounded_runs() {
     assert!(err.contains("stop rule"), "{err}");
 }
 
+/// Render a trace exactly (shortest-roundtrip float formatting, so equal
+/// strings ⇔ bit-equal traces).
+fn render_trace(t: &apibcd::metrics::Trace) -> String {
+    let mut s = String::new();
+    for p in &t.points {
+        s.push_str(&format!(
+            "iter={} time={:?} comm={} objective={:?} metric={:?}\n",
+            p.iter, p.time, p.comm, p.objective, p.metric
+        ));
+    }
+    s
+}
+
+#[test]
+fn golden_traces_match_snapshots() {
+    // One tiny fixed-seed DES run per algorithm, diffed against the
+    // committed snapshot: any silent engine/algorithm drift (event
+    // ordering, rng stream usage, recording cadence, float paths) shows up
+    // as a readable text diff. Bootstrap: a missing snapshot is written and
+    // reported (commit it); set UPDATE_SNAPSHOTS=1 to regenerate after an
+    // *intended* behavior change.
+    let dir = std::path::Path::new("tests/snapshots");
+    std::fs::create_dir_all(dir).unwrap();
+    let update = std::env::var("UPDATE_SNAPSHOTS").is_ok();
+    // Bootstrap-on-missing is only for the first toolchain-equipped run;
+    // REQUIRE_SNAPSHOTS=1 (set once the goldens are committed) turns a
+    // missing file into a failure so CI cannot silently re-bootstrap.
+    let require = std::env::var("REQUIRE_SNAPSHOTS").is_ok();
+    for &kind in AlgoKind::all() {
+        let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+        cfg.algos = vec![kind];
+        cfg.stop.max_activations = 60;
+        cfg.eval_every = 10;
+        let report = Experiment::builder(cfg).run().unwrap();
+        let got = render_trace(&report.traces[0]);
+        assert!(!got.is_empty(), "{}: empty trace", kind.name());
+        let path = dir.join(format!("trace_{}.txt", kind.name().to_lowercase()));
+        if update || !path.exists() {
+            assert!(
+                update || !require,
+                "{}: snapshot {} missing with REQUIRE_SNAPSHOTS set — commit \
+                 the goldens (CI uploads them as the golden-traces artifact)",
+                kind.name(),
+                path.display()
+            );
+            std::fs::write(&path, &got).unwrap();
+            eprintln!("snapshot written: {} (commit it)", path.display());
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            got,
+            want,
+            "{}: golden DES trace drifted from {} — if the change is \
+             intended, regenerate with UPDATE_SNAPSHOTS=1 cargo test",
+            kind.name(),
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn heterogeneous_des_stays_deterministic_per_seed() {
+    // The heterogeneity factors are part of the seeded state: a straggler
+    // run must replay bit-for-bit like a homogeneous one.
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::ApiBcd, AlgoKind::Dgd];
+    cfg.heterogeneity = apibcd::sim::Heterogeneity::Bimodal { frac: 0.4, slow: 4.0 };
+    cfg.stop.max_activations = 300;
+    let a = Experiment::builder(cfg.clone()).run().unwrap();
+    let b = Experiment::builder(cfg).run().unwrap();
+    for (ta, tb) in a.traces.iter().zip(&b.traces) {
+        assert_eq!(ta.points.len(), tb.points.len(), "{}", ta.name);
+        for (pa, pb) in ta.points.iter().zip(&tb.points) {
+            assert_eq!(pa.iter, pb.iter);
+            assert_eq!(pa.comm, pb.comm);
+            assert_eq!(pa.time.to_bits(), pb.time.to_bits());
+            assert_eq!(pa.metric.to_bits(), pb.metric.to_bits());
+        }
+    }
+}
+
 #[test]
 fn timeline_events_cover_all_walks() {
     let mut cfg = base_ls();

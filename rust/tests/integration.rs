@@ -115,6 +115,92 @@ fn substrates_agree_for_ibcd_and_gapi_bcd_on_fig3_smoke() {
 }
 
 #[test]
+fn substrates_agree_under_bimodal_stragglers() {
+    // The heterogeneity axis must mean the same thing on both substrates:
+    // DES straggler modelling (stretched simulated compute/latency) and the
+    // thread substrate's calibrated sleeps land in the same final-metric
+    // band — same tolerance regime as the fig3 agreement test above.
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.agents = 5;
+    cfg.walks = 2;
+    cfg.tau_api = 0.1;
+    cfg.heterogeneity = apibcd::sim::Heterogeneity::Bimodal { frac: 0.4, slow: 4.0 };
+    cfg.stop.max_activations = 800;
+    cfg.eval_every = 40;
+    cfg.algos = vec![AlgoKind::ApiBcd, AlgoKind::Wpg];
+
+    let des = Experiment::builder(cfg.clone())
+        .substrate(Substrate::Des)
+        .run()
+        .unwrap();
+    let thr = Experiment::builder(cfg)
+        .substrate(Substrate::Threads)
+        .run()
+        .unwrap();
+    for (d, t) in des.traces.iter().zip(&thr.traces) {
+        assert!(
+            d.last_metric() < 0.8 && d.last_metric() < d.points[0].metric,
+            "{} DES did not improve under stragglers: {}",
+            d.name,
+            d.last_metric()
+        );
+        assert!(
+            (d.last_metric() - t.last_metric()).abs() < 0.25,
+            "{}: DES {} vs threads {} under stragglers",
+            d.name,
+            d.last_metric(),
+            t.last_metric()
+        );
+    }
+}
+
+#[test]
+fn cli_validate_runs_a_scenario() {
+    // CLI wiring only (flags, report path, exit codes) on a single DES
+    // scenario — the full smoke matrix is covered once by tests/claims.rs
+    // and once by the CI validate-smoke job; no need to run it a third
+    // time here.
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let dir = tmpdir("validate");
+    let report_path = format!("{dir}/VALIDATE_report.json");
+    let out = std::process::Command::new(bin)
+        .args(["validate", "--scenario", "random_base", "--out", &report_path])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "repro validate failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("PASS") && text.contains("0 failed"), "{text}");
+
+    let doc = apibcd::util::json::Json::parse(&std::fs::read_to_string(&report_path).unwrap())
+        .unwrap();
+    assert_eq!(doc.get("suite").and_then(|j| j.as_str()), Some("validate"));
+    // One DES scenario evaluates the full DES claim set.
+    assert!(doc.get("results").and_then(|j| j.as_arr()).unwrap().len() >= 5);
+
+    // Unknown matrix / scenario: non-zero exit, errors list the valid names.
+    let out = std::process::Command::new(bin)
+        .args(["validate", "--matrix", "bogus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bogus") && err.contains("smoke"), "{err}");
+    let out = std::process::Command::new(bin)
+        .args(["validate", "--scenario", "nope"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("nope") && err.contains("random_base"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn cli_binary_runs_core_commands() {
     let bin = env!("CARGO_BIN_EXE_repro");
     let run = |args: &[&str]| {

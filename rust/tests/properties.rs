@@ -102,6 +102,91 @@ fn prop_traversal_cycle_covers_and_walks_edges() {
 }
 
 #[test]
+fn prop_every_topology_kind_well_formed() {
+    // Every generator — including the scenario subsystem's scale-free and
+    // geometric families — must produce a connected, symmetric, sorted,
+    // self-loop-free graph with a canonical edge list and row-stochastic
+    // Metropolis rows supported on its edges.
+    run_prop(
+        "every topology kind well-formed",
+        cfg(48, 2024),
+        |r| {
+            (
+                Topology::KINDS[r.below(Topology::KINDS.len())],
+                4 + r.below(28),
+                0.2 + 0.7 * r.next_f64(),
+                r.next_u64(),
+            )
+        },
+        |&(kind, n, xi, seed)| {
+            let mut rng = Rng::new(seed);
+            let g = Topology::by_kind(kind, n, xi, &mut rng).map_err(|e| e.to_string())?;
+            if g.n() != n {
+                return Err(format!("{kind}: wrong agent count"));
+            }
+            if !g.is_connected() {
+                return Err(format!("{kind}: disconnected"));
+            }
+            let mut degree_sum = 0usize;
+            for i in 0..n {
+                let d = g.degree(i);
+                if d == 0 || d > n - 1 {
+                    return Err(format!("{kind}: degree {d} out of [1, {}] at {i}", n - 1));
+                }
+                degree_sum += d;
+                let mut prev = None;
+                for &j in g.neighbors(i) {
+                    if j == i {
+                        return Err(format!("{kind}: self loop at {i}"));
+                    }
+                    if !g.neighbors(j).contains(&i) {
+                        return Err(format!("{kind}: asymmetric edge {i}-{j}"));
+                    }
+                    if let Some(p) = prev {
+                        if p >= j {
+                            return Err(format!("{kind}: adjacency of {i} not sorted/deduped"));
+                        }
+                    }
+                    prev = Some(j);
+                }
+            }
+            if degree_sum != 2 * g.num_edges() {
+                return Err(format!(
+                    "{kind}: degree sum {degree_sum} != 2·|E| = {}",
+                    2 * g.num_edges()
+                ));
+            }
+            for w in g.edges().windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("{kind}: edge list not strictly sorted"));
+                }
+            }
+            for &(a, b) in g.edges() {
+                if a >= b || !g.has_edge(a, b) {
+                    return Err(format!("{kind}: non-canonical edge ({a},{b})"));
+                }
+            }
+            for i in 0..n {
+                let row = g.metropolis_row(i);
+                let sum: f64 = row.iter().map(|&(_, p)| p).sum();
+                if (sum - 1.0).abs() > 1e-9 {
+                    return Err(format!("{kind}: metropolis row {i} sums to {sum}"));
+                }
+                for &(j, p) in &row {
+                    if p < -1e-12 {
+                        return Err(format!("{kind}: negative probability {p} at row {i}"));
+                    }
+                    if j != i && !g.has_edge(i, j) {
+                        return Err(format!("{kind}: metropolis mass on non-edge {i}-{j}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_metropolis_rows_stochastic_and_supported() {
     run_prop(
         "metropolis rows",
