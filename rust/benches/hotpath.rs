@@ -147,6 +147,16 @@ fn bench_coordinator(suite: &mut Suite, smoke: bool) {
     );
     suite.push(r);
 
+    // The record path in isolation (running block-sum + cached losses +
+    // O(dim) mean — see BENCH_scale.json for the same series vs N).
+    let report = apibcd::run_experiment(&cfg).unwrap();
+    let t = &report.traces[0];
+    let records = t.points.len().saturating_sub(1).max(1);
+    suite.derive(
+        "des/api-bcd ns_per_record (eval@10)",
+        t.record_secs * 1e9 / records as f64,
+    );
+
     // Topology + routing.
     let mut rng = apibcd::util::rng::Rng::new(7);
     let iters = if smoke { 30 } else { 200 };

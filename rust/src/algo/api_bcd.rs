@@ -68,7 +68,6 @@ impl BehaviorSpec for ApiBcdSpec {
             tau_m: tau * m_walks as f32,
             rho,
             n: env.n as f32,
-            x: vec![0.0; env.dim],
             zhat: vec![vec![0.0; env.dim]; m_walks],
             tz_buf: vec![0.0; env.dim],
             x_new: vec![0.0; env.dim],
@@ -83,12 +82,12 @@ struct ApiBcdAgent {
     tau_m: f32,
     rho: f32,
     n: f32,
-    /// Block x_i and local copies ẑ_{i,m} (all zero — Alg. 2 line 1).
-    x: Vec<f32>,
+    /// Local copies ẑ_{i,m} (all zero — Alg. 2 line 1; the block x_i lives
+    /// in the engine arena and arrives as `ctx.block`).
     zhat: Vec<Vec<f32>>,
     /// Reused per-activation scratch: the steady-state loop is
-    /// allocation-free — `x_new` swaps with the active block instead of
-    /// replacing it, `g_buf` serves the gradient variant.
+    /// allocation-free — `x_new` holds the solver output until it is
+    /// committed to the arena row, `g_buf` serves the gradient variant.
     tz_buf: Vec<f32>,
     x_new: Vec<f32>,
     g_buf: Vec<f32>,
@@ -101,7 +100,7 @@ impl AgentBehavior for ApiBcdAgent {
         ctx: &mut ActivationCtx<'_>,
     ) -> anyhow::Result<Served> {
         let m = msg.id;
-        let dim = self.x.len();
+        let dim = ctx.block.len();
 
         // (1) refresh the local copy from the arriving token.
         self.zhat[m].copy_from_slice(&msg.payload);
@@ -113,30 +112,23 @@ impl AgentBehavior for ApiBcdAgent {
         }
         let wall = if self.gradient_variant {
             // eq. (15) closed form.
-            let wall = ctx.compute.grad_into(ctx.agent, &self.x, &mut self.g_buf)?;
+            let wall = ctx.compute.grad_into(ctx.agent, ctx.block, &mut self.g_buf)?;
             let denom = self.rho + self.tau_m;
             for j in 0..dim {
-                self.x_new[j] = (self.rho * self.x[j] + self.tz_buf[j] - self.g_buf[j]) / denom;
+                self.x_new[j] = (self.rho * ctx.block[j] + self.tz_buf[j] - self.g_buf[j]) / denom;
             }
             wall
         } else {
             ctx.compute
-                .prox_into(ctx.agent, &self.x, &self.tz_buf, self.tau_m, &mut self.x_new)?
+                .prox_into(ctx.agent, ctx.block, &self.tz_buf, self.tau_m, &mut self.x_new)?
         };
 
         // (3) token + copy update (eqs. 12b, 12c).
         for j in 0..dim {
-            msg.payload[j] += (self.x_new[j] - self.x[j]) / self.n;
+            msg.payload[j] += (self.x_new[j] - ctx.block[j]) / self.n;
         }
         self.zhat[m].copy_from_slice(&msg.payload);
-        ctx.block_updated(&self.x, &self.x_new);
-        // Swap instead of assign: the displaced block becomes the next
-        // activation's output buffer.
-        std::mem::swap(&mut self.x, &mut self.x_new);
+        ctx.commit_block(&self.x_new);
         Ok(Served::update(wall))
-    }
-
-    fn block(&self) -> &[f32] {
-        &self.x
     }
 }

@@ -92,10 +92,42 @@ pub trait Compute {
     fn grad_into(&mut self, agent: usize, w: &[f32], out: &mut Vec<f32>) -> anyhow::Result<f64>;
 }
 
+/// Recycled gossip payload buffers. Every broadcast used to allocate a
+/// fresh `Vec<f32>` per unicast; the engines now return spent payloads here
+/// (the DES feeds it from released [`TokenMsg`] slots, the gossip behavior
+/// from completed round buffers) so the steady-state gossip path reuses the
+/// same ring of buffers instead of churning the allocator.
+#[derive(Debug, Default)]
+pub struct PayloadPool {
+    free: Vec<Vec<f32>>,
+}
+
+impl PayloadPool {
+    /// An empty buffer to fill — recycled when available, fresh otherwise.
+    pub fn take(&mut self) -> Vec<f32> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Return a spent payload. Zero-capacity husks (payloads already moved
+    /// out of their message) are dropped — recycling them would hand out
+    /// buffers that reallocate on first use.
+    pub fn put(&mut self, mut v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        v.clear();
+        self.free.push(v);
+    }
+}
+
 /// Per-activation context handed to [`AgentBehavior::on_activation`].
 pub struct ActivationCtx<'a> {
     /// The agent being activated (index into the shard set).
     pub agent: usize,
+    /// The agent's block x_i — a mutable row view into the engine-owned
+    /// [`crate::model::BlockStore`] arena. Behaviors read it freely and
+    /// publish updates through [`ActivationCtx::commit_block`].
+    pub block: &'a mut [f32],
     /// Substrate compute path.
     pub compute: &'a mut dyn Compute,
     /// Incremental objective bookkeeping (DES substrate only; the thread
@@ -103,35 +135,37 @@ pub struct ActivationCtx<'a> {
     pub tracker: Option<&'a mut ObjectiveTracker>,
     /// Outgoing unicasts (engine-owned, drained after the activation).
     pub out: &'a mut Vec<Outgoing>,
+    /// Recycled gossip payload buffers (engine-owned).
+    pub pool: &'a mut PayloadPool,
 }
 
 impl ActivationCtx<'_> {
-    /// Report that this agent's block moved from `old` to `new` (feeds the
-    /// recorded penalty objective on the DES substrate).
-    pub fn block_updated(&mut self, old: &[f32], new: &[f32]) {
+    /// Publish `new` as the agent's block: feed the tracker's incremental
+    /// sums with the (old, new) pair, then write `new` into the arena row.
+    pub fn commit_block(&mut self, new: &[f32]) {
         if let Some(t) = self.tracker.as_deref_mut() {
-            t.block_updated(self.agent, old, new);
+            t.block_updated(self.agent, self.block, new);
         }
+        self.block.copy_from_slice(new);
     }
 }
 
-/// One agent's algorithm state machine. Implementations own the agent's
-/// block x_i and any per-agent auxiliaries (local token copies ẑ_{i,·},
-/// ADMM duals y_i, gossip round buffers) — state is *distributed by
-/// construction*, which is what lets the same behavior run under the DES
-/// and as a real OS thread.
+/// One agent's algorithm state machine. The agent's block x_i lives in the
+/// engine-owned arena (a row view arrives with every activation);
+/// implementations own only the per-agent auxiliaries (local token copies
+/// ẑ_{i,·}, ADMM duals y_i, gossip round buffers, scratch). State is still
+/// *distributed by construction* — no behavior can see another agent's row
+/// — which is what lets the same behavior run under the DES and as a real
+/// OS thread.
 pub trait AgentBehavior: Send {
     /// Service one incoming message. Mutate `msg.payload` in place for
-    /// token updates; push gossip sends to `ctx.out`.
+    /// token updates; push gossip sends to `ctx.out`; publish block updates
+    /// via [`ActivationCtx::commit_block`].
     fn on_activation(
         &mut self,
         msg: &mut TokenMsg,
         ctx: &mut ActivationCtx<'_>,
     ) -> anyhow::Result<Served>;
-
-    /// The agent's current block x_i (metric evaluation / consensus
-    /// estimates).
-    fn block(&self) -> &[f32];
 }
 
 /// How the recorded figure model is assembled from the run state.

@@ -76,7 +76,6 @@ impl BehaviorSpec for DgdSpec {
             weights: env.topo.metropolis_row(agent),
             neighbors: env.topo.neighbors(agent).to_vec(),
             round: 0,
-            x: vec![0.0; env.dim],
             x_new: vec![0.0; env.dim],
             g_buf: vec![0.0; env.dim],
             pending: BTreeMap::new(),
@@ -97,8 +96,8 @@ struct DgdAgent {
     weights: Vec<(usize, f64)>,
     neighbors: Vec<usize>,
     /// My current round r: x = x^r, waiting on the round-r neighborhood.
+    /// (The block itself lives in the engine arena.)
     round: u64,
-    x: Vec<f32>,
     x_new: Vec<f32>,
     g_buf: Vec<f32>,
     /// Round-tagged neighbor blocks. Adjacent agents stay within one round
@@ -127,8 +126,11 @@ impl AgentBehavior for DgdAgent {
             got: 0,
             slots: (0..deg).map(|_| None).collect(),
         });
-        if entry.slots[slot].replace(std::mem::take(&mut msg.payload)).is_none() {
-            entry.got += 1;
+        match entry.slots[slot].replace(std::mem::take(&mut msg.payload)) {
+            None => entry.got += 1,
+            // Duplicate delivery (stale membership): recycle the displaced
+            // buffer instead of dropping it.
+            Some(old) => ctx.pool.put(old),
         }
 
         // Complete every round the buffer now allows (a straggler arrival
@@ -141,13 +143,13 @@ impl AgentBehavior for DgdAgent {
             .is_some_and(|b| b.got == deg)
         {
             let buf = self.pending.remove(&self.round).unwrap();
-            let wall = ctx.compute.grad_into(ctx.agent, &self.x, &mut self.g_buf)?;
+            let wall = ctx.compute.grad_into(ctx.agent, ctx.block, &mut self.g_buf)?;
             compute_secs += wall;
             // Mix + descend: x⁺ = Σ_j W_ij x_j − α ∇f_i(x_i).
             self.x_new.fill(0.0);
             for &(j, w) in &self.weights {
                 let xj: &[f32] = if j == self.me {
-                    &self.x
+                    ctx.block
                 } else {
                     let s = self.slot_of(j).expect("weight row entry is a neighbor");
                     buf.slots[s].as_deref().expect("round complete")
@@ -155,18 +157,26 @@ impl AgentBehavior for DgdAgent {
                 axpy(w as f32, xj, &mut self.x_new);
             }
             axpy(-self.alpha, &self.g_buf, &mut self.x_new);
-            ctx.block_updated(&self.x, &self.x_new);
-            std::mem::swap(&mut self.x, &mut self.x_new);
+            ctx.commit_block(&self.x_new);
             self.round += 1;
             updates += 1;
-            // Broadcast the new block for the next round.
+            // The consumed round's buffers feed the broadcast below (and
+            // future arrivals) through the payload pool.
+            for v in buf.slots.into_iter().flatten() {
+                ctx.pool.put(v);
+            }
+            // Broadcast the new block for the next round using recycled
+            // payload buffers — the steady-state gossip path allocates
+            // nothing on the DES substrate.
             for &j in &self.neighbors {
+                let mut payload = ctx.pool.take();
+                payload.extend_from_slice(ctx.block);
                 ctx.out.push(Outgoing {
                     dest: j,
                     msg: TokenMsg {
                         id: self.me,
                         round: self.round,
-                        payload: self.x.clone(),
+                        payload,
                         cycle_pos: 0,
                     },
                 });
@@ -177,9 +187,5 @@ impl AgentBehavior for DgdAgent {
             compute_secs,
             forward: false,
         })
-    }
-
-    fn block(&self) -> &[f32] {
-        &self.x
     }
 }

@@ -35,7 +35,6 @@ impl BehaviorSpec for IBcdSpec {
         Box::new(IBcdAgent {
             tau: env.cfg.tau_for(AlgoKind::IBcd) as f32,
             n: env.n as f32,
-            x: vec![0.0; env.dim],
             tz_buf: vec![0.0; env.dim],
             x_new: vec![0.0; env.dim],
         })
@@ -45,10 +44,9 @@ impl BehaviorSpec for IBcdSpec {
 struct IBcdAgent {
     tau: f32,
     n: f32,
-    /// Block x_i (x_i⁰ = 0; z⁰ = mean(x⁰) = 0 — paper init, eq. 6).
-    x: Vec<f32>,
     /// Reused scratch: τ·z and the solver output (the steady-state loop is
-    /// allocation-free; the displaced block becomes the next output buffer).
+    /// allocation-free; the block x_i itself lives in the engine arena and
+    /// arrives as `ctx.block`).
     tz_buf: Vec<f32>,
     x_new: Vec<f32>,
 }
@@ -66,17 +64,12 @@ impl AgentBehavior for IBcdAgent {
         }
         let wall = ctx
             .compute
-            .prox_into(ctx.agent, &self.x, &self.tz_buf, self.tau, &mut self.x_new)?;
+            .prox_into(ctx.agent, ctx.block, &self.tz_buf, self.tau, &mut self.x_new)?;
         // eq. (8): z ← z + (x⁺ − x)/N.
         for j in 0..z.len() {
-            z[j] += (self.x_new[j] - self.x[j]) / self.n;
+            z[j] += (self.x_new[j] - ctx.block[j]) / self.n;
         }
-        ctx.block_updated(&self.x, &self.x_new);
-        std::mem::swap(&mut self.x, &mut self.x_new);
+        ctx.commit_block(&self.x_new);
         Ok(Served::update(wall))
-    }
-
-    fn block(&self) -> &[f32] {
-        &self.x
     }
 }

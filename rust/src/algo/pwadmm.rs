@@ -48,7 +48,6 @@ impl BehaviorSpec for PwAdmmSpec {
         Box::new(PwAdmmAgent {
             beta: env.cfg.beta as f32,
             n: env.n as f32,
-            x: vec![0.0; env.dim],
             y: vec![0.0; env.dim],
             zhat: vec![vec![0.0; env.dim]; m_walks],
             zbar_buf: vec![0.0; env.dim],
@@ -61,7 +60,8 @@ impl BehaviorSpec for PwAdmmSpec {
 struct PwAdmmAgent {
     beta: f32,
     n: f32,
-    x: Vec<f32>,
+    /// Dual y_i and local token copies ẑ_{i,m} (the primal block lives in
+    /// the engine arena).
     y: Vec<f32>,
     zhat: Vec<Vec<f32>>,
     zbar_buf: Vec<f32>,
@@ -81,27 +81,22 @@ impl AgentBehavior for PwAdmmAgent {
 
         // v = mean(ẑ) − y/β; prox with M=1 at center v.
         mean_vec_into(&self.zhat, &mut self.zbar_buf);
-        for j in 0..self.x.len() {
+        for j in 0..ctx.block.len() {
             self.tz_buf[j] = beta * (self.zbar_buf[j] - self.y[j] / beta);
         }
         let wall = ctx
             .compute
-            .prox_into(ctx.agent, &self.x, &self.tz_buf, beta, &mut self.x_new)?;
+            .prox_into(ctx.agent, ctx.block, &self.tz_buf, beta, &mut self.x_new)?;
 
-        for j in 0..self.x.len() {
+        for j in 0..ctx.block.len() {
             let y_new = self.y[j] + beta * (self.x_new[j] - self.zbar_buf[j]);
             let after = self.x_new[j] + y_new / beta;
-            let before = self.x[j] + self.y[j] / beta;
+            let before = ctx.block[j] + self.y[j] / beta;
             msg.payload[j] += (after - before) / self.n;
             self.y[j] = y_new;
         }
         self.zhat[m].copy_from_slice(&msg.payload);
-        ctx.block_updated(&self.x, &self.x_new);
-        std::mem::swap(&mut self.x, &mut self.x_new);
+        ctx.commit_block(&self.x_new);
         Ok(Served::update(wall))
-    }
-
-    fn block(&self) -> &[f32] {
-        &self.x
     }
 }

@@ -42,7 +42,6 @@ impl BehaviorSpec for WadmmSpec {
         Box::new(WadmmAgent {
             beta: env.cfg.beta as f32,
             n: env.n as f32,
-            x: vec![0.0; env.dim],
             y: vec![0.0; env.dim],
             tz_buf: vec![0.0; env.dim],
             x_new: vec![0.0; env.dim],
@@ -53,8 +52,7 @@ impl BehaviorSpec for WadmmSpec {
 struct WadmmAgent {
     beta: f32,
     n: f32,
-    x: Vec<f32>,
-    /// Dual variable y_i.
+    /// Dual variable y_i (the primal block lives in the engine arena).
     y: Vec<f32>,
     tz_buf: Vec<f32>,
     x_new: Vec<f32>,
@@ -74,21 +72,16 @@ impl AgentBehavior for WadmmAgent {
         }
         let wall = ctx
             .compute
-            .prox_into(ctx.agent, &self.x, &self.tz_buf, beta, &mut self.x_new)?;
+            .prox_into(ctx.agent, ctx.block, &self.tz_buf, beta, &mut self.x_new)?;
         // y- and z-updates (element-wise, in place).
         for j in 0..z.len() {
             let y_new = self.y[j] + beta * (self.x_new[j] - z[j]);
             let after = self.x_new[j] + y_new / beta;
-            let before = self.x[j] + self.y[j] / beta;
+            let before = ctx.block[j] + self.y[j] / beta;
             z[j] += (after - before) / self.n;
             self.y[j] = y_new;
         }
-        ctx.block_updated(&self.x, &self.x_new);
-        std::mem::swap(&mut self.x, &mut self.x_new);
+        ctx.commit_block(&self.x_new);
         Ok(Served::update(wall))
-    }
-
-    fn block(&self) -> &[f32] {
-        &self.x
     }
 }

@@ -44,7 +44,6 @@ impl BehaviorSpec for WpgSpec {
         Box::new(WpgAgent {
             alpha: env.cfg.alpha as f32,
             n: env.n as f32,
-            x: vec![0.0; env.dim],
             x_new: vec![0.0; env.dim],
             g_buf: vec![0.0; env.dim],
         })
@@ -54,7 +53,6 @@ impl BehaviorSpec for WpgSpec {
 struct WpgAgent {
     alpha: f32,
     n: f32,
-    x: Vec<f32>,
     x_new: Vec<f32>,
     g_buf: Vec<f32>,
 }
@@ -72,14 +70,9 @@ impl AgentBehavior for WpgAgent {
             self.x_new[j] = z[j] - self.alpha * self.g_buf[j];
         }
         for j in 0..z.len() {
-            z[j] += (self.x_new[j] - self.x[j]) / self.n;
+            z[j] += (self.x_new[j] - ctx.block[j]) / self.n;
         }
-        ctx.block_updated(&self.x, &self.x_new);
-        std::mem::swap(&mut self.x, &mut self.x_new);
+        ctx.commit_block(&self.x_new);
         Ok(Served::update(wall))
-    }
-
-    fn block(&self) -> &[f32] {
-        &self.x
     }
 }

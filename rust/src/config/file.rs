@@ -199,6 +199,14 @@ mod tests {
     }
 
     #[test]
+    fn walks_above_agents_rejected_at_load() {
+        // A walk count above N used to just alias start agents silently.
+        let err = from_str("agents = 4\nwalks = 9\n").unwrap_err().to_string();
+        assert!(err.contains("walks") && err.contains("M=9") && err.contains("N=4"), "{err}");
+        assert!(from_str("agents = 4\nwalks = 4\n").is_ok());
+    }
+
+    #[test]
     fn bad_value_fails_with_key_context() {
         let err = from_str("walks = many\n").unwrap_err().to_string();
         assert!(err.contains("walks"), "{err}");

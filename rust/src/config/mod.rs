@@ -293,6 +293,14 @@ impl ExperimentConfig {
             self.walks
         );
         anyhow::ensure!(
+            self.walks <= self.agents,
+            "config: `walks` must be <= `agents` (got M={} walks for N={} \
+             agents); extra tokens would silently alias start agents on the \
+             traversal cycle instead of adding parallelism",
+            self.walks,
+            self.agents
+        );
+        anyhow::ensure!(
             self.eval_every >= 1,
             "config: `eval-every` must be >= 1 (got {})",
             self.eval_every
@@ -371,6 +379,22 @@ mod tests {
         cfg.agents = 2;
         cfg.walks = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_more_walks_than_agents() {
+        let mut cfg = ExperimentConfig {
+            agents: 4,
+            walks: 5,
+            ..ExperimentConfig::default()
+        };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("walks") && err.contains("M=5") && err.contains("N=4"),
+            "{err}"
+        );
+        cfg.walks = 4;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -94,7 +94,11 @@ impl Partition {
 
         let mut shards = Vec::with_capacity(n_agents);
         for a in 0..n_agents {
-            let lo = a * per;
+            // Both bounds clamp to the row count: when N exceeds the
+            // training rows (the large-N scale sweeps), trailing agents
+            // legitimately hold empty shards (active = 0; every loss /
+            // smoothness path divides by active.max(1)).
+            let lo = (a * per).min(order.len());
             let hi = ((a + 1) * per).min(order.len());
             let rows_here = hi.saturating_sub(lo);
             let mut x = vec![0.0f32; capacity * p];
@@ -170,6 +174,22 @@ mod tests {
         let ds = dataset("test_ls");
         // 128 train rows, capacity 128 → N=1 fits exactly.
         assert!(Partition::new(&ds, 1, PartitionKind::Iid).is_ok());
+    }
+
+    #[test]
+    fn more_agents_than_rows_yields_empty_trailing_shards() {
+        // The N-scaling sweeps run test profiles at N far above the
+        // training row count; trailing agents must get empty (active = 0)
+        // shards instead of an out-of-bounds slice panic.
+        let ds = dataset("test_ls"); // 128 training rows
+        let part = Partition::new(&ds, 300, PartitionKind::Iid).unwrap();
+        assert_eq!(part.n_agents(), 300);
+        assert_eq!(part.total_active(), ds.n_train());
+        assert!(part.shards[..ds.n_train()].iter().all(|s| s.active == 1));
+        assert!(part.shards[ds.n_train()..].iter().all(|s| s.active == 0));
+        // Empty shards keep the downstream invariants harmless.
+        assert_eq!(part.shards[299].frob_sq(), 0.0);
+        assert!(part.shards[299].mask.iter().all(|&m| m == 0.0));
     }
 
     #[test]

@@ -20,15 +20,15 @@
 
 use super::{should_stop, Recorder, Router};
 use crate::algo::behavior::{
-    spec_for, ActivationCtx, AgentBehavior, BehaviorEnv, Compute, EvalModel, Outgoing, TokenMsg,
+    spec_for, ActivationCtx, AgentBehavior, BehaviorEnv, Compute, EvalModel, Outgoing,
+    PayloadPool, TokenMsg,
 };
-use crate::algo::common::mean_vec_into;
 use crate::algo::AlgoKind;
 use crate::config::ExperimentConfig;
 use crate::data::AgentData;
 use crate::graph::Topology;
 use crate::metrics::Trace;
-use crate::model::{ObjectiveTracker, Problem, Task};
+use crate::model::{BlockStore, ObjectiveTracker, Problem, Task};
 use crate::sim::{AgentAvailability, EventQueue, Membership};
 use crate::solver::LocalSolver;
 use crate::util::rng::Rng;
@@ -156,20 +156,30 @@ pub(crate) fn run(
     let mut avail = AgentAvailability::new(n);
     let mut queue = EventQueue::new();
     let mut store = MsgStore::default();
+    let mut pool = PayloadPool::default();
     let mut router = Router::new(routing, topo, walks.max(1));
+    // The engine owns all model state: one flat N×dim arena of agent
+    // blocks. Behaviors receive a row view per activation and the record
+    // path reads rows in place — no snapshot matrix exists anywhere.
+    let mut blocks = BlockStore::new(n, dim);
     let mut tracker = ObjectiveTracker::new(task, n, dim);
     let mut recorder = Recorder::new(kind.name(), cfg.eval_every, spec.record_tau(cfg));
     let eval_model = spec.eval_model();
     let (mut comm, mut k) = (0u64, 0u64);
 
-    // Recording scratch (cadence-bound; reused across records).
+    // Recording scratch (reused across records).
     let mut eval_w = vec![0.0f32; dim];
-    let mut xs_snap = vec![vec![0.0f32; dim]; n];
-    let mut zs_snap = vec![vec![0.0f32; dim]; walks.max(1)];
 
-    // Initial point: all state is zero (paper init).
+    // Initial point: all state is zero (paper init). The z-slots are the
+    // M zero tokens (token walks) or the zero consensus mean (gossip).
     {
-        let objective = tracker.objective(shards, &xs_snap, &zs_snap, recorder.tau());
+        let zero = &eval_w;
+        let objective = tracker.objective(
+            shards,
+            &blocks,
+            (0..walks.max(1)).map(|_| zero.as_slice()),
+            recorder.tau(),
+        );
         recorder.record(0, 0.0, 0, objective, problem.metric(&eval_w));
     }
 
@@ -216,9 +226,11 @@ pub(crate) fn run(
         let served = {
             let mut ctx = ActivationCtx {
                 agent: i,
+                block: blocks.row_mut(i),
                 compute: &mut compute,
                 tracker: Some(&mut tracker),
                 out: &mut sends,
+                pool: &mut pool,
             };
             agents[i].on_activation(&mut msg, &mut ctx)?
         };
@@ -261,6 +273,12 @@ pub(crate) fn run(
             store.put(slot, msg);
             queue.push(t_next, slot, next);
         } else {
+            // Recycle the payload through the pool before releasing the
+            // slot — the DES gossip path is allocation-free in steady
+            // state, like the token path. (Payloads the behavior already
+            // moved into its round buffers leave a zero-capacity husk
+            // here, which the pool ignores.)
+            pool.put(std::mem::take(&mut msg.payload));
             drop(msg);
             store.release(slot);
         }
@@ -278,24 +296,36 @@ pub(crate) fn run(
         }
 
         if recorder.due_span(k, served.updates) {
-            for (snap, a) in xs_snap.iter_mut().zip(&agents) {
-                snap.copy_from_slice(a.block());
-            }
+            // O(dim) record path, independent of N: the consensus mean
+            // comes from the tracker's running block-sum, the evaluation
+            // vector is one `copy_from_slice` out of the token store, and
+            // the objective streams blocks/tokens in place (dirty losses
+            // are bounded by the activations since the last record, with
+            // shards shrinking as 1/N).
+            let t_rec = std::time::Instant::now();
             match eval_model {
-                EvalModel::AgentMean => mean_vec_into(&xs_snap, &mut eval_w),
+                EvalModel::AgentMean => tracker.mean_into(&mut eval_w),
                 EvalModel::Token => eval_w.copy_from_slice(store.payload(0)),
             }
-            if walks > 0 {
-                for (m, snap) in zs_snap.iter_mut().enumerate() {
-                    snap.copy_from_slice(store.payload(m));
-                }
+            let objective = if walks > 0 {
+                tracker.objective(
+                    shards,
+                    &blocks,
+                    (0..walks).map(|m| store.payload(m)),
+                    recorder.tau(),
+                )
             } else {
                 // Gossip has no tokens; the penalty column uses the agent
                 // mean as the single consensus vector.
-                zs_snap[0].copy_from_slice(&eval_w);
-            }
-            let objective = tracker.objective(shards, &xs_snap, &zs_snap, recorder.tau());
+                tracker.objective(
+                    shards,
+                    &blocks,
+                    std::iter::once(eval_w.as_slice()),
+                    recorder.tau(),
+                )
+            };
             recorder.record(k, end, comm, objective, problem.metric(&eval_w));
+            recorder.note_record_cost(t_rec.elapsed());
         }
     }
     Ok((recorder.finish(), events))

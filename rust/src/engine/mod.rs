@@ -325,12 +325,15 @@ pub fn cycle_advance(cycle: &[usize], pos: &mut usize) -> usize {
 }
 
 /// Records trace points at the configured cadence. The engine computes the
-/// objective/metric values; the recorder owns the trace and the cadence.
+/// objective/metric values; the recorder owns the trace, the cadence, and
+/// the wall-clock accounting of the record path itself (the ns-per-record
+/// series in `BENCH_scale.json`).
 pub struct Recorder {
     trace: Trace,
     eval_every: u64,
     tau: f64,
     started: std::time::Instant,
+    record_cost: std::time::Duration,
 }
 
 impl Recorder {
@@ -340,6 +343,7 @@ impl Recorder {
             eval_every: eval_every.max(1),
             tau,
             started: std::time::Instant::now(),
+            record_cost: std::time::Duration::ZERO,
         }
     }
 
@@ -364,8 +368,16 @@ impl Recorder {
         });
     }
 
+    /// Accumulate the measured wall-clock cost of one record-path pass
+    /// (evaluation + objective; excluded from nothing — it is a slice of
+    /// `wall_secs`).
+    pub fn note_record_cost(&mut self, d: std::time::Duration) {
+        self.record_cost += d;
+    }
+
     pub fn finish(mut self) -> Trace {
         self.trace.wall_secs = self.started.elapsed().as_secs_f64();
+        self.trace.record_secs = self.record_cost.as_secs_f64();
         self.trace
     }
 }

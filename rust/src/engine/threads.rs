@@ -1,9 +1,10 @@
 //! Real-asynchrony substrate: every agent an OS thread, every algorithm.
 //!
 //! The DES ([`super::des`]) *models* asynchrony; this substrate
-//! *implements* it: each agent is a thread owning its behavior state
-//! (block `x_i`, local copies `ẑ_{i,·}`, duals, gossip buffers), tokens
-//! are messages on per-agent mpsc channels, link latency is an injected
+//! *implements* it: each agent is a thread owning its behavior auxiliaries
+//! (local copies `ẑ_{i,·}`, duals, gossip buffers) plus an exclusive view
+//! of its row in the engine-owned [`BlockStore`] arena, tokens are
+//! messages on per-agent mpsc channels, link latency is an injected
 //! sleep drawn from the same U(10⁻⁵,10⁻⁴) model, and the compute path
 //! goes through the [`SolverClient`] service (the PJRT engine is a
 //! serialized device resource, like a real accelerator queue). The fault
@@ -26,17 +27,19 @@
 //! of the asynchronous design).
 
 use crate::algo::behavior::{
-    spec_for, ActivationCtx, AgentBehavior, BehaviorEnv, Compute, EvalModel, Outgoing, TokenMsg,
+    spec_for, ActivationCtx, AgentBehavior, BehaviorEnv, Compute, EvalModel, Outgoing,
+    PayloadPool, TokenMsg,
 };
 use crate::algo::AlgoKind;
 use crate::config::{ExperimentConfig, RoutingRule};
 use crate::data::AgentData;
 use crate::graph::Topology;
 use crate::metrics::{Trace, TracePoint};
-use crate::model::{Problem, Task};
+use crate::model::{BlockStore, Problem, Task};
 use crate::sim::{FaultModel, LatencyModel, Membership, TimingModel};
 use crate::solver::SolverClient;
 use crate::util::rng::Rng;
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -47,19 +50,53 @@ enum AgentMsg {
     Stop,
 }
 
+/// The shared block arena for the thread substrate. Rows are disjoint
+/// cache-line-padded slices of one allocation; each agent thread gets a
+/// [`RowView`] over exactly its own row.
+///
+/// Safety contract (why the `Sync` impl is sound): while agent threads run,
+/// row `i` is touched *only* by agent `i`'s thread (through its `RowView`);
+/// the coordinator reads the arena only after joining every agent thread.
+/// The `Arc` keeps the allocation alive even if the coordinator unwinds
+/// early, so a still-running thread can never write into freed memory.
+struct ArenaCell(UnsafeCell<BlockStore>);
+
+unsafe impl Sync for ArenaCell {}
+
+/// Exclusive view of one arena row, movable into the owning agent's thread.
+struct RowView {
+    /// Keeps the arena allocation alive for the thread's lifetime.
+    _arena: Arc<ArenaCell>,
+    ptr: *mut f32,
+    dim: usize,
+}
+
+// Safety: the raw pointer targets a row no other thread accesses (see
+// `ArenaCell`), and the Arc it rides with is Send.
+unsafe impl Send for RowView {}
+
+impl RowView {
+    fn slice_mut(&mut self) -> &mut [f32] {
+        // Safety: exclusive access per the ArenaCell contract; the pointer
+        // is valid for `dim` floats (one padded arena row).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.dim) }
+    }
+}
+
 /// Periodic metric sample sent to the coordinator thread. Carries the
-/// evaluation vector for the trace point: the sampling agent's current
-/// block (agent-mean algorithms — the monitor assembles the consensus
-/// estimate from last-known blocks without ever pausing the agents) or the
-/// just-serviced token (token-tracking algorithms).
+/// evaluation vector for the trace point: a copy of the sampling agent's
+/// current block (agent-mean algorithms — the monitor assembles the
+/// consensus estimate from last-known blocks without ever pausing the
+/// agents) or the just-serviced token (token-tracking algorithms).
 struct Sample {
     k: u64,
     comm: u64,
     agent: usize,
     x: Vec<f32>,
-    /// Exit flush: updates the monitor's final state without pushing a
-    /// trace point (every agent sends one on exit so the final consensus
-    /// covers all blocks, not just the ones the cadence happened to hit).
+    /// Exit flush: updates the monitor's final token without pushing a
+    /// trace point (the agent that retires a walk hands its final value
+    /// over; agent-mean algorithms need no flush — the coordinator reads
+    /// the true final blocks straight out of the arena after the join).
     flush: bool,
 }
 
@@ -211,6 +248,22 @@ pub(crate) fn run(
         (0..n).map(|i| spec.make_agent(i, &env)).collect()
     };
 
+    // The engine-owned block arena: agent i's thread receives an exclusive
+    // view of row i; the coordinator reads the final blocks from the arena
+    // after joining every thread.
+    let arena = Arc::new(ArenaCell(UnsafeCell::new(BlockStore::new(n, dim))));
+    let rows: Vec<RowView> = {
+        // Exclusive at this point: no agent threads exist yet.
+        let store = unsafe { &mut *arena.0.get() };
+        (0..n)
+            .map(|i| RowView {
+                _arena: arena.clone(),
+                ptr: store.row_ptr(i),
+                dim,
+            })
+            .collect()
+    };
+
     // Per-agent inboxes.
     let mut senders = Vec::with_capacity(n);
     let mut receivers = Vec::with_capacity(n);
@@ -223,7 +276,12 @@ pub(crate) fn run(
     let (sample_tx, sample_rx) = mpsc::channel::<Sample>();
 
     let mut handles = Vec::with_capacity(n);
-    for (i, (rx, behavior)) in receivers.into_iter().zip(behaviors).enumerate() {
+    for (i, ((rx, behavior), row)) in receivers
+        .into_iter()
+        .zip(behaviors)
+        .zip(rows)
+        .enumerate()
+    {
         let shared = shared.clone();
         let senders = senders.clone();
         let compute = ServiceCompute::new(client.clone(), dim);
@@ -231,7 +289,7 @@ pub(crate) fn run(
         let seed = cfg.seed ^ ((i as u64 + 1) << 16);
         handles.push(std::thread::Builder::new().name(format!("agent-{i}")).spawn(
             move || -> anyhow::Result<()> {
-                agent_loop(i, rx, shared, senders, behavior, compute, sample_tx, seed)
+                agent_loop(i, rx, shared, senders, behavior, row, compute, sample_tx, seed)
             },
         )?);
     }
@@ -298,17 +356,15 @@ pub(crate) fn run(
         };
     while let Ok(s) = sample_rx.recv() {
         if s.flush {
-            match shared.eval_model {
-                EvalModel::AgentMean => latest[s.agent] = s.x,
-                EvalModel::Token => {
-                    let newer = match &final_token {
-                        None => true,
-                        Some((k0, _)) => s.k >= *k0,
-                    };
-                    if newer {
-                        final_token = Some((s.k, s.x));
-                    }
-                }
+            // Only token walks flush on exit (the retiring agent hands the
+            // final token over); agent-mean state is read from the arena
+            // after the join.
+            let newer = match &final_token {
+                None => true,
+                Some((k0, _)) => s.k >= *k0,
+            };
+            if newer {
+                final_token = Some((s.k, s.x));
             }
             continue;
         }
@@ -331,10 +387,18 @@ pub(crate) fn run(
         h.join()
             .map_err(|_| anyhow::anyhow!("agent thread panicked"))??;
     }
-    // Final point from the exit flushes: the true final consensus (every
-    // agent's last block) or the retired token's final value.
+    // Final point: the true final consensus read straight out of the arena
+    // (safe now — every writer thread has been joined), or the retired
+    // token's final value from its exit flush.
     let metric = match shared.eval_model {
-        EvalModel::AgentMean => Some(consensus_metric(&latest, &mut consensus)),
+        EvalModel::AgentMean => {
+            let store = unsafe { &*arena.0.get() };
+            consensus.fill(0.0);
+            for i in 0..n {
+                crate::linalg::axpy(1.0 / n as f32, store.row(i), &mut consensus);
+            }
+            Some(problem.metric(&consensus))
+        }
         EvalModel::Token => final_token.map(|(_, x)| problem.metric(&x)),
     };
     if let Some(metric) = metric {
@@ -366,6 +430,7 @@ fn agent_loop(
     shared: Arc<Shared>,
     senders: Arc<Vec<mpsc::Sender<AgentMsg>>>,
     mut behavior: Box<dyn AgentBehavior>,
+    mut row: RowView,
     mut compute: ServiceCompute,
     sample_tx: mpsc::Sender<Sample>,
     seed: u64,
@@ -380,6 +445,7 @@ fn agent_loop(
         &shared,
         &senders,
         behavior.as_mut(),
+        row.slice_mut(),
         &mut compute,
         &sample_tx,
         &mut rng,
@@ -390,20 +456,20 @@ fn agent_loop(
         // shuts down and the error propagates through the join.
         trip_stop(&shared, &senders);
     }
-    // Exit flush: hand the monitor this agent's final state so the last
-    // trace point reflects every block, not just the sampled ones.
-    let x = match shared.eval_model {
-        EvalModel::AgentMean => Some(behavior.block().to_vec()),
-        EvalModel::Token => retired_token,
-    };
-    if let Some(x) = x {
-        let _ = sample_tx.send(Sample {
-            k: shared.activations.load(Ordering::Relaxed),
-            comm: shared.comm.load(Ordering::Relaxed),
-            agent: i,
-            x,
-            flush: true,
-        });
+    // Exit flush: the agent that retired a walk hands the monitor the
+    // final token value. (Agent-mean state needs no flush — the block
+    // lives in the shared arena, which the coordinator reads after the
+    // join.)
+    if shared.eval_model == EvalModel::Token {
+        if let Some(x) = retired_token {
+            let _ = sample_tx.send(Sample {
+                k: shared.activations.load(Ordering::Relaxed),
+                comm: shared.comm.load(Ordering::Relaxed),
+                agent: i,
+                x,
+                flush: true,
+            });
+        }
     }
     res
 }
@@ -415,12 +481,14 @@ fn run_agent(
     shared: &Shared,
     senders: &[mpsc::Sender<AgentMsg>],
     behavior: &mut dyn AgentBehavior,
+    block: &mut [f32],
     compute: &mut ServiceCompute,
     sample_tx: &mpsc::Sender<Sample>,
     rng: &mut Rng,
     retired_token: &mut Option<Vec<f32>>,
 ) -> anyhow::Result<()> {
     let mut sends: Vec<Outgoing> = Vec::new();
+    let mut pool = PayloadPool::default();
 
     loop {
         let mut msg = match rx.recv() {
@@ -437,9 +505,11 @@ fn run_agent(
         let served = {
             let mut ctx = ActivationCtx {
                 agent: i,
+                block: &mut *block,
                 compute: &mut *compute,
                 tracker: None,
                 out: &mut sends,
+                pool: &mut pool,
             };
             behavior.on_activation(&mut msg, &mut ctx)?
         };
@@ -532,7 +602,7 @@ fn run_agent(
         // Sample at the evaluation cadence.
         if super::eval_due(k, served.updates, shared.eval_every) {
             let x = match shared.eval_model {
-                EvalModel::AgentMean => behavior.block().to_vec(),
+                EvalModel::AgentMean => block.to_vec(),
                 EvalModel::Token => msg.payload.clone(),
             };
             let _ = sample_tx.send(Sample {

@@ -25,15 +25,29 @@
 //!     substrates therefore apply uniformly to every [`algo::AlgoKind`]
 //!     (one scoped exception: agent churn is token-walk-specific — see
 //!     `algo/dgd.rs`).
+//!   - **model-state ownership**: the engine — not the behaviors — owns
+//!     all blocks, in one flat cache-line-padded N×dim arena
+//!     ([`model::BlockStore`]). A behavior sees exactly its own row for
+//!     the duration of an activation (`ActivationCtx::block`; on the
+//!     thread substrate each agent thread holds an exclusive row view) and
+//!     publishes updates through `ActivationCtx::commit_block`, which also
+//!     feeds the incremental evaluator. Recording therefore costs O(dim)
+//!     independent of N: the consensus mean comes from the
+//!     [`model::ObjectiveTracker`]'s running block-sum, the objective
+//!     streams rows in place, and no per-record snapshot matrix exists —
+//!     the layout that makes N=4096-agent runs cheap to measure
+//!     (`repro sweep --agents 16,...,4096` → `BENCH_scale.json`).
 //!   - substrate primitives in [`graph`] (topologies, including scale-free
 //!     and geometric generators) and [`sim`] (event queue, latency/timing
 //!     models, per-agent heterogeneity, failure injection).
 //!   - [`scenario`] — named, seed-reproducible workload compositions over
 //!     the orthogonal axes (topology family × dataset × heterogeneity ×
-//!     fault regime × substrate), and [`validate`] — the executable
-//!     paper-claims harness evaluated over the scenario matrix
-//!     (`repro validate --matrix smoke`, `VALIDATE_report.json`). See
-//!     EXPERIMENTS.md §Scenarios for the axes, presets and report schema.
+//!     fault regime × substrate), with a work-stealing parallel cell
+//!     executor ([`scenario::executor`]), and [`validate`] — the
+//!     executable paper-claims harness evaluated over the scenario matrix
+//!     (`repro validate --matrix smoke --jobs 4`, `VALIDATE_report.json` —
+//!     byte-identical for any job count). See EXPERIMENTS.md §Scenarios
+//!     and §Scale for the axes, presets and report schemas.
 //! * **Layer 2/1 (build-time JAX + Pallas)** — the per-agent local updates,
 //!   AOT-lowered to HLO text in `artifacts/` and executed through the PJRT C
 //!   API by [`runtime`]; [`solver`] routes each algorithm's update through

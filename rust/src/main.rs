@@ -6,6 +6,8 @@
 //! repro figure <fig3|fig4|fig5|fig6> [--out results] [--seed N] [--algos a,b]
 //! repro train  [--preset P | --profile D] [--agents N] [--walks M] [--tau-api T] ...
 //! repro sweep  --param <walks|agents|tau-api|xi> --values v1,v2,... [--preset P]
+//! repro sweep  --agents 16,64,256,1024,4096 [--jobs J]   (N-scaling, BENCH_scale.json)
+//! repro validate [--matrix smoke|full] [--jobs J]
 //! repro topology [--agents N] [--xi X] [--seed S]
 //! repro timeline [--activations K]
 //! repro inspect-artifacts [--dir artifacts]
@@ -53,9 +55,13 @@ USAGE:
   repro run    --config experiment.toml [overrides...]
   repro replicate [--preset P] [--seeds 5] [--target T] [overrides...]
   repro sweep  --param <walks|agents|tau-api|xi|inner-k> --values 1,2,4 [--preset P]
-  repro validate [--matrix smoke|full | --scenario NAME] [--seed N]
+  repro sweep  --agents 16,64,256,1024,4096 [--activations K] [--walks M]
+               [--eval-every E] [--jobs J] [--out BENCH_scale.json]
+               (N-scaling sweep: ns-per-activation / ns-per-record vs N)
+  repro validate [--matrix smoke|full | --scenario NAME] [--seed N] [--jobs J]
                [--activations K] [--out VALIDATE_report.json]
-               (paper-claims harness; exits non-zero on any failed claim)
+               (paper-claims harness; exits non-zero on any failed claim;
+                --jobs runs scenario cells on a work-stealing pool)
   repro topology  [--agents N] [--xi X] [--seed S]
   repro timeline  [--activations K]   (Fig. 2 token/local-copy illustration)
   repro inspect-artifacts [--dir artifacts]
@@ -226,9 +232,13 @@ fn cmd_replicate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    // `--agents 16,64,...` without `--param` is the N-scaling sweep.
+    if args.has("agents") && !args.has("param") {
+        return cmd_sweep_scale(args);
+    }
     let param = args
         .str_opt("param")
-        .ok_or_else(|| anyhow::anyhow!("sweep: --param required"))?;
+        .ok_or_else(|| anyhow::anyhow!("sweep: --param required (or --agents N1,N2,... for the scale sweep)"))?;
     let values: Vec<String> = args
         .str_opt("values")
         .ok_or_else(|| anyhow::anyhow!("sweep: --values required"))?
@@ -271,19 +281,140 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro sweep --agents 16,64,256,1024,4096`: the N-scaling sweep.
+///
+/// Each cell runs the configured algorithms (default API-BCD) on the DES
+/// substrate with the deterministic `test_ls` workload scaled to N agents
+/// on a ring (O(N) edges, so graph construction never dominates), and
+/// measures the two costs that bound large-N feasibility: wall-clock
+/// ns-per-activation (event loop + local update) and ns-per-record (the
+/// evaluation path, O(dim) since the arena/incremental-evaluator refactor
+/// — flat in N is the acceptance signal). Emits `BENCH_scale.json`
+/// mirroring the bench-suite schema so the scaling curve joins the perf
+/// trajectory. `--jobs` runs cells on the work-stealing executor; keep the
+/// default of 1 when the absolute timings matter (parallel cells contend
+/// for cores).
+fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
+    use apibcd::util::json::{to_string, Json};
+    use std::collections::BTreeMap;
+
+    let agents: Vec<usize> = args
+        .str_opt("agents")
+        .unwrap_or_default()
+        .split(',')
+        .map(|s| {
+            let s = s.trim();
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--agents expects comma-separated integers, got '{s}'"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let activations = args.u64_or("activations", 2_000)?;
+    let walks = args.usize_or("walks", 4)?;
+    let eval_every = args.u64_or("eval-every", 50)?.max(1);
+    let jobs = args.usize_or("jobs", 1)?;
+    let seed = args.u64_or("seed", 42)?;
+    let algos = apibcd::algo::parse_algo_list(args.str_or("algos", "api-bcd"))?;
+    let out_path = args.str_or("out", "BENCH_scale.json");
+
+    eprintln!(
+        "scale sweep over N = {agents:?} ({} activations, eval every {eval_every}, {jobs} job(s))",
+        activations
+    );
+    let reports = apibcd::scenario::executor::run_indexed(jobs, agents.len(), |idx| {
+        let n = agents[idx];
+        let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+        cfg.name = format!("scale_n{n}");
+        cfg.agents = n;
+        cfg.walks = walks.min(n);
+        cfg.topology = "ring".into();
+        cfg.algos = algos.clone();
+        cfg.solver = SolverChoice::Native;
+        cfg.eval_every = eval_every;
+        cfg.seed = seed;
+        cfg.stop.max_activations = activations;
+        Experiment::builder(cfg).run()
+    })?;
+
+    println!(
+        "{:<8} {:<12} {:>12} {:>9} {:>16} {:>14}",
+        "agents", "algorithm", "activations", "records", "ns/activation", "ns/record"
+    );
+    let mut results: Vec<Json> = Vec::new();
+    // Flatness signal per algorithm: ns-per-record at the largest N over
+    // the smallest — O(dim) recording keeps this ~1 while the old
+    // O(N·dim) path grew with N.
+    let mut first_last: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    for (&n, report) in agents.iter().zip(&reports) {
+        for t in &report.traces {
+            let k = t.last().map(|p| p.iter).unwrap_or(0).max(1);
+            // The initial (k=0) point is recorded outside the measured
+            // record path.
+            let records = t.points.len().saturating_sub(1);
+            let ns_act = t.wall_secs * 1e9 / k as f64;
+            let ns_rec = if records > 0 {
+                t.record_secs * 1e9 / records as f64
+            } else {
+                0.0
+            };
+            println!(
+                "{:<8} {:<12} {:>12} {:>9} {:>16.0} {:>14.0}",
+                n, t.name, k, records, ns_act, ns_rec
+            );
+            let mut row = BTreeMap::new();
+            row.insert("name".into(), Json::Str(format!("scale/{}/N={n}", t.name)));
+            row.insert("agents".into(), Json::Num(n as f64));
+            row.insert("walks".into(), Json::Num(walks.min(n) as f64));
+            row.insert("activations".into(), Json::Num(k as f64));
+            row.insert("records".into(), Json::Num(records as f64));
+            row.insert("wall_secs".into(), Json::Num(t.wall_secs));
+            row.insert("record_secs".into(), Json::Num(t.record_secs));
+            row.insert("ns_per_activation".into(), Json::Num(ns_act));
+            row.insert("ns_per_record".into(), Json::Num(ns_rec));
+            results.push(Json::Obj(row));
+            let e = first_last.entry(t.name.clone()).or_insert((ns_rec, ns_rec));
+            e.1 = ns_rec;
+        }
+    }
+
+    let mut derived = BTreeMap::new();
+    if agents.len() >= 2 {
+        let (n0, n1) = (agents[0], agents[agents.len() - 1]);
+        for (name, (first, last)) in &first_last {
+            if *first > 0.0 {
+                derived.insert(
+                    format!("{name} ns_per_record ratio N={n1}/N={n0}"),
+                    Json::Num(last / first),
+                );
+            }
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("suite".into(), Json::Str("scale".into()));
+    root.insert("schema_version".into(), Json::Num(1.0));
+    root.insert("seed".into(), Json::Num(seed as f64));
+    root.insert("results".into(), Json::Arr(results));
+    root.insert("derived".into(), Json::Obj(derived));
+    std::fs::write(out_path, to_string(&Json::Obj(root)))
+        .map_err(|e| anyhow::anyhow!("cannot write {out_path}: {e}"))?;
+    eprintln!("wrote {out_path}");
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 7)?;
+    let jobs = args.usize_or("jobs", 1)?;
     let budget = if args.has("activations") {
         Some(args.u64_or("activations", 0)?)
     } else {
         None
     };
     // `--scenario name` restricts the run to one scenario; otherwise the
-    // whole matrix is evaluated.
+    // whole matrix is evaluated (on `--jobs` worker threads — the report
+    // is byte-identical for any job count).
     let report = if let Some(name) = args.str_opt("scenario") {
         let scn = apibcd::scenario::by_name(name)?;
         eprintln!("validating paper claims on scenario '{}' (seed {seed})", scn.name);
-        let results = apibcd::validate::run_scenarios(&[scn], seed, budget)?;
+        let results = apibcd::validate::run_scenarios(&[scn], seed, budget, jobs)?;
         apibcd::validate::ValidateReport {
             matrix: format!("scenario:{}", scn.name),
             seed,
@@ -292,11 +423,11 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     } else {
         let matrix = apibcd::scenario::Matrix::by_name(args.str_or("matrix", "smoke"))?;
         eprintln!(
-            "validating paper claims over the {} scenarios of the '{}' matrix (seed {seed})",
+            "validating paper claims over the {} scenarios of the '{}' matrix (seed {seed}, {jobs} job(s))",
             apibcd::scenario::matrix(matrix).len(),
             matrix.name()
         );
-        apibcd::validate::run(matrix, seed, budget)?
+        apibcd::validate::run(matrix, seed, budget, jobs)?
     };
     print!("{}", report.summary_table());
     let out = args.str_or("out", "VALIDATE_report.json");

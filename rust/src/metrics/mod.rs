@@ -33,6 +33,11 @@ pub struct Trace {
     /// Wall-clock seconds the coordinator spent producing this trace
     /// (profiling signal, not a figure axis).
     pub wall_secs: f64,
+    /// Wall-clock seconds spent inside the record path (evaluation +
+    /// objective at the sampling cadence) — the numerator of the
+    /// ns-per-record scaling series (`BENCH_scale.json`). Subset of
+    /// `wall_secs`; 0 when the substrate does not measure it.
+    pub record_secs: f64,
 }
 
 impl Trace {
@@ -41,6 +46,7 @@ impl Trace {
             name: name.into(),
             points: Vec::new(),
             wall_secs: 0.0,
+            record_secs: 0.0,
         }
     }
 
@@ -100,6 +106,7 @@ impl Trace {
         let mut obj = BTreeMap::new();
         obj.insert("name".into(), Json::Str(self.name.clone()));
         obj.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        obj.insert("record_secs".into(), Json::Num(self.record_secs));
         let pts = self
             .points
             .iter()

@@ -1,0 +1,156 @@
+//! Contiguous agent-block arena.
+//!
+//! The pre-arena engine kept agent state as `N` scattered heap `Vec<f32>`s
+//! owned by the individual [`crate::algo::behavior::AgentBehavior`] boxes,
+//! which meant (a) every [`crate::engine::Recorder`] tick copied all `N`
+//! blocks into a snapshot matrix before evaluating — O(N·dim) per record —
+//! and (b) consensus/evaluation walks chased `N` pointers across the heap.
+//! [`BlockStore`] replaces that with **one flat `N×dim` allocation owned by
+//! the engine**: behaviors receive a mutable *row view* through
+//! [`crate::algo::behavior::ActivationCtx::block`] for the duration of an
+//! activation and never own model state. Snapshots become a single
+//! `copy_from_slice` per row read straight out of the arena, and the
+//! incremental evaluator ([`super::ObjectiveTracker`]) never materializes a
+//! snapshot at all.
+//!
+//! Rows are padded to a 64-byte (16 × f32) stride so adjacent agents never
+//! share a cache line — on the thread substrate each row is written by a
+//! different OS thread, and an unpadded layout would false-share at every
+//! row boundary.
+
+/// f32 lanes per 64-byte cache line; the row stride is rounded up to this.
+const LANE: usize = 16;
+
+/// One cache line of block storage. The arena is backed by these (not by
+/// raw f32s) so the *allocation itself* is 64-byte aligned — stride
+/// padding alone would still let a row tail and the next row's head share
+/// a line whenever the base pointer landed mid-line.
+#[repr(C, align(64))]
+#[derive(Debug, Clone, Copy)]
+struct CacheLine([f32; LANE]);
+
+const ZERO_LINE: CacheLine = CacheLine([0.0; LANE]);
+
+/// One flat `N×dim` arena of agent blocks, rows padded to a cache-line
+/// stride and the backing store cache-line aligned. The engine owns it;
+/// behaviors only ever see `&mut [f32]` row views handed out per
+/// activation.
+#[derive(Debug, Clone)]
+pub struct BlockStore {
+    n: usize,
+    dim: usize,
+    stride: usize,
+    /// `n · stride/LANE` lines; viewed as flat f32s through the accessors
+    /// (`CacheLine` is `repr(C)` over `[f32; LANE]`, so the buffer is one
+    /// contiguous, aligned f32 array).
+    data: Box<[CacheLine]>,
+}
+
+impl BlockStore {
+    /// `n` agent rows of `dim` floats, zero-initialized (the algorithms'
+    /// x⁰ = 0 paper init).
+    pub fn new(n: usize, dim: usize) -> BlockStore {
+        assert!(n > 0 && dim > 0, "BlockStore needs n, dim >= 1");
+        let lines_per_row = dim.div_ceil(LANE);
+        BlockStore {
+            n,
+            dim,
+            stride: lines_per_row * LANE,
+            data: vec![ZERO_LINE; n * lines_per_row].into_boxed_slice(),
+        }
+    }
+
+    /// Agent count N.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Flattened model dimension p·c (the live prefix of each row).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Agent `i`'s block x_i.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert!(i < self.n);
+        // Safety: the buffer is `n · stride` contiguous f32s (repr(C)
+        // lines) and `i < n`, so the row's `dim <= stride` floats are in
+        // bounds and properly initialized.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr().cast::<f32>().add(i * self.stride),
+                self.dim,
+            )
+        }
+    }
+
+    /// Mutable view of agent `i`'s block (DES: the engine holds the store
+    /// exclusively, so this is ordinary safe borrowing).
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let ptr = self.row_ptr(i);
+        // Safety: in-bounds per `row_ptr`; `&mut self` guarantees
+        // exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(ptr, self.dim) }
+    }
+
+    /// Raw pointer to agent `i`'s row, for the thread substrate's per-agent
+    /// row handles. The returned pointer stays valid for the lifetime of
+    /// the arena's heap allocation (moving the `BlockStore` value does not
+    /// move the boxed data).
+    pub(crate) fn row_ptr(&mut self, i: usize) -> *mut f32 {
+        assert!(i < self.n);
+        // Safety of the offset: i < n, so the row lies inside the buffer.
+        unsafe { self.data.as_mut_ptr().cast::<f32>().add(i * self.stride) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_zeroed_disjoint_and_padded() {
+        let mut s = BlockStore::new(3, 5);
+        assert_eq!(s.n(), 3);
+        assert_eq!(s.dim(), 5);
+        assert!(s.row(1).iter().all(|&v| v == 0.0));
+        s.row_mut(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        // Neighboring rows untouched (the stride padding isolates them).
+        assert!(s.row(0).iter().all(|&v| v == 0.0));
+        assert!(s.row(2).iter().all(|&v| v == 0.0));
+        // Stride is a whole number of cache lines.
+        assert_eq!(s.stride % LANE, 0);
+        assert!(s.stride >= s.dim);
+    }
+
+    #[test]
+    fn exact_lane_multiple_gets_no_extra_padding() {
+        let s = BlockStore::new(2, 32);
+        assert_eq!(s.stride, 32);
+    }
+
+    #[test]
+    fn every_row_starts_on_a_cache_line() {
+        // The no-false-sharing guarantee needs base alignment, not just
+        // stride padding: every row pointer must be 64-byte aligned.
+        for dim in [1, 5, 16, 22, 257] {
+            let s = BlockStore::new(3, dim);
+            for i in 0..3 {
+                assert_eq!(
+                    s.row(i).as_ptr() as usize % 64,
+                    0,
+                    "dim={dim} row={i} not line-aligned"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn row_ptrs_match_safe_views() {
+        let mut s = BlockStore::new(4, 7);
+        let p = s.row_ptr(2);
+        s.row_mut(2)[0] = 9.0;
+        assert_eq!(unsafe { *p }, 9.0);
+    }
+}

@@ -6,6 +6,10 @@
 //! penalty objective `F(x, z)` from eqs. (3)/(10) whose per-activation
 //! descent Theorems 1–3 guarantee (the integration tests check it).
 
+pub mod arena;
+
+pub use arena::BlockStore;
+
 use crate::data::{AgentData, Dataset};
 use crate::linalg::{self, dist2};
 
@@ -194,19 +198,28 @@ pub fn task_loss(task: Task, shard: &AgentData, w: &[f32]) -> f64 {
 }
 
 /// Incremental evaluator of the penalty objective
-/// F(x, z) = Σ_i f_i(x_i) + (τ/2) Σ_i Σ_m ‖x_i − z_m‖².
+/// F(x, z) = Σ_i f_i(x_i) + (τ/2) Σ_i Σ_m ‖x_i − z_m‖² — and of the
+/// consensus mean x̄ the agent-mean algorithms record.
 ///
 /// The naive evaluation is O(N·s·p) per sample (every agent's loss over its
 /// whole shard) — measured at ~200µs/activation on the Fig. 5 workload,
 /// ~70% on top of the actual local update (EXPERIMENTS.md §Perf). This
-/// tracker makes it O(changed agents · s·p + M·dim):
+/// tracker makes it O(changed agents · s·p + M·dim), **independent of N**:
 ///
 /// * per-agent losses are cached and recomputed only for agents whose block
-///   changed since the last sample (dirty set);
+///   changed since the last sample (dirty set), read directly from the
+///   engine-owned [`BlockStore`] arena — no snapshot matrix is ever built;
 /// * the pairwise penalty uses the expansion
 ///   Σ_i Σ_m ‖x_i − z_m‖² = M·Σ_i‖x_i‖² − 2⟨Σ_i x_i, Σ_m z_m⟩ + N·Σ_m‖z_m‖²,
 ///   with Σ_i x_i and Σ_i‖x_i‖² maintained incrementally (f64) on every
-///   block update.
+///   block update;
+/// * the recorded consensus mean comes from the same running block-sum
+///   ([`ObjectiveTracker::mean_into`]) in O(dim), replacing the former
+///   O(N·dim) per-record f32 re-accumulation over all agent blocks. (The
+///   f64 running sum agrees with a fresh f64 recompute to rounding — a few
+///   parts in 10¹⁴ — which is far below one f32 ulp, so the recorded f32
+///   mean is the value a from-scratch evaluation would produce; the
+///   property suite pins this down.)
 #[derive(Debug, Clone)]
 pub struct ObjectiveTracker {
     task: Task,
@@ -247,17 +260,37 @@ impl ObjectiveTracker {
         self.loss_sum_valid = false;
     }
 
-    /// Evaluate F(x, z). Only dirty agents' losses are recomputed.
-    pub fn objective(
+    /// The running block-sum Σ_i x_i (f64), maintained by
+    /// [`ObjectiveTracker::block_updated`].
+    pub fn block_sum(&self) -> &[f64] {
+        &self.sum_x
+    }
+
+    /// The consensus mean x̄ = (1/N)·Σ_i x_i from the running block-sum —
+    /// O(dim), no pass over the agents.
+    pub fn mean_into(&self, out: &mut [f32]) {
+        let n = self.losses.len() as f64;
+        for (o, &s) in out.iter_mut().zip(self.sum_x.iter()) {
+            *o = (s / n) as f32;
+        }
+    }
+
+    /// Evaluate F(x, z) with the blocks read straight out of the arena and
+    /// the token vectors streamed in (no snapshot copies). Only dirty
+    /// agents' losses are recomputed.
+    pub fn objective<'a, I>(
         &mut self,
         shards: &[AgentData],
-        xs: &[Vec<f32>],
-        zs: &[Vec<f32>],
+        blocks: &BlockStore,
+        zs: I,
         tau: f64,
-    ) -> f64 {
+    ) -> f64
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
         for i in 0..self.losses.len() {
             if self.dirty[i] {
-                self.losses[i] = task_loss(self.task, &shards[i], &xs[i]);
+                self.losses[i] = task_loss(self.task, &shards[i], blocks.row(i));
                 self.dirty[i] = false;
                 self.loss_sum_valid = false;
             }
@@ -266,8 +299,8 @@ impl ObjectiveTracker {
             self.loss_sum = self.losses.iter().sum();
             self.loss_sum_valid = true;
         }
-        let m = zs.len() as f64;
-        let n = xs.len() as f64;
+        let n = self.losses.len() as f64;
+        let mut m = 0.0f64;
         let mut cross = 0.0f64;
         let mut z_sq = 0.0f64;
         let dim = self.sum_x.len();
@@ -275,6 +308,7 @@ impl ObjectiveTracker {
         sum_z.resize(dim, 0.0);
         sum_z.fill(0.0);
         for z in zs {
+            m += 1.0;
             for (sj, &zf) in sum_z.iter_mut().zip(&z[..dim]) {
                 let zj = zf as f64;
                 *sj += zj;
@@ -380,6 +414,34 @@ mod tests {
         let f1 = penalty_objective(Task::Regression, &part.shards, &xs, &zs, 2.0);
         // penalty = (τ/2)·Σ_i Σ_m ‖x_i − z_m‖² = (2/2)·(2 agents · 4) = 8
         assert!((f1 - f0 - 8.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn tracker_reads_arena_and_matches_naive() {
+        let (_, part) = setup("test_ls");
+        let dim = 4;
+        let mut blocks = BlockStore::new(2, dim);
+        let mut tracker = ObjectiveTracker::new(Task::Regression, 2, dim);
+        let new0 = [0.5f32, -1.0, 0.25, 2.0];
+        tracker.block_updated(0, blocks.row(0), &new0);
+        blocks.row_mut(0).copy_from_slice(&new0);
+        let zs = [vec![1.0f32; dim], vec![-0.5f32; dim]];
+        let fast = tracker.objective(
+            &part.shards,
+            &blocks,
+            zs.iter().map(|z| z.as_slice()),
+            1.3,
+        );
+        let xs: Vec<Vec<f32>> = (0..2).map(|i| blocks.row(i).to_vec()).collect();
+        let naive = penalty_objective(Task::Regression, &part.shards, &xs, &zs, 1.3);
+        assert!((fast - naive).abs() < 1e-6 * (1.0 + naive.abs()), "{fast} vs {naive}");
+        // mean_into divides the running block-sum by N.
+        let mut mean = vec![0.0f32; dim];
+        tracker.mean_into(&mut mean);
+        for (j, &v) in mean.iter().enumerate() {
+            assert_eq!(v, new0[j] / 2.0);
+        }
+        assert_eq!(tracker.block_sum().len(), dim);
     }
 
     #[test]

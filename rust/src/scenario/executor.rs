@@ -1,0 +1,137 @@
+//! Work-stealing parallel cell executor for scenario matrices and sweeps.
+//!
+//! A validation matrix or an N-sweep is a list of *independent* cells
+//! (scenario × seed, or one agent count) whose runtimes differ wildly — a
+//! 4096-agent cell can take orders of magnitude longer than a 16-agent
+//! one, and a thread-substrate scenario longer than a DES one. A static
+//! split of cells over workers would idle on the fast cells while the slow
+//! ones run; instead every worker steals the next unclaimed cell from a
+//! shared atomic cursor the moment it frees up, so the pool stays busy
+//! until the queue drains.
+//!
+//! Determinism: cells are independent (each builds its own workload,
+//! solver and RNG streams from the cell seed) and results are written into
+//! the slot of the cell's *input index* — so on success the output of
+//! `run_indexed(jobs, …)` is byte-identical for any `jobs`, which
+//! `repro validate --jobs` relies on (and a regression test enforces). On
+//! failure the pool stops claiming new cells and the lowest materialized
+//! failing index's error is returned.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One result slot, filled exactly once by whichever worker claims the cell.
+type CellSlot<T> = Mutex<Option<anyhow::Result<T>>>;
+
+/// Run `f(0..n_items)` on `jobs` worker threads with work stealing;
+/// returns the results in input order. `jobs <= 1` degrades to a plain
+/// sequential loop (no threads spawned). On failures the pool stops
+/// claiming new cells (matching the sequential short-circuit; in-flight
+/// cells finish) and the error of the lowest *materialized* failing index
+/// is returned.
+pub fn run_indexed<T, F>(jobs: usize, n_items: usize, f: F) -> anyhow::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> anyhow::Result<T> + Sync,
+{
+    if n_items == 0 {
+        return Ok(Vec::new());
+    }
+    let jobs = jobs.max(1).min(n_items);
+    if jobs == 1 {
+        return (0..n_items).map(f).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let slots: Vec<CellSlot<T>> = (0..n_items).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                let r = f(i);
+                if r.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    let mut out = Vec::with_capacity(n_items);
+    let mut first_err = None;
+    for slot in slots {
+        match slot.into_inner().unwrap() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => {
+                first_err.get_or_insert(e);
+            }
+            // Unclaimed cell: only possible after an abort.
+            None => assert!(
+                failed.load(Ordering::Relaxed),
+                "executor left a cell unfilled without an error"
+            ),
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        for jobs in [1, 2, 7, 64] {
+            let out = run_indexed(jobs, 23, |i| {
+                // Stagger completion so later cells often finish first.
+                if i % 3 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Ok(i * i)
+            })
+            .unwrap();
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn every_cell_runs_exactly_once() {
+        let counts: Vec<AtomicUsize> = (0..40).map(|_| AtomicUsize::new(0)).collect();
+        run_indexed(4, 40, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        })
+        .unwrap();
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn lowest_failing_index_wins() {
+        let err = run_indexed(4, 10, |i| {
+            if i >= 3 {
+                anyhow::bail!("cell {i} failed")
+            }
+            Ok(i)
+        })
+        .unwrap_err();
+        assert_eq!(err.to_string(), "cell 3 failed");
+    }
+
+    #[test]
+    fn empty_and_oversubscribed_inputs() {
+        assert!(run_indexed::<usize, _>(8, 0, |_| unreachable!()).unwrap().is_empty());
+        let out = run_indexed(64, 3, Ok).unwrap();
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+}

@@ -14,7 +14,10 @@
 //! Scenarios compose into matrices ([`Matrix::Smoke`] for CI,
 //! [`Matrix::Full`] for figure-scale runs) that the
 //! [`crate::validate`] harness evaluates the paper's claims over
-//! (`repro validate --matrix smoke`).
+//! (`repro validate --matrix smoke --jobs 4` — independent cells run on
+//! the work-stealing [`executor`] with deterministic result ordering).
+
+pub mod executor;
 
 use crate::config::{ExperimentConfig, Preset, SolverChoice, StopRule};
 use crate::engine::Substrate;

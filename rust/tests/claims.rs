@@ -21,7 +21,7 @@ fn tmpdir(tag: &str) -> String {
 
 #[test]
 fn smoke_matrix_claims_all_pass_and_report_is_well_formed() {
-    let report = validate::run(Matrix::Smoke, 7, None).unwrap();
+    let report = validate::run(Matrix::Smoke, 7, None, 1).unwrap();
     let failures: Vec<String> = report
         .results
         .iter()
@@ -77,16 +77,18 @@ fn smoke_matrix_claims_all_pass_and_report_is_well_formed() {
 }
 
 #[test]
-fn des_claim_results_are_deterministic_across_reruns() {
+fn des_claim_results_are_deterministic_across_reruns_and_job_counts() {
     // The harness itself must be reproducible: the DES portion of the
     // matrix yields byte-identical claim results (verdicts *and* measured
-    // details) across reruns of the same seed.
+    // details) across reruns of the same seed — including when the cells
+    // run concurrently on the work-stealing executor (`--jobs 4`), whose
+    // results must come back in matrix order.
     let des: Vec<&'static Scenario> = scenario::matrix(Matrix::Smoke)
         .into_iter()
         .filter(|s| s.substrate == Substrate::Des)
         .collect();
-    let a = validate::run_scenarios(&des, 7, Some(400)).unwrap();
-    let b = validate::run_scenarios(&des, 7, Some(400)).unwrap();
+    let a = validate::run_scenarios(&des, 7, Some(400), 1).unwrap();
+    let b = validate::run_scenarios(&des, 7, Some(400), 4).unwrap();
     assert_eq!(a.len(), b.len());
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.claim, y.claim);

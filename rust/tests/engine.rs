@@ -217,6 +217,51 @@ fn golden_traces_match_snapshots() {
 }
 
 #[test]
+fn incremental_evaluator_is_cadence_invariant_for_all_algorithms() {
+    // The record path is incremental (running block-sum + cached losses +
+    // O(dim) mean), so *when* we record must not change *what* we record:
+    // for every algorithm, the final trace point of a run sampled every 7
+    // activations is bit-identical to the same run sampled only at the
+    // final crossing. Any drift in the incremental state under the real
+    // interleavings of block updates (multi-round gossip completions,
+    // parallel walks, duals) would show up as a bit difference here.
+    for &kind in AlgoKind::all() {
+        let run = |eval_every: u64| {
+            let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+            cfg.algos = vec![kind];
+            cfg.stop.max_activations = 140;
+            cfg.eval_every = eval_every;
+            Experiment::builder(cfg).run().unwrap()
+        };
+        let dense = run(7);
+        let sparse = run(140);
+        let (d, s) = (
+            dense.traces[0].points.last().unwrap(),
+            sparse.traces[0].points.last().unwrap(),
+        );
+        assert_eq!(d.iter, s.iter, "{}: final k differs", kind.name());
+        assert_eq!(d.comm, s.comm, "{}", kind.name());
+        assert_eq!(
+            d.objective.to_bits(),
+            s.objective.to_bits(),
+            "{}: objective {} vs {}",
+            kind.name(),
+            d.objective,
+            s.objective
+        );
+        assert_eq!(
+            d.metric.to_bits(),
+            s.metric.to_bits(),
+            "{}: metric {} vs {}",
+            kind.name(),
+            d.metric,
+            s.metric
+        );
+        assert!(dense.traces[0].points.len() > sparse.traces[0].points.len());
+    }
+}
+
+#[test]
 fn heterogeneous_des_stays_deterministic_per_seed() {
     // The heterogeneity factors are part of the seeded state: a straggler
     // run must replay bit-for-bit like a homogeneous one.

@@ -201,6 +201,81 @@ fn cli_validate_runs_a_scenario() {
 }
 
 #[test]
+fn cli_validate_parallel_jobs_report_is_byte_identical() {
+    // The work-stealing executor must not change *anything* observable:
+    // `repro validate --matrix smoke` writes a byte-identical
+    // VALIDATE_report.json for --jobs 1 and --jobs 4 (DES claims are
+    // seeded, and thread-substrate claims report deterministic detail
+    // strings on pass — see validate/mod.rs).
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let dir = tmpdir("validate_jobs");
+    let run_jobs = |jobs: &str| {
+        let path = format!("{dir}/report_jobs{jobs}.json");
+        let out = std::process::Command::new(bin)
+            .args(["validate", "--matrix", "smoke", "--jobs", jobs, "--out", &path])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "repro validate --jobs {jobs} failed:\n{}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        std::fs::read(&path).unwrap()
+    };
+    let seq = run_jobs("1");
+    let par = run_jobs("4");
+    assert!(
+        seq == par,
+        "VALIDATE_report.json differs between --jobs 1 and --jobs 4:\n--- jobs 1:\n{}\n--- jobs 4:\n{}",
+        String::from_utf8_lossy(&seq),
+        String::from_utf8_lossy(&par)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_sweep_scale_emits_schema_checked_json() {
+    // The N-scaling sweep: BENCH_scale.json carries one row per (N, algo)
+    // with the ns-per-activation / ns-per-record series.
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let dir = tmpdir("sweep_scale");
+    let path = format!("{dir}/BENCH_scale.json");
+    let out = std::process::Command::new(bin)
+        .args([
+            "sweep", "--agents", "8,32", "--activations", "300",
+            "--eval-every", "25", "--out", &path,
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "repro sweep --agents failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let doc = apibcd::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("suite").and_then(|j| j.as_str()), Some("scale"));
+    let results = doc.get("results").and_then(|j| j.as_arr()).unwrap();
+    assert_eq!(results.len(), 2, "one row per N for the single default algo");
+    for r in results {
+        for key in [
+            "name", "agents", "activations", "records",
+            "wall_secs", "record_secs", "ns_per_activation", "ns_per_record",
+        ] {
+            assert!(r.get(key).is_some(), "missing {key} in {r:?}");
+        }
+        assert!(r.get("records").and_then(|j| j.as_f64()).unwrap() > 0.0, "{r:?}");
+    }
+    // The flatness signal is derived for the list endpoints.
+    let derived = doc.get("derived").and_then(|j| j.as_obj()).unwrap();
+    assert!(
+        derived.keys().any(|k| k.contains("ns_per_record ratio")),
+        "{derived:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn cli_binary_runs_core_commands() {
     let bin = env!("CARGO_BIN_EXE_repro");
     let run = |args: &[&str]| {

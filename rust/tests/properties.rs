@@ -824,8 +824,9 @@ fn prop_fault_transmit_expected_attempts() {
 
 #[test]
 fn prop_objective_tracker_matches_naive() {
-    // The incremental tracker must agree with the direct O(N·s·p)
-    // evaluation after arbitrary update sequences.
+    // The incremental tracker (reading blocks straight out of the arena)
+    // must agree with the direct O(N·s·p) evaluation after arbitrary
+    // update sequences.
     let ds = Dataset::load(
         DatasetProfile::by_name("test_ls").unwrap(),
         "/nonexistent",
@@ -850,18 +851,83 @@ fn prop_objective_tracker_matches_naive() {
             (steps, zs, tau)
         },
         |(steps, zs, tau)| {
-            use apibcd::model::ObjectiveTracker;
-            let mut xs = vec![vec![0.0f32; dim]; 4];
+            use apibcd::model::{BlockStore, ObjectiveTracker};
+            let mut blocks = BlockStore::new(4, dim);
             let mut tracker = ObjectiveTracker::new(Task::Regression, 4, dim);
             for (agent, x_new) in steps {
-                tracker.block_updated(*agent, &xs[*agent], x_new);
-                xs[*agent] = x_new.clone();
+                tracker.block_updated(*agent, blocks.row(*agent), x_new);
+                blocks.row_mut(*agent).copy_from_slice(x_new);
             }
-            let fast = tracker.objective(&part.shards, &xs, zs, *tau);
+            let fast = tracker.objective(
+                &part.shards,
+                &blocks,
+                zs.iter().map(|z| z.as_slice()),
+                *tau,
+            );
+            let xs: Vec<Vec<f32>> = (0..4).map(|i| blocks.row(i).to_vec()).collect();
             let naive = penalty_objective(Task::Regression, &part.shards, &xs, zs, *tau);
             let tol = 1e-6 + 1e-9 * naive.abs() + 1e-4;
             if (fast - naive).abs() > tol {
                 return Err(format!("tracker {fast} vs naive {naive}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_running_block_sum_matches_from_scratch_recompute() {
+    // The O(dim) record path stands on the running block-sum maintained in
+    // `block_updated`. After arbitrary interleavings of block updates the
+    // incremental f64 sums must agree with a from-scratch recompute over
+    // the arena to f64 rounding (a few parts in 1e14), and the *recorded*
+    // f32 consensus mean — the value that lands in the trace — must be
+    // bit-identical to the from-scratch mean, since f64 accumulation drift
+    // sits ten orders of magnitude below one f32 ulp.
+    run_prop(
+        "running block-sum vs from-scratch",
+        cfg(48, 1616),
+        |r| {
+            let n = 2 + r.below(6);
+            let dim = 1 + r.below(9);
+            let steps: Vec<(usize, Vec<f32>)> = (0..(1 + r.below(60)))
+                .map(|_| (r.below(n), (0..dim).map(|_| r.normal_f32()).collect()))
+                .collect();
+            (n, dim, steps)
+        },
+        |(n, dim, steps)| {
+            use apibcd::model::{BlockStore, ObjectiveTracker};
+            let (n, dim) = (*n, *dim);
+            let mut blocks = BlockStore::new(n, dim);
+            let mut tracker = ObjectiveTracker::new(Task::Regression, n, dim);
+            for (agent, x_new) in steps {
+                tracker.block_updated(*agent, blocks.row(*agent), x_new);
+                blocks.row_mut(*agent).copy_from_slice(x_new);
+            }
+            // From-scratch f64 recompute over the arena rows.
+            let mut fresh = vec![0.0f64; dim];
+            for i in 0..n {
+                for (s, &v) in fresh.iter_mut().zip(blocks.row(i)) {
+                    *s += v as f64;
+                }
+            }
+            for (j, (&inc, &scr)) in tracker.block_sum().iter().zip(&fresh).enumerate() {
+                let tol = 1e-12 * (1.0 + scr.abs());
+                if (inc - scr).abs() > tol {
+                    return Err(format!("sum_x[{j}]: incremental {inc} vs fresh {scr}"));
+                }
+            }
+            // The recorded f32 mean is bit-identical to from-scratch.
+            let mut inc_mean = vec![0.0f32; dim];
+            tracker.mean_into(&mut inc_mean);
+            for j in 0..dim {
+                let scratch = (fresh[j] / n as f64) as f32;
+                if inc_mean[j].to_bits() != scratch.to_bits() {
+                    return Err(format!(
+                        "mean[{j}]: incremental {:?} vs from-scratch {:?}",
+                        inc_mean[j], scratch
+                    ));
+                }
             }
             Ok(())
         },
