@@ -157,6 +157,25 @@ fn bench_coordinator(suite: &mut Suite, smoke: bool) {
         t.record_secs * 1e9 / records as f64,
     );
 
+    // DES event queue in isolation: one push+pop pair is the fixed
+    // per-message overhead of every simulated hop, so its cost is tracked
+    // per PR alongside the solver kernels. The queue is pre-sized and
+    // recycled across runs (engine behavior) — steady state reallocates
+    // nothing.
+    let mut queue = apibcd::sim::EventQueue::with_capacity(1024);
+    let mut t = 0.0f64;
+    let iters_q = if smoke { 50 } else { 500 };
+    let r = bench("sim/event-queue push+pop x1024", iters_q, || {
+        for i in 0..1024usize {
+            t += 1e-5;
+            queue.push(t + (i % 7) as f64 * 1e-5, i % 8, i % 64);
+        }
+        while queue.pop().is_some() {}
+    });
+    suite.derive("sim/event-queue push/pop ns", r.mean_ns / 2048.0);
+    println!("  → {:.1}ns per queue op", r.mean_ns / 2048.0);
+    suite.push(r);
+
     // Topology + routing.
     let mut rng = apibcd::util::rng::Rng::new(7);
     let iters = if smoke { 30 } else { 200 };

@@ -98,6 +98,7 @@ fn apply(cfg: &mut ExperimentConfig, key: &str, v: &str) -> anyhow::Result<()> {
         }
         "dropout-len" => cfg.faults.dropout_len = v.parse().map_err(|_| bad("number"))?,
         "heterogeneity" => cfg.heterogeneity = crate::sim::Heterogeneity::parse(v)?,
+        "workers" => cfg.workers = v.parse().map_err(|_| bad("integer"))?,
         "routing" => {
             cfg.routing = match v {
                 "cycle" => RoutingRule::Cycle,
@@ -242,6 +243,15 @@ mod tests {
         let err = from_str("topology = \"torus\"\n").unwrap_err().to_string();
         assert!(err.contains("torus") && err.contains("geometric"), "{err}");
         assert_eq!(from_str("topology = \"scale-free\"\n").unwrap().topology, "scale-free");
+    }
+
+    #[test]
+    fn workers_key_parses() {
+        let cfg = from_str("workers = 6\n").unwrap();
+        assert_eq!(cfg.workers, 6);
+        assert_eq!(from_str("").unwrap().workers, 0, "default is auto (0)");
+        let err = from_str("workers = many\n").unwrap_err().to_string();
+        assert!(err.contains("workers"), "{err}");
     }
 
     #[test]

@@ -96,6 +96,9 @@ pub struct ExperimentConfig {
     pub heterogeneity: Heterogeneity,
     /// Failure injection (link loss / agent churn); NONE by default.
     pub faults: crate::sim::FaultModel,
+    /// Worker-pool size for the thread substrate's M:N runtime (0 = auto:
+    /// `available_parallelism − 1`). The DES ignores it.
+    pub workers: usize,
     pub partition: PartitionKind,
     pub data_dir: String,
     pub artifacts_dir: String,
@@ -126,6 +129,7 @@ impl Default for ExperimentConfig {
             latency: LatencyModel::paper(),
             heterogeneity: Heterogeneity::None,
             faults: crate::sim::FaultModel::NONE,
+            workers: 0,
             partition: PartitionKind::Iid,
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),

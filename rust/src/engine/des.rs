@@ -125,6 +125,7 @@ pub(crate) fn run(
     solver: &mut dyn LocalSolver,
     kind: AlgoKind,
     collect_events: bool,
+    queue: &mut EventQueue,
 ) -> anyhow::Result<(Trace, Vec<WalkEvent>)> {
     let spec = spec_for(kind);
     let dim = shards[0].features * shards[0].classes;
@@ -154,7 +155,16 @@ pub(crate) fn run(
     let faults = cfg.faults;
     let mut membership = Membership::new(n, faults, &mut rng);
     let mut avail = AgentAvailability::new(n);
-    let mut queue = EventQueue::new();
+    // Recycled caller-owned queue: reset restarts the deterministic seq
+    // stream, reserve pre-sizes the heap to the steady-state in-flight
+    // bound (M tokens, or one message per directed edge for gossip) so it
+    // never regrows mid-run.
+    queue.reset();
+    queue.reserve(if walks > 0 {
+        walks + 1
+    } else {
+        2 * topo.num_edges() + 1
+    });
     let mut store = MsgStore::default();
     let mut pool = PayloadPool::default();
     let mut router = Router::new(routing, topo, walks.max(1));

@@ -8,9 +8,14 @@
 //!   latency model, busy-agent FIFO queuing, token routing, fault
 //!   injection ([`crate::sim::FaultModel`]/[`crate::sim::Membership`]),
 //!   recording and stop rules.
-//! * [`threads`] — the real-asynchrony substrate: each agent an OS thread,
-//!   tokens as mpsc messages, compute through the
-//!   [`crate::solver::SolverClient`] service with buffer recycling.
+//! * [`threads`] — the real-asynchrony substrate: an M:N work-stealing
+//!   runtime where a fixed pool of `--workers` OS threads drives all N
+//!   agents as parked state machines (sharded run queues + a shared
+//!   [`crate::sim::TimerWheel`] for every link/straggler delay), compute
+//!   through the [`crate::solver::SolverClient`] service with buffer
+//!   recycling. The process thread count is bounded by the pool, never by
+//!   N — which is what lets the thread substrate reach the same agent
+//!   counts as the DES (`repro sweep --substrate threads`).
 //!
 //! The public entry point is the builder:
 //!
@@ -92,6 +97,10 @@ impl ExperimentBuilder {
         match self.substrate {
             Substrate::Des => {
                 let mut solver = build_solver(&cfg, workload.profile)?;
+                // One event queue recycled across the experiment's runs:
+                // the heap's Arrival capacity carries over, so only the
+                // first algorithm pays the allocation.
+                let mut queue = crate::sim::EventQueue::new();
                 for &kind in &cfg.algos {
                     let (trace, _) = des::run(
                         &cfg,
@@ -102,6 +111,7 @@ impl ExperimentBuilder {
                         solver.as_mut(),
                         kind,
                         false,
+                        &mut queue,
                     )?;
                     traces.push(trace);
                 }
@@ -158,6 +168,7 @@ pub fn run_with_events(
 ) -> anyhow::Result<(Trace, Vec<WalkEvent>)> {
     let workload = Workload::build(cfg)?;
     let mut solver = build_solver(cfg, workload.profile)?;
+    let mut queue = crate::sim::EventQueue::new();
     des::run(
         cfg,
         &workload.topo,
@@ -167,7 +178,22 @@ pub fn run_with_events(
         solver.as_mut(),
         kind,
         true,
+        &mut queue,
     )
+}
+
+/// Resolve the thread-substrate pool size: `cfg_workers` when set (> 0),
+/// else `available_parallelism − 1` (one core left for the
+/// coordinator/solver service; never below 1).
+pub fn resolve_workers(cfg_workers: usize) -> usize {
+    if cfg_workers > 0 {
+        return cfg_workers;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .saturating_sub(1)
+        .max(1)
 }
 
 /// Resolved (data, topology, problem) for a config — shared by both
@@ -452,6 +478,18 @@ mod tests {
         assert!(should_stop(&stop, 10, 0.5, 50));
         assert!(should_stop(&stop, 5, 1.5, 50));
         assert!(should_stop(&stop, 5, 0.5, 100));
+    }
+
+    #[test]
+    fn resolve_workers_prefers_explicit_count() {
+        assert_eq!(resolve_workers(3), 3);
+        assert_eq!(resolve_workers(1), 1);
+        // Auto: at least one worker, and bounded by the machine.
+        let auto = resolve_workers(0);
+        assert!(auto >= 1);
+        if let Ok(p) = std::thread::available_parallelism() {
+            assert!(auto <= p.get());
+        }
     }
 
     #[test]

@@ -1,30 +1,50 @@
-//! Real-asynchrony substrate: every agent an OS thread, every algorithm.
+//! Real-asynchrony substrate: an M:N work-stealing pooled runtime — every
+//! algorithm, any agent count.
 //!
 //! The DES ([`super::des`]) *models* asynchrony; this substrate
-//! *implements* it: each agent is a thread owning its behavior auxiliaries
-//! (local copies `ẑ_{i,·}`, duals, gossip buffers) plus an exclusive view
-//! of its row in the engine-owned [`BlockStore`] arena, tokens are
-//! messages on per-agent mpsc channels, link latency is an injected
-//! sleep drawn from the same U(10⁻⁵,10⁻⁴) model, and the compute path
-//! goes through the [`SolverClient`] service (the PJRT engine is a
-//! serialized device resource, like a real accelerator queue). The fault
-//! model applies here too: lossy links cost retransmission attempts and
-//! ack-timeout sleeps; agent churn re-routes tokens through the shared
-//! membership view.
+//! *implements* it — but no longer with one OS thread per agent. At
+//! N=4096 the old layout meant 4096 kernel threads, gigabytes of default
+//! stacks and scheduler thrash instead of a measurement. Instead a fixed
+//! pool of `--workers` OS threads (default `available_parallelism − 1`)
+//! drives all N agents as **parked state machines**:
 //!
-//! Shutdown is deterministic: the agent whose activation trips the stop
-//! rule broadcasts one `AgentMsg::Stop` to every inbox, so peers blocked
-//! in `recv` wake immediately instead of spinning on a timeout poll.
-//! Steady-state agents reallocate none of the model-sized vectors on the
-//! prox path — the three solver buffers circulate through
-//! [`SolverClient::prox_buf`] and the result vector swaps with the
-//! behavior's output buffer (gossip broadcasts and the channel round trips
-//! still allocate).
+//! * every agent owns an `AgentCore` (behavior auxiliaries, an exclusive
+//!   `RowView` of its arena row, its recycled solver buffers and RNG
+//!   stream) behind a per-agent mutex, plus a mailbox of in-flight
+//!   [`TokenMsg`]s;
+//! * an agent is *runnable* only when a message sits in its mailbox or its
+//!   straggler window expired; runnable agents are claimed from a sharded
+//!   work-stealing run queue
+//!   ([`crate::scenario::executor::StealQueue`]) by whichever worker
+//!   frees up first — the `scheduled` flag guarantees at most one claim
+//!   exists, so the arena row moves between workers with the claim and
+//!   PR 4's exclusive-row ownership is preserved;
+//! * every delay that used to pin a sleeping thread — link latency,
+//!   retransmission ack timeouts, calibrated straggler sleeps — becomes a
+//!   deadline on a shared [`TimerWheel`] driven by one timekeeper thread,
+//!   so thousands of concurrent delays coalesce instead of each occupying
+//!   a kernel thread;
+//! * compute still goes through the serialized [`SolverClient`] service
+//!   with full buffer recycling (the device is a shared resource, exactly
+//!   like a real accelerator queue), and the fault model applies
+//!   unchanged: lossy links cost retransmission attempts and ack-timeout
+//!   *deadlines*, agent churn re-routes tokens through the shared
+//!   membership view.
+//!
+//! Shutdown is a drain-and-park barrier: the first activation to trip a
+//! stop rule closes the run queue (waking every parked worker) and the
+//! timer condvar; workers finish their in-flight activation, retire any
+//! tokens they are holding, and exit; the coordinator then joins the pool,
+//! sweeps tokens still queued in mailboxes or the wheel, and reads the
+//! final consensus straight out of the arena. No pooled worker can be left
+//! blocked on an empty queue (stress-tested in `tests/engine.rs`).
 //!
 //! Returns a [`Trace`] whose `time` axis is *wall-clock seconds* (this
 //! mode measures reality instead of simulating it; the objective column is
 //! NaN — global state is never assembled while running, that is the point
-//! of the asynchronous design).
+//! of the asynchronous design). The trace additionally carries the pool
+//! telemetry: per-worker busy seconds and the peak OS-thread count of the
+//! process during the run.
 
 use crate::algo::behavior::{
     spec_for, ActivationCtx, AgentBehavior, BehaviorEnv, Compute, EvalModel, Outgoing,
@@ -36,42 +56,49 @@ use crate::data::AgentData;
 use crate::graph::Topology;
 use crate::metrics::{Trace, TracePoint};
 use crate::model::{BlockStore, Problem, Task};
-use crate::sim::{FaultModel, LatencyModel, Membership, TimingModel};
+use crate::scenario::executor::StealQueue;
+use crate::sim::{FaultModel, LatencyModel, Membership, TimerWheel, TimingModel};
 use crate::solver::SolverClient;
 use crate::util::rng::Rng;
 use std::cell::UnsafeCell;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Agent inbox message: a token/gossip delivery, or the shutdown broadcast.
-enum AgentMsg {
-    Token(TokenMsg),
-    Stop,
-}
+/// Timer-wheel resolution. Link latencies are U(10µs, 100µs); 20µs ticks
+/// quantize them no coarser than the OS sleep granularity already does,
+/// and one ring revolution (512 slots ≈ 10ms) covers the common delays —
+/// longer ones (churn windows, retry pile-ups) ride the wheel's absolute
+/// tags across revolutions.
+const TICK_SECS: f64 = 2e-5;
+const WHEEL_SLOTS: usize = 512;
 
 /// The shared block arena for the thread substrate. Rows are disjoint
-/// cache-line-padded slices of one allocation; each agent thread gets a
-/// [`RowView`] over exactly its own row.
+/// cache-line-padded slices of one allocation; each agent's [`AgentCore`]
+/// holds a [`RowView`] over exactly its own row.
 ///
-/// Safety contract (why the `Sync` impl is sound): while agent threads run,
-/// row `i` is touched *only* by agent `i`'s thread (through its `RowView`);
-/// the coordinator reads the arena only after joining every agent thread.
-/// The `Arc` keeps the allocation alive even if the coordinator unwinds
-/// early, so a still-running thread can never write into freed memory.
+/// Safety contract (why the `Sync` impl is sound): row `i` is touched only
+/// through agent `i`'s `RowView`, which lives inside the agent's
+/// mutex-guarded core, and a core is only ever executed under a single
+/// claim (the `scheduled` flag); the coordinator reads the arena only
+/// after joining every pool thread. The `Arc` keeps the allocation alive
+/// even if the coordinator unwinds early, so a still-running worker can
+/// never write into freed memory.
 struct ArenaCell(UnsafeCell<BlockStore>);
 
 unsafe impl Sync for ArenaCell {}
 
-/// Exclusive view of one arena row, movable into the owning agent's thread.
+/// Exclusive view of one arena row, movable between workers with the
+/// owning agent's claim.
 struct RowView {
-    /// Keeps the arena allocation alive for the thread's lifetime.
+    /// Keeps the arena allocation alive for the core's lifetime.
     _arena: Arc<ArenaCell>,
     ptr: *mut f32,
     dim: usize,
 }
 
-// Safety: the raw pointer targets a row no other thread accesses (see
+// Safety: the raw pointer targets a row no other core accesses (see
 // `ArenaCell`), and the Arc it rides with is Send.
 unsafe impl Send for RowView {}
 
@@ -93,11 +120,46 @@ struct Sample {
     comm: u64,
     agent: usize,
     x: Vec<f32>,
-    /// Exit flush: updates the monitor's final token without pushing a
-    /// trace point (the agent that retires a walk hands its final value
-    /// over; agent-mean algorithms need no flush — the coordinator reads
-    /// the true final blocks straight out of the arena after the join).
-    flush: bool,
+}
+
+/// A deadline-triggered action on the timer wheel: a message whose
+/// link/retry/straggler delay expired, or an agent whose busy window
+/// ended.
+enum TimerItem {
+    Deliver { dest: usize, msg: TokenMsg },
+    Unpark { agent: usize },
+}
+
+/// The shared wheel plus the timekeeper's wakeup condvar.
+struct Timers {
+    wheel: Mutex<TimerWheel<TimerItem>>,
+    cv: Condvar,
+}
+
+/// Everything one parked agent owns between activations. A worker claims
+/// it through the slot's mutex; the `scheduled` flag guarantees at most
+/// one claim (run-queue entry, wheel `Unpark`, or running worker) exists
+/// at a time, so the lock is uncontended in steady state and the arena
+/// row's ownership transfers with the claim.
+struct AgentCore {
+    behavior: Box<dyn AgentBehavior>,
+    row: RowView,
+    compute: ServiceCompute,
+    rng: Rng,
+    sends: Vec<Outgoing>,
+    pool: PayloadPool,
+    /// Straggler emulation: the agent may not serve before this
+    /// run-relative time (seconds since start) — a timer-wheel window
+    /// instead of a per-thread sleep.
+    busy_until: f64,
+}
+
+struct AgentSlot {
+    inbox: Mutex<VecDeque<TokenMsg>>,
+    /// True while the agent is on the run queue, parked in the wheel, or
+    /// executing on a worker.
+    scheduled: AtomicBool,
+    core: Mutex<AgentCore>,
 }
 
 struct Shared {
@@ -115,16 +177,90 @@ struct Shared {
     latency: LatencyModel,
     timing: TimingModel,
     /// Per-agent compute-speed factors (empty = homogeneous): slow agents
-    /// take a calibrated extra sleep per update.
+    /// stay busy for a calibrated extra window per update.
     speed: Vec<f64>,
     /// Per-agent link-latency factors (empty = homogeneous): hops *into* a
-    /// slow agent stretch the injected link sleep.
+    /// slow agent stretch the injected link delay.
     link: Vec<f64>,
     faults: FaultModel,
     /// Shared failure-detector view (wall-clock seconds since start).
     membership: Mutex<Membership>,
     started: Instant,
     eval_model: EvalModel,
+    agents: Vec<AgentSlot>,
+    runq: StealQueue<usize>,
+    timers: Timers,
+    /// Per-worker busy nanoseconds (time spent holding agent claims) —
+    /// the utilization series in the trace telemetry.
+    worker_busy_ns: Vec<AtomicU64>,
+    /// Newest retired token (EvalModel::Token only): (k at retirement,
+    /// payload). Fed by stopping workers and the coordinator's shutdown
+    /// sweep.
+    final_token: Mutex<Option<(u64, Vec<f32>)>>,
+}
+
+impl Shared {
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Make agent `i` runnable unless it already holds a claim.
+    fn schedule(&self, i: usize) {
+        if !self.agents[i].scheduled.swap(true, Ordering::SeqCst) {
+            self.runq.push(i, i);
+        }
+    }
+
+    /// Put `msg` in `dest`'s mailbox and make it runnable.
+    fn deliver(&self, dest: usize, msg: TokenMsg) {
+        self.agents[dest].inbox.lock().unwrap().push_back(msg);
+        self.schedule(dest);
+    }
+
+    /// Hand `msg` to `dest` after `delay` seconds: zero-delay messages go
+    /// straight to the mailbox; every positive delay becomes a wheel
+    /// deadline (`tick_at` rounds *up*, so — like the per-thread sleeps
+    /// this replaces — a delivery may land a little late but never early;
+    /// an eager sub-tick fast path would bias the realized latency
+    /// distribution toward zero).
+    fn send_after(&self, dest: usize, msg: TokenMsg, delay: f64) {
+        if delay <= 0.0 {
+            self.deliver(dest, msg);
+            return;
+        }
+        let mut wheel = self.timers.wheel.lock().unwrap();
+        let tick = wheel.tick_at(self.now() + delay);
+        wheel.schedule_at(tick, TimerItem::Deliver { dest, msg });
+        drop(wheel);
+        self.timers.cv.notify_one();
+    }
+
+    /// Trip the stop flag (once): close the run queue so every parked
+    /// worker wakes, and wake the timekeeper so it exits.
+    fn trip_stop(&self) {
+        if !self.stop.swap(true, Ordering::SeqCst) {
+            self.runq.close();
+            let _wheel = self.timers.wheel.lock().unwrap();
+            self.timers.cv.notify_all();
+        }
+    }
+
+    /// Record a token retired at shutdown (newest k wins — the same
+    /// "latest flush" rule the per-thread substrate used).
+    fn retire_token(&self, payload: Vec<f32>) {
+        if self.eval_model != EvalModel::Token || payload.is_empty() {
+            return;
+        }
+        let k = self.activations.load(Ordering::Relaxed);
+        let mut slot = self.final_token.lock().unwrap();
+        let newer = match &*slot {
+            None => true,
+            Some((k0, _)) => k >= *k0,
+        };
+        if newer {
+            *slot = Some((k, payload));
+        }
+    }
 }
 
 /// Thread-substrate compute path: requests go to the solver service with
@@ -191,7 +327,7 @@ impl Compute for ServiceCompute {
     }
 }
 
-/// Run one algorithm with every agent as an OS thread.
+/// Run one algorithm on the pooled M:N runtime.
 pub(crate) fn run(
     cfg: &ExperimentConfig,
     kind: AlgoKind,
@@ -206,8 +342,59 @@ pub(crate) fn run(
     let dim = shards[0].features * shards[0].classes;
     let walks = spec.walks(cfg);
     let routing = spec.routing(cfg);
+    let workers = super::resolve_workers(cfg.workers).min(n);
     let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
     let (speed, link) = super::hetero_factors(cfg);
+    let threads_before = crate::util::os_thread_count().unwrap_or(0);
+
+    // Behaviors are built on the coordinator (they need the shard set for
+    // smoothness bounds) and parked in their slots.
+    let behaviors: Vec<Box<dyn AgentBehavior>> = {
+        let env = BehaviorEnv {
+            cfg,
+            topo,
+            shards: &shards,
+            task,
+            dim,
+            n,
+        };
+        (0..n).map(|i| spec.make_agent(i, &env)).collect()
+    };
+
+    // The engine-owned block arena: agent i's core holds an exclusive view
+    // of row i; the coordinator reads the final blocks from the arena
+    // after joining the pool.
+    let arena = Arc::new(ArenaCell(UnsafeCell::new(BlockStore::new(n, dim))));
+    let rows: Vec<RowView> = {
+        // Exclusive at this point: no pool threads exist yet.
+        let store = unsafe { &mut *arena.0.get() };
+        (0..n)
+            .map(|i| RowView {
+                _arena: arena.clone(),
+                ptr: store.row_ptr(i),
+                dim,
+            })
+            .collect()
+    };
+
+    let agents: Vec<AgentSlot> = behaviors
+        .into_iter()
+        .zip(rows)
+        .enumerate()
+        .map(|(i, (behavior, row))| AgentSlot {
+            inbox: Mutex::new(VecDeque::new()),
+            scheduled: AtomicBool::new(false),
+            core: Mutex::new(AgentCore {
+                behavior,
+                row,
+                compute: ServiceCompute::new(client.clone(), dim),
+                rng: Rng::new(cfg.seed ^ ((i as u64 + 1) << 16)),
+                sends: Vec::new(),
+                pool: PayloadPool::default(),
+                busy_until: 0.0,
+            }),
+        })
+        .collect();
 
     let shared = Arc::new(Shared {
         topo: topo.clone(),
@@ -232,71 +419,19 @@ pub(crate) fn run(
         membership: Mutex::new(Membership::new(n, cfg.faults, &mut rng)),
         started: Instant::now(),
         eval_model: spec.eval_model(),
+        agents,
+        runq: StealQueue::new(workers),
+        timers: Timers {
+            wheel: Mutex::new(TimerWheel::new(TICK_SECS, WHEEL_SLOTS)),
+            cv: Condvar::new(),
+        },
+        worker_busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+        final_token: Mutex::new(None),
     });
 
-    // Behaviors are built on the coordinator (they need the shard set for
-    // smoothness bounds) and moved into their threads.
-    let behaviors: Vec<Box<dyn AgentBehavior>> = {
-        let env = BehaviorEnv {
-            cfg,
-            topo,
-            shards: &shards,
-            task,
-            dim,
-            n,
-        };
-        (0..n).map(|i| spec.make_agent(i, &env)).collect()
-    };
-
-    // The engine-owned block arena: agent i's thread receives an exclusive
-    // view of row i; the coordinator reads the final blocks from the arena
-    // after joining every thread.
-    let arena = Arc::new(ArenaCell(UnsafeCell::new(BlockStore::new(n, dim))));
-    let rows: Vec<RowView> = {
-        // Exclusive at this point: no agent threads exist yet.
-        let store = unsafe { &mut *arena.0.get() };
-        (0..n)
-            .map(|i| RowView {
-                _arena: arena.clone(),
-                ptr: store.row_ptr(i),
-                dim,
-            })
-            .collect()
-    };
-
-    // Per-agent inboxes.
-    let mut senders = Vec::with_capacity(n);
-    let mut receivers = Vec::with_capacity(n);
-    for _ in 0..n {
-        let (tx, rx) = mpsc::channel::<AgentMsg>();
-        senders.push(tx);
-        receivers.push(rx);
-    }
-    let senders = Arc::new(senders);
-    let (sample_tx, sample_rx) = mpsc::channel::<Sample>();
-
-    let mut handles = Vec::with_capacity(n);
-    for (i, ((rx, behavior), row)) in receivers
-        .into_iter()
-        .zip(behaviors)
-        .zip(rows)
-        .enumerate()
-    {
-        let shared = shared.clone();
-        let senders = senders.clone();
-        let compute = ServiceCompute::new(client.clone(), dim);
-        let sample_tx = sample_tx.clone();
-        let seed = cfg.seed ^ ((i as u64 + 1) << 16);
-        handles.push(std::thread::Builder::new().name(format!("agent-{i}")).spawn(
-            move || -> anyhow::Result<()> {
-                agent_loop(i, rx, shared, senders, behavior, row, compute, sample_tx, seed)
-            },
-        )?);
-    }
-    drop(sample_tx);
-
     // Inject the initial messages: M zero tokens, or the gossip kickoff
-    // (every agent's round-0 block to each neighbor).
+    // (every agent's round-0 block to each neighbor). Same accounting as
+    // the DES: lossy links cost retransmission attempts from round 0 on.
     if walks > 0 {
         for m in 0..walks {
             let (start, pos) = if shared.cycle.is_empty() {
@@ -305,35 +440,78 @@ pub(crate) fn run(
                 let pos = m * shared.cycle.len() / walks;
                 (shared.cycle[pos], pos)
             };
-            senders[start]
-                .send(AgentMsg::Token(TokenMsg {
+            shared.deliver(
+                start,
+                TokenMsg {
                     id: m,
                     round: 0,
                     payload: vec![0.0f32; dim],
                     cycle_pos: pos,
-                }))
-                .map_err(|_| anyhow::anyhow!("agent {start} died before start"))?;
+                },
+            );
         }
     } else {
         for i in 0..n {
             for &j in topo.neighbors(i) {
-                // Same kickoff accounting as the DES: lossy links cost
-                // retransmission attempts from the first round on.
                 let (attempts, _retry) = shared.faults.transmit(&mut rng);
                 shared.comm.fetch_add(attempts, Ordering::Relaxed);
-                senders[j]
-                    .send(AgentMsg::Token(TokenMsg {
+                shared.deliver(
+                    j,
+                    TokenMsg {
                         id: i,
                         round: 0,
                         payload: vec![0.0f32; dim],
                         cycle_pos: 0,
-                    }))
-                    .map_err(|_| anyhow::anyhow!("agent {j} died before start"))?;
+                    },
+                );
             }
         }
     }
 
-    // Collect samples until every agent exits.
+    // Spawn the fixed pool: `workers` claim-executing threads plus one
+    // timekeeper driving the wheel — the process thread count is bounded
+    // by the pool, never by N.
+    let (sample_tx, sample_rx) = mpsc::channel::<Sample>();
+    let mut handles = Vec::with_capacity(workers);
+    // Any spawn failure mid-pool must not leak the threads already
+    // running (the kickoff messages are live — workers start executing
+    // immediately): raise the barrier, join what exists, and bail.
+    let abort_spawn = |shared: &Shared,
+                       handles: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
+                       e: std::io::Error| {
+        shared.trip_stop();
+        for h in handles {
+            let _ = h.join();
+        }
+        anyhow::Error::from(e)
+    };
+    for w in 0..workers {
+        let shared2 = shared.clone();
+        let tx = sample_tx.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("mn-worker-{w}"))
+            .spawn(move || -> anyhow::Result<()> { worker_loop(w, &shared2, &tx) });
+        match spawned {
+            Ok(h) => handles.push(h),
+            Err(e) => return Err(abort_spawn(&shared, handles, e)),
+        }
+    }
+    drop(sample_tx);
+    let timer_handle = {
+        let shared2 = shared.clone();
+        let spawned = std::thread::Builder::new()
+            .name("mn-timer".into())
+            .spawn(move || timer_loop(&shared2));
+        match spawned {
+            Ok(h) => h,
+            Err(e) => return Err(abort_spawn(&shared, handles, e)),
+        }
+    };
+    let peak_threads = crate::util::os_thread_count()
+        .unwrap_or(0)
+        .max(threads_before);
+
+    // Collect samples until every worker exits (all sample senders drop).
     let mut trace = Trace::new(format!("{}(threads)", kind.name()));
     trace.push(TracePoint {
         iter: 0,
@@ -345,29 +523,14 @@ pub(crate) fn run(
     // Monitor state: last-known block per agent (x⁰ = 0 before first sight).
     let mut latest = vec![vec![0.0f32; dim]; n];
     let mut consensus = vec![0.0f32; dim];
-    let mut final_token: Option<(u64, Vec<f32>)> = None;
-    let consensus_metric =
-        |latest: &[Vec<f32>], consensus: &mut Vec<f32>| -> f64 {
-            consensus.fill(0.0);
-            for x in latest {
-                crate::linalg::axpy(1.0 / n as f32, x, consensus);
-            }
-            problem.metric(consensus)
-        };
-    while let Ok(s) = sample_rx.recv() {
-        if s.flush {
-            // Only token walks flush on exit (the retiring agent hands the
-            // final token over); agent-mean state is read from the arena
-            // after the join.
-            let newer = match &final_token {
-                None => true,
-                Some((k0, _)) => s.k >= *k0,
-            };
-            if newer {
-                final_token = Some((s.k, s.x));
-            }
-            continue;
+    let consensus_metric = |latest: &[Vec<f32>], consensus: &mut Vec<f32>| -> f64 {
+        consensus.fill(0.0);
+        for x in latest {
+            crate::linalg::axpy(1.0 / n as f32, x, consensus);
         }
+        problem.metric(consensus)
+    };
+    while let Ok(s) = sample_rx.recv() {
         let metric = match shared.eval_model {
             EvalModel::AgentMean => {
                 latest[s.agent] = s.x;
@@ -385,11 +548,35 @@ pub(crate) fn run(
     }
     for h in handles {
         h.join()
-            .map_err(|_| anyhow::anyhow!("agent thread panicked"))??;
+            .map_err(|_| anyhow::anyhow!("pool worker panicked"))??;
     }
+    timer_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("timekeeper thread panicked"))?;
+
+    // Shutdown sweep: tokens still queued in mailboxes, the wheel, or the
+    // closed run queue's claims never reached a worker — retire them so
+    // the token-eval final point reflects the newest surviving value.
+    if shared.eval_model == EvalModel::Token {
+        let _ = shared.runq.drain();
+        for slot in &shared.agents {
+            let mut inbox = slot.inbox.lock().unwrap();
+            while let Some(msg) = inbox.pop_front() {
+                shared.retire_token(msg.payload);
+            }
+        }
+        let mut leftovers = Vec::new();
+        shared.timers.wheel.lock().unwrap().drain(&mut leftovers);
+        for item in leftovers {
+            if let TimerItem::Deliver { msg, .. } = item {
+                shared.retire_token(msg.payload);
+            }
+        }
+    }
+
     // Final point: the true final consensus read straight out of the arena
-    // (safe now — every writer thread has been joined), or the retired
-    // token's final value from its exit flush.
+    // (safe now — every pool thread has been joined), or the newest
+    // retired token value.
     let metric = match shared.eval_model {
         EvalModel::AgentMean => {
             let store = unsafe { &*arena.0.get() };
@@ -399,7 +586,12 @@ pub(crate) fn run(
             }
             Some(problem.metric(&consensus))
         }
-        EvalModel::Token => final_token.map(|(_, x)| problem.metric(&x)),
+        EvalModel::Token => shared
+            .final_token
+            .lock()
+            .unwrap()
+            .take()
+            .map(|(_, x)| problem.metric(&x)),
     };
     if let Some(metric) = metric {
         trace.push(TracePoint {
@@ -411,222 +603,293 @@ pub(crate) fn run(
         });
     }
     trace.wall_secs = shared.started.elapsed().as_secs_f64();
+    trace.worker_busy_secs = shared
+        .worker_busy_ns
+        .iter()
+        .map(|ns| ns.load(Ordering::Relaxed) as f64 / 1e9)
+        .collect();
+    trace.peak_threads = crate::util::os_thread_count()
+        .unwrap_or(0)
+        .max(peak_threads);
     Ok(trace)
 }
 
-/// Trip the stop flag (once) and wake every agent blocked in `recv`.
-fn trip_stop(shared: &Shared, senders: &[mpsc::Sender<AgentMsg>]) {
-    if !shared.stop.swap(true, Ordering::Relaxed) {
-        for tx in senders {
-            let _ = tx.send(AgentMsg::Stop);
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn agent_loop(
-    i: usize,
-    rx: mpsc::Receiver<AgentMsg>,
-    shared: Arc<Shared>,
-    senders: Arc<Vec<mpsc::Sender<AgentMsg>>>,
-    mut behavior: Box<dyn AgentBehavior>,
-    mut row: RowView,
-    mut compute: ServiceCompute,
-    sample_tx: mpsc::Sender<Sample>,
-    seed: u64,
-) -> anyhow::Result<()> {
-    let mut rng = Rng::new(seed);
-    // Token-model algorithms: the final token value, captured by the agent
-    // that retires the walk at shutdown.
-    let mut retired_token: Option<Vec<f32>> = None;
-    let res = run_agent(
-        i,
-        &rx,
-        &shared,
-        &senders,
-        behavior.as_mut(),
-        row.slice_mut(),
-        &mut compute,
-        &sample_tx,
-        &mut rng,
-        &mut retired_token,
-    );
-    if res.is_err() {
-        // A dead agent would strand the walks — wake everyone so the run
-        // shuts down and the error propagates through the join.
-        trip_stop(&shared, &senders);
-    }
-    // Exit flush: the agent that retired a walk hands the monitor the
-    // final token value. (Agent-mean state needs no flush — the block
-    // lives in the shared arena, which the coordinator reads after the
-    // join.)
-    if shared.eval_model == EvalModel::Token {
-        if let Some(x) = retired_token {
-            let _ = sample_tx.send(Sample {
-                k: shared.activations.load(Ordering::Relaxed),
-                comm: shared.comm.load(Ordering::Relaxed),
-                agent: i,
-                x,
-                flush: true,
-            });
-        }
-    }
-    res
-}
-
-#[allow(clippy::too_many_arguments)]
-fn run_agent(
-    i: usize,
-    rx: &mpsc::Receiver<AgentMsg>,
-    shared: &Shared,
-    senders: &[mpsc::Sender<AgentMsg>],
-    behavior: &mut dyn AgentBehavior,
-    block: &mut [f32],
-    compute: &mut ServiceCompute,
-    sample_tx: &mpsc::Sender<Sample>,
-    rng: &mut Rng,
-    retired_token: &mut Option<Vec<f32>>,
-) -> anyhow::Result<()> {
-    let mut sends: Vec<Outgoing> = Vec::new();
-    let mut pool = PayloadPool::default();
-
+/// The timekeeper: sleeps until the wheel's next deadline, fires due
+/// entries (mailbox deliveries and agent unparks), exits when the stop
+/// flag rises. All deliveries happen with the wheel lock *released* so the
+/// run-queue and mailbox locks never nest under it.
+fn timer_loop(shared: &Shared) {
+    let mut due: Vec<TimerItem> = Vec::new();
     loop {
-        let mut msg = match rx.recv() {
-            Ok(AgentMsg::Token(t)) => t,
-            // Stop broadcast, or every sender gone: the walk ends.
-            Ok(AgentMsg::Stop) | Err(mpsc::RecvError) => return Ok(()),
-        };
-        if shared.stop.load(Ordering::Relaxed) {
-            // Drain without forwarding: the token dies, the walk ends.
-            *retired_token = Some(msg.payload);
-            return Ok(());
-        }
-
-        let served = {
-            let mut ctx = ActivationCtx {
-                agent: i,
-                block: &mut *block,
-                compute: &mut *compute,
-                tracker: None,
-                out: &mut sends,
-                pool: &mut pool,
-            };
-            behavior.on_activation(&mut msg, &mut ctx)?
-        };
-
-        // Straggler emulation: a slow agent stays busy for a calibrated
-        // extra sleep beyond what the update actually took (the thread
-        // analogue of the DES compute-speed multiplier).
-        if served.updates > 0 && !shared.speed.is_empty() {
-            let extra = shared
-                .timing
-                .hetero_extra(shared.speed[i], served.compute_secs, rng);
-            if extra > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(extra));
-            }
-        }
-
-        let k = if served.updates > 0 {
-            let k = shared
-                .activations
-                .fetch_add(served.updates as u64, Ordering::Relaxed)
-                + served.updates as u64;
-            if k >= shared.max_activations
-                || shared.started.elapsed().as_secs_f64() >= shared.max_sim_time
-            {
-                // First agent to trip the stop rule wakes everyone: peers
-                // blocked in recv exit on Stop instead of a timeout poll.
-                trip_stop(shared, senders);
-            }
-            k
-        } else {
-            shared.activations.load(Ordering::Relaxed)
-        };
-
-        // Once the stop flag is up, nothing more will be sent — skip the
-        // routing/link emulation so shutdown neither sleeps a link delay
-        // nor counts transmission attempts for hops that never happen.
-        let stopping = shared.stop.load(Ordering::Relaxed);
-
-        // Route + emulate the links.
-        let mut comm_now = shared.comm.load(Ordering::Relaxed);
-        let forward_to = if served.forward && !stopping {
-            let preferred = match shared.routing {
-                RoutingRule::Cycle => {
-                    // Same advance/resync invariant as the DES Router —
-                    // a fault-rerouted token re-anchors on its next hop.
-                    super::cycle_resync(&shared.cycle, &mut msg.cycle_pos, i);
-                    super::cycle_advance(&shared.cycle, &mut msg.cycle_pos)
+        {
+            let mut wheel = shared.timers.wheel.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
                 }
-                RoutingRule::Uniform => shared.topo.uniform_next(i, rng),
-                RoutingRule::Metropolis => shared.topo.metropolis_next(i, rng),
-            };
-            let next = if shared.faults.is_none() {
-                preferred
-            } else {
-                let now = shared.started.elapsed().as_secs_f64();
-                let mut mem = shared.membership.lock().unwrap();
-                mem.maybe_drop(i, now, rng);
-                mem.route_live(&shared.topo, i, preferred, now, rng)
-            };
-            if next != i {
-                let (attempts, retry) = shared.faults.transmit(rng);
-                let lf = if shared.link.is_empty() { 1.0 } else { shared.link[next] };
-                std::thread::sleep(Duration::from_secs_f64(
-                    retry + shared.latency.sample(rng) * lf,
-                ));
-                comm_now = shared.comm.fetch_add(attempts, Ordering::Relaxed) + attempts;
+                let now_tick = wheel.elapsed_tick(shared.now());
+                wheel.advance_to(now_tick, &mut due);
+                if !due.is_empty() {
+                    break;
+                }
+                // Sleep to the next deadline (capped: the cap is only a
+                // backstop — schedules and stop both notify the condvar).
+                let wait = match wheel.next_due() {
+                    Some(t) => (wheel.deadline_secs(t) - shared.now()).max(0.0),
+                    None => 0.05,
+                };
+                if wait == 0.0 {
+                    continue;
+                }
+                let (guard, _) = shared
+                    .timers
+                    .cv
+                    .wait_timeout(wheel, Duration::from_secs_f64(wait.min(0.05)))
+                    .unwrap();
+                wheel = guard;
             }
-            Some(next)
-        } else {
-            None
+        }
+        for item in due.drain(..) {
+            match item {
+                TimerItem::Deliver { dest, msg } => shared.deliver(dest, msg),
+                // The parked agent kept its claim; re-queue it directly.
+                TimerItem::Unpark { agent } => shared.runq.push(agent, agent),
+            }
+        }
+    }
+}
+
+/// One pool worker: claim runnable agents off the run queue until it
+/// closes. A worker error trips the stop barrier so the whole pool drains
+/// and the error propagates through the coordinator's join.
+fn worker_loop(
+    w: usize,
+    shared: &Shared,
+    sample_tx: &mpsc::Sender<Sample>,
+) -> anyhow::Result<()> {
+    while let Some(i) = shared.runq.pop(w) {
+        let t0 = Instant::now();
+        let res = run_claimed(i, shared, sample_tx);
+        shared.worker_busy_ns[w].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Err(e) = res {
+            shared.trip_stop();
+            return Err(e);
+        }
+    }
+    Ok(())
+}
+
+/// Execute one claim on agent `i`: serve one mailbox message (round-robin
+/// fairness — an agent with a backlog goes to the back of the queue), or
+/// park again. The claim (`scheduled`) is either released here, passed to
+/// the wheel (`Unpark`), or re-queued.
+fn run_claimed(
+    i: usize,
+    shared: &Shared,
+    sample_tx: &mpsc::Sender<Sample>,
+) -> anyhow::Result<()> {
+    let slot = &shared.agents[i];
+    if shared.stop.load(Ordering::SeqCst) {
+        // Drain-at-stop: retire queued tokens so the monitor still gets a
+        // final token value, then park for good.
+        let mut inbox = slot.inbox.lock().unwrap();
+        while let Some(msg) = inbox.pop_front() {
+            shared.retire_token(msg.payload);
+        }
+        slot.scheduled.store(false, Ordering::SeqCst);
+        return Ok(());
+    }
+
+    let mut core_guard = slot.core.lock().unwrap();
+    let core = &mut *core_guard;
+
+    // Straggler window still open: park on the wheel. The claim stays with
+    // the `Unpark` entry, so no duplicate queue entry can exist.
+    let now = shared.now();
+    if core.busy_until > now {
+        let mut wheel = shared.timers.wheel.lock().unwrap();
+        let tick = wheel.tick_at(core.busy_until);
+        wheel.schedule_at(tick, TimerItem::Unpark { agent: i });
+        drop(wheel);
+        shared.timers.cv.notify_one();
+        return Ok(());
+    }
+
+    let msg = slot.inbox.lock().unwrap().pop_front();
+    let Some(msg) = msg else {
+        // Nothing to do: release the claim (see `release_claim` for the
+        // landed-in-the-gap re-check).
+        release_claim(shared, i);
+        return Ok(());
+    };
+
+    serve(i, core, msg, shared, sample_tx)?;
+
+    drop(core_guard);
+    if !slot.inbox.lock().unwrap().is_empty() {
+        // Backlog: keep the claim and requeue behind the other runnables.
+        shared.runq.push(i, i);
+    } else {
+        release_claim(shared, i);
+    }
+    Ok(())
+}
+
+/// Release agent `i`'s claim, then re-check the mailbox: a message that
+/// landed between the last drain and the release re-claims immediately
+/// (whoever wins the `swap` — us or a concurrent deliverer — enqueues
+/// exactly one entry). This is the one delicate interleaving in the claim
+/// protocol; both release paths must share it.
+fn release_claim(shared: &Shared, i: usize) {
+    let slot = &shared.agents[i];
+    slot.scheduled.store(false, Ordering::SeqCst);
+    if !slot.inbox.lock().unwrap().is_empty()
+        && !slot.scheduled.swap(true, Ordering::SeqCst)
+    {
+        shared.runq.push(i, i);
+    }
+}
+
+/// Service one message at agent `i`: run the behavior, account the
+/// activation, emulate the links as timer-wheel deadlines, sample at the
+/// evaluation cadence, and forward/broadcast.
+fn serve(
+    i: usize,
+    core: &mut AgentCore,
+    mut msg: TokenMsg,
+    shared: &Shared,
+    sample_tx: &mpsc::Sender<Sample>,
+) -> anyhow::Result<()> {
+    let served = {
+        let mut ctx = ActivationCtx {
+            agent: i,
+            block: core.row.slice_mut(),
+            compute: &mut core.compute,
+            tracker: None,
+            out: &mut core.sends,
+            pool: &mut core.pool,
         };
-        // Gossip broadcast: per-link transmission costs, one sleep for the
-        // batch (the slowest link).
-        if !sends.is_empty() && !stopping {
-            let mut delay = 0.0f64;
+        core.behavior.on_activation(&mut msg, &mut ctx)?
+    };
+
+    // Straggler emulation: a slow agent stays busy for a calibrated extra
+    // window beyond what the update actually took, and everything this
+    // activation emits is delayed by the same extra (the pooled analogue
+    // of the old post-update thread sleep).
+    let mut extra = 0.0f64;
+    if served.updates > 0 && !shared.speed.is_empty() {
+        extra = shared
+            .timing
+            .hetero_extra(shared.speed[i], served.compute_secs, &mut core.rng);
+        if extra > 0.0 {
+            core.busy_until = shared.now() + extra;
+        }
+    }
+
+    let k = if served.updates > 0 {
+        let k = shared
+            .activations
+            .fetch_add(served.updates as u64, Ordering::Relaxed)
+            + served.updates as u64;
+        if k >= shared.max_activations || shared.now() >= shared.max_sim_time {
+            // First activation to trip a stop rule raises the barrier:
+            // parked workers wake on the closed queue, the timekeeper on
+            // its condvar.
+            shared.trip_stop();
+        }
+        k
+    } else {
+        shared.activations.load(Ordering::Relaxed)
+    };
+
+    // Once the stop flag is up, nothing more will be sent — skip the
+    // routing/link emulation so shutdown neither schedules link delays nor
+    // counts transmission attempts for hops that never happen.
+    let stopping = shared.stop.load(Ordering::SeqCst);
+
+    // Route + cost the links. Delays become delivery deadlines.
+    let mut comm_now = shared.comm.load(Ordering::Relaxed);
+    let mut forward: Option<(usize, f64)> = None;
+    if served.forward && !stopping {
+        let preferred = match shared.routing {
+            RoutingRule::Cycle => {
+                // Same advance/resync invariant as the DES Router — a
+                // fault-rerouted token re-anchors on its next hop.
+                super::cycle_resync(&shared.cycle, &mut msg.cycle_pos, i);
+                super::cycle_advance(&shared.cycle, &mut msg.cycle_pos)
+            }
+            RoutingRule::Uniform => shared.topo.uniform_next(i, &mut core.rng),
+            RoutingRule::Metropolis => shared.topo.metropolis_next(i, &mut core.rng),
+        };
+        let next = if shared.faults.is_none() {
+            preferred
+        } else {
+            let now = shared.now();
+            let mut mem = shared.membership.lock().unwrap();
+            mem.maybe_drop(i, now, &mut core.rng);
+            mem.route_live(&shared.topo, i, preferred, now, &mut core.rng)
+        };
+        let mut delay = extra;
+        if next != i {
+            let (attempts, retry) = shared.faults.transmit(&mut core.rng);
+            let lf = if shared.link.is_empty() { 1.0 } else { shared.link[next] };
+            delay += retry + shared.latency.sample(&mut core.rng) * lf;
+            comm_now = shared.comm.fetch_add(attempts, Ordering::Relaxed) + attempts;
+        }
+        forward = Some((next, delay));
+    }
+
+    // Gossip broadcast: per-link transmission costs and per-link delivery
+    // deadlines (the pooled runtime need not collapse the batch into one
+    // worst-case sleep the way the per-thread loop did — each unicast
+    // arrives when its own link would deliver it).
+    if !core.sends.is_empty() {
+        if stopping {
+            for out in core.sends.drain(..) {
+                core.pool.put(out.msg.payload);
+            }
+        } else {
             let mut attempts_total = 0u64;
-            for out in sends.iter() {
-                let (attempts, retry) = shared.faults.transmit(rng);
+            for out in core.sends.drain(..) {
+                let (attempts, retry) = shared.faults.transmit(&mut core.rng);
                 attempts_total += attempts;
                 let lf = if shared.link.is_empty() { 1.0 } else { shared.link[out.dest] };
-                delay = delay.max(retry + shared.latency.sample(rng) * lf);
+                let delay = extra + retry + shared.latency.sample(&mut core.rng) * lf;
+                shared.send_after(out.dest, out.msg, delay);
             }
-            std::thread::sleep(Duration::from_secs_f64(delay));
             comm_now = shared.comm.fetch_add(attempts_total, Ordering::Relaxed) + attempts_total;
         }
-        if comm_now >= shared.max_comm {
-            trip_stop(shared, senders);
-        }
+    }
+    if comm_now >= shared.max_comm {
+        shared.trip_stop();
+    }
 
-        // Sample at the evaluation cadence.
-        if super::eval_due(k, served.updates, shared.eval_every) {
-            let x = match shared.eval_model {
-                EvalModel::AgentMean => block.to_vec(),
-                EvalModel::Token => msg.payload.clone(),
-            };
-            let _ = sample_tx.send(Sample {
-                k,
-                comm: comm_now,
-                agent: i,
-                x,
-                flush: false,
-            });
-        }
+    // Sample at the evaluation cadence.
+    if super::eval_due(k, served.updates, shared.eval_every) {
+        let x = match shared.eval_model {
+            EvalModel::AgentMean => core.row.slice_mut().to_vec(),
+            EvalModel::Token => msg.payload.clone(),
+        };
+        let _ = sample_tx.send(Sample {
+            k,
+            comm: comm_now,
+            agent: i,
+            x,
+        });
+    }
 
-        if shared.stop.load(Ordering::Relaxed) {
-            *retired_token = Some(msg.payload);
-            return Ok(()); // token retires
-        }
-        if let Some(next) = forward_to {
-            if senders[next].send(AgentMsg::Token(msg)).is_err() {
-                return Ok(());
-            }
-        }
-        for out in sends.drain(..) {
-            if senders[out.dest].send(AgentMsg::Token(out.msg)).is_err() {
-                return Ok(());
-            }
+    if shared.stop.load(Ordering::SeqCst) {
+        // The serviced token retires with the stopping agent.
+        shared.retire_token(std::mem::take(&mut msg.payload));
+        return Ok(());
+    }
+    match forward {
+        Some((next, delay)) => shared.send_after(next, msg, delay),
+        None => {
+            // Gossip input consumed: recycle its payload for the next
+            // broadcast (zero-capacity husks are ignored by the pool).
+            core.pool.put(std::mem::take(&mut msg.payload));
         }
     }
+    Ok(())
 }

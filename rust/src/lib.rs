@@ -19,24 +19,33 @@
 //!     two substrates: [`engine::des`] (deterministic event queue owning
 //!     routing, latency, [`sim::FaultModel`] injection, busy-agent FIFO
 //!     queuing, recording and stop rules — the paper's §5 simulation) and
-//!     [`engine::threads`] (real asynchrony: each agent an OS thread,
-//!     tokens as mpsc messages, compute through the serialized
-//!     [`solver::SolverClient`] service). Faults, routing rules and both
-//!     substrates therefore apply uniformly to every [`algo::AlgoKind`]
-//!     (one scoped exception: agent churn is token-walk-specific — see
-//!     `algo/dgd.rs`).
+//!     [`engine::threads`] (real asynchrony as an **M:N pooled runtime**:
+//!     a fixed pool of `--workers` OS threads drives all N agents as
+//!     parked state machines over sharded work-stealing run queues, every
+//!     link/straggler delay is a deadline on a shared [`sim::TimerWheel`]
+//!     instead of a sleeping thread, and compute goes through the
+//!     serialized [`solver::SolverClient`] service — so the process thread
+//!     count is bounded by the pool, never by N, and real-thread runs
+//!     reach the same agent counts as the DES). Faults, routing rules and
+//!     both substrates therefore apply uniformly to every
+//!     [`algo::AlgoKind`] (one scoped exception: agent churn is
+//!     token-walk-specific — see `algo/dgd.rs`).
 //!   - **model-state ownership**: the engine — not the behaviors — owns
 //!     all blocks, in one flat cache-line-padded N×dim arena
 //!     ([`model::BlockStore`]). A behavior sees exactly its own row for
-//!     the duration of an activation (`ActivationCtx::block`; on the
-//!     thread substrate each agent thread holds an exclusive row view) and
+//!     the duration of an activation (`ActivationCtx::block`) and
 //!     publishes updates through `ActivationCtx::commit_block`, which also
-//!     feeds the incremental evaluator. Recording therefore costs O(dim)
-//!     independent of N: the consensus mean comes from the
-//!     [`model::ObjectiveTracker`]'s running block-sum, the objective
-//!     streams rows in place, and no per-record snapshot matrix exists —
-//!     the layout that makes N=4096-agent runs cheap to measure
-//!     (`repro sweep --agents 16,...,4096` → `BENCH_scale.json`).
+//!     feeds the incremental evaluator. On the thread substrate the row
+//!     view lives in the agent's parked core and its ownership moves
+//!     between pool workers with the agent's run-queue claim — exactly one
+//!     claim exists at a time, so no two workers can ever touch the same
+//!     row. Recording therefore costs O(dim) independent of N: the
+//!     consensus mean comes from the [`model::ObjectiveTracker`]'s running
+//!     block-sum, the objective streams rows in place, and no per-record
+//!     snapshot matrix exists — the layout that makes N=4096-agent runs
+//!     cheap to measure on *both* substrates
+//!     (`repro sweep [--substrate threads] --agents 16,...,4096` →
+//!     `BENCH_scale.json` / `BENCH_threads_scale.json`).
 //!   - substrate primitives in [`graph`] (topologies, including scale-free
 //!     and geometric generators) and [`sim`] (event queue, latency/timing
 //!     models, per-agent heterogeneity, failure injection).

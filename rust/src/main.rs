@@ -51,13 +51,18 @@ USAGE:
   repro train  [--preset P | --profile D] [--agents N] [--walks M] [--algos ...]
                [--tau-api T] [--tau-ibcd T] [--alpha A] [--activations K]
                [--routing cycle|uniform|metropolis] [--solver auto|native|pjrt]
-               [--substrate des|threads]   (threads = real OS-thread agents)
+               [--substrate des|threads] [--workers W]
+               (threads = M:N pooled runtime; W worker threads drive all
+                N agents, default W = cores - 1)
   repro run    --config experiment.toml [overrides...]
   repro replicate [--preset P] [--seeds 5] [--target T] [overrides...]
   repro sweep  --param <walks|agents|tau-api|xi|inner-k> --values 1,2,4 [--preset P]
   repro sweep  --agents 16,64,256,1024,4096 [--activations K] [--walks M]
                [--eval-every E] [--jobs J] [--out BENCH_scale.json]
-               (N-scaling sweep: ns-per-activation / ns-per-record vs N)
+               [--substrate des|threads] [--workers W]
+               (N-scaling sweep: ns-per-activation / ns-per-record vs N;
+                --substrate threads emits BENCH_threads_scale.json with
+                peak OS-thread counts — the M:N bound check)
   repro validate [--matrix smoke|full | --scenario NAME] [--seed N] [--jobs J]
                [--activations K] [--out VALIDATE_report.json]
                (paper-claims harness; exits non-zero on any failed claim;
@@ -102,6 +107,7 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()
     if let Some(h) = args.str_opt("heterogeneity") {
         cfg.heterogeneity = apibcd::sim::Heterogeneity::parse(h)?;
     }
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
     if let Some(r) = args.str_opt("routing") {
         cfg.routing = match r {
             "cycle" => RoutingRule::Cycle,
@@ -281,19 +287,29 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `repro sweep --agents 16,64,256,1024,4096`: the N-scaling sweep.
+/// `repro sweep --agents 16,64,256,1024,4096 [--substrate threads]`: the
+/// N-scaling sweep.
 ///
-/// Each cell runs the configured algorithms (default API-BCD) on the DES
-/// substrate with the deterministic `test_ls` workload scaled to N agents
-/// on a ring (O(N) edges, so graph construction never dominates), and
-/// measures the two costs that bound large-N feasibility: wall-clock
-/// ns-per-activation (event loop + local update) and ns-per-record (the
-/// evaluation path, O(dim) since the arena/incremental-evaluator refactor
-/// — flat in N is the acceptance signal). Emits `BENCH_scale.json`
-/// mirroring the bench-suite schema so the scaling curve joins the perf
+/// Each cell runs the configured algorithms (default API-BCD) with the
+/// deterministic `test_ls` workload scaled to N agents on a ring (O(N)
+/// edges, so graph construction never dominates) and measures the costs
+/// that bound large-N feasibility:
+///
+/// * DES (default): wall-clock ns-per-activation (event loop + local
+///   update) and ns-per-record (the evaluation path, O(dim) since the
+///   arena/incremental-evaluator refactor) — flat in N is the acceptance
+///   signal. Emits `BENCH_scale.json`.
+/// * `--substrate threads`: the same workload on the M:N pooled runtime —
+///   ns-per-activation plus the **peak OS-thread count** per cell, which
+///   must stay at `workers + const` instead of N (the whole point of the
+///   pool: the pre-M:N runtime could not even start a N=4096 cell without
+///   spawning 4096 threads). Emits `BENCH_threads_scale.json`, same
+///   schema plus `peak_threads`/`workers` columns.
+///
+/// Both mirror the bench-suite schema so the scaling curves join the perf
 /// trajectory. `--jobs` runs cells on the work-stealing executor; keep the
 /// default of 1 when the absolute timings matter (parallel cells contend
-/// for cores).
+/// for cores — especially thread-substrate cells, which each own a pool).
 fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
     use apibcd::util::json::{to_string, Json};
     use std::collections::BTreeMap;
@@ -313,12 +329,18 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
     let eval_every = args.u64_or("eval-every", 50)?.max(1);
     let jobs = args.usize_or("jobs", 1)?;
     let seed = args.u64_or("seed", 42)?;
+    let workers = args.usize_or("workers", 0)?;
+    let substrate = substrate_arg(args)?;
+    let threads = substrate == Substrate::Threads;
     let algos = apibcd::algo::parse_algo_list(args.str_or("algos", "api-bcd"))?;
-    let out_path = args.str_or("out", "BENCH_scale.json");
+    let out_path = args.str_or(
+        "out",
+        if threads { "BENCH_threads_scale.json" } else { "BENCH_scale.json" },
+    );
+    let suite = if threads { "threads_scale" } else { "scale" };
 
     eprintln!(
-        "scale sweep over N = {agents:?} ({} activations, eval every {eval_every}, {jobs} job(s))",
-        activations
+        "{suite} sweep over N = {agents:?} ({activations} activations, eval every {eval_every}, {jobs} job(s))"
     );
     let reports = apibcd::scenario::executor::run_indexed(jobs, agents.len(), |idx| {
         let n = agents[idx];
@@ -331,19 +353,22 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
         cfg.solver = SolverChoice::Native;
         cfg.eval_every = eval_every;
         cfg.seed = seed;
+        cfg.workers = workers;
         cfg.stop.max_activations = activations;
-        Experiment::builder(cfg).run()
+        Experiment::builder(cfg).substrate(substrate).run()
     })?;
 
     println!(
-        "{:<8} {:<12} {:>12} {:>9} {:>16} {:>14}",
-        "agents", "algorithm", "activations", "records", "ns/activation", "ns/record"
+        "{:<8} {:<16} {:>12} {:>9} {:>16} {:>14} {:>12}",
+        "agents", "algorithm", "activations", "records", "ns/activation", "ns/record", "peak thr"
     );
     let mut results: Vec<Json> = Vec::new();
-    // Flatness signal per algorithm: ns-per-record at the largest N over
-    // the smallest — O(dim) recording keeps this ~1 while the old
-    // O(N·dim) path grew with N.
-    let mut first_last: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    // Flatness signals per algorithm at the endpoint Ns: ns-per-record
+    // (DES — O(dim) recording keeps this ~1 while the old O(N·dim) path
+    // grew with N) and ns-per-activation (threads — the pool must not
+    // slow down as agents multiply).
+    let mut rec_first_last: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    let mut act_first_last: BTreeMap<String, (f64, f64)> = BTreeMap::new();
     for (&n, report) in agents.iter().zip(&reports) {
         for t in &report.traces {
             let k = t.last().map(|p| p.iter).unwrap_or(0).max(1);
@@ -357,11 +382,11 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
                 0.0
             };
             println!(
-                "{:<8} {:<12} {:>12} {:>9} {:>16.0} {:>14.0}",
-                n, t.name, k, records, ns_act, ns_rec
+                "{:<8} {:<16} {:>12} {:>9} {:>16.0} {:>14.0} {:>12}",
+                n, t.name, k, records, ns_act, ns_rec, t.peak_threads
             );
             let mut row = BTreeMap::new();
-            row.insert("name".into(), Json::Str(format!("scale/{}/N={n}", t.name)));
+            row.insert("name".into(), Json::Str(format!("{suite}/{}/N={n}", t.name)));
             row.insert("agents".into(), Json::Num(n as f64));
             row.insert("walks".into(), Json::Num(walks.min(n) as f64));
             row.insert("activations".into(), Json::Num(k as f64));
@@ -370,16 +395,25 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
             row.insert("record_secs".into(), Json::Num(t.record_secs));
             row.insert("ns_per_activation".into(), Json::Num(ns_act));
             row.insert("ns_per_record".into(), Json::Num(ns_rec));
+            if threads {
+                row.insert("peak_threads".into(), Json::Num(t.peak_threads as f64));
+                row.insert(
+                    "workers".into(),
+                    Json::Num(t.worker_busy_secs.len() as f64),
+                );
+            }
             results.push(Json::Obj(row));
-            let e = first_last.entry(t.name.clone()).or_insert((ns_rec, ns_rec));
+            let e = rec_first_last.entry(t.name.clone()).or_insert((ns_rec, ns_rec));
             e.1 = ns_rec;
+            let e = act_first_last.entry(t.name.clone()).or_insert((ns_act, ns_act));
+            e.1 = ns_act;
         }
     }
 
     let mut derived = BTreeMap::new();
     if agents.len() >= 2 {
         let (n0, n1) = (agents[0], agents[agents.len() - 1]);
-        for (name, (first, last)) in &first_last {
+        for (name, (first, last)) in &rec_first_last {
             if *first > 0.0 {
                 derived.insert(
                     format!("{name} ns_per_record ratio N={n1}/N={n0}"),
@@ -387,9 +421,17 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
                 );
             }
         }
+        for (name, (first, last)) in &act_first_last {
+            if *first > 0.0 {
+                derived.insert(
+                    format!("{name} ns_per_activation ratio N={n1}/N={n0}"),
+                    Json::Num(last / first),
+                );
+            }
+        }
     }
     let mut root = BTreeMap::new();
-    root.insert("suite".into(), Json::Str("scale".into()));
+    root.insert("suite".into(), Json::Str(suite.into()));
     root.insert("schema_version".into(), Json::Num(1.0));
     root.insert("seed".into(), Json::Num(seed as f64));
     root.insert("results".into(), Json::Arr(results));

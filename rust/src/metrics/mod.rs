@@ -38,6 +38,14 @@ pub struct Trace {
     /// ns-per-record scaling series (`BENCH_scale.json`). Subset of
     /// `wall_secs`; 0 when the substrate does not measure it.
     pub record_secs: f64,
+    /// Thread-substrate pool telemetry: wall-clock seconds each pooled
+    /// worker spent holding agent claims (one entry per `--workers`
+    /// thread). Empty on the DES.
+    pub worker_busy_secs: Vec<f64>,
+    /// Peak OS-thread count of the process observed during the run (the
+    /// M:N bound check: stays near `workers + const`, never scales with
+    /// N). 0 when unmeasured (DES, or no procfs).
+    pub peak_threads: u64,
 }
 
 impl Trace {
@@ -47,6 +55,8 @@ impl Trace {
             points: Vec::new(),
             wall_secs: 0.0,
             record_secs: 0.0,
+            worker_busy_secs: Vec::new(),
+            peak_threads: 0,
         }
     }
 
@@ -107,6 +117,11 @@ impl Trace {
         obj.insert("name".into(), Json::Str(self.name.clone()));
         obj.insert("wall_secs".into(), Json::Num(self.wall_secs));
         obj.insert("record_secs".into(), Json::Num(self.record_secs));
+        obj.insert("peak_threads".into(), Json::Num(self.peak_threads as f64));
+        obj.insert(
+            "worker_busy_secs".into(),
+            Json::Arr(self.worker_busy_secs.iter().map(|&s| Json::Num(s)).collect()),
+        );
         let pts = self
             .points
             .iter()

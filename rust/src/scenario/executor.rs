@@ -1,24 +1,32 @@
-//! Work-stealing parallel cell executor for scenario matrices and sweeps.
+//! Work-stealing executors: the static cell pool and the dynamic run queue.
 //!
-//! A validation matrix or an N-sweep is a list of *independent* cells
-//! (scenario × seed, or one agent count) whose runtimes differ wildly — a
-//! 4096-agent cell can take orders of magnitude longer than a 16-agent
-//! one, and a thread-substrate scenario longer than a DES one. A static
-//! split of cells over workers would idle on the fast cells while the slow
-//! ones run; instead every worker steals the next unclaimed cell from a
-//! shared atomic cursor the moment it frees up, so the pool stays busy
-//! until the queue drains.
+//! Two shapes of the same stay-busy discipline live here:
 //!
-//! Determinism: cells are independent (each builds its own workload,
-//! solver and RNG streams from the cell seed) and results are written into
-//! the slot of the cell's *input index* — so on success the output of
-//! `run_indexed(jobs, …)` is byte-identical for any `jobs`, which
-//! `repro validate --jobs` relies on (and a regression test enforces). On
-//! failure the pool stops claiming new cells and the lowest materialized
-//! failing index's error is returned.
+//! * [`run_indexed`] — a *static* work list: a validation matrix or an
+//!   N-sweep is a list of independent cells (scenario × seed, or one agent
+//!   count) whose runtimes differ wildly — a 4096-agent cell can take
+//!   orders of magnitude longer than a 16-agent one. A static split of
+//!   cells over workers would idle on the fast cells while the slow ones
+//!   run; instead every worker steals the next unclaimed cell from a
+//!   shared atomic cursor the moment it frees up. The work list is known
+//!   ahead of time, so the "queue" is just that cursor.
+//! * [`StealQueue`] — the *dynamic* counterpart, backing the M:N agent
+//!   runtime ([`crate::engine::threads`]): the workload grows at runtime
+//!   (an agent is re-enqueued every time a message lands or a timer
+//!   expires), so claims come from sharded deques with stealing, and idle
+//!   workers park on a condvar instead of exiting.
+//!
+//! Determinism (`run_indexed`): cells are independent (each builds its own
+//! workload, solver and RNG streams from the cell seed) and results are
+//! written into the slot of the cell's *input index* — so on success the
+//! output of `run_indexed(jobs, …)` is byte-identical for any `jobs`,
+//! which `repro validate --jobs` relies on (and a regression test
+//! enforces). On failure the pool stops claiming new cells and the lowest
+//! materialized failing index's error is returned.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// One result slot, filled exactly once by whichever worker claims the cell.
 type CellSlot<T> = Mutex<Option<anyhow::Result<T>>>;
@@ -85,6 +93,137 @@ where
     }
 }
 
+/// Sharded work-stealing run queue for a fixed worker pool over a
+/// *dynamic* workload.
+///
+/// `push(shard, item)` appends to one of the sharded deques (any index;
+/// wrapped mod the shard count) and wakes one parked worker. `pop(worker)`
+/// drains the worker's own shard first, then steals from the others, and
+/// parks on the shared condvar when everything is empty — so the pool
+/// stays busy whenever work exists, without a global lock on the hot path.
+///
+/// `close()` is the drain-and-park shutdown barrier: it wakes *every*
+/// parked worker and makes all subsequent pops return `None` immediately,
+/// so a stop rule tripping mid-drain can never leave a pooled worker
+/// blocked on an empty queue (items still queued at close are left for the
+/// owner to sweep via [`StealQueue::drain`]).
+pub struct StealQueue<T> {
+    shards: Vec<Mutex<VecDeque<T>>>,
+    /// Total queued items — a fast emptiness hint so poppers do not sweep
+    /// every shard before parking.
+    len: AtomicUsize,
+    /// Workers currently parked (or committing to park) on the condvar.
+    /// Pushers touch the gate only when this is non-zero, so the busy-pool
+    /// steady state pays one shard lock + two atomics per push — no global
+    /// lock on the hot path.
+    waiters: AtomicUsize,
+    closed: AtomicBool,
+    /// Park gate: the condvar's mutex. A popper registers in `waiters` and
+    /// re-checks `len`/`closed` under it before waiting; a pusher that
+    /// observes a waiter notifies under it. SeqCst ordering on
+    /// `len`/`waiters` makes the two checks a Dekker pair: the pusher sees
+    /// the waiter or the waiter sees the new item — never neither.
+    gate: Mutex<()>,
+    cv: Condvar,
+}
+
+impl<T> StealQueue<T> {
+    pub fn new(shards: usize) -> StealQueue<T> {
+        StealQueue {
+            shards: (0..shards.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            len: AtomicUsize::new(0),
+            waiters: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Append `item` to shard `shard % shards` and wake one parked worker
+    /// (if any).
+    pub fn push(&self, shard: usize, item: T) {
+        let k = shard % self.shards.len();
+        self.shards[k].lock().unwrap().push_back(item);
+        self.len.fetch_add(1, Ordering::SeqCst);
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            // Notify under the gate so a worker committing to park either
+            // sees the new count before waiting or receives this wakeup.
+            let _g = self.gate.lock().unwrap();
+            self.cv.notify_one();
+        }
+    }
+
+    /// Non-blocking claim: own shard first, then steal left-to-right.
+    pub fn try_pop(&self, worker: usize) -> Option<T> {
+        if self.len.load(Ordering::SeqCst) == 0 {
+            return None;
+        }
+        let n = self.shards.len();
+        for off in 0..n {
+            let k = (worker + off) % n;
+            if let Some(item) = self.shards[k].lock().unwrap().pop_front() {
+                self.len.fetch_sub(1, Ordering::SeqCst);
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Blocking claim with stealing; `None` once the queue is closed. The
+    /// periodic timeout re-check is a backstop only — closes and pushes
+    /// both notify.
+    pub fn pop(&self, worker: usize) -> Option<T> {
+        loop {
+            if self.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(item) = self.try_pop(worker) {
+                return Some(item);
+            }
+            let gate = self.gate.lock().unwrap();
+            // Register as a waiter *before* the final emptiness check (the
+            // pusher's mirror order is len-then-waiters — see the struct
+            // docs), then re-check under the gate.
+            self.waiters.fetch_add(1, Ordering::SeqCst);
+            if self.closed.load(Ordering::SeqCst) || self.len.load(Ordering::SeqCst) > 0 {
+                self.waiters.fetch_sub(1, Ordering::SeqCst);
+                if self.closed.load(Ordering::SeqCst) {
+                    return None;
+                }
+                continue; // raced a push: retry without parking
+            }
+            let (_gate, _timed_out) = self
+                .cv
+                .wait_timeout(gate, std::time::Duration::from_millis(50))
+                .unwrap();
+            self.waiters.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Close the queue: all further pops return `None` and every parked
+    /// worker wakes immediately.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _g = self.gate.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Sweep every still-queued item (owner-side cleanup after `close`).
+    pub fn drain(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let mut q = shard.lock().unwrap();
+            self.len.fetch_sub(q.len(), Ordering::SeqCst);
+            out.extend(q.drain(..));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +272,64 @@ mod tests {
         assert!(run_indexed::<usize, _>(8, 0, |_| unreachable!()).unwrap().is_empty());
         let out = run_indexed(64, 3, Ok).unwrap();
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn steal_queue_pops_own_shard_then_steals() {
+        let q: StealQueue<u32> = StealQueue::new(4);
+        q.push(1, 11);
+        q.push(2, 22);
+        // Worker 1 drains its own shard first…
+        assert_eq!(q.try_pop(1), Some(11));
+        // …then steals from shard 2.
+        assert_eq!(q.try_pop(1), Some(22));
+        assert_eq!(q.try_pop(1), None);
+    }
+
+    #[test]
+    fn steal_queue_delivers_across_threads_and_close_unblocks_all() {
+        let q: std::sync::Arc<StealQueue<usize>> = std::sync::Arc::new(StealQueue::new(3));
+        let done = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for w in 0..3 {
+            let q = q.clone();
+            let done = done.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0usize;
+                while let Some(item) = q.pop(w) {
+                    got += item;
+                }
+                done.fetch_add(got, Ordering::SeqCst);
+            }));
+        }
+        for i in 0..100 {
+            q.push(i, 1);
+        }
+        // Wait until every item has been claimed, then close: every parked
+        // worker must wake and exit (the drain-and-park barrier).
+        while q.len.load(Ordering::SeqCst) > 0 {
+            std::thread::yield_now();
+        }
+        q.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 100);
+        assert!(q.is_closed());
+        assert_eq!(q.pop(0), None, "closed queue pops None immediately");
+    }
+
+    #[test]
+    fn steal_queue_drain_sweeps_leftovers_after_close() {
+        let q: StealQueue<u32> = StealQueue::new(2);
+        q.push(0, 1);
+        q.push(1, 2);
+        q.push(0, 3);
+        q.close();
+        assert_eq!(q.pop(0), None, "no claims after close even with items queued");
+        let mut left = q.drain();
+        left.sort_unstable();
+        assert_eq!(left, vec![1, 2, 3]);
+        assert!(q.drain().is_empty());
     }
 }

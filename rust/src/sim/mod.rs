@@ -261,6 +261,33 @@ impl EventQueue {
         EventQueue::default()
     }
 
+    /// Pre-sized queue: the DES knows its steady-state in-flight bound up
+    /// front (M tokens, or one message per directed edge for gossip), so
+    /// the heap never regrows mid-run.
+    pub fn with_capacity(cap: usize) -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(cap),
+            next_seq: 0,
+        }
+    }
+
+    /// Clear for reuse, keeping the heap's `Arrival` capacity — the engine
+    /// recycles one queue across the runs of an experiment instead of
+    /// reallocating per algorithm.
+    pub fn reset(&mut self) {
+        self.heap.clear();
+        self.next_seq = 0;
+    }
+
+    /// Ensure capacity for at least `cap` queued arrivals.
+    pub fn reserve(&mut self, cap: usize) {
+        self.heap.reserve(cap.saturating_sub(self.heap.len()));
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
     pub fn push(&mut self, time: f64, token: usize, agent: usize) {
         let seq = self.next_seq;
         self.next_seq += 1;
@@ -312,6 +339,132 @@ impl AgentAvailability {
     }
 }
 
+/// Hashed timing wheel: O(1) scheduling and batched expiry over discrete
+/// ticks.
+///
+/// The DES keeps its exact continuous-time [`EventQueue`]; the wheel is the
+/// *real-time* counterpart used by the M:N thread runtime
+/// ([`crate::engine::threads`]), where every link-latency, retransmission
+/// and straggler delay becomes a delivery deadline instead of a
+/// thread-pinning `std::thread::sleep`. Quantizing to ticks is free
+/// fidelity-wise there — the OS sleep granularity is already coarser than
+/// the tick — and it is what lets thousands of concurrent delays coalesce
+/// into one timekeeper thread.
+///
+/// Entries carry their absolute due tick, so delays beyond one ring
+/// revolution are handled naturally: the entry sits in slot
+/// `tick % slots` and is skipped until the cursor reaches its tick.
+#[derive(Debug)]
+pub struct TimerWheel<T> {
+    tick_secs: f64,
+    slots: Vec<Vec<(u64, T)>>,
+    /// Next tick not yet fired.
+    cursor: u64,
+    len: usize,
+}
+
+impl<T> TimerWheel<T> {
+    /// A wheel of `nslots` slots at `tick_secs` resolution.
+    pub fn new(tick_secs: f64, nslots: usize) -> TimerWheel<T> {
+        assert!(
+            tick_secs > 0.0 && nslots > 0,
+            "TimerWheel needs tick_secs > 0 and nslots >= 1"
+        );
+        TimerWheel {
+            tick_secs,
+            slots: (0..nslots).map(|_| Vec::new()).collect(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    pub fn tick_secs(&self) -> f64 {
+        self.tick_secs
+    }
+
+    /// First tick at-or-after the absolute time `secs` (use when
+    /// *scheduling*: an entry never fires before its requested time).
+    pub fn tick_at(&self, secs: f64) -> u64 {
+        (secs / self.tick_secs).ceil().max(0.0) as u64
+    }
+
+    /// Last tick fully reached by the absolute time `secs` (use when
+    /// *advancing*: entries due at this tick have their deadline in the
+    /// past).
+    pub fn elapsed_tick(&self, secs: f64) -> u64 {
+        (secs / self.tick_secs).floor().max(0.0) as u64
+    }
+
+    /// Absolute time of a tick's deadline.
+    pub fn deadline_secs(&self, tick: u64) -> f64 {
+        tick as f64 * self.tick_secs
+    }
+
+    /// Schedule `item` for `tick` (clamped to the cursor: a deadline
+    /// already in the past fires on the next advance).
+    pub fn schedule_at(&mut self, tick: u64, item: T) {
+        let tick = tick.max(self.cursor);
+        let idx = (tick % self.slots.len() as u64) as usize;
+        self.slots[idx].push((tick, item));
+        self.len += 1;
+    }
+
+    /// Fire every entry due at or before `now_tick` into `out` (entries at
+    /// the same tick fire in unspecified order — callers needing an order
+    /// must impose their own, like the DES's `seq` tie-break).
+    pub fn advance_to(&mut self, now_tick: u64, out: &mut Vec<T>) {
+        if now_tick < self.cursor {
+            return;
+        }
+        if self.len > 0 {
+            let nslots = self.slots.len() as u64;
+            let span = (now_tick - self.cursor + 1).min(nslots);
+            for k in 0..span {
+                let idx = ((self.cursor + k) % nslots) as usize;
+                let slot = &mut self.slots[idx];
+                let mut i = 0;
+                while i < slot.len() {
+                    if slot[i].0 <= now_tick {
+                        out.push(slot.swap_remove(i).1);
+                        self.len -= 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        self.cursor = now_tick + 1;
+    }
+
+    /// Earliest due tick among all scheduled entries (a full scan — the
+    /// wheel stays small in practice: in-flight messages, not agents).
+    pub fn next_due(&self) -> Option<u64> {
+        if self.len == 0 {
+            return None;
+        }
+        self.slots
+            .iter()
+            .flat_map(|s| s.iter().map(|(t, _)| *t))
+            .min()
+    }
+
+    /// Remove every scheduled entry into `out` (shutdown sweep).
+    pub fn drain(&mut self, out: &mut Vec<T>) {
+        for slot in &mut self.slots {
+            out.extend(slot.drain(..).map(|(_, item)| item));
+        }
+        self.len = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,6 +482,87 @@ mod tests {
         assert_eq!(b.token, 2); // same time, later seq after earlier seq
         assert_eq!(c.token, 0);
         assert!(a.seq < b.seq);
+    }
+
+    #[test]
+    fn queue_reset_keeps_capacity_and_restarts_seq() {
+        let mut q = EventQueue::with_capacity(64);
+        let cap = q.capacity();
+        assert!(cap >= 64);
+        for i in 0..50 {
+            q.push(i as f64, i, i);
+        }
+        q.reset();
+        assert!(q.is_empty());
+        assert_eq!(q.capacity(), cap, "reset must keep the allocation");
+        // Seq restarts, so a reused queue replays bit-identically.
+        q.push(1.0, 7, 7);
+        assert_eq!(q.pop().unwrap().seq, 0);
+        q.reserve(128);
+        assert!(q.capacity() >= 128);
+    }
+
+    #[test]
+    fn timer_wheel_fires_in_deadline_order() {
+        let mut w: TimerWheel<u32> = TimerWheel::new(1e-5, 8);
+        w.schedule_at(w.tick_at(5e-5), 5);
+        w.schedule_at(w.tick_at(2e-5), 2);
+        w.schedule_at(w.tick_at(9e-5), 9);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.next_due(), Some(2));
+
+        let mut due = Vec::new();
+        w.advance_to(w.elapsed_tick(4.9e-5), &mut due);
+        assert_eq!(due, vec![2], "only the 2-tick entry is due at t=49µs");
+        w.advance_to(w.elapsed_tick(1e-4), &mut due);
+        due.sort_unstable();
+        assert_eq!(due, vec![2, 5, 9]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn timer_wheel_handles_entries_beyond_one_revolution() {
+        // 8 slots × 10µs = 80µs horizon; a 300µs entry must survive wraps.
+        let mut w: TimerWheel<&'static str> = TimerWheel::new(1e-5, 8);
+        w.schedule_at(30, "late");
+        w.schedule_at(3, "early");
+        let mut due = Vec::new();
+        w.advance_to(10, &mut due);
+        assert_eq!(due, vec!["early"]);
+        w.advance_to(29, &mut due);
+        assert_eq!(due.len(), 1, "late entry must not fire early");
+        w.advance_to(30, &mut due);
+        assert_eq!(due, vec!["early", "late"]);
+    }
+
+    #[test]
+    fn timer_wheel_clamps_past_deadlines_to_next_advance() {
+        let mut w: TimerWheel<u8> = TimerWheel::new(1e-5, 4);
+        let mut due = Vec::new();
+        w.advance_to(100, &mut due);
+        // Scheduling "in the past" fires on the next advance, never lost.
+        w.schedule_at(3, 1);
+        w.advance_to(101, &mut due);
+        assert_eq!(due, vec![1]);
+        // Drain sweeps leftovers (shutdown path).
+        w.schedule_at(500, 2);
+        w.schedule_at(900, 3);
+        let mut left = Vec::new();
+        w.drain(&mut left);
+        left.sort_unstable();
+        assert_eq!(left, vec![2, 3]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn timer_wheel_tick_rounding_never_fires_early() {
+        let w: TimerWheel<u8> = TimerWheel::new(2e-5, 16);
+        // Scheduling rounds up, advancing rounds down: for any time t,
+        // elapsed_tick(t) * tick <= t <= tick_at(t) * tick.
+        for t in [0.0, 1e-6, 1.9e-5, 2e-5, 7.3e-5] {
+            assert!(w.deadline_secs(w.elapsed_tick(t)) <= t + 1e-15);
+            assert!(w.deadline_secs(w.tick_at(t)) >= t - 1e-15);
+        }
     }
 
     #[test]

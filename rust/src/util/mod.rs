@@ -7,6 +7,18 @@ pub mod json;
 pub mod proptest;
 pub mod rng;
 
+/// Current OS-thread count of this process, from `/proc/self/status`
+/// (`None` off Linux or when procfs is unavailable). Used by the M:N
+/// thread runtime to report the peak-thread telemetry that proves the pool
+/// bounds the process at `workers + const` threads instead of N.
+pub fn os_thread_count() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
 /// Format a float duration (seconds) for human-readable tables.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {

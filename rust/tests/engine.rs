@@ -283,6 +283,128 @@ fn heterogeneous_des_stays_deterministic_per_seed() {
 }
 
 #[test]
+fn pooled_shutdown_under_faults_never_strands_a_worker() {
+    // Drain-and-park regression for the M:N runtime: a stop rule tripping
+    // mid-drain (here: tiny activation budgets, with lossy links, churn
+    // and stragglers keeping the mailboxes and the timer wheel full) must
+    // close the run queue and wake every parked worker — if any pooled
+    // worker stayed blocked on the empty queue, the run would never
+    // return and this test would hang. Repeated across seeds and
+    // algorithm families (token walk, gossip broadcast, gradient walk) to
+    // shake different in-flight shapes at the moment the barrier drops.
+    for seed in [3u64, 17, 91] {
+        let mut cfg = base_ls();
+        cfg.agents = 12;
+        cfg.walks = 4;
+        cfg.seed = seed;
+        cfg.workers = 3;
+        cfg.algos = vec![AlgoKind::ApiBcd, AlgoKind::Dgd, AlgoKind::Wpg];
+        cfg.faults = FaultModel::lossy(0.15);
+        cfg.faults.dropout_frac = 0.2;
+        cfg.faults.dropout_len = 0.005;
+        cfg.heterogeneity = apibcd::sim::Heterogeneity::Bimodal { frac: 0.3, slow: 3.0 };
+        cfg.stop.max_activations = 90; // trips while plenty is in flight
+        cfg.eval_every = 20;
+        let report = Experiment::builder(cfg)
+            .substrate(Substrate::Threads)
+            .run()
+            .unwrap();
+        assert_eq!(report.traces.len(), 3);
+        for t in &report.traces {
+            assert!(t.last_metric().is_finite(), "{}: non-finite metric", t.name);
+            assert_eq!(
+                t.worker_busy_secs.len(),
+                3,
+                "{}: pool telemetry missing",
+                t.name
+            );
+        }
+    }
+}
+
+#[test]
+fn des_and_threads_agree_at_n512_on_the_smoke_workload() {
+    // Large-N cross-substrate fidelity: the pooled runtime must land in
+    // the same final-metric band as the DES at an agent count the old
+    // thread-per-agent substrate was never tested at (512 OS threads of
+    // stacks and context switching; the pool runs it on 4 workers).
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.agents = 512;
+    cfg.walks = 8;
+    cfg.topology = "ring".into();
+    cfg.tau_api = 0.1;
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.eval_every = 800;
+    cfg.stop.max_activations = 4_000;
+    cfg.workers = 4;
+
+    let des = Experiment::builder(cfg.clone())
+        .substrate(Substrate::Des)
+        .run()
+        .unwrap();
+    let thr = Experiment::builder(cfg)
+        .substrate(Substrate::Threads)
+        .run()
+        .unwrap();
+    let (d, t) = (&des.traces[0], &thr.traces[0]);
+    assert!(
+        d.last_metric() < d.points[0].metric,
+        "DES did not improve at N=512: {}",
+        d.last_metric()
+    );
+    assert!(
+        t.last_metric() < t.points[0].metric,
+        "threads did not improve at N=512: {}",
+        t.last_metric()
+    );
+    assert!(
+        (d.last_metric() - t.last_metric()).abs() < 0.25,
+        "N=512: DES {} vs threads {}",
+        d.last_metric(),
+        t.last_metric()
+    );
+}
+
+#[test]
+fn pooled_runtime_bounds_os_threads_at_n1024() {
+    // The M:N guarantee, observed from the outside: a N=1024 run on 2
+    // workers must keep the *process* thread count near `workers + const`
+    // (pool + timekeeper + solver service + coordinator + the test
+    // harness's own threads) — the pre-M:N runtime would sit at 1024+
+    // here. The generous slack absorbs concurrently running tests; the
+    // three-orders-of-magnitude gap is the signal.
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.agents = 1024;
+    cfg.walks = 4;
+    cfg.topology = "ring".into();
+    cfg.tau_api = 0.1;
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.eval_every = 200;
+    cfg.stop.max_activations = 400;
+    cfg.workers = 2;
+    let report = Experiment::builder(cfg)
+        .substrate(Substrate::Threads)
+        .run()
+        .unwrap();
+    let t = &report.traces[0];
+    assert_eq!(t.worker_busy_secs.len(), 2, "one busy series per worker");
+    if t.peak_threads == 0 {
+        return; // no procfs on this platform: telemetry unavailable
+    }
+    // Slack scales with the machine (parallel test threads and their own
+    // small pools share the process), never with the agent count — the
+    // signal is the three-orders-of-magnitude gap to N.
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4) as u64;
+    let bound = 2 + 32 + 4 * cores;
+    assert!(
+        t.peak_threads <= bound.min(900),
+        "N=1024 run saw {} OS threads (bound {bound}) — the pool must keep \
+         this at workers + const, not N",
+        t.peak_threads
+    );
+}
+
+#[test]
 fn timeline_events_cover_all_walks() {
     let mut cfg = base_ls();
     cfg.agents = 5;

@@ -276,6 +276,60 @@ fn cli_sweep_scale_emits_schema_checked_json() {
 }
 
 #[test]
+fn cli_sweep_threads_emits_schema_checked_json() {
+    // The thread-substrate N-scaling sweep: BENCH_threads_scale.json
+    // mirrors the DES scale schema and adds the M:N telemetry columns
+    // (peak OS threads + pool size).
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let dir = tmpdir("sweep_threads");
+    let path = format!("{dir}/BENCH_threads_scale.json");
+    let out = std::process::Command::new(bin)
+        .args([
+            "sweep", "--substrate", "threads", "--agents", "8,64",
+            "--activations", "200", "--eval-every", "50",
+            "--workers", "2", "--out", &path,
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "repro sweep --substrate threads failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let doc = apibcd::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("suite").and_then(|j| j.as_str()), Some("threads_scale"));
+    let results = doc.get("results").and_then(|j| j.as_arr()).unwrap();
+    assert_eq!(results.len(), 2, "one row per N for the single default algo");
+    for r in results {
+        for key in [
+            "name", "agents", "activations", "records", "wall_secs",
+            "ns_per_activation", "peak_threads", "workers",
+        ] {
+            assert!(r.get(key).is_some(), "missing {key} in {r:?}");
+        }
+        assert_eq!(
+            r.get("workers").and_then(|j| j.as_f64()),
+            Some(2.0),
+            "{r:?}"
+        );
+        let peak = r.get("peak_threads").and_then(|j| j.as_f64()).unwrap();
+        // 0 = no procfs; otherwise the pool bounds the process thread
+        // count — a thread-per-agent runtime would report >= agents here.
+        let agents = r.get("agents").and_then(|j| j.as_f64()).unwrap();
+        assert!(
+            peak == 0.0 || peak < agents.max(32.0),
+            "peak_threads {peak} not bounded by the pool at N={agents}"
+        );
+    }
+    let derived = doc.get("derived").and_then(|j| j.as_obj()).unwrap();
+    assert!(
+        derived.keys().any(|k| k.contains("ns_per_activation ratio")),
+        "{derived:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn cli_binary_runs_core_commands() {
     let bin = env!("CARGO_BIN_EXE_repro");
     let run = |args: &[&str]| {
