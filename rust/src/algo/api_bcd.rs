@@ -131,4 +131,15 @@ impl AgentBehavior for ApiBcdAgent {
         ctx.commit_block(&self.x_new);
         Ok(Served::update(wall))
     }
+
+    /// Crash-restart: the local token copies are gone. Warm-start every
+    /// ẑ_{i,m} from the re-synced neighbor snapshot — the tokens hover
+    /// near consensus, so the snapshot is a far better prior than the
+    /// cold ẑ = 0 of Alg. 2 line 1 (which would drag x_i back toward the
+    /// origin through the penalty).
+    fn on_restart(&mut self, snapshot: &[f32]) {
+        for zm in &mut self.zhat {
+            zm.copy_from_slice(snapshot);
+        }
+    }
 }

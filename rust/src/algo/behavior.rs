@@ -36,6 +36,11 @@ pub struct TokenMsg {
     /// routing state with the token; the DES router tracks it centrally and
     /// ignores this field.
     pub cycle_pos: usize,
+    /// Walk generation for epoch fencing ([`crate::sim::TokenWatch`]):
+    /// bumped each time the watchdog regenerates a permanently lost
+    /// token, so a stale token resurfacing after regeneration can never
+    /// commit an activation. Gossip messages leave this 0.
+    pub epoch: u32,
 }
 
 /// A directed send produced by a behavior (gossip broadcasts). Token
@@ -166,6 +171,14 @@ pub trait AgentBehavior: Send {
         msg: &mut TokenMsg,
         ctx: &mut ActivationCtx<'_>,
     ) -> anyhow::Result<Served>;
+
+    /// Crash-restart hook: the agent restarted with wiped state and the
+    /// engine re-synced its arena row from `snapshot` (the first neighbor
+    /// payload — token or gossip block — to reach it after the restart).
+    /// Implementations reset per-agent auxiliaries (local token copies ẑ,
+    /// ADMM duals y) to a state consistent with that snapshot; behaviors
+    /// whose auxiliaries are scratch-only keep this default no-op.
+    fn on_restart(&mut self, _snapshot: &[f32]) {}
 }
 
 /// How the recorded figure model is assembled from the run state.

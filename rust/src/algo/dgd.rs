@@ -178,6 +178,7 @@ impl AgentBehavior for DgdAgent {
                         round: self.round,
                         payload,
                         cycle_pos: 0,
+                        epoch: 0,
                     },
                 });
             }

@@ -99,4 +99,14 @@ impl AgentBehavior for PwAdmmAgent {
         ctx.commit_block(&self.x_new);
         Ok(Served::update(wall))
     }
+
+    /// Crash-restart: duals restart at 0 (unrecoverable), token copies
+    /// warm-start from the re-synced neighbor snapshot (tokens hover near
+    /// consensus — see `ApiBcdAgent::on_restart`).
+    fn on_restart(&mut self, snapshot: &[f32]) {
+        self.y.fill(0.0);
+        for zm in &mut self.zhat {
+            zm.copy_from_slice(snapshot);
+        }
+    }
 }

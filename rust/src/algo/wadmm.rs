@@ -84,4 +84,11 @@ impl AgentBehavior for WadmmAgent {
         ctx.commit_block(&self.x_new);
         Ok(Served::update(wall))
     }
+
+    /// Crash-restart: the accumulated dual y_i is unrecoverable; restart
+    /// it at 0 (the Walkman initialization) so the next activations
+    /// rebuild it from the re-synced primal state.
+    fn on_restart(&mut self, _snapshot: &[f32]) {
+        self.y.fill(0.0);
+    }
 }

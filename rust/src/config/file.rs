@@ -86,10 +86,15 @@ fn apply(cfg: &mut ExperimentConfig, key: &str, v: &str) -> anyhow::Result<()> {
         "max-comm" => cfg.stop.max_comm = v.parse().map_err(|_| bad("integer"))?,
         "data-dir" => cfg.data_dir = v.to_string(),
         "artifacts-dir" => cfg.artifacts_dir = v.to_string(),
+        // Mutates the field rather than replacing `cfg.faults`, so the
+        // recovery knobs below compose with it in any key order.
         "drop-prob" => {
-            let p: f64 = v.parse().map_err(|_| bad("number"))?;
-            cfg.faults = crate::sim::FaultModel::lossy(p);
+            cfg.faults.drop_prob = v.parse().map_err(|_| bad("number"))?;
+            if cfg.faults.retry_timeout == 0.0 {
+                cfg.faults.retry_timeout = 2e-4; // FaultModel::lossy default
+            }
         }
+        "retry-timeout" => cfg.faults.retry_timeout = v.parse().map_err(|_| bad("number"))?,
         "dropout-frac" => {
             cfg.faults.dropout_frac = v.parse().map_err(|_| bad("number"))?;
             if cfg.faults.dropout_len == 0.0 {
@@ -97,6 +102,29 @@ fn apply(cfg: &mut ExperimentConfig, key: &str, v: &str) -> anyhow::Result<()> {
             }
         }
         "dropout-len" => cfg.faults.dropout_len = v.parse().map_err(|_| bad("number"))?,
+        "retx-budget" => cfg.faults.retx_budget = v.parse().map_err(|_| bad("integer"))?,
+        "permanent-loss" => {
+            cfg.faults.permanent_loss = match v {
+                "true" => true,
+                "false" => false,
+                _ => return Err(bad("boolean")),
+            }
+        }
+        "crash-prob" => {
+            cfg.faults.crash_prob = v.parse().map_err(|_| bad("number"))?;
+            if cfg.faults.crash_len == 0.0 {
+                cfg.faults.crash_len = 2e-3; // FaultModel::chaos default
+            }
+        }
+        "crash-len" => cfg.faults.crash_len = v.parse().map_err(|_| bad("number"))?,
+        "partition-prob" => {
+            cfg.faults.partition_prob = v.parse().map_err(|_| bad("number"))?;
+            if cfg.faults.partition_len == 0.0 {
+                cfg.faults.partition_len = 2e-3;
+            }
+        }
+        "partition-len" => cfg.faults.partition_len = v.parse().map_err(|_| bad("number"))?,
+        "lease-timeout" => cfg.faults.lease_timeout = v.parse().map_err(|_| bad("number"))?,
         "heterogeneity" => cfg.heterogeneity = crate::sim::Heterogeneity::parse(v)?,
         "workers" => cfg.workers = v.parse().map_err(|_| bad("integer"))?,
         "routing" => {
@@ -230,6 +258,43 @@ mod tests {
         assert!(err.contains("alpha"), "{err}");
         let err = from_str("heterogeneity = \"zipf:2\"\n").unwrap_err().to_string();
         assert!(err.contains("zipf") && err.contains("bimodal"), "{err}");
+    }
+
+    #[test]
+    fn fault_recovery_keys_compose_regardless_of_order() {
+        // `drop-prob` used to replace the whole FaultModel; the recovery
+        // knobs must survive it in either order.
+        let cfg = from_str(
+            "retx-budget = 1\npermanent-loss = \"true\"\ndrop-prob = 0.05\n\
+             lease-timeout = 0.002\ncrash-prob = 0.01\npartition-prob = 0.01\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.retx_budget, 1);
+        assert!(cfg.faults.permanent_loss);
+        assert_eq!(cfg.faults.drop_prob, 0.05);
+        assert_eq!(cfg.faults.retry_timeout, 2e-4, "lossy default retained");
+        assert_eq!(cfg.faults.lease_timeout, 0.002);
+        assert_eq!(cfg.faults.crash_prob, 0.01);
+        assert_eq!(cfg.faults.crash_len, 2e-3, "defaulted window");
+        assert_eq!(cfg.faults.partition_prob, 0.01);
+    }
+
+    #[test]
+    fn bad_fault_values_rejected_at_load() {
+        let err = from_str("retx-budget = 0\n").unwrap_err().to_string();
+        assert!(err.contains("retx-budget") && err.contains(">= 1"), "{err}");
+        let err = from_str("crash-prob = 1.0\n").unwrap_err().to_string();
+        assert!(err.contains("crash-prob") && err.contains("[0, 1)"), "{err}");
+        let err = from_str("permanent-loss = \"maybe\"\n").unwrap_err().to_string();
+        assert!(err.contains("permanent-loss") && err.contains("boolean"), "{err}");
+        // Cross-field: lease must outlast the paper latency model's 1e-4.
+        let err = from_str(
+            "drop-prob = 0.05\nretx-budget = 1\npermanent-loss = \"true\"\n\
+             lease-timeout = 0.00005\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("lease-timeout") && err.contains("link"), "{err}");
     }
 
     #[test]

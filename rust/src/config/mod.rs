@@ -325,6 +325,19 @@ impl ExperimentConfig {
         self.latency.validate()?;
         self.timing.validate()?;
         self.faults.validate()?;
+        // Cross-field: when permanent token loss is possible the watchdog
+        // lease has to outlast the slowest healthy hop, or every in-flight
+        // token would be declared dead and regenerated spuriously.
+        if self.faults.permanent_loss && self.faults.drop_prob > 0.0 {
+            anyhow::ensure!(
+                self.faults.lease_timeout > self.latency.max_delay(),
+                "config: `lease-timeout` ({}) must exceed the maximum link \
+                 latency ({}); a lease shorter than one hop declares healthy \
+                 in-flight tokens dead and regenerates duplicate walks",
+                self.faults.lease_timeout,
+                self.latency.max_delay()
+            );
+        }
         Ok(())
     }
 
@@ -443,6 +456,55 @@ mod tests {
         cfg.faults.drop_prob = 1.5;
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("drop-prob"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_fault_parameters() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.validate().is_ok());
+
+        cfg.faults.retx_budget = 0;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("retx-budget") && err.contains(">= 1"), "{err}");
+        cfg.faults.retx_budget = 16;
+
+        cfg.faults.crash_prob = 1.0;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("crash-prob") && err.contains("[0, 1)"), "{err}");
+        cfg.faults.crash_prob = 0.0;
+
+        cfg.faults.partition_prob = -0.1;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("partition-prob"), "{err}");
+        cfg.faults.partition_prob = 0.0;
+
+        cfg.faults.lease_timeout = 0.0;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("lease-timeout") && err.contains("positive"), "{err}");
+    }
+
+    #[test]
+    fn validate_requires_lease_to_outlast_a_hop() {
+        // Permanent loss active: the lease must exceed the worst-case link
+        // latency (paper model: U(1e-5, 1e-4) ⇒ max 1e-4).
+        let faults = crate::sim::FaultModel {
+            retx_budget: 1,
+            permanent_loss: true,
+            lease_timeout: 5e-5,
+            ..crate::sim::FaultModel::lossy(0.05)
+        };
+        let mut cfg = ExperimentConfig { faults, ..ExperimentConfig::default() };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("lease-timeout") && err.contains("link"), "{err}");
+
+        cfg.faults.lease_timeout = 1e-3;
+        assert!(cfg.validate().is_ok());
+
+        // Without permanent loss the lease never fires, so a short one is
+        // allowed (transparent retransmission keeps old configs valid).
+        cfg.faults.permanent_loss = false;
+        cfg.faults.lease_timeout = 5e-5;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -17,6 +17,17 @@
 //! and link-latency factors from [`super::hetero_factors`]), activation
 //! counting, recording cadence and stop rules. The algorithms only see [`TokenMsg`]s through their
 //! [`AgentBehavior::on_activation`] callbacks.
+//!
+//! Recovery protocol (EXPERIMENTS.md §Faults): under
+//! `FaultModel::permanent_loss` a token hop that exhausts its
+//! retransmission budget loses the token for good. The token watchdog is
+//! modelled on the same [`EventQueue`]: the dead walk's regeneration event
+//! is scheduled at the last-confirmed holder one `lease_timeout` after the
+//! loss, under an epoch bumped through the shared [`TokenWatch`] — so DES
+//! runs stay byte-identical across reruns at a fixed seed. Crash-restart
+//! wipes the agent's arena row and behavior state; the agent re-syncs from
+//! the first neighbor payload that reaches it
+//! ([`AgentBehavior::on_restart`]).
 
 use super::{should_stop, Recorder, Router};
 use crate::algo::behavior::{
@@ -29,7 +40,7 @@ use crate::data::AgentData;
 use crate::graph::Topology;
 use crate::metrics::Trace;
 use crate::model::{BlockStore, ObjectiveTracker, Problem, Task};
-use crate::sim::{AgentAvailability, EventQueue, Membership};
+use crate::sim::{AgentAvailability, EventQueue, FaultModel, Membership, TokenWatch};
 use crate::solver::LocalSolver;
 use crate::util::rng::Rng;
 
@@ -176,6 +187,10 @@ pub(crate) fn run(
     let mut recorder = Recorder::new(kind.name(), cfg.eval_every, spec.record_tau(cfg));
     let eval_model = spec.eval_model();
     let (mut comm, mut k) = (0u64, 0u64);
+    // Token watchdog state (lease/epoch protocol) + robustness counters.
+    let mut watch = TokenWatch::new(walks);
+    let mut needs_resync = vec![false; n];
+    let (mut crash_restarts, mut reroute_holds) = (0u64, 0u64);
 
     // Recording scratch (reused across records).
     let mut eval_w = vec![0.0f32; dim];
@@ -203,6 +218,7 @@ pub(crate) fn run(
                 round: 0,
                 payload: vec![0.0; dim],
                 cycle_pos: 0,
+                epoch: 0,
             });
             debug_assert_eq!(slot, m);
             queue.push(0.0, slot, at);
@@ -217,6 +233,7 @@ pub(crate) fn run(
                     round: 0,
                     payload: vec![0.0; dim],
                     cycle_pos: 0,
+                    epoch: 0,
                 });
                 queue.push(retry + cfg.latency.sample(&mut rng) * link_of(j), slot, j);
             }
@@ -233,6 +250,24 @@ pub(crate) fn run(
         }
         let (i, slot) = (ev.agent, ev.token);
         let mut msg = store.take(slot);
+        // Epoch fencing: a stale-epoch token is a resurfaced duplicate and
+        // must never commit an activation. (In the DES a walk's token
+        // lives in its dedicated slot, so this branch is unreachable by
+        // construction — wiring it keeps the protocol and its counters
+        // uniform with the pooled runtime.)
+        if walks > 0 && !watch.admit(msg.id, msg.epoch) {
+            store.put(slot, msg); // freeze the duplicate; the live token walks on
+            continue;
+        }
+        // Crash-restart re-sync: the first neighbor payload to reach a
+        // restarted agent doubles as its state snapshot.
+        if needs_resync[i] {
+            let row = blocks.row_mut(i);
+            tracker.block_updated(i, row, &msg.payload);
+            row.copy_from_slice(&msg.payload);
+            agents[i].on_restart(&msg.payload);
+            needs_resync[i] = false;
+        }
         let served = {
             let mut ctx = ActivationCtx {
                 agent: i,
@@ -263,25 +298,73 @@ pub(crate) fn run(
                 end,
             });
         }
+        if walks > 0 && served.updates > 0 {
+            // A live-epoch service closes any open recovery window.
+            watch.serviced(msg.id, k);
+            // Crash-restart: the agent served (and forwarded) the token,
+            // then its process dies — row and behavior state wiped, down
+            // for `crash_len`, re-synced from the next arriving payload.
+            // Scoped to the token-walk methods, like churn (see
+            // `algo/dgd.rs` on why synchronous gossip is exempt).
+            if faults.maybe_crash(&mut rng) {
+                crash_restarts += 1;
+                let mut zero = pool.take();
+                zero.resize(dim, 0.0);
+                let row = blocks.row_mut(i);
+                tracker.block_updated(i, row, &zero);
+                row.copy_from_slice(&zero);
+                pool.put(zero);
+                needs_resync[i] = true;
+                membership.force_down(i, end + faults.crash_len);
+            }
+        }
 
         // Forward the serviced token (with fault handling: retransmissions
-        // on lossy links, re-routing around dropped agents).
+        // on lossy links, re-routing around dropped agents, permanent-loss
+        // regeneration under the lease/epoch watchdog).
         if served.forward {
             let preferred = router.next(msg.id, i, topo, &mut rng);
+            // Bounded wait-and-retry when nothing is routable (the churn
+            // re-route livelock guard): hold the token, advance virtual
+            // time by one backoff per hold, and after MAX_ROUTE_HOLDS
+            // force the preferred hop (delivery waits out its window).
+            let mut hold_wait = 0.0;
             let next = if faults.is_none() {
                 preferred
             } else {
                 membership.maybe_drop(i, end, &mut rng);
-                membership.route_live(topo, i, preferred, end, &mut rng)
+                membership.maybe_partition(i, preferred, end, &mut rng);
+                let mut holds = 0u32;
+                loop {
+                    match membership.route_live(topo, i, preferred, end + hold_wait, &mut rng) {
+                        Some(j) => break j,
+                        None if holds < FaultModel::MAX_ROUTE_HOLDS => {
+                            holds += 1;
+                            reroute_holds += 1;
+                            hold_wait += faults.hold_backoff();
+                        }
+                        None => break preferred,
+                    }
+                }
             };
-            let mut t_next = end;
-            if next != i {
-                let (attempts, retry) = faults.transmit(&mut rng);
-                comm += attempts;
-                t_next += retry + cfg.latency.sample(&mut rng) * link_of(next);
+            let t = faults.transmit_token(&mut rng);
+            comm += t.attempts;
+            if t.delivered {
+                let t_next =
+                    end + hold_wait + t.delay + cfg.latency.sample(&mut rng) * link_of(next);
+                store.put(slot, msg);
+                queue.push(t_next, slot, next);
+            } else {
+                // Permanent loss: the walk is dead. The watchdog's lease
+                // expires one `lease_timeout` after the loss and the
+                // last-confirmed holder (this agent) regenerates the token
+                // under a bumped epoch — scheduled on the same event
+                // queue, so recovery is deterministic per seed.
+                watch.lost(msg.id, k);
+                msg.epoch = watch.regenerate(msg.id);
+                store.put(slot, msg);
+                queue.push(end + hold_wait + t.delay + faults.lease_timeout, slot, i);
             }
-            store.put(slot, msg);
-            queue.push(t_next, slot, next);
         } else {
             // Recycle the payload through the pool before releasing the
             // slot — the DES gossip path is allocation-free in steady
@@ -338,5 +421,10 @@ pub(crate) fn run(
             recorder.note_record_cost(t_rec.elapsed());
         }
     }
-    Ok((recorder.finish(), events))
+    let mut trace = recorder.finish();
+    trace.tokens_regenerated = watch.tokens_regenerated;
+    trace.recovery_activations = watch.recovery_activations;
+    trace.crash_restarts = crash_restarts;
+    trace.reroute_holds = reroute_holds;
+    Ok((trace, events))
 }

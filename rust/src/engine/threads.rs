@@ -29,7 +29,13 @@
 //!   like a real accelerator queue), and the fault model applies
 //!   unchanged: lossy links cost retransmission attempts and ack-timeout
 //!   *deadlines*, agent churn re-routes tokens through the shared
-//!   membership view.
+//!   membership view, and the recovery protocol (EXPERIMENTS.md §Faults)
+//!   runs on the same wheel — a permanently lost token's lease deadline
+//!   regenerates it at the last-confirmed holder under a bumped epoch
+//!   ([`crate::sim::TokenWatch`] fences out stale duplicates), a held
+//!   token whose forwarder has no routable neighbor retries after a
+//!   bounded backoff, and a crashed agent re-syncs its row and behavior
+//!   state from the first payload that reaches it after restart.
 //!
 //! Shutdown is a drain-and-park barrier: the first activation to trip a
 //! stop rule closes the run queue (waking every parked worker) and the
@@ -57,7 +63,7 @@ use crate::graph::Topology;
 use crate::metrics::{Trace, TracePoint};
 use crate::model::{BlockStore, Problem, Task};
 use crate::scenario::executor::StealQueue;
-use crate::sim::{FaultModel, LatencyModel, Membership, TimerWheel, TimingModel};
+use crate::sim::{FaultModel, LatencyModel, Membership, TimerWheel, TimingModel, TokenWatch};
 use crate::solver::SolverClient;
 use crate::util::rng::Rng;
 use std::cell::UnsafeCell;
@@ -123,11 +129,13 @@ struct Sample {
 }
 
 /// A deadline-triggered action on the timer wheel: a message whose
-/// link/retry/straggler delay expired, or an agent whose busy window
-/// ended.
+/// link/retry/straggler delay expired, an agent whose busy window ended,
+/// or a held token whose forwarder found no routable neighbor and is
+/// waiting out one bounded backoff before re-routing.
 enum TimerItem {
     Deliver { dest: usize, msg: TokenMsg },
     Unpark { agent: usize },
+    Retry { from: usize, preferred: usize, msg: TokenMsg, holds: u32 },
 }
 
 /// The shared wheel plus the timekeeper's wakeup condvar.
@@ -185,6 +193,18 @@ struct Shared {
     faults: FaultModel,
     /// Shared failure-detector view (wall-clock seconds since start).
     membership: Mutex<Membership>,
+    /// Token walks (0 = gossip — no watchdog, no crash-restart).
+    walks: usize,
+    /// Token watchdog (lease/epoch protocol), shared with the DES.
+    watch: Mutex<TokenWatch>,
+    /// Agents whose next arriving payload doubles as their post-crash
+    /// state snapshot.
+    needs_resync: Vec<AtomicBool>,
+    crash_restarts: AtomicU64,
+    reroute_holds: AtomicU64,
+    /// RNG for timer-side routing decisions (re-route retries fire on the
+    /// timekeeper, which owns no agent core).
+    timer_rng: Mutex<Rng>,
     started: Instant,
     eval_model: EvalModel,
     agents: Vec<AgentSlot>,
@@ -228,11 +248,48 @@ impl Shared {
             self.deliver(dest, msg);
             return;
         }
+        self.schedule_timer(delay, TimerItem::Deliver { dest, msg });
+    }
+
+    /// Put `item` on the wheel `delay` seconds from now and wake the
+    /// timekeeper.
+    fn schedule_timer(&self, delay: f64, item: TimerItem) {
         let mut wheel = self.timers.wheel.lock().unwrap();
         let tick = wheel.tick_at(self.now() + delay);
-        wheel.schedule_at(tick, TimerItem::Deliver { dest, msg });
+        wheel.schedule_at(tick, item);
         drop(wheel);
         self.timers.cv.notify_one();
+    }
+
+    /// Transmit a token toward `next` against the retransmission budget
+    /// (the timer-side twin of the worker path in [`serve`]: re-route
+    /// retries fire here). A permanent loss re-enters the lease cycle:
+    /// the token regenerates at `holder` under a bumped epoch one
+    /// `lease_timeout` later. Returns the comm total after this hop.
+    fn transmit_token_from(
+        &self,
+        holder: usize,
+        next: usize,
+        mut msg: TokenMsg,
+        rng: &mut Rng,
+    ) -> u64 {
+        let t = self.faults.transmit_token(rng);
+        let comm_now = self.comm.fetch_add(t.attempts, Ordering::Relaxed) + t.attempts;
+        if t.delivered {
+            let lf = if self.link.is_empty() { 1.0 } else { self.link[next] };
+            let delay = t.delay + self.latency.sample(rng) * lf;
+            self.send_after(next, msg, delay);
+        } else {
+            let mut watch = self.watch.lock().unwrap();
+            watch.lost(msg.id, self.activations.load(Ordering::Relaxed));
+            msg.epoch = watch.regenerate(msg.id);
+            drop(watch);
+            self.send_after(holder, msg, t.delay + self.faults.lease_timeout);
+        }
+        if comm_now >= self.max_comm {
+            self.trip_stop();
+        }
+        comm_now
     }
 
     /// Trip the stop flag (once): close the run queue so every parked
@@ -417,6 +474,12 @@ pub(crate) fn run(
         link,
         faults: cfg.faults,
         membership: Mutex::new(Membership::new(n, cfg.faults, &mut rng)),
+        walks,
+        watch: Mutex::new(TokenWatch::new(walks)),
+        needs_resync: (0..n).map(|_| AtomicBool::new(false)).collect(),
+        crash_restarts: AtomicU64::new(0),
+        reroute_holds: AtomicU64::new(0),
+        timer_rng: Mutex::new(Rng::new(cfg.seed ^ 0x7135_7E12)),
         started: Instant::now(),
         eval_model: spec.eval_model(),
         agents,
@@ -447,6 +510,7 @@ pub(crate) fn run(
                     round: 0,
                     payload: vec![0.0f32; dim],
                     cycle_pos: pos,
+                    epoch: 0,
                 },
             );
         }
@@ -462,6 +526,7 @@ pub(crate) fn run(
                         round: 0,
                         payload: vec![0.0f32; dim],
                         cycle_pos: 0,
+                        epoch: 0,
                     },
                 );
             }
@@ -568,8 +633,11 @@ pub(crate) fn run(
         let mut leftovers = Vec::new();
         shared.timers.wheel.lock().unwrap().drain(&mut leftovers);
         for item in leftovers {
-            if let TimerItem::Deliver { msg, .. } = item {
-                shared.retire_token(msg.payload);
+            match item {
+                TimerItem::Deliver { msg, .. } | TimerItem::Retry { msg, .. } => {
+                    shared.retire_token(msg.payload)
+                }
+                TimerItem::Unpark { .. } => {}
             }
         }
     }
@@ -611,6 +679,13 @@ pub(crate) fn run(
     trace.peak_threads = crate::util::os_thread_count()
         .unwrap_or(0)
         .max(peak_threads);
+    {
+        let watch = shared.watch.lock().unwrap();
+        trace.tokens_regenerated = watch.tokens_regenerated;
+        trace.recovery_activations = watch.recovery_activations;
+    }
+    trace.crash_restarts = shared.crash_restarts.load(Ordering::Relaxed);
+    trace.reroute_holds = shared.reroute_holds.load(Ordering::Relaxed);
     Ok(trace)
 }
 
@@ -654,6 +729,45 @@ fn timer_loop(shared: &Shared) {
                 TimerItem::Deliver { dest, msg } => shared.deliver(dest, msg),
                 // The parked agent kept its claim; re-queue it directly.
                 TimerItem::Unpark { agent } => shared.runq.push(agent, agent),
+                // A held token's backoff expired: re-route. Still nothing
+                // routable → hold again, up to MAX_ROUTE_HOLDS, then force
+                // the preferred hop (delivery waits out its window — the
+                // token is never stranded, and never spins).
+                TimerItem::Retry {
+                    from,
+                    preferred,
+                    msg,
+                    holds,
+                } => {
+                    let now = shared.now();
+                    let next = {
+                        let mut trng = shared.timer_rng.lock().unwrap();
+                        let mem = shared.membership.lock().unwrap();
+                        mem.route_live(&shared.topo, from, preferred, now, &mut trng)
+                    };
+                    match next {
+                        Some(next) => {
+                            let mut trng = shared.timer_rng.lock().unwrap();
+                            shared.transmit_token_from(from, next, msg, &mut trng);
+                        }
+                        None if holds < FaultModel::MAX_ROUTE_HOLDS => {
+                            shared.reroute_holds.fetch_add(1, Ordering::Relaxed);
+                            shared.schedule_timer(
+                                shared.faults.hold_backoff(),
+                                TimerItem::Retry {
+                                    from,
+                                    preferred,
+                                    msg,
+                                    holds: holds + 1,
+                                },
+                            );
+                        }
+                        None => {
+                            let mut trng = shared.timer_rng.lock().unwrap();
+                            shared.transmit_token_from(from, preferred, msg, &mut trng);
+                        }
+                    }
+                }
             }
         }
     }
@@ -760,6 +874,19 @@ fn serve(
     shared: &Shared,
     sample_tx: &mpsc::Sender<Sample>,
 ) -> anyhow::Result<()> {
+    // Epoch fencing: a stale-epoch token resurfacing after the watchdog
+    // regenerated its walk is a no-op — dropped here, before any state is
+    // touched, so a duplicate can never commit an activation.
+    if shared.walks > 0 && !shared.watch.lock().unwrap().admit(msg.id, msg.epoch) {
+        core.pool.put(std::mem::take(&mut msg.payload));
+        return Ok(());
+    }
+    // Crash-restart re-sync: the first payload to reach a restarted agent
+    // doubles as its state snapshot (arena row + behavior auxiliaries).
+    if shared.needs_resync[i].swap(false, Ordering::SeqCst) {
+        core.row.slice_mut().copy_from_slice(&msg.payload);
+        core.behavior.on_restart(&msg.payload);
+    }
     let served = {
         let mut ctx = ActivationCtx {
             agent: i,
@@ -801,15 +928,46 @@ fn serve(
     } else {
         shared.activations.load(Ordering::Relaxed)
     };
+    if shared.walks > 0 && served.updates > 0 {
+        // A live-epoch service closes any open recovery window.
+        shared.watch.lock().unwrap().serviced(msg.id, k);
+        // Crash-restart (token-walk methods only, like churn — see
+        // `algo/dgd.rs`): the agent serves and forwards, then its process
+        // dies. Row wiped now; behavior state resets on the re-sync that
+        // the next arriving payload triggers. The busy window plays the
+        // restart downtime, membership keeps tokens routed around it.
+        if shared.faults.maybe_crash(&mut core.rng) {
+            shared.crash_restarts.fetch_add(1, Ordering::Relaxed);
+            core.row.slice_mut().fill(0.0);
+            shared.needs_resync[i].store(true, Ordering::SeqCst);
+            let now = shared.now();
+            core.busy_until = core.busy_until.max(now + shared.faults.crash_len);
+            shared
+                .membership
+                .lock()
+                .unwrap()
+                .force_down(i, now + shared.faults.crash_len);
+        }
+    }
 
     // Once the stop flag is up, nothing more will be sent — skip the
     // routing/link emulation so shutdown neither schedules link delays nor
     // counts transmission attempts for hops that never happen.
     let stopping = shared.stop.load(Ordering::SeqCst);
 
-    // Route + cost the links. Delays become delivery deadlines.
+    // Route + cost the links. Delays become delivery deadlines. A hop can
+    // end four ways: sent (possibly after retransmissions), permanently
+    // lost (regenerates at this holder after the lease), held (no
+    // routable neighbor — bounded wait-and-retry on the wheel), or not
+    // forwarded at all (gossip).
+    enum Fwd {
+        Send(usize, f64),
+        Lost(f64),
+        Hold(usize),
+        None,
+    }
     let mut comm_now = shared.comm.load(Ordering::Relaxed);
-    let mut forward: Option<(usize, f64)> = None;
+    let mut forward = Fwd::None;
     if served.forward && !stopping {
         let preferred = match shared.routing {
             RoutingRule::Cycle => {
@@ -822,21 +980,35 @@ fn serve(
             RoutingRule::Metropolis => shared.topo.metropolis_next(i, &mut core.rng),
         };
         let next = if shared.faults.is_none() {
-            preferred
+            Some(preferred)
         } else {
             let now = shared.now();
             let mut mem = shared.membership.lock().unwrap();
             mem.maybe_drop(i, now, &mut core.rng);
+            mem.maybe_partition(i, preferred, now, &mut core.rng);
             mem.route_live(&shared.topo, i, preferred, now, &mut core.rng)
         };
-        let mut delay = extra;
-        if next != i {
-            let (attempts, retry) = shared.faults.transmit(&mut core.rng);
-            let lf = if shared.link.is_empty() { 1.0 } else { shared.link[next] };
-            delay += retry + shared.latency.sample(&mut core.rng) * lf;
-            comm_now = shared.comm.fetch_add(attempts, Ordering::Relaxed) + attempts;
+        match next {
+            Some(next) => {
+                let t = shared.faults.transmit_token(&mut core.rng);
+                comm_now = shared.comm.fetch_add(t.attempts, Ordering::Relaxed) + t.attempts;
+                if t.delivered {
+                    let lf = if shared.link.is_empty() { 1.0 } else { shared.link[next] };
+                    let delay =
+                        extra + t.delay + shared.latency.sample(&mut core.rng) * lf;
+                    forward = Fwd::Send(next, delay);
+                } else {
+                    forward = Fwd::Lost(extra + t.delay);
+                }
+            }
+            None => {
+                // No routable neighbor: hold the token and let the
+                // timekeeper retry after one backoff (bounded — the churn
+                // re-route livelock guard).
+                shared.reroute_holds.fetch_add(1, Ordering::Relaxed);
+                forward = Fwd::Hold(preferred);
+            }
         }
-        forward = Some((next, delay));
     }
 
     // Gossip broadcast: per-link transmission costs and per-link delivery
@@ -884,8 +1056,27 @@ fn serve(
         return Ok(());
     }
     match forward {
-        Some((next, delay)) => shared.send_after(next, msg, delay),
-        None => {
+        Fwd::Send(next, delay) => shared.send_after(next, msg, delay),
+        Fwd::Lost(delay) => {
+            // Permanent loss: the walk is dead until the watchdog's lease
+            // expires; the token then regenerates at this holder under a
+            // bumped epoch (the lease deadline rides the shared wheel).
+            let mut watch = shared.watch.lock().unwrap();
+            watch.lost(msg.id, k);
+            msg.epoch = watch.regenerate(msg.id);
+            drop(watch);
+            shared.send_after(i, msg, delay + shared.faults.lease_timeout);
+        }
+        Fwd::Hold(preferred) => shared.schedule_timer(
+            extra + shared.faults.hold_backoff(),
+            TimerItem::Retry {
+                from: i,
+                preferred,
+                msg,
+                holds: 1,
+            },
+        ),
+        Fwd::None => {
             // Gossip input consumed: recycle its payload for the next
             // broadcast (zero-capacity husks are ignored by the pool).
             core.pool.put(std::mem::take(&mut msg.payload));

@@ -48,15 +48,25 @@
 //!     `BENCH_scale.json` / `BENCH_threads_scale.json`).
 //!   - substrate primitives in [`graph`] (topologies, including scale-free
 //!     and geometric generators) and [`sim`] (event queue, latency/timing
-//!     models, per-agent heterogeneity, failure injection).
+//!     models, per-agent heterogeneity, failure injection). Token loss and
+//!     agent crashes are *recoverable* faults on both substrates: tokens
+//!     carry walk epochs, a lease watchdog ([`sim::TokenWatch`] — DES
+//!     events on one substrate, [`sim::TimerWheel`] deadlines on the
+//!     other) regenerates dead walks at the last-confirmed holder, epoch
+//!     fencing makes resurfacing stale tokens a no-op, and crashed agents
+//!     re-sync their arena row from a neighbor snapshot. Fault taxonomy,
+//!     the lease/epoch protocol and the `repro chaos` harness are
+//!     documented in EXPERIMENTS.md §Faults.
 //!   - [`scenario`] — named, seed-reproducible workload compositions over
 //!     the orthogonal axes (topology family × dataset × heterogeneity ×
 //!     fault regime × substrate), with a work-stealing parallel cell
 //!     executor ([`scenario::executor`]), and [`validate`] — the
 //!     executable paper-claims harness evaluated over the scenario matrix
 //!     (`repro validate --matrix smoke --jobs 4`, `VALIDATE_report.json` —
-//!     byte-identical for any job count). See EXPERIMENTS.md §Scenarios
-//!     and §Scale for the axes, presets and report schemas.
+//!     byte-identical for any job count) plus the randomized-fault harness
+//!     ([`validate::chaos`], `repro chaos` → `CHAOS_report.json`). See
+//!     EXPERIMENTS.md §Scenarios, §Faults and §Scale for the axes,
+//!     presets, fault protocol and report schemas.
 //! * **Layer 2/1 (build-time JAX + Pallas)** — the per-agent local updates,
 //!   AOT-lowered to HLO text in `artifacts/` and executed through the PJRT C
 //!   API by [`runtime`]; [`solver`] routes each algorithm's update through

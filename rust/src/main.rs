@@ -8,6 +8,7 @@
 //! repro sweep  --param <walks|agents|tau-api|xi> --values v1,v2,... [--preset P]
 //! repro sweep  --agents 16,64,256,1024,4096 [--jobs J]   (N-scaling, BENCH_scale.json)
 //! repro validate [--matrix smoke|full] [--jobs J]
+//! repro chaos    [--scenario NAME] [--seed N] [--budget small|medium|large]
 //! repro topology [--agents N] [--xi X] [--seed S]
 //! repro timeline [--activations K]
 //! repro inspect-artifacts [--dir artifacts]
@@ -27,6 +28,7 @@ fn main() {
         "replicate" => cmd_replicate(&args),
         "sweep" => cmd_sweep(&args),
         "validate" => cmd_validate(&args),
+        "chaos" => cmd_chaos(&args),
         "topology" => cmd_topology(&args),
         "timeline" => cmd_timeline(&args),
         "inspect-artifacts" => cmd_inspect(&args),
@@ -67,6 +69,12 @@ USAGE:
                [--activations K] [--out VALIDATE_report.json]
                (paper-claims harness; exits non-zero on any failed claim;
                 --jobs runs scenario cells on a work-stealing pool)
+  repro chaos  [--scenario ring_lossy] [--seed N] [--budget small|medium|large]
+               [--out CHAOS_report.json]
+               (randomized fault-schedule harness: overlays permanent token
+                loss + crash-restart + partitions + churn on the scenario
+                and checks the lease/epoch recovery claims; exits non-zero
+                on any failure)
   repro topology  [--agents N] [--xi X] [--seed S]
   repro timeline  [--activations K]   (Fig. 2 token/local-copy illustration)
   repro inspect-artifacts [--dir artifacts]
@@ -95,15 +103,37 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()
     cfg.stop.max_activations = args.u64_or("activations", cfg.stop.max_activations)?;
     cfg.artifacts_dir = args.str_or("artifacts-dir", &cfg.artifacts_dir).to_string();
     cfg.data_dir = args.str_or("data-dir", &cfg.data_dir).to_string();
+    // Fault flags mutate fields (never replace `cfg.faults`) so the
+    // recovery knobs compose with a config file's settings in any order.
     let drop_prob = args.f64_or("drop-prob", 0.0)?;
     if drop_prob > 0.0 {
-        cfg.faults = apibcd::sim::FaultModel::lossy(drop_prob);
+        cfg.faults.drop_prob = drop_prob;
+        if cfg.faults.retry_timeout == 0.0 {
+            cfg.faults.retry_timeout = 2e-4; // FaultModel::lossy default
+        }
     }
     let churn = args.f64_or("dropout-frac", 0.0)?;
     if churn > 0.0 {
         cfg.faults.dropout_frac = churn;
         cfg.faults.dropout_len = args.f64_or("dropout-len", 0.01)?;
     }
+    cfg.faults.retx_budget =
+        args.u64_or("retx-budget", cfg.faults.retx_budget as u64)? as u32;
+    if args.has("permanent-loss") {
+        cfg.faults.permanent_loss = true;
+    }
+    let crash = args.f64_or("crash-prob", 0.0)?;
+    if crash > 0.0 {
+        cfg.faults.crash_prob = crash;
+        cfg.faults.crash_len = args.f64_or("crash-len", 2e-3)?;
+    }
+    let partition = args.f64_or("partition-prob", 0.0)?;
+    if partition > 0.0 {
+        cfg.faults.partition_prob = partition;
+        cfg.faults.partition_len = args.f64_or("partition-len", 2e-3)?;
+    }
+    cfg.faults.lease_timeout = args.f64_or("lease-timeout", cfg.faults.lease_timeout)?;
+    cfg.faults.validate()?;
     if let Some(h) = args.str_opt("heterogeneity") {
         cfg.heterogeneity = apibcd::sim::Heterogeneity::parse(h)?;
     }
@@ -478,6 +508,30 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         report.all_passed(),
         "{} claim(s) failed — see the table above / {out}",
+        report.failed()
+    );
+    Ok(())
+}
+
+/// `repro chaos`: overlay the full randomized fault regime (permanent
+/// token loss, crash-restart, partitions, churn) on one scenario and
+/// evaluate the lease/epoch recovery claims (EXPERIMENTS.md §Faults).
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    let scn = apibcd::scenario::by_name(args.str_or("scenario", "ring_lossy"))?;
+    let seed = args.u64_or("seed", 7)?;
+    let budget = args.str_or("budget", "small");
+    eprintln!(
+        "chaos harness on scenario '{}' (seed {seed}, budget {budget})",
+        scn.name
+    );
+    let report = apibcd::validate::chaos::run(scn, seed, budget)?;
+    print!("{}", report.summary_table());
+    let out = args.str_or("out", "CHAOS_report.json");
+    report.write(out)?;
+    eprintln!("wrote {out}");
+    anyhow::ensure!(
+        report.all_passed(),
+        "{} chaos claim(s) failed — see the table above / {out}",
         report.failed()
     );
     Ok(())

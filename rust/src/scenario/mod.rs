@@ -116,11 +116,22 @@ impl Matrix {
 }
 
 const STRAGGLER: Heterogeneity = Heterogeneity::Bimodal { frac: 0.25, slow: 4.0 };
+/// 5% *permanent* token loss: a single-attempt retransmission budget, so
+/// each hop loses the token outright with probability 0.05 and the lease/
+/// epoch watchdog ([`crate::sim::TokenWatch`]) must regenerate the walk.
+/// (Const table — no struct-update syntax, every field spelled out.)
 const LOSSY_5: FaultModel = FaultModel {
     drop_prob: 0.05,
     retry_timeout: 2e-4,
     dropout_frac: 0.0,
     dropout_len: 0.0,
+    retx_budget: 1,
+    permanent_loss: true,
+    crash_prob: 0.0,
+    crash_len: 0.0,
+    partition_prob: 0.0,
+    partition_len: 0.0,
+    lease_timeout: 1e-3,
 };
 
 /// The CI matrix: ≥ 2 topology families × heterogeneity on/off, a fault
@@ -193,7 +204,8 @@ pub static SMOKE: &[Scenario] = &[
     },
     Scenario {
         name: "ring_lossy",
-        description: "ring topology with 5% link loss (retransmissions inflate both figure axes)",
+        description: "ring topology with 5% permanent token loss (budget-1 retransmission; \
+                      the lease/epoch watchdog regenerates dead walks)",
         base: Preset::TestLs,
         topology: "ring",
         agents: 6,
@@ -202,6 +214,20 @@ pub static SMOKE: &[Scenario] = &[
         faults: LOSSY_5,
         substrate: Substrate::Des,
         activations: 800,
+        target: 0.65,
+    },
+    Scenario {
+        name: "threads_lossy",
+        description: "5% permanent token loss on the M:N pooled runtime (lease deadlines on the \
+                      timer wheel)",
+        base: Preset::TestLs,
+        topology: "ring",
+        agents: 6,
+        walks: 3,
+        heterogeneity: Heterogeneity::None,
+        faults: LOSSY_5,
+        substrate: Substrate::Threads,
+        activations: 600,
         target: 0.65,
     },
     Scenario {
@@ -351,5 +377,13 @@ mod tests {
         assert!(scns.iter().any(|s| s.substrate == Substrate::Des));
         assert!(scns.iter().any(|s| s.substrate == Substrate::Threads));
         assert!(scns.iter().any(|s| !s.faults.is_none()));
+        // Permanent token loss must be exercised on BOTH substrates so the
+        // recovery claims cover the DES watchdog and the timer-wheel one.
+        for sub in [Substrate::Des, Substrate::Threads] {
+            assert!(
+                scns.iter().any(|s| s.substrate == sub && s.faults.permanent_loss),
+                "no permanent-loss scenario on {sub:?}"
+            );
+        }
     }
 }

@@ -15,7 +15,7 @@
 
 pub mod faults;
 
-pub use faults::{FaultModel, Membership};
+pub use faults::{FaultModel, Membership, TokenTransmit, TokenWatch};
 
 use crate::util::rng::Rng;
 use std::cmp::Ordering;
@@ -37,6 +37,16 @@ impl LatencyModel {
     pub fn sample(&self, rng: &mut Rng) -> f64 {
         match *self {
             LatencyModel::Uniform { lo, hi } => rng.uniform(lo, hi),
+            LatencyModel::Fixed(v) => v,
+        }
+    }
+
+    /// Worst-case one-hop delay — the bound the token watchdog's lease
+    /// must exceed (cross-field config check in
+    /// [`crate::config::ExperimentConfig::validate`]).
+    pub fn max_delay(&self) -> f64 {
+        match *self {
+            LatencyModel::Uniform { hi, .. } => hi,
             LatencyModel::Fixed(v) => v,
         }
     }

@@ -132,6 +132,107 @@ fn des_substrate_stays_deterministic_per_seed() {
 }
 
 #[test]
+fn des_recovers_from_permanent_token_loss_deterministically() {
+    // Tentpole regression: 5% permanent per-hop loss (budget-1
+    // retransmission) kills tokens for good; the lease watchdog must
+    // regenerate every one at the last-confirmed holder and the walks must
+    // keep converging — and the whole fault/recovery schedule is part of
+    // the seeded state, so the replay is bit-identical, counters included.
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.faults = FaultModel::lossy(0.05);
+    cfg.faults.retx_budget = 1;
+    cfg.faults.permanent_loss = true;
+    cfg.stop.max_activations = 800;
+    let a = Experiment::builder(cfg.clone()).run().unwrap();
+    let t = &a.traces[0];
+    assert!(
+        t.tokens_regenerated >= 1,
+        "5% permanent loss over 800 hops must lose (and regenerate) tokens"
+    );
+    assert!(
+        t.recovery_activations > 0,
+        "recovery windows must accumulate latency"
+    );
+    assert!(
+        t.last_metric() < t.points[0].metric,
+        "walks must keep converging through regenerations: {}",
+        t.last_metric()
+    );
+    let b = Experiment::builder(cfg).run().unwrap();
+    let u = &b.traces[0];
+    assert_eq!(t.tokens_regenerated, u.tokens_regenerated);
+    assert_eq!(t.recovery_activations, u.recovery_activations);
+    assert_eq!(t.points.len(), u.points.len());
+    for (pa, pb) in t.points.iter().zip(&u.points) {
+        assert_eq!(pa.iter, pb.iter);
+        assert_eq!(pa.comm, pb.comm);
+        assert_eq!(pa.time.to_bits(), pb.time.to_bits());
+        assert_eq!(pa.metric.to_bits(), pb.metric.to_bits());
+    }
+}
+
+#[test]
+fn des_crash_restart_resyncs_and_converges() {
+    // Crash-restart: the agent's row and behavior state are wiped, it
+    // stays down for the crash window, then re-syncs from the first
+    // arriving snapshot. Learning must survive a steady 2% crash rate.
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.faults.crash_prob = 0.02;
+    cfg.faults.crash_len = 2e-3;
+    cfg.stop.max_activations = 800;
+    let report = Experiment::builder(cfg).run().unwrap();
+    let t = &report.traces[0];
+    assert!(
+        t.crash_restarts >= 1,
+        "2% crash rate over 800 services must produce crashes"
+    );
+    assert!(
+        t.last_metric() < 0.8 && t.last_metric() < t.points[0].metric,
+        "must converge through crash-restarts: {}",
+        t.last_metric()
+    );
+}
+
+#[test]
+fn three_agent_line_with_both_neighbors_churning_does_not_livelock() {
+    // Satellite regression: on the 1–0–2 line (grid(3)) churn + crashes
+    // regularly leave a forwarder with *no* routable neighbor — an
+    // unbounded re-route would spin through the neighbor list forever.
+    // The bounded hold-and-retry path must keep the run finite, record
+    // its holds in the trace, and stay deterministic per seed.
+    let mut cfg = base_ls();
+    cfg.agents = 3;
+    cfg.walks = 1;
+    cfg.topology = "grid".into(); // grid(3) is the 3-agent line 1–0–2
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.faults.dropout_frac = 0.5;
+    cfg.faults.dropout_len = 0.01;
+    cfg.faults.crash_prob = 0.2;
+    cfg.faults.crash_len = 0.01;
+    cfg.stop.max_activations = 400;
+    let a = Experiment::builder(cfg.clone()).run().unwrap();
+    let t = &a.traces[0];
+    assert!(t.last_metric().is_finite());
+    assert!(
+        t.crash_restarts >= 1,
+        "a 20% crash rate over 400 services must take agents down"
+    );
+    assert!(
+        t.reroute_holds >= 1,
+        "an endpoint whose only neighbor is down must hit the hold path"
+    );
+    let b = Experiment::builder(cfg).run().unwrap();
+    assert_eq!(t.reroute_holds, b.traces[0].reroute_holds);
+    assert_eq!(t.crash_restarts, b.traces[0].crash_restarts);
+    for (pa, pb) in t.points.iter().zip(&b.traces[0].points) {
+        assert_eq!(pa.time.to_bits(), pb.time.to_bits());
+        assert_eq!(pa.metric.to_bits(), pb.metric.to_bits());
+    }
+}
+
+#[test]
 fn builder_validates_config() {
     let mut cfg = base_ls();
     cfg.agents = 1;
@@ -292,6 +393,10 @@ fn pooled_shutdown_under_faults_never_strands_a_worker() {
     // return and this test would hang. Repeated across seeds and
     // algorithm families (token walk, gossip broadcast, gradient walk) to
     // shake different in-flight shapes at the moment the barrier drops.
+    // Permanent loss with a short lease keeps *regenerations* in flight
+    // too: the stop rule regularly trips while a lost token's lease
+    // delivery or a hold-and-retry sits on the timer wheel, and the
+    // shutdown sweep must retire those payloads like any other.
     for seed in [3u64, 17, 91] {
         let mut cfg = base_ls();
         cfg.agents = 12;
@@ -302,6 +407,13 @@ fn pooled_shutdown_under_faults_never_strands_a_worker() {
         cfg.faults = FaultModel::lossy(0.15);
         cfg.faults.dropout_frac = 0.2;
         cfg.faults.dropout_len = 0.005;
+        cfg.faults.retx_budget = 1;
+        cfg.faults.permanent_loss = true;
+        cfg.faults.lease_timeout = 5e-4;
+        cfg.faults.crash_prob = 0.05;
+        cfg.faults.crash_len = 1e-3;
+        cfg.faults.partition_prob = 0.05;
+        cfg.faults.partition_len = 1e-3;
         cfg.heterogeneity = apibcd::sim::Heterogeneity::Bimodal { frac: 0.3, slow: 3.0 };
         cfg.stop.max_activations = 90; // trips while plenty is in flight
         cfg.eval_every = 20;

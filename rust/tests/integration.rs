@@ -201,6 +201,60 @@ fn cli_validate_runs_a_scenario() {
 }
 
 #[test]
+fn cli_chaos_emits_schema_checked_report() {
+    // `repro chaos`: CLI wiring + CHAOS_report.json schema — the CI
+    // chaos-smoke job checks the same recovery-latency / regeneration
+    // fields with its own script, this test keeps them honest locally.
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let dir = tmpdir("chaos");
+    let path = format!("{dir}/CHAOS_report.json");
+    let out = std::process::Command::new(bin)
+        .args([
+            "chaos", "--scenario", "ring_lossy", "--seed", "7",
+            "--budget", "small", "--out", &path,
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "repro chaos failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("recovers_from_token_loss")
+            && text.contains("crash_restart_converges")
+            && text.contains("no_duplicate_token_epoch")
+            && text.contains("0 failed"),
+        "{text}"
+    );
+    let doc = apibcd::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("suite").and_then(|j| j.as_str()), Some("chaos"));
+    assert_eq!(doc.get("scenario").and_then(|j| j.as_str()), Some("ring_lossy"));
+    assert_eq!(doc.get("budget").and_then(|j| j.as_str()), Some("small"));
+    assert_eq!(doc.get("results").and_then(|j| j.as_arr()).unwrap().len(), 3);
+    let metrics = doc.get("metrics").unwrap();
+    let regen = metrics.get("regeneration_count").and_then(|j| j.as_f64()).unwrap();
+    assert!(regen >= 1.0, "chaos run must regenerate tokens (got {regen})");
+    let latency = metrics
+        .get("recovery_latency_mean_activations")
+        .and_then(|j| j.as_f64())
+        .unwrap();
+    assert!(latency > 0.0, "mean recovery latency missing ({latency})");
+
+    // Unknown budget: non-zero exit, the error lists the valid names.
+    let out = std::process::Command::new(bin)
+        .args(["chaos", "--budget", "huge"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("huge") && err.contains("small"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn cli_validate_parallel_jobs_report_is_byte_identical() {
     // The work-stealing executor must not change *anything* observable:
     // `repro validate --matrix smoke` writes a byte-identical

@@ -22,7 +22,7 @@ use apibcd::data::{shard::PartitionKind, Dataset, DatasetProfile, Partition};
 use apibcd::graph::Topology;
 use apibcd::linalg::{axpy, dist2};
 use apibcd::model::{penalty_objective, Task};
-use apibcd::sim::{AgentAvailability, EventQueue};
+use apibcd::sim::{AgentAvailability, EventQueue, TokenWatch};
 use apibcd::solver::{LocalSolver, NativeSolver};
 use apibcd::util::proptest::{run_prop, PropConfig};
 use apibcd::util::rng::Rng;
@@ -928,6 +928,97 @@ fn prop_running_block_sum_matches_from_scratch_recompute() {
                         inc_mean[j], scratch
                     ));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_epoch_fencing_admits_exactly_one_live_token_per_walk() {
+    // The tentpole safety property: under ANY interleaving of permanent
+    // loss, lease-expiry regeneration and stale (resurfaced) deliveries,
+    // the watchdog admits exactly one live token per walk — a lost token
+    // that floats back can never commit an activation, and the live
+    // (latest-epoch) token is never fenced. Lost tokens are modelled as
+    // "ghosts" that stay deliverable forever, which is strictly harsher
+    // than either substrate (the DES can't even resurface one).
+    run_prop(
+        "epoch fencing: one live token per walk",
+        cfg(80, 909),
+        |r| {
+            let walks = 1 + r.below(4);
+            let steps = 20 + r.below(120);
+            (walks, steps, r.next_u64())
+        },
+        |&(walks, steps, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut watch = TokenWatch::new(walks);
+            let mut live: Vec<u32> = vec![0; walks];
+            let mut ghosts: Vec<Vec<u32>> = vec![Vec::new(); walks];
+            let (mut losses, mut stale_attempts) = (0u64, 0u64);
+            let mut k = 0u64;
+            for _ in 0..steps {
+                let m = rng.below(walks);
+                match rng.below(3) {
+                    0 => {
+                        // Permanent loss: the live token becomes a ghost,
+                        // the watchdog regenerates under a bumped epoch.
+                        ghosts[m].push(live[m]);
+                        watch.lost(m, k);
+                        live[m] = watch.regenerate(m);
+                        losses += 1;
+                    }
+                    1 => {
+                        // The live token arrives and is serviced.
+                        if !watch.admit(m, live[m]) {
+                            return Err(format!(
+                                "live epoch {} fenced on walk {m}",
+                                live[m]
+                            ));
+                        }
+                        k += 1;
+                        watch.serviced(m, k);
+                    }
+                    _ => {
+                        // A random stale token resurfaces: must be a no-op.
+                        if !ghosts[m].is_empty() {
+                            let g = ghosts[m][rng.below(ghosts[m].len())];
+                            stale_attempts += 1;
+                            if watch.admit(m, g) {
+                                return Err(format!(
+                                    "stale epoch {g} admitted on walk {m} (live {})",
+                                    live[m]
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            // After the interleaving: per walk, the live epoch (and only
+            // it) still commits, and the accounting matches the history.
+            for m in 0..walks {
+                if !watch.admit(m, live[m]) {
+                    return Err(format!("final live epoch fenced on walk {m}"));
+                }
+                for g in &ghosts[m] {
+                    stale_attempts += 1;
+                    if watch.admit(m, *g) {
+                        return Err(format!("ghost epoch {g} admitted on walk {m}"));
+                    }
+                }
+            }
+            if watch.tokens_regenerated != losses {
+                return Err(format!(
+                    "regenerations {} != losses {losses}",
+                    watch.tokens_regenerated
+                ));
+            }
+            if watch.stale_drops != stale_attempts {
+                return Err(format!(
+                    "stale_drops {} != fenced deliveries {stale_attempts}",
+                    watch.stale_drops
+                ));
             }
             Ok(())
         },
