@@ -14,7 +14,7 @@
 //! Every key mirrors the CLI flag of the same name (`repro train --help`);
 //! unknown keys are an error (config typos should fail loudly).
 
-use super::{ExperimentConfig, Preset, RoutingRule, SolverChoice};
+use super::{ExperimentConfig, NetTransport, Preset, RoutingRule, SolverChoice};
 
 /// Parse a config file into (key, value) pairs.
 fn parse_kv(text: &str) -> anyhow::Result<Vec<(String, String)>> {
@@ -127,6 +127,15 @@ fn apply(cfg: &mut ExperimentConfig, key: &str, v: &str) -> anyhow::Result<()> {
         "lease-timeout" => cfg.faults.lease_timeout = v.parse().map_err(|_| bad("number"))?,
         "heterogeneity" => cfg.heterogeneity = crate::sim::Heterogeneity::parse(v)?,
         "workers" => cfg.workers = v.parse().map_err(|_| bad("integer"))?,
+        "net-workers" => cfg.net_workers = v.parse().map_err(|_| bad("integer"))?,
+        "transport" => {
+            cfg.transport = NetTransport::by_name(v).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "config key 'transport': bad transport '{v}' (valid: {})",
+                    NetTransport::VALID_NAMES
+                )
+            })?
+        }
         "routing" => {
             cfg.routing = match v {
                 "cycle" => RoutingRule::Cycle,
@@ -317,6 +326,18 @@ mod tests {
         assert_eq!(from_str("").unwrap().workers, 0, "default is auto (0)");
         let err = from_str("workers = many\n").unwrap_err().to_string();
         assert!(err.contains("workers"), "{err}");
+    }
+
+    #[test]
+    fn net_keys_parse() {
+        let cfg = from_str("net-workers = 4\ntransport = \"tcp\"\n").unwrap();
+        assert_eq!(cfg.net_workers, 4);
+        assert_eq!(cfg.transport, NetTransport::Tcp);
+        let cfg = from_str("").unwrap();
+        assert_eq!(cfg.net_workers, 2, "default worker-process count");
+        assert_eq!(cfg.transport, NetTransport::Uds, "default transport");
+        let err = from_str("transport = \"quic\"\n").unwrap_err().to_string();
+        assert!(err.contains("quic") && err.contains("uds"), "{err}");
     }
 
     #[test]

@@ -46,6 +46,38 @@ impl Default for StopRule {
     }
 }
 
+/// Transport for the net substrate's coordinator↔worker links.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NetTransport {
+    /// Unix domain socket under `/tmp` (default; lowest overhead, same-host).
+    #[default]
+    Uds,
+    /// TCP over loopback (`127.0.0.1`, ephemeral port). Higher overhead but
+    /// exercises the same code paths a multi-host deployment would.
+    Tcp,
+}
+
+impl NetTransport {
+    /// The names accepted by [`NetTransport::by_name`] — quoted by
+    /// config/CLI parse errors.
+    pub const VALID_NAMES: &'static str = "uds, tcp";
+
+    pub fn by_name(s: &str) -> Option<NetTransport> {
+        match s.to_ascii_lowercase().as_str() {
+            "uds" | "unix" => Some(NetTransport::Uds),
+            "tcp" => Some(NetTransport::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NetTransport::Uds => "uds",
+            NetTransport::Tcp => "tcp",
+        }
+    }
+}
+
 /// Which local-update engine to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SolverChoice {
@@ -99,6 +131,11 @@ pub struct ExperimentConfig {
     /// Worker-pool size for the thread substrate's M:N runtime (0 = auto:
     /// `available_parallelism − 1`). The DES ignores it.
     pub workers: usize,
+    /// Worker *process* count for the net substrate (clamped to `agents`).
+    /// The DES and thread substrates ignore it.
+    pub net_workers: usize,
+    /// Coordinator↔worker transport for the net substrate.
+    pub transport: NetTransport,
     pub partition: PartitionKind,
     pub data_dir: String,
     pub artifacts_dir: String,
@@ -130,6 +167,8 @@ impl Default for ExperimentConfig {
             heterogeneity: Heterogeneity::None,
             faults: crate::sim::FaultModel::NONE,
             workers: 0,
+            net_workers: 2,
+            transport: NetTransport::default(),
             partition: PartitionKind::Iid,
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),

@@ -16,6 +16,12 @@
 //!   recycling. The process thread count is bounded by the pool, never by
 //!   N — which is what lets the thread substrate reach the same agent
 //!   counts as the DES (`repro sweep --substrate threads`).
+//! * [`net`] — the multi-process substrate: N agents sharded across
+//!   `--net-workers` worker *processes* (each an M:N pool over its
+//!   shard), hub-and-spoke over Unix domain sockets or TCP through a
+//!   coordinator that owns membership, stop rules, the lease/epoch
+//!   token-watch and trace merge, speaking the versioned [`net::wire`]
+//!   codec (`repro sweep --substrate net`, EXPERIMENTS.md §Net).
 //!
 //! The public entry point is the builder:
 //!
@@ -31,6 +37,7 @@
 //! ```
 
 pub mod des;
+pub mod net;
 pub mod threads;
 
 pub use des::WalkEvent;
@@ -55,6 +62,10 @@ pub enum Substrate {
     /// Real OS threads: wall-clock time axis, true interleavings, the
     /// solver behind a serialized service thread.
     Threads,
+    /// Multiple worker *processes* over sockets (UDS or TCP): agents
+    /// sharded across `--net-workers` children, a coordinator owning
+    /// everything global, every payload through the versioned wire codec.
+    Net,
 }
 
 /// Namespace for the builder-style experiment API.
@@ -141,6 +152,18 @@ impl ExperimentBuilder {
                     )?);
                 }
                 service.shutdown();
+            }
+            Substrate::Net => {
+                anyhow::ensure!(
+                    cfg.stop.max_activations < u64::MAX
+                        || cfg.stop.max_comm < u64::MAX
+                        || cfg.stop.max_sim_time.is_finite(),
+                    "the net substrate needs a finite `activations`, `max-comm`, or \
+                     `max-sim-time` stop rule"
+                );
+                for &kind in &cfg.algos {
+                    traces.push(net::run(&cfg, kind, &workload)?);
+                }
             }
         }
         Ok(RunReport {

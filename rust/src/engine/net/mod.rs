@@ -1,0 +1,746 @@
+//! `Substrate::Net` — the multi-process socket substrate.
+//!
+//! The third engine: N agents sharded across W *worker processes*
+//! (contiguous ranges, each worker an M:N pooled runtime over its shard —
+//! see [`worker`]), connected hub-and-spoke to this coordinator over Unix
+//! domain sockets (default) or TCP. The coordinator owns everything
+//! global, exactly once:
+//!
+//! * membership and lifecycle — workers are spawned as `repro worker`
+//!   child processes, handshaken over the versioned [`wire`] codec
+//!   (protocol version + seed + config fingerprint), and reaped on stop;
+//!   a worker that dies mid-run surfaces as the crash-restart fault for
+//!   its whole agent range: the coordinator respawns it, re-handshakes
+//!   with `restarted = true`, and the lease watchdog regenerates any
+//!   token that died with it;
+//! * stop rules and activation accounting — workers report every serviced
+//!   delivery upstream ([`wire::Frame::Served`]), the coordinator counts
+//!   global `k`/comm, applies the evaluation cadence and trips the stop
+//!   rules;
+//! * the lease/epoch token-watch — workers *report* permanent token loss
+//!   ([`wire::Frame::TokenLost`]) instead of regenerating locally, so
+//!   exactly one authority bumps epochs ([`crate::sim::TokenWatch`]) and
+//!   stale duplicates are fenced both here (relay admission) and in the
+//!   workers (per-walk epoch floors);
+//! * trace merge — periodic metric points from `Served` evaluation
+//!   vectors, the final consensus from the `FinalState` rows every worker
+//!   ships home on drain, and the wire telemetry: `bytes_on_wire` is the
+//!   sum of real serialized bytes written by every worker and by the
+//!   coordinator itself, with per-worker `net_worker_bytes` /
+//!   `net_worker_frames` breakdowns.
+//!
+//! Determinism caveat (same as the thread substrate, amplified): socket
+//! scheduling makes interleavings real, so traces are *statistically*
+//! comparable to the DES, never byte-identical — `repro validate
+//! --scenario net_smoke` checks the `des_net_agree` band. See
+//! EXPERIMENTS.md §Net for the topology diagram and flag reference.
+
+pub mod wire;
+pub mod worker;
+
+pub use worker::worker_main;
+
+use self::wire::{config_hash, encode_config, read_frame, Frame, FrameWriter, PROTOCOL_VERSION};
+use super::{eval_due, should_stop, Workload};
+use crate::algo::behavior::{spec_for, EvalModel, TokenMsg};
+use crate::algo::AlgoKind;
+use crate::config::{ExperimentConfig, NetTransport, RoutingRule};
+use crate::metrics::{Trace, TracePoint};
+use crate::sim::TokenWatch;
+use crate::util::rng::Rng;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::process::Child;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Handshake + Ready barrier bound (covers a worker's workload rebuild).
+const STARTUP_TIMEOUT: Duration = Duration::from_secs(60);
+/// Bound on collecting `FinalState` frames after `Stop`.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+/// Bound on a child exiting after its `FinalState`; then SIGKILL.
+const REAP_TIMEOUT: Duration = Duration::from_secs(10);
+/// A walk with no upstream traffic for this long and no pending lease is
+/// presumed to have died with a worker — regenerate it.
+const SILENT_WALK_SECS: f64 = 2.0;
+/// Crash-loop guard: total worker respawns per run.
+const MAX_RESTARTS: usize = 8;
+
+/// Which worker owns `agent` under the contiguous sharding
+/// `[w·n/W, (w+1)·n/W)`.
+pub(crate) fn owner_of(agent: usize, n: usize, workers: usize) -> usize {
+    (agent * workers + workers - 1) / n
+}
+
+type NetWriter = FrameWriter<BufWriter<Box<dyn Write + Send>>>;
+type NetReader = BufReader<Box<dyn Read + Send>>;
+
+enum Listener {
+    Uds(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Accept one connection, polling in non-blocking mode so a child
+    /// that died before connecting cannot hang the coordinator forever.
+    fn accept_timeout(
+        &self,
+        deadline: Instant,
+    ) -> anyhow::Result<(Box<dyn Read + Send>, Box<dyn Write + Send>)> {
+        loop {
+            let pending = match self {
+                Listener::Uds(l) => match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)?;
+                        return Ok((Box::new(s.try_clone()?), Box::new(s)));
+                    }
+                    Err(e) => e,
+                },
+                Listener::Tcp(l) => match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)?;
+                        s.set_nodelay(true).ok();
+                        return Ok((Box::new(s.try_clone()?), Box::new(s)));
+                    }
+                    Err(e) => e,
+                },
+            };
+            anyhow::ensure!(
+                pending.kind() == std::io::ErrorKind::WouldBlock,
+                "net: accept failed: {pending}"
+            );
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "net: timed out waiting for a worker to connect"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+/// Removes the UDS socket file when the run ends (either way).
+struct SockCleanup(Option<String>);
+
+impl Drop for SockCleanup {
+    fn drop(&mut self) {
+        if let Some(path) = &self.0 {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Child-process guard: whatever error path unwinds the coordinator,
+/// every still-live worker is killed and reaped — `Substrate::Net` can
+/// never leave an orphan (asserted in `tests/net.rs`).
+struct Children(Vec<Option<Child>>);
+
+impl Children {
+    /// Wait for child `w` to exit on its own, escalating to SIGKILL after
+    /// the timeout.
+    fn reap(&mut self, w: usize, timeout: Duration) {
+        let Some(child) = self.0[w].as_mut() else {
+            return;
+        };
+        let deadline = Instant::now() + timeout;
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50))
+                }
+                _ => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+            }
+        }
+        self.0[w] = None;
+    }
+
+    fn reap_all(&mut self, timeout: Duration) {
+        for w in 0..self.0.len() {
+            self.reap(w, timeout);
+        }
+    }
+}
+
+impl Drop for Children {
+    fn drop(&mut self) {
+        for child in self.0.iter_mut().flatten() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Resolve the worker executable: the test harness overrides via
+/// `APIBCD_WORKER_EXE` (its own `current_exe` is the test binary, not
+/// `repro`), everyone else respawns the running binary.
+fn worker_exe() -> anyhow::Result<std::path::PathBuf> {
+    if let Ok(exe) = std::env::var("APIBCD_WORKER_EXE") {
+        return Ok(exe.into());
+    }
+    Ok(std::env::current_exe()?)
+}
+
+fn spawn_worker(exe: &std::path::Path, addr: &str, w: usize) -> anyhow::Result<Child> {
+    std::process::Command::new(exe)
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--index")
+        .arg(w.to_string())
+        .spawn()
+        .map_err(|e| anyhow::anyhow!("net: failed to spawn worker {w} ({}): {e}", exe.display()))
+}
+
+enum Event {
+    Frame(usize, Frame),
+    Eof(usize),
+}
+
+/// Pump one worker's socket into the coordinator's event channel until
+/// EOF or a decode error (both surface as `Eof` — a dead or byzantine
+/// worker is handled identically: crash-restart).
+fn spawn_reader(
+    w: usize,
+    mut reader: NetReader,
+    tx: mpsc::Sender<Event>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("net-reader-{w}"))
+        .spawn(move || {
+            loop {
+                match read_frame(&mut reader) {
+                    Ok(Some(frame)) => {
+                        if tx.send(Event::Frame(w, frame)).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(None) | Err(_) => {
+                        let _ = tx.send(Event::Eof(w));
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawn net reader thread")
+}
+
+/// Complete one worker's handshake on an accepted connection: read
+/// `Join`, send `Hello` + `Start`. Returns the worker index it announced.
+fn handshake(
+    reader: &mut NetReader,
+    writer: &mut NetWriter,
+    cfg: &ExperimentConfig,
+    kind: AlgoKind,
+    cfg_hash: u64,
+    w_count: usize,
+    restarted: bool,
+) -> anyhow::Result<usize> {
+    let index = match read_frame(reader)? {
+        Some(Frame::Join { version, worker }) => {
+            anyhow::ensure!(
+                version == PROTOCOL_VERSION,
+                "net: worker {worker} speaks protocol v{version}, coordinator v{PROTOCOL_VERSION}"
+            );
+            worker as usize
+        }
+        other => anyhow::bail!("net: expected Join, got {other:?}"),
+    };
+    anyhow::ensure!(index < w_count, "net: worker index {index} out of range");
+    writer.send(&Frame::Hello {
+        version: PROTOCOL_VERSION,
+        seed: cfg.seed,
+        config_hash: cfg_hash,
+        workers: w_count as u32,
+        restarted,
+    })?;
+    writer.send(&Frame::Start {
+        algo: kind,
+        cfg: cfg.clone(),
+    })?;
+    Ok(index)
+}
+
+/// Run one algorithm across W worker processes. Called per algorithm by
+/// the builder: each run gets fresh processes, a fresh socket, and a
+/// fresh watch.
+pub(crate) fn run(
+    cfg: &ExperimentConfig,
+    kind: AlgoKind,
+    workload: &Workload,
+) -> anyhow::Result<Trace> {
+    let spec = spec_for(kind);
+    let n = cfg.agents;
+    let shards = &workload.partition.shards;
+    let dim = shards[0].features * shards[0].classes;
+    let walks = spec.walks(cfg);
+    let routing = spec.routing(cfg);
+    let eval_model = spec.eval_model();
+    let problem = &workload.problem;
+    let w_count = cfg.net_workers.max(1).min(n);
+    let eval_every = cfg.eval_every.max(1);
+    // Wall-clock lease for the token watchdog: the configured (simulated)
+    // lease is microseconds — far below socket latency — so it is floored
+    // to something a real round-trip fits under.
+    let lease = Duration::from_secs_f64(cfg.faults.lease_timeout.max(0.05));
+    anyhow::ensure!(
+        cfg.stop.max_activations < u64::MAX
+            || cfg.stop.max_comm < u64::MAX
+            || cfg.stop.max_sim_time.is_finite(),
+        "the net substrate needs a finite `activations`, `max-comm`, or `max-sim-time` stop rule"
+    );
+
+    // Bind the rendezvous socket and publish its address to the children.
+    static SOCK_NONCE: AtomicU64 = AtomicU64::new(0);
+    let (listener, addr, _cleanup) = match cfg.transport {
+        NetTransport::Uds => {
+            let path = format!(
+                "/tmp/apibcd-net-{}-{}-{}.sock",
+                std::process::id(),
+                cfg.seed,
+                SOCK_NONCE.fetch_add(1, Ordering::Relaxed)
+            );
+            let _ = std::fs::remove_file(&path);
+            let l = UnixListener::bind(&path)
+                .map_err(|e| anyhow::anyhow!("net: bind {path}: {e}"))?;
+            l.set_nonblocking(true)?;
+            (
+                Listener::Uds(l),
+                format!("uds:{path}"),
+                SockCleanup(Some(path)),
+            )
+        }
+        NetTransport::Tcp => {
+            let l = TcpListener::bind("127.0.0.1:0")?;
+            l.set_nonblocking(true)?;
+            let addr = format!("tcp:{}", l.local_addr()?);
+            (Listener::Tcp(l), addr, SockCleanup(None))
+        }
+    };
+
+    let exe = worker_exe()?;
+    let cfg_hash = config_hash(&encode_config(cfg));
+    let mut children = Children((0..w_count).map(|_| None).collect());
+    for w in 0..w_count {
+        children.0[w] = Some(spawn_worker(&exe, &addr, w)?);
+    }
+
+    // Accept + handshake each worker (connection order is a race — the
+    // Join frame says who showed up).
+    let started = Instant::now();
+    let startup_deadline = started + STARTUP_TIMEOUT;
+    let mut writers: Vec<Option<NetWriter>> = (0..w_count).map(|_| None).collect();
+    let mut pending_readers: Vec<Option<NetReader>> = (0..w_count).map(|_| None).collect();
+    for _ in 0..w_count {
+        let (r, wtr) = listener.accept_timeout(startup_deadline)?;
+        let mut reader = BufReader::new(r);
+        let mut writer = FrameWriter::new(BufWriter::new(wtr));
+        let index = handshake(&mut reader, &mut writer, cfg, kind, cfg_hash, w_count, false)?;
+        anyhow::ensure!(
+            writers[index].is_none(),
+            "net: worker {index} connected twice"
+        );
+        writers[index] = Some(writer);
+        pending_readers[index] = Some(reader);
+    }
+    let (tx, rx) = mpsc::channel::<Event>();
+    let mut reader_handles = Vec::new();
+    for (w, reader) in pending_readers.into_iter().enumerate() {
+        reader_handles.push(spawn_reader(w, reader.unwrap(), tx.clone()));
+    }
+
+    // Ready barrier: every worker has rebuilt the workload and parked its
+    // agents. A worker dying here is a startup failure, not a fault.
+    let mut ready = vec![false; w_count];
+    while ready.iter().any(|r| !r) {
+        anyhow::ensure!(
+            Instant::now() < startup_deadline,
+            "net: timed out waiting for workers to become ready"
+        );
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(Event::Frame(_, Frame::Ready { worker })) => {
+                ready[worker as usize] = true;
+            }
+            Ok(Event::Frame(_, _)) => {}
+            Ok(Event::Eof(w)) => {
+                anyhow::bail!("net: worker {w} exited during startup")
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("net: all workers disconnected during startup")
+            }
+        }
+    }
+    for writer in writers.iter_mut().flatten() {
+        writer.send(&Frame::Go)?;
+    }
+
+    // Token kickoff: M zero tokens spread around the traversal cycle
+    // (same placement rule as the other substrates); gossip algorithms
+    // kick themselves off on `Go`.
+    let cycle = if routing == RoutingRule::Cycle {
+        workload.topo.traversal_cycle()
+    } else {
+        Vec::new()
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+    let mut last_holder = vec![0usize; walks];
+    for m in 0..walks {
+        let (start, pos) = if cycle.is_empty() {
+            (rng.below(n), 0)
+        } else {
+            let pos = m * cycle.len() / walks;
+            (cycle[pos], pos)
+        };
+        last_holder[m] = start;
+        let owner = owner_of(start, n, w_count);
+        if let Some(writer) = writers[owner].as_mut() {
+            writer.send(&Frame::Token {
+                dest: start as u32,
+                msg: TokenMsg {
+                    id: m,
+                    round: 0,
+                    payload: vec![0.0f32; dim],
+                    cycle_pos: pos,
+                    epoch: 0,
+                },
+            })?;
+        }
+    }
+
+    // ---- main event loop ----------------------------------------------
+    let mut trace = Trace::new(format!("{}(net)", kind.name()));
+    trace.push(TracePoint {
+        iter: 0,
+        time: 0.0,
+        comm: 0,
+        objective: f64::NAN,
+        metric: problem.metric(&vec![0.0f32; dim]),
+    });
+    let mut k = 0u64;
+    let mut comm = 0u64;
+    let mut watch = TokenWatch::new(walks);
+    let now0 = Instant::now();
+    let mut last_seen = vec![now0; walks];
+    let mut pending_regen: Vec<Option<(Instant, TokenMsg)>> = (0..walks).map(|_| None).collect();
+    let mut latest = vec![vec![0.0f32; dim]; n];
+    let mut consensus = vec![0.0f32; dim];
+    let mut final_token: Option<Vec<f32>> = None;
+    let mut crash_restarts = 0u64;
+    let mut restarts_used = 0usize;
+    let threads_before = crate::util::os_thread_count().unwrap_or(0);
+
+    let consensus_metric = |latest: &[Vec<f32>], consensus: &mut Vec<f32>| -> f64 {
+        consensus.fill(0.0);
+        for x in latest {
+            crate::linalg::axpy(1.0 / n as f32, x, consensus);
+        }
+        problem.metric(consensus)
+    };
+
+    let mut stopping = false;
+    while !stopping {
+        let event = rx.recv_timeout(Duration::from_millis(100));
+        let now = Instant::now();
+        let elapsed = started.elapsed().as_secs_f64();
+        match event {
+            Ok(Event::Frame(
+                _,
+                Frame::Served {
+                    agent,
+                    walk,
+                    epoch,
+                    updates,
+                    comm: c,
+                    x,
+                },
+            )) => {
+                comm += c;
+                k += updates as u64;
+                if let Some(wid) = walk {
+                    let wid = wid as usize;
+                    if wid < walks && updates > 0 && epoch == watch.epoch(wid) {
+                        watch.serviced(wid, k);
+                        last_seen[wid] = now;
+                        last_holder[wid] = agent as usize;
+                        pending_regen[wid] = None;
+                    }
+                }
+                if let Some(x) = x {
+                    if x.len() == dim {
+                        let due = eval_due(k, updates, eval_every);
+                        let metric = match eval_model {
+                            EvalModel::AgentMean => {
+                                latest[(agent as usize).min(n - 1)] = x;
+                                due.then(|| consensus_metric(&latest, &mut consensus))
+                            }
+                            EvalModel::Token => {
+                                let m = due.then(|| problem.metric(&x));
+                                final_token = Some(x);
+                                m
+                            }
+                        };
+                        if let Some(metric) = metric {
+                            trace.push(TracePoint {
+                                iter: k,
+                                time: elapsed,
+                                comm,
+                                objective: f64::NAN,
+                                metric,
+                            });
+                        }
+                    }
+                }
+                if should_stop(&cfg.stop, k, elapsed, comm) {
+                    stopping = true;
+                }
+            }
+            Ok(Event::Frame(_, Frame::Token { dest, msg })) => {
+                // Relay admission: only current-epoch tokens cross the
+                // hub (the coordinator is the epoch authority, so the
+                // equality fence is exact). A nonsense walk id from a
+                // byzantine worker is dropped, never indexed.
+                if walks > 0 && (msg.id >= walks || !watch.admit(msg.id, msg.epoch)) {
+                    continue;
+                }
+                let dest = (dest as usize).min(n - 1);
+                if msg.id < walks {
+                    last_seen[msg.id] = now;
+                    last_holder[msg.id] = dest;
+                }
+                let owner = owner_of(dest, n, w_count);
+                if let Some(writer) = writers[owner].as_mut() {
+                    let _ = writer.send(&Frame::Token {
+                        dest: dest as u32,
+                        msg,
+                    });
+                }
+            }
+            Ok(Event::Frame(_, Frame::TokenLost { holder, msg })) => {
+                // The walk is dead until the lease expires; then the token
+                // regenerates at its last holder under a bumped epoch.
+                if msg.id < walks && msg.epoch == watch.epoch(msg.id) {
+                    watch.lost(msg.id, k);
+                    last_holder[msg.id] = (holder as usize).min(n - 1);
+                    pending_regen[msg.id] = Some((now + lease, msg));
+                }
+            }
+            Ok(Event::Frame(_, _)) => {} // duplicate Ready etc.
+            Ok(Event::Eof(w)) => {
+                // A worker died mid-run: the crash-restart fault for its
+                // whole agent range. Respawn, re-handshake (`restarted`),
+                // and let the watchdog regenerate its walks.
+                restarts_used += 1;
+                anyhow::ensure!(
+                    restarts_used <= MAX_RESTARTS,
+                    "net: worker {w} crash-looped ({MAX_RESTARTS} respawns exhausted)"
+                );
+                let lo = w * n / w_count;
+                let hi = (w + 1) * n / w_count;
+                crash_restarts += (hi - lo) as u64;
+                writers[w] = None;
+                children.reap(w, Duration::from_millis(500));
+                children.0[w] = Some(spawn_worker(&exe, &addr, w)?);
+                let (r, wtr) = listener.accept_timeout(now + STARTUP_TIMEOUT)?;
+                let mut reader = BufReader::new(r);
+                let mut writer = FrameWriter::new(BufWriter::new(wtr));
+                let index =
+                    handshake(&mut reader, &mut writer, cfg, kind, cfg_hash, w_count, true)?;
+                anyhow::ensure!(index == w, "net: respawned worker announced index {index}, expected {w}");
+                // Synchronous Ready wait (no global barrier on restart),
+                // then Go; frames from other workers queue up meanwhile.
+                loop {
+                    match read_frame(&mut reader)? {
+                        Some(Frame::Ready { .. }) => break,
+                        Some(_) => {}
+                        None => anyhow::bail!("net: worker {w} died again during restart"),
+                    }
+                }
+                writer.send(&Frame::Go)?;
+                writers[w] = Some(writer);
+                reader_handles.push(spawn_reader(w, reader, tx.clone()));
+                // Any walk last seen on the dead worker died with it —
+                // schedule its lease now instead of waiting out the
+                // silent-walk timer.
+                for m in 0..walks {
+                    if pending_regen[m].is_none() && owner_of(last_holder[m], n, w_count) == w {
+                        watch.lost(m, k);
+                        pending_regen[m] = Some((
+                            now + lease,
+                            TokenMsg {
+                                id: m,
+                                round: 0,
+                                payload: vec![0.0f32; dim],
+                                cycle_pos: 0,
+                                epoch: 0,
+                            },
+                        ));
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("net: every worker connection closed unexpectedly")
+            }
+        }
+
+        // Watchdog tick: expire leases, catch silent walks, honor the
+        // wall-clock stop rule even when no frames arrive.
+        if started.elapsed().as_secs_f64() >= cfg.stop.max_sim_time {
+            stopping = true;
+        }
+        let now = Instant::now();
+        for m in 0..walks {
+            if let Some((deadline, _)) = pending_regen[m] {
+                if now >= deadline {
+                    let (_, mut msg) = pending_regen[m].take().unwrap();
+                    msg.epoch = watch.regenerate(m);
+                    let dest = last_holder[m];
+                    last_seen[m] = now;
+                    let owner = owner_of(dest, n, w_count);
+                    if let Some(writer) = writers[owner].as_mut() {
+                        let _ = writer.send(&Frame::Token {
+                            dest: dest as u32,
+                            msg,
+                        });
+                    }
+                }
+            } else if (now - last_seen[m]).as_secs_f64() > SILENT_WALK_SECS {
+                // No traffic and no pending lease: the token is gone
+                // (e.g. it rode a frame that died with a worker's socket
+                // buffer). Regenerate immediately with a fresh zero
+                // payload — the same recovery the DES lease performs.
+                watch.lost(m, k);
+                let epoch = watch.regenerate(m);
+                last_seen[m] = now;
+                let dest = last_holder[m];
+                let owner = owner_of(dest, n, w_count);
+                if let Some(writer) = writers[owner].as_mut() {
+                    let _ = writer.send(&Frame::Token {
+                        dest: dest as u32,
+                        msg: TokenMsg {
+                            id: m,
+                            round: 0,
+                            payload: vec![0.0f32; dim],
+                            cycle_pos: 0,
+                            epoch,
+                        },
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- drain --------------------------------------------------------
+    for writer in writers.iter_mut().flatten() {
+        let _ = writer.send(&Frame::Stop);
+    }
+    let mut got_final = vec![false; w_count];
+    let mut worker_bytes = vec![0u64; w_count];
+    let mut worker_frames = vec![0u64; w_count];
+    let drain_deadline = Instant::now() + DRAIN_TIMEOUT;
+    while got_final.iter().any(|g| !g) && Instant::now() < drain_deadline {
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(Event::Frame(
+                w,
+                Frame::FinalState {
+                    rows,
+                    retired,
+                    bytes_sent,
+                    frames_sent,
+                },
+            )) => {
+                got_final[w] = true;
+                worker_bytes[w] = bytes_sent;
+                worker_frames[w] = frames_sent;
+                for (agent, row) in rows {
+                    let agent = agent as usize;
+                    if agent < n && row.len() == dim {
+                        latest[agent] = row;
+                    }
+                }
+                if let Some(x) = retired.into_iter().last() {
+                    if x.len() == dim {
+                        final_token = Some(x);
+                    }
+                }
+            }
+            Ok(Event::Frame(_, Frame::Served { updates, comm: c, .. })) => {
+                // Late in-flight reports still count toward the totals.
+                k += updates as u64;
+                comm += c;
+            }
+            Ok(_) => {}
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    children.reap_all(REAP_TIMEOUT);
+    // The downstream half of the total: frames the coordinator itself put
+    // on the wire (handshakes, relays, regenerations, Stop).
+    let coord_bytes: u64 = writers.iter().flatten().map(|w| w.bytes).sum();
+    drop(tx);
+    drop(writers);
+    for h in reader_handles {
+        let _ = h.join();
+    }
+
+    // Final point: consensus over the shipped rows, or the newest token.
+    let metric = match eval_model {
+        EvalModel::AgentMean => Some(consensus_metric(&latest, &mut consensus)),
+        EvalModel::Token => final_token.map(|x| problem.metric(&x)),
+    };
+    if let Some(metric) = metric {
+        trace.push(TracePoint {
+            iter: k,
+            time: started.elapsed().as_secs_f64(),
+            comm,
+            objective: f64::NAN,
+            metric,
+        });
+    }
+    trace.wall_secs = started.elapsed().as_secs_f64();
+    trace.peak_threads = crate::util::os_thread_count()
+        .unwrap_or(0)
+        .max(threads_before);
+    trace.tokens_regenerated = watch.tokens_regenerated;
+    trace.recovery_activations = watch.recovery_activations;
+    trace.crash_restarts = crash_restarts;
+    trace.net_worker_bytes = worker_bytes;
+    trace.net_worker_frames = worker_frames;
+    trace.bytes_on_wire = trace.net_worker_bytes.iter().sum::<u64>() + coord_bytes;
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_ranges_partition_the_agents() {
+        for n in [2usize, 5, 6, 10, 16, 97] {
+            for workers in 1..=n.min(8) {
+                for w in 0..workers {
+                    let lo = w * n / workers;
+                    let hi = (w + 1) * n / workers;
+                    for agent in lo..hi {
+                        assert_eq!(
+                            owner_of(agent, n, workers),
+                            w,
+                            "agent {agent} of {n} across {workers}"
+                        );
+                    }
+                }
+                // Every agent maps somewhere valid.
+                for agent in 0..n {
+                    assert!(owner_of(agent, n, workers) < workers);
+                }
+            }
+        }
+    }
+}

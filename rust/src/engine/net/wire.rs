@@ -1,0 +1,1106 @@
+//! Versioned wire codec for the net substrate.
+//!
+//! Every byte that crosses a process boundary goes through this module:
+//! length-prefixed frames (u32 LE length, then a tag byte and the frame
+//! fields), a handshake carrying the protocol version + seed + config
+//! hash, and a full [`crate::config::ExperimentConfig`] codec so workers
+//! rebuild the exact workload the coordinator validated.
+//!
+//! Decoding **never panics**: every read is bounds-checked, every declared
+//! collection length is validated against the bytes actually present
+//! before anything is allocated, and a frame longer than [`MAX_FRAME`] is
+//! rejected at the length prefix — a malformed or adversarial peer can at
+//! worst produce an `Err`, which the worker/coordinator treat as a dead
+//! connection. Roundtrip (`encode ∘ decode = id`) and garbage-rejection
+//! properties live in this module's tests.
+
+use crate::algo::behavior::TokenMsg;
+use crate::algo::AlgoKind;
+use crate::config::{
+    ExperimentConfig, NetTransport, RoutingRule, SolverChoice, StopRule,
+};
+use crate::data::shard::PartitionKind;
+use crate::sim::{FaultModel, Heterogeneity, LatencyModel, TimingModel};
+use std::io::{Read, Write};
+
+/// Bumped on any incompatible frame/config layout change; both sides of
+/// the handshake must agree exactly.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Upper bound on one frame body. Generous (a 4096-agent FinalState with
+/// large rows fits with room to spare) but small enough that a garbage
+/// length prefix cannot drive a multi-gigabyte allocation.
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// One message of the coordinator↔worker protocol. Handshake order:
+/// worker sends `Join`, coordinator replies `Hello` + `Start`, worker
+/// builds its workload and sends `Ready`, coordinator sends `Go` once all
+/// workers are ready (followed by the initial `Token` kickoff frames for
+/// token algorithms). During the run `Token`/`Served`/`TokenLost` flow
+/// both ways / up; `Stop` flows down; `FinalState` is the worker's last
+/// frame before EOF.
+#[derive(Debug)]
+pub enum Frame {
+    /// Worker → coordinator, first frame on the connection.
+    Join { version: u32, worker: u32 },
+    /// Coordinator → worker: protocol/seed agreement. `config_hash` is
+    /// the FNV-1a of the encoded config the `Start` frame carries;
+    /// `restarted` marks a post-crash respawn (the worker re-syncs its
+    /// agents from the first payloads that reach them).
+    Hello {
+        version: u32,
+        seed: u64,
+        config_hash: u64,
+        workers: u32,
+        restarted: bool,
+    },
+    /// Coordinator → worker: the algorithm to run and the full config.
+    Start { algo: AlgoKind, cfg: ExperimentConfig },
+    /// Worker → coordinator: workload built, agents parked, pool up.
+    Ready { worker: u32 },
+    /// Coordinator → worker: start serving (gossip kickoff happens on
+    /// receipt; token kickoff arrives as `Token` frames).
+    Go,
+    /// A token/gossip message for `dest` (relayed through the
+    /// coordinator when `dest` lives on another worker).
+    Token { dest: u32, msg: TokenMsg },
+    /// Worker → coordinator: one delivery was serviced. `walk` is the
+    /// token walk id (`None` for gossip), `comm` the transmission
+    /// attempts this activation cost, `x` the evaluation vector (the
+    /// agent's block or the token payload) when an update committed.
+    Served {
+        agent: u32,
+        walk: Option<u32>,
+        epoch: u32,
+        updates: u32,
+        comm: u64,
+        x: Option<Vec<f32>>,
+    },
+    /// Worker → coordinator: a hop exhausted its retransmission budget
+    /// under permanent loss — the walk is dead until the coordinator's
+    /// lease regenerates the token at `holder`.
+    TokenLost { holder: u32, msg: TokenMsg },
+    /// Coordinator → worker: drain and send `FinalState`.
+    Stop,
+    /// Worker → coordinator, final frame: the worker's agent rows, any
+    /// token payloads retired during the drain, and its wire counters.
+    FinalState {
+        rows: Vec<(u32, Vec<f32>)>,
+        retired: Vec<Vec<f32>>,
+        bytes_sent: u64,
+        frames_sent: u64,
+    },
+}
+
+const TAG_JOIN: u8 = 1;
+const TAG_HELLO: u8 = 2;
+const TAG_START: u8 = 3;
+const TAG_READY: u8 = 4;
+const TAG_GO: u8 = 5;
+const TAG_TOKEN: u8 = 6;
+const TAG_SERVED: u8 = 7;
+const TAG_TOKEN_LOST: u8 = 8;
+const TAG_STOP: u8 = 9;
+const TAG_FINAL_STATE: u8 = 10;
+
+// ---------------------------------------------------------------- encode
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_bool(b: &mut Vec<u8>, v: bool) {
+    b.push(v as u8);
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(b: &mut Vec<u8>, v: &[f32]) {
+    put_u32(b, v.len() as u32);
+    for &x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_token(b: &mut Vec<u8>, msg: &TokenMsg) {
+    put_u64(b, msg.id as u64);
+    put_u64(b, msg.round);
+    put_f32s(b, &msg.payload);
+    put_u64(b, msg.cycle_pos as u64);
+    put_u32(b, msg.epoch);
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked cursor over one frame body. Every accessor returns an
+/// error instead of panicking when the declared data is not there.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.remaining() >= n,
+            "wire: truncated frame (wanted {n} bytes at offset {}, {} left)",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> anyhow::Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => anyhow::bail!("wire: invalid bool byte {v}"),
+        }
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("wire: string field is not UTF-8"))
+    }
+
+    pub fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        // Validate the declared length against the bytes present *before*
+        // allocating — a garbage count must not drive a huge reservation.
+        anyhow::ensure!(
+            n <= self.remaining() / 4,
+            "wire: f32 vector declares {n} elements but only {} bytes remain",
+            self.remaining()
+        );
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+
+    fn token(&mut self) -> anyhow::Result<TokenMsg> {
+        Ok(TokenMsg {
+            id: self.u64()? as usize,
+            round: self.u64()?,
+            payload: self.f32s()?,
+            cycle_pos: self.u64()? as usize,
+            epoch: self.u32()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------- config codec
+
+fn put_routing(b: &mut Vec<u8>, r: RoutingRule) {
+    put_u8(
+        b,
+        match r {
+            RoutingRule::Cycle => 0,
+            RoutingRule::Uniform => 1,
+            RoutingRule::Metropolis => 2,
+        },
+    );
+}
+
+fn get_routing(r: &mut Reader) -> anyhow::Result<RoutingRule> {
+    match r.u8()? {
+        0 => Ok(RoutingRule::Cycle),
+        1 => Ok(RoutingRule::Uniform),
+        2 => Ok(RoutingRule::Metropolis),
+        v => anyhow::bail!("wire: unknown routing tag {v}"),
+    }
+}
+
+fn put_timing(b: &mut Vec<u8>, t: TimingModel) {
+    match t {
+        TimingModel::Measured => put_u8(b, 0),
+        TimingModel::Fixed(v) => {
+            put_u8(b, 1);
+            put_f64(b, v);
+        }
+        TimingModel::Jittered { mean, jitter } => {
+            put_u8(b, 2);
+            put_f64(b, mean);
+            put_f64(b, jitter);
+        }
+    }
+}
+
+fn get_timing(r: &mut Reader) -> anyhow::Result<TimingModel> {
+    match r.u8()? {
+        0 => Ok(TimingModel::Measured),
+        1 => Ok(TimingModel::Fixed(r.f64()?)),
+        2 => Ok(TimingModel::Jittered {
+            mean: r.f64()?,
+            jitter: r.f64()?,
+        }),
+        v => anyhow::bail!("wire: unknown timing tag {v}"),
+    }
+}
+
+fn put_latency(b: &mut Vec<u8>, l: LatencyModel) {
+    match l {
+        LatencyModel::Uniform { lo, hi } => {
+            put_u8(b, 0);
+            put_f64(b, lo);
+            put_f64(b, hi);
+        }
+        LatencyModel::Fixed(v) => {
+            put_u8(b, 1);
+            put_f64(b, v);
+        }
+    }
+}
+
+fn get_latency(r: &mut Reader) -> anyhow::Result<LatencyModel> {
+    match r.u8()? {
+        0 => Ok(LatencyModel::Uniform {
+            lo: r.f64()?,
+            hi: r.f64()?,
+        }),
+        1 => Ok(LatencyModel::Fixed(r.f64()?)),
+        v => anyhow::bail!("wire: unknown latency tag {v}"),
+    }
+}
+
+fn put_hetero(b: &mut Vec<u8>, h: Heterogeneity) {
+    match h {
+        Heterogeneity::None => put_u8(b, 0),
+        Heterogeneity::Uniform { spread } => {
+            put_u8(b, 1);
+            put_f64(b, spread);
+        }
+        Heterogeneity::Bimodal { frac, slow } => {
+            put_u8(b, 2);
+            put_f64(b, frac);
+            put_f64(b, slow);
+        }
+        Heterogeneity::Pareto { alpha } => {
+            put_u8(b, 3);
+            put_f64(b, alpha);
+        }
+    }
+}
+
+fn get_hetero(r: &mut Reader) -> anyhow::Result<Heterogeneity> {
+    match r.u8()? {
+        0 => Ok(Heterogeneity::None),
+        1 => Ok(Heterogeneity::Uniform { spread: r.f64()? }),
+        2 => Ok(Heterogeneity::Bimodal {
+            frac: r.f64()?,
+            slow: r.f64()?,
+        }),
+        3 => Ok(Heterogeneity::Pareto { alpha: r.f64()? }),
+        v => anyhow::bail!("wire: unknown heterogeneity tag {v}"),
+    }
+}
+
+fn put_faults(b: &mut Vec<u8>, f: &FaultModel) {
+    put_f64(b, f.drop_prob);
+    put_f64(b, f.retry_timeout);
+    put_f64(b, f.dropout_frac);
+    put_f64(b, f.dropout_len);
+    put_u32(b, f.retx_budget);
+    put_bool(b, f.permanent_loss);
+    put_f64(b, f.crash_prob);
+    put_f64(b, f.crash_len);
+    put_f64(b, f.partition_prob);
+    put_f64(b, f.partition_len);
+    put_f64(b, f.lease_timeout);
+}
+
+fn get_faults(r: &mut Reader) -> anyhow::Result<FaultModel> {
+    Ok(FaultModel {
+        drop_prob: r.f64()?,
+        retry_timeout: r.f64()?,
+        dropout_frac: r.f64()?,
+        dropout_len: r.f64()?,
+        retx_budget: r.u32()?,
+        permanent_loss: r.bool()?,
+        crash_prob: r.f64()?,
+        crash_len: r.f64()?,
+        partition_prob: r.f64()?,
+        partition_len: r.f64()?,
+        lease_timeout: r.f64()?,
+    })
+}
+
+/// Serialize every field of the config, in declaration order. The result
+/// feeds both the `Start` frame and [`config_hash`] (the handshake's
+/// scenario fingerprint — two processes agreeing on the hash agree on the
+/// entire workload).
+pub fn encode_config(cfg: &ExperimentConfig) -> Vec<u8> {
+    let mut b = Vec::with_capacity(256);
+    put_str(&mut b, &cfg.name);
+    put_str(&mut b, &cfg.profile);
+    put_u64(&mut b, cfg.agents as u64);
+    put_f64(&mut b, cfg.xi);
+    put_str(&mut b, &cfg.topology);
+    put_u64(&mut b, cfg.walks as u64);
+    put_f64(&mut b, cfg.tau_ibcd);
+    put_f64(&mut b, cfg.tau_api);
+    put_f64(&mut b, cfg.alpha);
+    put_f64(&mut b, cfg.rho);
+    put_u64(&mut b, cfg.inner_k as u64);
+    put_f64(&mut b, cfg.beta);
+    put_u64(&mut b, cfg.seed);
+    put_routing(&mut b, cfg.routing);
+    put_u32(&mut b, cfg.algos.len() as u32);
+    for kind in &cfg.algos {
+        put_str(&mut b, kind.name());
+    }
+    put_u64(&mut b, cfg.stop.max_activations);
+    put_f64(&mut b, cfg.stop.max_sim_time);
+    put_u64(&mut b, cfg.stop.max_comm);
+    put_u64(&mut b, cfg.eval_every);
+    put_timing(&mut b, cfg.timing);
+    put_latency(&mut b, cfg.latency);
+    put_hetero(&mut b, cfg.heterogeneity);
+    put_faults(&mut b, &cfg.faults);
+    put_u64(&mut b, cfg.workers as u64);
+    put_u64(&mut b, cfg.net_workers as u64);
+    put_u8(
+        &mut b,
+        match cfg.transport {
+            NetTransport::Uds => 0,
+            NetTransport::Tcp => 1,
+        },
+    );
+    put_u8(
+        &mut b,
+        match cfg.partition {
+            PartitionKind::Iid => 0,
+            PartitionKind::Contiguous => 1,
+        },
+    );
+    put_str(&mut b, &cfg.data_dir);
+    put_str(&mut b, &cfg.artifacts_dir);
+    put_u8(
+        &mut b,
+        match cfg.solver {
+            SolverChoice::Auto => 0,
+            SolverChoice::Native => 1,
+            SolverChoice::Pjrt => 2,
+        },
+    );
+    b
+}
+
+/// Inverse of [`encode_config`].
+pub fn decode_config(r: &mut Reader) -> anyhow::Result<ExperimentConfig> {
+    let name = r.str()?;
+    let profile = r.str()?;
+    let agents = r.u64()? as usize;
+    let xi = r.f64()?;
+    let topology = r.str()?;
+    let walks = r.u64()? as usize;
+    let tau_ibcd = r.f64()?;
+    let tau_api = r.f64()?;
+    let alpha = r.f64()?;
+    let rho = r.f64()?;
+    let inner_k = r.u64()? as usize;
+    let beta = r.f64()?;
+    let seed = r.u64()?;
+    let routing = get_routing(r)?;
+    let n_algos = r.u32()? as usize;
+    anyhow::ensure!(
+        n_algos <= r.remaining() / 4,
+        "wire: algo list declares {n_algos} entries but only {} bytes remain",
+        r.remaining()
+    );
+    let mut algos = Vec::with_capacity(n_algos);
+    for _ in 0..n_algos {
+        let s = r.str()?;
+        let kind = AlgoKind::by_name(&s)
+            .ok_or_else(|| anyhow::anyhow!("wire: unknown algorithm '{s}'"))?;
+        algos.push(kind);
+    }
+    let stop = StopRule {
+        max_activations: r.u64()?,
+        max_sim_time: r.f64()?,
+        max_comm: r.u64()?,
+    };
+    let eval_every = r.u64()?;
+    let timing = get_timing(r)?;
+    let latency = get_latency(r)?;
+    let heterogeneity = get_hetero(r)?;
+    let faults = get_faults(r)?;
+    let workers = r.u64()? as usize;
+    let net_workers = r.u64()? as usize;
+    let transport = match r.u8()? {
+        0 => NetTransport::Uds,
+        1 => NetTransport::Tcp,
+        v => anyhow::bail!("wire: unknown transport tag {v}"),
+    };
+    let partition = match r.u8()? {
+        0 => PartitionKind::Iid,
+        1 => PartitionKind::Contiguous,
+        v => anyhow::bail!("wire: unknown partition tag {v}"),
+    };
+    let data_dir = r.str()?;
+    let artifacts_dir = r.str()?;
+    let solver = match r.u8()? {
+        0 => SolverChoice::Auto,
+        1 => SolverChoice::Native,
+        2 => SolverChoice::Pjrt,
+        v => anyhow::bail!("wire: unknown solver tag {v}"),
+    };
+    Ok(ExperimentConfig {
+        name,
+        profile,
+        agents,
+        xi,
+        topology,
+        walks,
+        tau_ibcd,
+        tau_api,
+        alpha,
+        rho,
+        inner_k,
+        beta,
+        seed,
+        routing,
+        algos,
+        stop,
+        eval_every,
+        timing,
+        latency,
+        heterogeneity,
+        faults,
+        workers,
+        net_workers,
+        transport,
+        partition,
+        data_dir,
+        artifacts_dir,
+        solver,
+    })
+}
+
+/// FNV-1a 64 over the encoded config bytes — the handshake's scenario
+/// fingerprint.
+pub fn config_hash(encoded: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in encoded {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------- frame codec
+
+/// Encode one frame body (tag byte + fields, no length prefix).
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let mut b = Vec::with_capacity(32);
+    match f {
+        Frame::Join { version, worker } => {
+            put_u8(&mut b, TAG_JOIN);
+            put_u32(&mut b, *version);
+            put_u32(&mut b, *worker);
+        }
+        Frame::Hello {
+            version,
+            seed,
+            config_hash,
+            workers,
+            restarted,
+        } => {
+            put_u8(&mut b, TAG_HELLO);
+            put_u32(&mut b, *version);
+            put_u64(&mut b, *seed);
+            put_u64(&mut b, *config_hash);
+            put_u32(&mut b, *workers);
+            put_bool(&mut b, *restarted);
+        }
+        Frame::Start { algo, cfg } => {
+            put_u8(&mut b, TAG_START);
+            put_str(&mut b, algo.name());
+            b.extend_from_slice(&encode_config(cfg));
+        }
+        Frame::Ready { worker } => {
+            put_u8(&mut b, TAG_READY);
+            put_u32(&mut b, *worker);
+        }
+        Frame::Go => put_u8(&mut b, TAG_GO),
+        Frame::Token { dest, msg } => {
+            put_u8(&mut b, TAG_TOKEN);
+            put_u32(&mut b, *dest);
+            put_token(&mut b, msg);
+        }
+        Frame::Served {
+            agent,
+            walk,
+            epoch,
+            updates,
+            comm,
+            x,
+        } => {
+            put_u8(&mut b, TAG_SERVED);
+            put_u32(&mut b, *agent);
+            match walk {
+                None => put_u8(&mut b, 0),
+                Some(w) => {
+                    put_u8(&mut b, 1);
+                    put_u32(&mut b, *w);
+                }
+            }
+            put_u32(&mut b, *epoch);
+            put_u32(&mut b, *updates);
+            put_u64(&mut b, *comm);
+            match x {
+                None => put_u8(&mut b, 0),
+                Some(v) => {
+                    put_u8(&mut b, 1);
+                    put_f32s(&mut b, v);
+                }
+            }
+        }
+        Frame::TokenLost { holder, msg } => {
+            put_u8(&mut b, TAG_TOKEN_LOST);
+            put_u32(&mut b, *holder);
+            put_token(&mut b, msg);
+        }
+        Frame::Stop => put_u8(&mut b, TAG_STOP),
+        Frame::FinalState {
+            rows,
+            retired,
+            bytes_sent,
+            frames_sent,
+        } => {
+            put_u8(&mut b, TAG_FINAL_STATE);
+            put_u32(&mut b, rows.len() as u32);
+            for (agent, row) in rows {
+                put_u32(&mut b, *agent);
+                put_f32s(&mut b, row);
+            }
+            put_u32(&mut b, retired.len() as u32);
+            for payload in retired {
+                put_f32s(&mut b, payload);
+            }
+            put_u64(&mut b, *bytes_sent);
+            put_u64(&mut b, *frames_sent);
+        }
+    }
+    b
+}
+
+/// Decode one frame body. Rejects unknown tags, truncated fields, and
+/// trailing bytes; never panics on arbitrary input.
+pub fn decode_frame(body: &[u8]) -> anyhow::Result<Frame> {
+    let mut r = Reader::new(body);
+    let frame = match r.u8()? {
+        TAG_JOIN => Frame::Join {
+            version: r.u32()?,
+            worker: r.u32()?,
+        },
+        TAG_HELLO => Frame::Hello {
+            version: r.u32()?,
+            seed: r.u64()?,
+            config_hash: r.u64()?,
+            workers: r.u32()?,
+            restarted: r.bool()?,
+        },
+        TAG_START => {
+            let s = r.str()?;
+            let algo = AlgoKind::by_name(&s)
+                .ok_or_else(|| anyhow::anyhow!("wire: unknown algorithm '{s}'"))?;
+            Frame::Start {
+                algo,
+                cfg: decode_config(&mut r)?,
+            }
+        }
+        TAG_READY => Frame::Ready { worker: r.u32()? },
+        TAG_GO => Frame::Go,
+        TAG_TOKEN => Frame::Token {
+            dest: r.u32()?,
+            msg: r.token()?,
+        },
+        TAG_SERVED => {
+            let agent = r.u32()?;
+            let walk = match r.u8()? {
+                0 => None,
+                1 => Some(r.u32()?),
+                v => anyhow::bail!("wire: invalid option byte {v}"),
+            };
+            let epoch = r.u32()?;
+            let updates = r.u32()?;
+            let comm = r.u64()?;
+            let x = match r.u8()? {
+                0 => None,
+                1 => Some(r.f32s()?),
+                v => anyhow::bail!("wire: invalid option byte {v}"),
+            };
+            Frame::Served {
+                agent,
+                walk,
+                epoch,
+                updates,
+                comm,
+                x,
+            }
+        }
+        TAG_TOKEN_LOST => Frame::TokenLost {
+            holder: r.u32()?,
+            msg: r.token()?,
+        },
+        TAG_STOP => Frame::Stop,
+        TAG_FINAL_STATE => {
+            let n_rows = r.u32()? as usize;
+            anyhow::ensure!(
+                n_rows <= r.remaining() / 8,
+                "wire: FinalState declares {n_rows} rows but only {} bytes remain",
+                r.remaining()
+            );
+            let mut rows = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                let agent = r.u32()?;
+                rows.push((agent, r.f32s()?));
+            }
+            let n_retired = r.u32()? as usize;
+            anyhow::ensure!(
+                n_retired <= r.remaining() / 4,
+                "wire: FinalState declares {n_retired} retired payloads but only {} bytes remain",
+                r.remaining()
+            );
+            let mut retired = Vec::with_capacity(n_retired);
+            for _ in 0..n_retired {
+                retired.push(r.f32s()?);
+            }
+            Frame::FinalState {
+                rows,
+                retired,
+                bytes_sent: r.u64()?,
+                frames_sent: r.u64()?,
+            }
+        }
+        tag => anyhow::bail!("wire: unknown frame tag {tag}"),
+    };
+    anyhow::ensure!(
+        r.remaining() == 0,
+        "wire: {} trailing bytes after frame",
+        r.remaining()
+    );
+    Ok(frame)
+}
+
+/// Writing half of one connection: length-prefixes, writes and flushes
+/// every frame, and counts the real bytes on the wire (the
+/// `bytes_on_wire` telemetry both sides report).
+pub struct FrameWriter<W: Write> {
+    w: W,
+    pub bytes: u64,
+    pub frames: u64,
+}
+
+impl<W: Write> FrameWriter<W> {
+    pub fn new(w: W) -> FrameWriter<W> {
+        FrameWriter {
+            w,
+            bytes: 0,
+            frames: 0,
+        }
+    }
+
+    pub fn send(&mut self, f: &Frame) -> anyhow::Result<()> {
+        let body = encode_frame(f);
+        anyhow::ensure!(
+            body.len() as u64 <= MAX_FRAME as u64,
+            "wire: frame body {} exceeds MAX_FRAME",
+            body.len()
+        );
+        self.w.write_all(&(body.len() as u32).to_le_bytes())?;
+        self.w.write_all(&body)?;
+        self.w.flush()?;
+        self.bytes += 4 + body.len() as u64;
+        self.frames += 1;
+        Ok(())
+    }
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF (the peer
+/// closed between frames); an error on a mid-frame close, an oversized
+/// length prefix, or a body that fails to decode.
+pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Option<Frame>> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => anyhow::bail!("wire: connection closed mid length prefix ({got}/4 bytes)"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len4);
+    anyhow::ensure!(
+        len >= 1 && len <= MAX_FRAME,
+        "wire: frame length {len} outside [1, {MAX_FRAME}]"
+    );
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)
+        .map_err(|e| anyhow::anyhow!("wire: truncated frame body: {e}"))?;
+    decode_frame(&body).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run_prop, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn arb_token(rng: &mut Rng) -> TokenMsg {
+        let dim = rng.below(9);
+        TokenMsg {
+            id: rng.below(64),
+            round: rng.next_u64() % 1000,
+            payload: (0..dim).map(|_| rng.normal_f32()).collect(),
+            cycle_pos: rng.below(64),
+            epoch: (rng.next_u64() % 8) as u32,
+        }
+    }
+
+    fn arb_config(rng: &mut Rng) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("cfg-{}", rng.below(100));
+        cfg.agents = 2 + rng.below(30);
+        cfg.walks = 1 + rng.below(cfg.agents);
+        cfg.seed = rng.next_u64();
+        cfg.xi = rng.uniform(0.1, 1.0);
+        cfg.routing = match rng.below(3) {
+            0 => RoutingRule::Cycle,
+            1 => RoutingRule::Uniform,
+            _ => RoutingRule::Metropolis,
+        };
+        cfg.algos = (0..1 + rng.below(3))
+            .map(|_| {
+                let all = AlgoKind::all();
+                all[rng.below(all.len())]
+            })
+            .collect();
+        cfg.stop.max_activations = if rng.below(4) == 0 {
+            u64::MAX
+        } else {
+            rng.next_u64() % 10_000
+        };
+        cfg.stop.max_sim_time = if rng.below(2) == 0 {
+            f64::INFINITY
+        } else {
+            rng.uniform(0.1, 10.0)
+        };
+        cfg.timing = match rng.below(3) {
+            0 => TimingModel::Measured,
+            1 => TimingModel::Fixed(rng.uniform(1e-5, 1e-3)),
+            _ => TimingModel::Jittered {
+                mean: rng.uniform(1e-5, 1e-3),
+                jitter: rng.uniform(0.0, 0.5),
+            },
+        };
+        cfg.latency = if rng.below(2) == 0 {
+            LatencyModel::paper()
+        } else {
+            LatencyModel::Fixed(rng.uniform(1e-5, 1e-3))
+        };
+        cfg.heterogeneity = match rng.below(4) {
+            0 => Heterogeneity::None,
+            1 => Heterogeneity::Uniform {
+                spread: rng.uniform(1.0, 5.0),
+            },
+            2 => Heterogeneity::Bimodal {
+                frac: rng.uniform(0.0, 0.5),
+                slow: rng.uniform(1.0, 8.0),
+            },
+            _ => Heterogeneity::Pareto {
+                alpha: rng.uniform(1.0, 3.0),
+            },
+        };
+        if rng.below(2) == 0 {
+            cfg.faults = FaultModel::chaos(rng.uniform(0.0, 0.2));
+        }
+        cfg.net_workers = 1 + rng.below(8);
+        cfg.transport = if rng.below(2) == 0 {
+            NetTransport::Uds
+        } else {
+            NetTransport::Tcp
+        };
+        cfg.partition = if rng.below(2) == 0 {
+            PartitionKind::Iid
+        } else {
+            PartitionKind::Contiguous
+        };
+        cfg
+    }
+
+    fn arb_frame(rng: &mut Rng) -> Frame {
+        match rng.below(10) {
+            0 => Frame::Join {
+                version: (rng.next_u64() % 10) as u32,
+                worker: rng.below(8) as u32,
+            },
+            1 => Frame::Hello {
+                version: PROTOCOL_VERSION,
+                seed: rng.next_u64(),
+                config_hash: rng.next_u64(),
+                workers: 1 + rng.below(8) as u32,
+                restarted: rng.below(2) == 1,
+            },
+            2 => Frame::Start {
+                algo: {
+                    let all = AlgoKind::all();
+                    all[rng.below(all.len())]
+                },
+                cfg: arb_config(rng),
+            },
+            3 => Frame::Ready {
+                worker: rng.below(8) as u32,
+            },
+            4 => Frame::Go,
+            5 => Frame::Token {
+                dest: rng.below(64) as u32,
+                msg: arb_token(rng),
+            },
+            6 => Frame::Served {
+                agent: rng.below(64) as u32,
+                walk: if rng.below(2) == 0 {
+                    None
+                } else {
+                    Some(rng.below(8) as u32)
+                },
+                epoch: (rng.next_u64() % 8) as u32,
+                updates: rng.below(4) as u32,
+                comm: rng.next_u64() % 1000,
+                x: if rng.below(2) == 0 {
+                    None
+                } else {
+                    Some((0..rng.below(9)).map(|_| rng.normal_f32()).collect())
+                },
+            },
+            7 => Frame::TokenLost {
+                holder: rng.below(64) as u32,
+                msg: arb_token(rng),
+            },
+            8 => Frame::Stop,
+            _ => Frame::FinalState {
+                rows: (0..rng.below(5))
+                    .map(|a| {
+                        (
+                            a as u32,
+                            (0..rng.below(9)).map(|_| rng.normal_f32()).collect(),
+                        )
+                    })
+                    .collect(),
+                retired: (0..rng.below(3))
+                    .map(|_| (0..rng.below(9)).map(|_| rng.normal_f32()).collect())
+                    .collect(),
+                bytes_sent: rng.next_u64() % 100_000,
+                frames_sent: rng.next_u64() % 1000,
+            },
+        }
+    }
+
+    /// Structural equality via re-encoding — `TokenMsg`/`ExperimentConfig`
+    /// do not implement `PartialEq`, but the codec is canonical (one byte
+    /// string per value), so byte equality is value equality.
+    fn frame_eq(a: &Frame, b: &Frame) -> bool {
+        encode_frame(a) == encode_frame(b)
+    }
+
+    #[test]
+    fn prop_frame_roundtrip_is_identity() {
+        run_prop(
+            "wire frame roundtrip",
+            PropConfig {
+                cases: 256,
+                ..PropConfig::default()
+            },
+            arb_frame,
+            |frame| {
+                let mut buf = Vec::new();
+                {
+                    let mut w = FrameWriter::new(&mut buf);
+                    w.send(frame).map_err(|e| e.to_string())?;
+                }
+                let mut r = &buf[..];
+                let back = read_frame(&mut r)
+                    .map_err(|e| e.to_string())?
+                    .ok_or("unexpected EOF")?;
+                if !frame_eq(frame, &back) {
+                    return Err(format!("roundtrip mismatch: {back:?}"));
+                }
+                if !r.is_empty() {
+                    return Err("reader left trailing bytes".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncated_frames_error_without_panicking() {
+        run_prop(
+            "wire truncation rejection",
+            PropConfig {
+                cases: 128,
+                ..PropConfig::default()
+            },
+            |rng| {
+                let frame = arb_frame(rng);
+                let mut buf = Vec::new();
+                FrameWriter::new(&mut buf).send(&frame).unwrap();
+                // Cut strictly inside the frame (never at 0 — that is a
+                // clean EOF, the one legal outcome).
+                let cut = 1 + rng.below(buf.len() - 1);
+                buf.truncate(cut);
+                buf
+            },
+            |buf| {
+                let mut r = &buf[..];
+                match read_frame(&mut r) {
+                    Err(_) => Ok(()),
+                    Ok(f) => Err(format!("truncated frame decoded as {f:?}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_garbage_bytes_never_panic_the_decoder() {
+        run_prop(
+            "wire garbage rejection",
+            PropConfig {
+                cases: 256,
+                ..PropConfig::default()
+            },
+            |rng| {
+                let len = rng.below(64);
+                (0..len)
+                    .map(|_| (rng.next_u64() & 0xFF) as u8)
+                    .collect::<Vec<u8>>()
+            },
+            |bytes| {
+                // Any outcome but a panic is acceptable: random bytes can
+                // by chance spell a tiny valid frame; they must never
+                // crash or over-allocate.
+                let _ = decode_frame(bytes);
+                let mut r = &bytes[..];
+                let _ = read_frame(&mut r);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        let mut r = &buf[..];
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("frame length"), "{err}");
+        // Zero-length frames are equally invalid (a frame always has a tag).
+        let mut r: &[u8] = &0u32.to_le_bytes();
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn declared_vector_length_is_validated_before_allocation() {
+        // A Token frame whose payload claims 2^31 floats but carries none.
+        let mut body = vec![TAG_TOKEN];
+        put_u32(&mut body, 3); // dest
+        put_u64(&mut body, 0); // id
+        put_u64(&mut body, 0); // round
+        put_u32(&mut body, 0x8000_0000); // payload length lie
+        let err = decode_frame(&body).unwrap_err().to_string();
+        assert!(err.contains("elements"), "{err}");
+    }
+
+    #[test]
+    fn prop_config_roundtrip_and_hash_stability() {
+        run_prop(
+            "wire config roundtrip",
+            PropConfig::default(),
+            arb_config,
+            |cfg| {
+                let bytes = encode_config(cfg);
+                let decoded = decode_config(&mut Reader::new(&bytes))
+                    .map_err(|e| e.to_string())?;
+                let bytes2 = encode_config(&decoded);
+                if bytes != bytes2 {
+                    return Err("config re-encode differs".into());
+                }
+                if config_hash(&bytes) != config_hash(&bytes2) {
+                    return Err("hash not a function of the bytes".into());
+                }
+                // The hash discriminates: flip the seed, the hash moves.
+                let mut other = decoded;
+                other.seed ^= 1;
+                if config_hash(&encode_config(&other)) == config_hash(&bytes) {
+                    return Err("seed flip left the hash unchanged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn clean_eof_between_frames_reads_as_none() {
+        let mut r: &[u8] = &[];
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn writer_counts_real_wire_bytes() {
+        let mut buf = Vec::new();
+        let mut w = FrameWriter::new(&mut buf);
+        w.send(&Frame::Go).unwrap();
+        w.send(&Frame::Stop).unwrap();
+        assert_eq!(w.frames, 2);
+        assert_eq!(w.bytes, buf.len() as u64);
+        assert_eq!(buf.len(), 10, "two 1-byte bodies, two 4-byte prefixes");
+    }
+}

@@ -1,0 +1,608 @@
+//! The net-substrate worker process: one shard of agents behind a socket.
+//!
+//! Spawned by the coordinator as `repro worker --connect <addr> --index
+//! <w>` (a hidden subcommand — never part of the user-facing CLI). Each
+//! worker owns the contiguous agent range `[w·N/W, (w+1)·N/W)` and reuses
+//! the in-process machinery of the other substrates: the M:N pooled
+//! claim protocol of [`super::super::threads`] (per-agent inbox +
+//! `scheduled` flag + sharded [`StealQueue`]), and the serialized
+//! [`crate::solver::SolverService`] compute path. What it does *not* have
+//! is any global view: activation counting, evaluation cadence, stop
+//! rules and the lease/epoch watchdog all live in the coordinator —
+//! the worker reports every serviced delivery upstream as a
+//! [`Frame::Served`] and lets the coordinator decide.
+//!
+//! Deliberate divergences from the thread substrate (see EXPERIMENTS.md
+//! §Net): workers never regenerate token epochs — a permanently lost hop
+//! becomes a [`Frame::TokenLost`] report and the *coordinator's* lease
+//! does the bumping, so exactly one authority hands out epochs and the
+//! watch's equality fence stays sound. The worker keeps a per-walk
+//! monotone `epoch_floor` instead: worker-local deliveries never cross
+//! the coordinator, so the floor is what fences a stale duplicate that
+//! resurfaces entirely inside one process.
+//!
+//! A decode error on the socket is a dead coordinator, never a panic:
+//! the worker drains its pool and exits nonzero (which the coordinator —
+//! if alive — treats as a worker crash and restarts).
+
+use super::wire::{
+    self, config_hash, encode_config, read_frame, Frame, FrameWriter, PROTOCOL_VERSION,
+};
+use crate::algo::behavior::{
+    spec_for, ActivationCtx, AgentBehavior, BehaviorEnv, EvalModel, Outgoing, PayloadPool,
+    TokenMsg,
+};
+use crate::config::{ExperimentConfig, RoutingRule};
+use crate::engine::threads::ServiceCompute;
+use crate::engine::Workload;
+use crate::graph::Topology;
+use crate::scenario::executor::StealQueue;
+use crate::sim::FaultModel;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Everything one agent owns between activations (the worker-process twin
+/// of the thread substrate's `AgentCore`; the row is a plain vector —
+/// `FinalState` ships it back, so no shared arena exists here).
+struct Core {
+    behavior: Box<dyn AgentBehavior>,
+    row: Vec<f32>,
+    compute: ServiceCompute,
+    rng: Rng,
+    sends: Vec<Outgoing>,
+    pool: PayloadPool,
+}
+
+struct AgentSlot {
+    inbox: Mutex<VecDeque<TokenMsg>>,
+    /// True while the agent is on the run queue or executing — the same
+    /// at-most-one-claim protocol as the thread substrate.
+    scheduled: AtomicBool,
+    core: Mutex<Core>,
+}
+
+struct Shared {
+    /// Global ids of the local agents: `[lo, hi)`.
+    lo: usize,
+    hi: usize,
+    dim: usize,
+    walks: usize,
+    routing: RoutingRule,
+    cycle: Vec<usize>,
+    topo: Topology,
+    faults: FaultModel,
+    eval_model: EvalModel,
+    stop: AtomicBool,
+    /// Indexed by local id (`global - lo`).
+    slots: Vec<AgentSlot>,
+    runq: StealQueue<usize>,
+    /// Per-walk monotone epoch floor: fences stale duplicates on the
+    /// worker-local fast path (coordinator-relayed tokens are fenced
+    /// again upstream by the [`crate::sim::TokenWatch`]).
+    epoch_floor: Vec<AtomicU32>,
+    /// Local agents whose next payload doubles as their restart snapshot.
+    needs_resync: Vec<AtomicBool>,
+    writer: Mutex<FrameWriter<BufWriter<Box<dyn Write + Send>>>>,
+    /// Token payloads retired during the drain (token-eval only) — shipped
+    /// home in `FinalState`.
+    retired: Mutex<Vec<Vec<f32>>>,
+}
+
+impl Shared {
+    /// Put `msg` in a *local* agent's mailbox and make it runnable.
+    fn deliver(&self, dest: usize, msg: TokenMsg) {
+        let li = dest - self.lo;
+        self.slots[li].inbox.lock().unwrap().push_back(msg);
+        if !self.slots[li].scheduled.swap(true, Ordering::SeqCst) {
+            self.runq.push(li, li);
+        }
+    }
+
+    /// Hand `msg` to agent `dest`, wherever it lives: straight into the
+    /// mailbox when local, as a relay frame through the coordinator when
+    /// not.
+    fn dispatch(&self, dest: usize, msg: TokenMsg) -> anyhow::Result<()> {
+        if dest >= self.lo && dest < self.hi {
+            self.deliver(dest, msg);
+            Ok(())
+        } else {
+            self.writer.lock().unwrap().send(&Frame::Token {
+                dest: dest as u32,
+                msg,
+            })
+        }
+    }
+
+    fn send(&self, f: &Frame) -> anyhow::Result<()> {
+        self.writer.lock().unwrap().send(f)
+    }
+
+    /// Record a token payload retired during the drain (token-eval only).
+    fn retire(&self, payload: Vec<f32>) {
+        if self.eval_model != EvalModel::Token || payload.is_empty() {
+            return;
+        }
+        self.retired.lock().unwrap().push(payload);
+    }
+
+    fn trip_stop(&self) {
+        if !self.stop.swap(true, Ordering::SeqCst) {
+            self.runq.close();
+        }
+    }
+}
+
+/// Release a local agent's claim, then re-check the mailbox — the same
+/// landed-in-the-gap re-claim as the thread substrate.
+fn release_claim(shared: &Shared, li: usize) {
+    let slot = &shared.slots[li];
+    slot.scheduled.store(false, Ordering::SeqCst);
+    if !slot.inbox.lock().unwrap().is_empty() && !slot.scheduled.swap(true, Ordering::SeqCst) {
+        shared.runq.push(li, li);
+    }
+}
+
+/// One pool worker: claim runnable local agents until the queue closes.
+fn pool_loop(w: usize, shared: &Shared) -> anyhow::Result<()> {
+    while let Some(li) = shared.runq.pop(w) {
+        if let Err(e) = run_claimed(li, shared) {
+            shared.trip_stop();
+            return Err(e);
+        }
+    }
+    Ok(())
+}
+
+fn run_claimed(li: usize, shared: &Shared) -> anyhow::Result<()> {
+    let slot = &shared.slots[li];
+    if shared.stop.load(Ordering::SeqCst) {
+        let mut inbox = slot.inbox.lock().unwrap();
+        while let Some(msg) = inbox.pop_front() {
+            shared.retire(msg.payload);
+        }
+        slot.scheduled.store(false, Ordering::SeqCst);
+        return Ok(());
+    }
+    let msg = slot.inbox.lock().unwrap().pop_front();
+    let Some(msg) = msg else {
+        release_claim(shared, li);
+        return Ok(());
+    };
+    {
+        let mut core = slot.core.lock().unwrap();
+        serve(li, &mut core, msg, shared)?;
+    }
+    if !slot.inbox.lock().unwrap().is_empty() {
+        shared.runq.push(li, li);
+    } else {
+        release_claim(shared, li);
+    }
+    Ok(())
+}
+
+/// Service one message at local agent `li` — the worker-process analogue
+/// of the thread substrate's `serve`, with all global decisions replaced
+/// by upstream reports.
+fn serve(li: usize, core: &mut Core, mut msg: TokenMsg, shared: &Shared) -> anyhow::Result<()> {
+    let agent = shared.lo + li;
+    // Local epoch fence: only the coordinator bumps epochs, so the floor
+    // is monotone and a below-floor token is a stale duplicate.
+    if shared.walks > 0 {
+        let floor = shared.epoch_floor[msg.id].load(Ordering::SeqCst);
+        if msg.epoch < floor {
+            core.pool.put(std::mem::take(&mut msg.payload));
+            return Ok(());
+        }
+        shared.epoch_floor[msg.id].fetch_max(msg.epoch, Ordering::SeqCst);
+    }
+    // Crash-restart re-sync (a respawned worker process): the first
+    // payload to reach each agent doubles as its state snapshot.
+    if shared.needs_resync[li].swap(false, Ordering::SeqCst) {
+        if msg.payload.len() == core.row.len() {
+            core.row.copy_from_slice(&msg.payload);
+        }
+        core.behavior.on_restart(&msg.payload);
+    }
+    let served = {
+        let mut ctx = ActivationCtx {
+            agent,
+            block: &mut core.row,
+            compute: &mut core.compute,
+            tracker: None,
+            out: &mut core.sends,
+            pool: &mut core.pool,
+        };
+        core.behavior.on_activation(&mut msg, &mut ctx)?
+    };
+
+    let stopping = shared.stop.load(Ordering::SeqCst);
+    let mut comm = 0u64;
+
+    // Evaluation vector, captured before the token moves on. The worker
+    // cannot know the global activation count, so it attaches the vector
+    // to every update report and the coordinator applies the cadence.
+    let x = if served.updates > 0 {
+        Some(match shared.eval_model {
+            EvalModel::AgentMean => core.row.clone(),
+            EvalModel::Token => msg.payload.clone(),
+        })
+    } else {
+        None
+    };
+    let walk = if shared.walks > 0 {
+        Some(msg.id as u32)
+    } else {
+        None
+    };
+    let epoch = msg.epoch;
+
+    // Route the token. Real sockets provide the delay; the fault model
+    // still costs retransmission attempts and decides permanent loss —
+    // but loss is *reported*, never resolved here (see module docs).
+    enum Fwd {
+        Send(usize),
+        Lost,
+        None,
+    }
+    let mut fwd = Fwd::None;
+    if served.forward && shared.walks > 0 && !stopping {
+        let next = match shared.routing {
+            RoutingRule::Cycle => {
+                super::super::cycle_resync(&shared.cycle, &mut msg.cycle_pos, agent);
+                super::super::cycle_advance(&shared.cycle, &mut msg.cycle_pos)
+            }
+            RoutingRule::Uniform => shared.topo.uniform_next(agent, &mut core.rng),
+            RoutingRule::Metropolis => shared.topo.metropolis_next(agent, &mut core.rng),
+        };
+        let t = shared.faults.transmit_token(&mut core.rng);
+        comm += t.attempts;
+        fwd = if t.delivered { Fwd::Send(next) } else { Fwd::Lost };
+    }
+
+    // Gossip broadcast: per-link transmission costs, then local delivery
+    // or a relay frame per destination.
+    if !core.sends.is_empty() {
+        if stopping {
+            for out in core.sends.drain(..) {
+                core.pool.put(out.msg.payload);
+            }
+        } else {
+            while let Some(out) = core.sends.pop() {
+                let (attempts, _retry) = shared.faults.transmit(&mut core.rng);
+                comm += attempts;
+                shared.dispatch(out.dest, out.msg)?;
+            }
+        }
+    }
+
+    // Report the service upstream — the coordinator owns activation
+    // accounting, stop rules and the recovery windows.
+    if served.updates > 0 || comm > 0 {
+        shared.send(&Frame::Served {
+            agent: agent as u32,
+            walk,
+            epoch,
+            updates: served.updates,
+            comm,
+            x,
+        })?;
+    }
+
+    if shared.stop.load(Ordering::SeqCst) {
+        shared.retire(std::mem::take(&mut msg.payload));
+        return Ok(());
+    }
+    match fwd {
+        Fwd::Send(next) => shared.dispatch(next, msg)?,
+        Fwd::Lost => shared.send(&Frame::TokenLost {
+            holder: agent as u32,
+            msg,
+        })?,
+        Fwd::None => core.pool.put(std::mem::take(&mut msg.payload)),
+    }
+    Ok(())
+}
+
+/// Round-0 gossip kickoff: every local agent's zero block to each
+/// neighbor, with the same per-link transmission accounting as the other
+/// substrates — reported upstream as one zero-update `Served` frame so
+/// the coordinator's comm counter starts from the same place the DES's
+/// does.
+fn gossip_kickoff(shared: &Shared, rng: &mut Rng) -> anyhow::Result<()> {
+    let mut attempts_total = 0u64;
+    for i in shared.lo..shared.hi {
+        for &j in shared.topo.neighbors(i) {
+            let (attempts, _retry) = shared.faults.transmit(rng);
+            attempts_total += attempts;
+            shared.dispatch(
+                j,
+                TokenMsg {
+                    id: i,
+                    round: 0,
+                    payload: vec![0.0f32; shared.dim],
+                    cycle_pos: 0,
+                    epoch: 0,
+                },
+            )?;
+        }
+    }
+    if attempts_total > 0 {
+        shared.send(&Frame::Served {
+            agent: shared.lo as u32,
+            walk: None,
+            epoch: 0,
+            updates: 0,
+            comm: attempts_total,
+            x: None,
+        })?;
+    }
+    Ok(())
+}
+
+/// Entry point for the hidden `repro worker` subcommand.
+pub fn worker_main(args: &Args) -> anyhow::Result<()> {
+    let connect = args
+        .str_opt("connect")
+        .ok_or_else(|| anyhow::anyhow!("worker: missing --connect <uds:path|tcp:addr>"))?;
+    anyhow::ensure!(
+        args.str_opt("index").is_some(),
+        "worker: missing --index <w>"
+    );
+    let index = args.usize_or("index", 0)?;
+
+    let (read_half, write_half): (Box<dyn Read + Send>, Box<dyn Write + Send>) =
+        if let Some(path) = connect.strip_prefix("uds:") {
+            let s = UnixStream::connect(path)
+                .map_err(|e| anyhow::anyhow!("worker: connect {path}: {e}"))?;
+            (Box::new(s.try_clone()?), Box::new(s))
+        } else if let Some(addr) = connect.strip_prefix("tcp:") {
+            let s = TcpStream::connect(addr)
+                .map_err(|e| anyhow::anyhow!("worker: connect {addr}: {e}"))?;
+            s.set_nodelay(true).ok();
+            (Box::new(s.try_clone()?), Box::new(s))
+        } else {
+            anyhow::bail!("worker: --connect must be uds:<path> or tcp:<addr>, got '{connect}'");
+        };
+    let mut reader = BufReader::new(read_half);
+    let writer = Mutex::new(FrameWriter::new(BufWriter::new(write_half)));
+
+    // Handshake: Join → Hello (version + seed + config fingerprint) →
+    // Start (the full config) → Ready.
+    writer.lock().unwrap().send(&Frame::Join {
+        version: PROTOCOL_VERSION,
+        worker: index as u32,
+    })?;
+    let (seed, expect_hash, workers, restarted) = match read_frame(&mut reader)? {
+        Some(Frame::Hello {
+            version,
+            seed,
+            config_hash,
+            workers,
+            restarted,
+        }) => {
+            anyhow::ensure!(
+                version == PROTOCOL_VERSION,
+                "worker: protocol version mismatch (coordinator v{version}, this binary v{PROTOCOL_VERSION})"
+            );
+            (seed, config_hash, workers as usize, restarted)
+        }
+        other => anyhow::bail!("worker: expected Hello, got {other:?}"),
+    };
+    let (kind, cfg) = match read_frame(&mut reader)? {
+        Some(Frame::Start { algo, cfg }) => (algo, cfg),
+        other => anyhow::bail!("worker: expected Start, got {other:?}"),
+    };
+    let got_hash = config_hash(&encode_config(&cfg));
+    anyhow::ensure!(
+        got_hash == expect_hash && cfg.seed == seed,
+        "worker: config fingerprint mismatch (Hello {expect_hash:#x}/seed {seed}, \
+         Start {got_hash:#x}/seed {})",
+        cfg.seed
+    );
+    anyhow::ensure!(
+        index < workers && workers <= cfg.agents,
+        "worker: index {index} out of range for {workers} workers / {} agents",
+        cfg.agents
+    );
+
+    // Deterministic rebuild: config + seed pin the dataset, sharding and
+    // topology, so every process holds an identical workload view (the
+    // Hello hash is what guarantees they started from identical configs).
+    let workload = Workload::build(&cfg)?;
+    let n = cfg.agents;
+    let lo = index * n / workers;
+    let hi = (index + 1) * n / workers;
+    let shards = Arc::new(workload.partition.shards.clone());
+    let dim = shards[0].features * shards[0].classes;
+    let spec = spec_for(kind);
+    let walks = spec.walks(&cfg);
+    let routing = spec.routing(&cfg);
+
+    let cfg2 = cfg.clone();
+    let profile = workload.profile;
+    let service = crate::solver::SolverService::spawn(
+        move || super::super::build_solver(&cfg2, profile),
+        shards.clone(),
+    )?;
+
+    let behaviors: Vec<Box<dyn AgentBehavior>> = {
+        let env = BehaviorEnv {
+            cfg: &cfg,
+            topo: &workload.topo,
+            shards: &shards,
+            task: profile.task,
+            dim,
+            n,
+        };
+        (lo..hi).map(|i| spec.make_agent(i, &env)).collect()
+    };
+    let slots: Vec<AgentSlot> = behaviors
+        .into_iter()
+        .enumerate()
+        .map(|(li, behavior)| AgentSlot {
+            inbox: Mutex::new(VecDeque::new()),
+            scheduled: AtomicBool::new(false),
+            core: Mutex::new(Core {
+                behavior,
+                row: vec![0.0f32; dim],
+                compute: ServiceCompute::new(service.client(), dim),
+                rng: Rng::new(cfg.seed ^ (((lo + li) as u64 + 1) << 16)),
+                sends: Vec::new(),
+                pool: PayloadPool::default(),
+            }),
+        })
+        .collect();
+
+    let local_n = hi - lo;
+    let pool_size = super::super::resolve_workers(cfg.workers).min(local_n).max(1);
+    let shared = Arc::new(Shared {
+        lo,
+        hi,
+        dim,
+        walks,
+        routing,
+        cycle: if routing == RoutingRule::Cycle {
+            workload.topo.traversal_cycle()
+        } else {
+            Vec::new()
+        },
+        topo: workload.topo.clone(),
+        faults: cfg.faults,
+        eval_model: spec.eval_model(),
+        stop: AtomicBool::new(false),
+        slots,
+        runq: StealQueue::new(pool_size),
+        epoch_floor: (0..walks).map(|_| AtomicU32::new(0)).collect(),
+        needs_resync: (0..local_n).map(|_| AtomicBool::new(restarted)).collect(),
+        writer,
+        retired: Mutex::new(Vec::new()),
+    });
+
+    let mut handles = Vec::with_capacity(pool_size);
+    for w in 0..pool_size {
+        let shared2 = shared.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("net-agent-{w}"))
+            .spawn(move || -> anyhow::Result<()> { pool_loop(w, &shared2) });
+        match spawned {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                shared.trip_stop();
+                for h in handles {
+                    let _ = h.join();
+                }
+                service.shutdown();
+                return Err(e.into());
+            }
+        }
+    }
+
+    shared.send(&Frame::Ready {
+        worker: index as u32,
+    })?;
+
+    // Main thread is the socket reader: deliveries go to the pool, Stop
+    // or a coordinator EOF starts the drain. `clean` distinguishes an
+    // orderly Stop (FinalState errors matter) from a vanished coordinator
+    // (best-effort).
+    let mut kickoff_rng = Rng::new(cfg.seed ^ 0xBEEF ^ ((index as u64 + 1) << 8));
+    let mut clean = false;
+    let mut read_err: Option<anyhow::Error> = None;
+    loop {
+        match read_frame(&mut reader) {
+            Ok(Some(Frame::Go)) => {
+                // Gossip algorithms kick themselves off (tokens arrive as
+                // coordinator frames instead). A restarted worker re-runs
+                // the kickoff — its agents need traffic to re-sync from.
+                if walks == 0 {
+                    if let Err(e) = gossip_kickoff(&shared, &mut kickoff_rng) {
+                        read_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            Ok(Some(Frame::Token { dest, msg })) => {
+                let dest = dest as usize;
+                if dest < shared.lo || dest >= shared.hi {
+                    read_err = Some(anyhow::anyhow!(
+                        "worker {index}: misrouted token for agent {dest} (own [{lo}, {hi}))"
+                    ));
+                    break;
+                }
+                shared.deliver(dest, msg);
+            }
+            Ok(Some(Frame::Stop)) => {
+                clean = true;
+                break;
+            }
+            Ok(Some(other)) => {
+                read_err = Some(anyhow::anyhow!(
+                    "worker {index}: unexpected frame {other:?}"
+                ));
+                break;
+            }
+            Ok(None) => break, // coordinator hung up
+            Err(e) => {
+                read_err = Some(e);
+                break;
+            }
+        }
+    }
+
+    // Drain: raise the barrier, let every in-flight activation finish,
+    // join the pool, then sweep queued tokens into the retired set.
+    shared.trip_stop();
+    let mut pool_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => pool_err = Some(e),
+            Err(_) => pool_err = Some(anyhow::anyhow!("worker {index}: pool thread panicked")),
+        }
+    }
+    for slot in &shared.slots {
+        let mut inbox = slot.inbox.lock().unwrap();
+        while let Some(msg) = inbox.pop_front() {
+            shared.retire(msg.payload);
+        }
+    }
+    service.shutdown();
+
+    // Ship the final state home. The wire counters exclude this last
+    // frame (they are fields *inside* it); the coordinator's own writer
+    // counts are what complete the total.
+    let rows: Vec<(u32, Vec<f32>)> = shared
+        .slots
+        .iter()
+        .enumerate()
+        .map(|(li, slot)| ((lo + li) as u32, slot.core.lock().unwrap().row.clone()))
+        .collect();
+    let retired = std::mem::take(&mut *shared.retired.lock().unwrap());
+    let (bytes_sent, frames_sent) = {
+        let w = shared.writer.lock().unwrap();
+        (w.bytes, w.frames)
+    };
+    let final_res = shared.send(&Frame::FinalState {
+        rows,
+        retired,
+        bytes_sent,
+        frames_sent,
+    });
+
+    if let Some(e) = read_err {
+        return Err(e);
+    }
+    if let Some(e) = pool_err {
+        return Err(e);
+    }
+    if clean {
+        final_res?;
+    }
+    Ok(())
+}

@@ -324,7 +324,7 @@ impl Shared {
 /// full buffer recycling — the three model-sized prox buffers circulate
 /// through the service and the caller's output vector swaps with the
 /// returned result, so the steady-state prox path allocates nothing.
-struct ServiceCompute {
+pub(crate) struct ServiceCompute {
     client: SolverClient,
     w0: Vec<f32>,
     tz: Vec<f32>,
@@ -332,7 +332,7 @@ struct ServiceCompute {
 }
 
 impl ServiceCompute {
-    fn new(client: SolverClient, dim: usize) -> ServiceCompute {
+    pub(crate) fn new(client: SolverClient, dim: usize) -> ServiceCompute {
         ServiceCompute {
             client,
             w0: Vec::with_capacity(dim),

@@ -16,7 +16,7 @@
 //!     message-driven [`algo::behavior::AgentBehavior`]: local state plus an
 //!     `on_activation(token) → sends` callback. Pure per-activation math.
 //!   - [`engine`] — one event-driven runtime that executes any behavior on
-//!     two substrates: [`engine::des`] (deterministic event queue owning
+//!     three substrates: [`engine::des`] (deterministic event queue owning
 //!     routing, latency, [`sim::FaultModel`] injection, busy-agent FIFO
 //!     queuing, recording and stop rules — the paper's §5 simulation) and
 //!     [`engine::threads`] (real asynchrony as an **M:N pooled runtime**:
@@ -26,9 +26,17 @@
 //!     instead of a sleeping thread, and compute goes through the
 //!     serialized [`solver::SolverClient`] service — so the process thread
 //!     count is bounded by the pool, never by N, and real-thread runs
-//!     reach the same agent counts as the DES). Faults, routing rules and
-//!     both substrates therefore apply uniformly to every
-//!     [`algo::AlgoKind`] (one scoped exception: agent churn is
+//!     reach the same agent counts as the DES) and [`engine::net`]
+//!     (multi-process sockets: `--net-workers` worker *processes* — each
+//!     reusing the M:N pool and exclusive arena rows — shard the agents
+//!     and talk to a coordinator over UDS or TCP through a versioned
+//!     length-prefixed wire codec ([`engine::net::wire`]); the coordinator
+//!     owns membership, stop rules, lease/epoch token-watch decisions and
+//!     trace merge, worker crashes surface as the crash-restart fault, and
+//!     every trace reports *real serialized wire bytes* — see
+//!     EXPERIMENTS.md §Net for topology, flags and determinism caveats).
+//!     Faults, routing rules and all substrates therefore apply uniformly
+//!     to every [`algo::AlgoKind`] (one scoped exception: agent churn is
 //!     token-walk-specific — see `algo/dgd.rs`).
 //!   - **model-state ownership**: the engine — not the behaviors — owns
 //!     all blocks, in one flat cache-line-padded N×dim arena

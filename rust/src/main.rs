@@ -33,6 +33,10 @@ fn main() {
         "timeline" => cmd_timeline(&args),
         "inspect-artifacts" => cmd_inspect(&args),
         "compare" => cmd_compare(&args),
+        // Hidden: net-substrate worker process entry point. Spawned by the
+        // coordinator (`--substrate net`), never typed by hand — so it is
+        // deliberately absent from USAGE.
+        "worker" => apibcd::engine::net::worker_main(&args),
         "help" | "--help" => {
             print!("{}", USAGE);
             Ok(())
@@ -53,18 +57,22 @@ USAGE:
   repro train  [--preset P | --profile D] [--agents N] [--walks M] [--algos ...]
                [--tau-api T] [--tau-ibcd T] [--alpha A] [--activations K]
                [--routing cycle|uniform|metropolis] [--solver auto|native|pjrt]
-               [--substrate des|threads] [--workers W]
+               [--substrate des|threads|net] [--workers W]
+               [--net-workers P] [--transport uds|tcp]
                (threads = M:N pooled runtime; W worker threads drive all
-                N agents, default W = cores - 1)
+                N agents, default W = cores - 1. net = P worker *processes*
+                sharding the agents over sockets, default P = 2)
   repro run    --config experiment.toml [overrides...]
   repro replicate [--preset P] [--seeds 5] [--target T] [overrides...]
   repro sweep  --param <walks|agents|tau-api|xi|inner-k> --values 1,2,4 [--preset P]
   repro sweep  --agents 16,64,256,1024,4096 [--activations K] [--walks M]
                [--eval-every E] [--jobs J] [--out BENCH_scale.json]
-               [--substrate des|threads] [--workers W]
+               [--substrate des|threads|net] [--workers W] [--net-workers P]
                (N-scaling sweep: ns-per-activation / ns-per-record vs N;
                 --substrate threads emits BENCH_threads_scale.json with
-                peak OS-thread counts — the M:N bound check)
+                peak OS-thread counts — the M:N bound check;
+                --substrate net emits BENCH_net.json with real wire bytes
+                per worker process)
   repro validate [--matrix smoke|full | --scenario NAME] [--seed N] [--jobs J]
                [--activations K] [--out VALIDATE_report.json]
                (paper-claims harness; exits non-zero on any failed claim;
@@ -138,6 +146,15 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()
         cfg.heterogeneity = apibcd::sim::Heterogeneity::parse(h)?;
     }
     cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.net_workers = args.usize_or("net-workers", cfg.net_workers)?;
+    if let Some(t) = args.str_opt("transport") {
+        cfg.transport = apibcd::config::NetTransport::by_name(t).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown transport '{t}' (valid: {})",
+                apibcd::config::NetTransport::VALID_NAMES
+            )
+        })?;
+    }
     if let Some(r) = args.str_opt("routing") {
         cfg.routing = match r {
             "cycle" => RoutingRule::Cycle,
@@ -160,12 +177,13 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()
     Ok(())
 }
 
-/// `--substrate des|threads` (default DES).
+/// `--substrate des|threads|net` (default DES).
 fn substrate_arg(args: &Args) -> anyhow::Result<Substrate> {
     match args.str_opt("substrate") {
         None | Some("des") => Ok(Substrate::Des),
         Some("threads") => Ok(Substrate::Threads),
-        Some(other) => anyhow::bail!("unknown substrate '{other}' (valid: des, threads)"),
+        Some("net") => Ok(Substrate::Net),
+        Some(other) => anyhow::bail!("unknown substrate '{other}' (valid: des, threads, net)"),
     }
 }
 
@@ -360,14 +378,37 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
     let jobs = args.usize_or("jobs", 1)?;
     let seed = args.u64_or("seed", 42)?;
     let workers = args.usize_or("workers", 0)?;
+    let net_workers = args.usize_or("net-workers", 2)?;
+    let transport = match args.str_opt("transport") {
+        None => apibcd::config::NetTransport::default(),
+        Some(t) => apibcd::config::NetTransport::by_name(t).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown transport '{t}' (valid: {})",
+                apibcd::config::NetTransport::VALID_NAMES
+            )
+        })?,
+    };
     let substrate = substrate_arg(args)?;
     let threads = substrate == Substrate::Threads;
+    let net = substrate == Substrate::Net;
     let algos = apibcd::algo::parse_algo_list(args.str_or("algos", "api-bcd"))?;
     let out_path = args.str_or(
         "out",
-        if threads { "BENCH_threads_scale.json" } else { "BENCH_scale.json" },
+        if net {
+            "BENCH_net.json"
+        } else if threads {
+            "BENCH_threads_scale.json"
+        } else {
+            "BENCH_scale.json"
+        },
     );
-    let suite = if threads { "threads_scale" } else { "scale" };
+    let suite = if net {
+        "net"
+    } else if threads {
+        "threads_scale"
+    } else {
+        "scale"
+    };
 
     eprintln!(
         "{suite} sweep over N = {agents:?} ({activations} activations, eval every {eval_every}, {jobs} job(s))"
@@ -384,6 +425,8 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
         cfg.eval_every = eval_every;
         cfg.seed = seed;
         cfg.workers = workers;
+        cfg.net_workers = net_workers;
+        cfg.transport = transport;
         cfg.stop.max_activations = activations;
         Experiment::builder(cfg).substrate(substrate).run()
     })?;
@@ -430,6 +473,26 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
                 row.insert(
                     "workers".into(),
                     Json::Num(t.worker_busy_secs.len() as f64),
+                );
+            }
+            if net {
+                row.insert("peak_threads".into(), Json::Num(t.peak_threads as f64));
+                row.insert(
+                    "workers".into(),
+                    Json::Num(t.net_worker_bytes.len() as f64),
+                );
+                row.insert("bytes_sent".into(), Json::Num(t.bytes_on_wire as f64));
+                row.insert(
+                    "worker_bytes_sent".into(),
+                    Json::Arr(
+                        t.net_worker_bytes.iter().map(|&b| Json::Num(b as f64)).collect(),
+                    ),
+                );
+                row.insert(
+                    "worker_frames_sent".into(),
+                    Json::Arr(
+                        t.net_worker_frames.iter().map(|&f| Json::Num(f as f64)).collect(),
+                    ),
                 );
             }
             results.push(Json::Obj(row));

@@ -79,6 +79,7 @@ impl Scenario {
         match self.substrate {
             Substrate::Des => "des",
             Substrate::Threads => "threads",
+            Substrate::Net => "net",
         }
     }
 }
@@ -302,11 +303,46 @@ pub static FULL_EXTRA: &[Scenario] = &[
     },
 ];
 
+/// Multi-process (socket) substrate scenarios. Deliberately OUT of
+/// [`SMOKE`]: each cell forks worker processes, so CI runs them in a
+/// dedicated job (`repro validate --scenario net_smoke`) rather than
+/// inside the in-process smoke matrix.
+pub static NET: &[Scenario] = &[
+    Scenario {
+        name: "net_smoke",
+        description: "ring topology sharded over 2 worker processes (UDS); the des/net \
+                      agreement cell",
+        base: Preset::TestLs,
+        topology: "ring",
+        agents: 6,
+        walks: 3,
+        heterogeneity: Heterogeneity::None,
+        faults: FaultModel::NONE,
+        substrate: Substrate::Net,
+        activations: 600,
+        target: 0.65,
+    },
+    Scenario {
+        name: "net_lossy",
+        description: "5% permanent token loss across worker processes (coordinator-side \
+                      lease/epoch watchdog regenerates dead walks over the wire)",
+        base: Preset::TestLs,
+        topology: "ring",
+        agents: 6,
+        walks: 3,
+        heterogeneity: Heterogeneity::None,
+        faults: LOSSY_5,
+        substrate: Substrate::Net,
+        activations: 600,
+        target: 0.65,
+    },
+];
+
 /// The scenarios of a matrix, in a stable order.
 pub fn matrix(m: Matrix) -> Vec<&'static Scenario> {
     match m {
         Matrix::Smoke => SMOKE.iter().collect(),
-        Matrix::Full => SMOKE.iter().chain(FULL_EXTRA.iter()).collect(),
+        Matrix::Full => SMOKE.iter().chain(FULL_EXTRA.iter()).chain(NET.iter()).collect(),
     }
 }
 
@@ -315,6 +351,7 @@ pub fn all_names() -> String {
     SMOKE
         .iter()
         .chain(FULL_EXTRA.iter())
+        .chain(NET.iter())
         .map(|s| s.name)
         .collect::<Vec<_>>()
         .join(", ")
@@ -325,6 +362,7 @@ pub fn by_name(name: &str) -> anyhow::Result<&'static Scenario> {
     SMOKE
         .iter()
         .chain(FULL_EXTRA.iter())
+        .chain(NET.iter())
         .find(|s| s.name.eq_ignore_ascii_case(name))
         .ok_or_else(|| {
             anyhow::anyhow!("unknown scenario '{name}' (valid: {})", all_names())
@@ -337,11 +375,26 @@ mod tests {
 
     #[test]
     fn scenario_names_are_unique() {
-        let mut names: Vec<&str> = SMOKE.iter().chain(FULL_EXTRA.iter()).map(|s| s.name).collect();
+        let mut names: Vec<&str> = SMOKE
+            .iter()
+            .chain(FULL_EXTRA.iter())
+            .chain(NET.iter())
+            .map(|s| s.name)
+            .collect();
         let total = names.len();
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), total, "duplicate scenario names");
+    }
+
+    #[test]
+    fn net_scenarios_stay_out_of_the_smoke_matrix() {
+        // The smoke matrix runs in-process (CI asserts its substrate set is
+        // exactly {des, threads}); process-forking net cells get their own
+        // CI job via `--scenario net_smoke`.
+        assert!(matrix(Matrix::Smoke).iter().all(|s| s.substrate != Substrate::Net));
+        assert!(matrix(Matrix::Full).iter().any(|s| s.substrate == Substrate::Net));
+        assert_eq!(by_name("net_smoke").unwrap().substrate_name(), "net");
     }
 
     #[test]

@@ -1,0 +1,159 @@
+//! Net-substrate integration tests: real multi-process execution. The
+//! coordinator runs in-process (the library side of `--substrate net`) and
+//! forks genuine worker processes from the crate's own `repro` binary via
+//! the `APIBCD_WORKER_EXE` override (the default `current_exe()` would
+//! resolve to the test harness, which has no `worker` subcommand).
+
+use apibcd::algo::AlgoKind;
+use apibcd::config::{ExperimentConfig, NetTransport, Preset};
+use apibcd::engine::{Experiment, Substrate};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Each test forks child processes and the orphan test counts them, so the
+/// cases in this file must not interleave.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn net_cfg() -> ExperimentConfig {
+    std::env::set_var("APIBCD_WORKER_EXE", env!("CARGO_BIN_EXE_repro"));
+    let mut cfg = ExperimentConfig::preset(Preset::TestLs);
+    cfg.agents = 6;
+    cfg.walks = 3;
+    cfg.topology = "ring".into();
+    cfg.tau_api = 0.1;
+    cfg.eval_every = 20;
+    cfg.net_workers = 2;
+    cfg.stop.max_activations = 400;
+    cfg
+}
+
+/// Live child processes of this process (`/proc/<pid>/stat` ppid field —
+/// the field after the parenthesised comm, which may itself contain
+/// spaces, so parse from the last `)`).
+fn child_process_count() -> usize {
+    let me = std::process::id();
+    let mut n = 0;
+    for entry in std::fs::read_dir("/proc").unwrap() {
+        let Ok(entry) = entry else { continue };
+        let name = entry.file_name();
+        let Some(pid) = name.to_str().and_then(|s| s.parse::<u32>().ok()) else {
+            continue;
+        };
+        let Ok(stat) = std::fs::read_to_string(format!("/proc/{pid}/stat")) else {
+            continue;
+        };
+        let Some((_, rest)) = stat.rsplit_once(')') else { continue };
+        let ppid: u32 = rest
+            .split_whitespace()
+            .nth(1)
+            .and_then(|f| f.parse().ok())
+            .unwrap_or(0);
+        if ppid == me {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[test]
+fn net_substrate_converges_and_counts_wire_bytes() {
+    let _g = serial();
+    let mut cfg = net_cfg();
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    let net = Experiment::builder(cfg.clone())
+        .substrate(Substrate::Net)
+        .run()
+        .unwrap();
+    let des = Experiment::builder(cfg).substrate(Substrate::Des).run().unwrap();
+
+    assert_eq!(net.traces.len(), 1);
+    let t = &net.traces[0];
+    assert!(t.name.ends_with("(net)"), "{}", t.name);
+    assert!(t.last_metric().is_finite(), "non-finite final metric");
+    assert!(
+        t.last_metric() < t.points[0].metric,
+        "no improvement on the zero model: {} -> {}",
+        t.points[0].metric,
+        t.last_metric()
+    );
+    // Satellite claim: the trace carries *real* serialized byte counts,
+    // totalled and per worker process.
+    assert!(t.bytes_on_wire > 0, "no wire bytes recorded");
+    assert_eq!(t.net_worker_bytes.len(), 2, "one entry per worker process");
+    assert_eq!(t.net_worker_frames.len(), 2);
+    assert!(
+        t.net_worker_bytes.iter().all(|&b| b > 0),
+        "a worker sent nothing: {:?}",
+        t.net_worker_bytes
+    );
+
+    // Cross-substrate fidelity: same band the validate harness enforces.
+    let gap = (des.traces[0].last_metric() - t.last_metric()).abs();
+    assert!(
+        gap < 0.25,
+        "des {} vs net {} (gap {gap})",
+        des.traces[0].last_metric(),
+        t.last_metric()
+    );
+}
+
+#[test]
+fn tcp_transport_runs_the_gossip_baseline() {
+    let _g = serial();
+    let mut cfg = net_cfg();
+    cfg.transport = NetTransport::Tcp;
+    cfg.algos = vec![AlgoKind::Dgd];
+    cfg.stop.max_activations = 200;
+    let report = Experiment::builder(cfg)
+        .substrate(Substrate::Net)
+        .run()
+        .unwrap();
+    let t = &report.traces[0];
+    assert!(t.last_metric().is_finite());
+    assert!(
+        t.last_metric() < t.points[0].metric,
+        "DGD over TCP did not improve: {} -> {}",
+        t.points[0].metric,
+        t.last_metric()
+    );
+    assert!(t.bytes_on_wire > 0);
+}
+
+#[test]
+fn stop_rule_trip_drains_every_worker_process() {
+    // The coordinator trips the stop rule mid-flight, broadcasts Stop,
+    // collects FinalState and reaps the children — no worker process may
+    // outlive the run (the process-level mirror of the thread pool's
+    // `pooled_shutdown_under_faults_never_strands_a_worker`).
+    let _g = serial();
+    let baseline = child_process_count();
+    let mut cfg = net_cfg();
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.net_workers = 3;
+    cfg.stop.max_activations = 150;
+    let report = Experiment::builder(cfg)
+        .substrate(Substrate::Net)
+        .run()
+        .unwrap();
+    assert!(report.traces[0].last_metric().is_finite());
+    assert_eq!(report.traces[0].net_worker_bytes.len(), 3);
+
+    // `run()` reaps synchronously; the poll window only absorbs the OS
+    // lagging on zombie cleanup, never a still-running orphan.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let children = child_process_count();
+        if children <= baseline {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "orphaned worker process(es): {children} children vs baseline {baseline}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Compare a bench JSON against a committed baseline and fail on regression.
+
+Both files are the repo's bench schema (``BENCH_*.json``: a ``suite`` string
+and a ``results`` list of row objects with a ``name`` and per-row metrics).
+Rows are matched by ``name``; for every pair present in both files the
+current metric must stay within ``--max-ratio`` of the baseline value.
+
+When the baseline file does not exist the script exits 0 with a note — the
+first run of a new suite has nothing to compare against, and CI should not
+go red for that. Commit the produced JSON under ``baselines/`` to arm the
+check.
+
+Usage:
+    bench_trend.py <baseline.json> <current.json>
+        [--metric ns_per_activation] [--max-ratio 1.5]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_rows(path, metric):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for r in doc.get("results", []):
+        name = r.get("name")
+        if name is None or metric not in r:
+            continue
+        value = r[metric]
+        if isinstance(value, (int, float)) and value > 0:
+            rows[name] = float(value)
+    return doc.get("suite", "?"), rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    ap.add_argument("current", help="freshly produced BENCH_*.json")
+    ap.add_argument("--metric", default="ns_per_activation",
+                    help="per-row metric to compare (default: ns_per_activation)")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail when current/baseline exceeds this (default: 1.5)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench_trend: no baseline at {args.baseline} — skipping "
+              f"(commit one to arm the regression check)")
+        return 0
+
+    base_suite, base = load_rows(args.baseline, args.metric)
+    cur_suite, cur = load_rows(args.current, args.metric)
+    if base_suite != cur_suite:
+        print(f"bench_trend: suite mismatch: baseline '{base_suite}' vs "
+              f"current '{cur_suite}'", file=sys.stderr)
+        return 2
+
+    shared = sorted(set(base) & set(cur))
+    if not shared:
+        print(f"bench_trend: no shared rows between baseline and current "
+              f"({len(base)} vs {len(cur)} rows)", file=sys.stderr)
+        return 2
+
+    failed = []
+    for name in shared:
+        ratio = cur[name] / base[name]
+        status = "FAIL" if ratio > args.max_ratio else "ok"
+        print(f"{status:<5} {name:<48} {args.metric} "
+              f"{base[name]:>12.0f} -> {cur[name]:>12.0f}  ({ratio:.2f}x)")
+        if ratio > args.max_ratio:
+            failed.append((name, ratio))
+
+    dropped = sorted(set(base) - set(cur))
+    if dropped:
+        print(f"note: {len(dropped)} baseline row(s) absent from current run: "
+              f"{', '.join(dropped)}")
+
+    if failed:
+        print(f"\nbench_trend: {len(failed)} row(s) regressed beyond "
+              f"{args.max_ratio}x on {args.metric}", file=sys.stderr)
+        return 1
+    print(f"\nbench_trend: {len(shared)} row(s) within {args.max_ratio}x "
+          f"of baseline on {args.metric}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
