@@ -1,0 +1,290 @@
+//! The claim-flag scheduling protocol shared by the pooled runtimes.
+//!
+//! Both M:N substrates — the in-process pool in [`crate::engine::threads`]
+//! and the socket-worker shards in `crate::engine::net::worker` — park each
+//! agent as a mailbox plus a `scheduled` claim bit. The protocol has one
+//! job: **an agent is owned by at most one worker at a time, and a mailbox
+//! with mail is always covered by exactly one run-queue entry.** Row
+//! handoff in the model arena piggybacks on the same bit (see the
+//! `// SAFETY:` comments on `RowView` in `engine/threads.rs`), so a claim
+//! violation is not just a scheduling bug — it is a data race on model
+//! memory.
+//!
+//! [`MailSlot`] extracts that protocol into one place so the loom suite
+//! (`tests/loom_runtime.rs`) model-checks the exact code both runtimes
+//! execute, and the state-machine suite (`tests/statemachine.rs`) can
+//! replay randomized schedules against a reference model.
+//!
+//! # Protocol invariants
+//!
+//! 1. **Single ownership.** `scheduled` is acquired only by `swap(true)`
+//!    observing `false` ([`MailSlot::try_claim`]). Between that acquisition
+//!    and the matching [`MailSlot::release`] /
+//!    [`MailSlot::drain_and_release`], no other thread can acquire it: the
+//!    swap is atomic and every acquirer goes through the same swap.
+//! 2. **No lost message (the park/reschedule window).** A deliverer pushes
+//!    under the inbox lock *then* tries to claim. The owner releasing a
+//!    claim stores `false` *then* re-checks the inbox and re-claims if
+//!    non-empty. Case split on the order of the deliverer's swap D and the
+//!    owner's store R (both `SeqCst` on one location, so totally ordered):
+//!    - D before R: D observed `true`, so the deliverer does not enqueue —
+//!      but then the owner's post-R recheck acquires the inbox lock after
+//!      the deliverer released it (the push precedes D in the deliverer's
+//!      program order), so the owner sees the message and re-claims.
+//!    - R before D: D observes `false` and the deliverer enqueues.
+//!    Either way exactly one side wins the claim and enqueues; the message
+//!    is never stranded in an unscheduled mailbox. This is the window the
+//!    issue flags at `engine/threads.rs` `release_claim` /
+//!    `engine/net/worker.rs` — verified sound by
+//!    `release_recheck_never_strands_a_delivery` in `tests/loom_runtime.rs`.
+//! 3. **Stop-path atomicity.** [`MailSlot::drain_and_release`] empties the
+//!    mailbox and clears the claim *while holding the inbox lock*, so a
+//!    concurrent deliverer either lands before the drain (its message is
+//!    drained and retired by the owner) or after the release (it observes
+//!    `scheduled == false`, claims, and enqueues — the normal path). No
+//!    interleaving leaves a message both undrained and unscheduled.
+//!
+//! [`EpochFloor`] is the per-walk stale-token fence used by net workers.
+//! PR 8's audit found its previous form — a `load` followed by a separate
+//! `fetch_max` — left the admit decision and the floor raise as two steps;
+//! the single-CAS [`EpochFloor::admit`] makes the decision and the raise
+//! one atomic step, which is the property the loom regression
+//! `epoch_floor_admit_and_raise_are_one_atomic_step` pins down.
+
+use crate::util::sync::{AtomicBool, AtomicU32, Mutex, Ordering};
+use std::collections::VecDeque;
+
+/// A parked agent's mailbox plus its `scheduled` claim bit.
+///
+/// See the module docs for the protocol invariants. All atomics are
+/// `SeqCst`: the claim bit is the ownership token for arena rows, and the
+/// handful of transitions per activation are noise next to the solver —
+/// we buy the simplest possible correctness argument.
+pub struct MailSlot<T> {
+    inbox: Mutex<VecDeque<T>>,
+    scheduled: AtomicBool,
+}
+
+impl<T> Default for MailSlot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> MailSlot<T> {
+    pub fn new() -> MailSlot<T> {
+        MailSlot {
+            inbox: Mutex::new(VecDeque::new()),
+            scheduled: AtomicBool::new(false),
+        }
+    }
+
+    /// Try to acquire the claim. Returns `true` when the caller now owns
+    /// the agent and is responsible for enqueueing it on the run queue.
+    pub fn try_claim(&self) -> bool {
+        !self.scheduled.swap(true, Ordering::SeqCst)
+    }
+
+    /// Deliver a message: push it, then try to claim. Returns `true` when
+    /// the caller acquired the claim (and must enqueue the agent).
+    ///
+    /// The push happens strictly before the claim attempt so that a
+    /// releasing owner who observes our swap can rely on the message
+    /// already being visible under the inbox lock (invariant 2).
+    pub fn deliver(&self, msg: T) -> bool {
+        self.inbox.lock().unwrap().push_back(msg);
+        self.try_claim()
+    }
+
+    /// Pop one message. Callers must hold the claim — this is the row-
+    /// handoff site, so running it unclaimed would mean two workers could
+    /// alias the agent's arena row.
+    pub fn take(&self) -> Option<T> {
+        debug_assert!(self.is_claimed(), "MailSlot::take without holding the claim");
+        self.inbox.lock().unwrap().pop_front()
+    }
+
+    /// Whether mail is pending. Used by a claim holder to decide between
+    /// re-enqueueing itself (keeping the claim) and releasing.
+    pub fn has_mail(&self) -> bool {
+        !self.inbox.lock().unwrap().is_empty()
+    }
+
+    /// Whether the claim is currently held (by someone).
+    pub fn is_claimed(&self) -> bool {
+        self.scheduled.load(Ordering::SeqCst)
+    }
+
+    /// Release the claim, then re-check the mailbox for messages that
+    /// landed in the store→recheck window. Returns `true` when the caller
+    /// re-acquired the claim and must re-enqueue the agent (invariant 2).
+    pub fn release(&self) -> bool {
+        debug_assert!(
+            self.is_claimed(),
+            "MailSlot::release without holding the claim"
+        );
+        self.scheduled.store(false, Ordering::SeqCst);
+        self.has_mail() && self.try_claim()
+    }
+
+    /// Stop-path drain: empty the mailbox and release the claim in one
+    /// critical section on the inbox lock (invariant 3). The caller
+    /// retires every drained message.
+    pub fn drain_and_release(&self) -> VecDeque<T> {
+        debug_assert!(
+            self.is_claimed(),
+            "MailSlot::drain_and_release without holding the claim"
+        );
+        let mut inbox = self.inbox.lock().unwrap();
+        let drained = std::mem::take(&mut *inbox);
+        self.scheduled.store(false, Ordering::SeqCst);
+        drained
+    }
+
+    /// Owner-side sweep after the pool has quiesced (workers joined, no
+    /// concurrent claimers). Unlike [`MailSlot::drain_and_release`] this
+    /// does not require the claim: the coordinator calls it post-join to
+    /// account for tokens stranded by a mid-flight stop.
+    pub fn sweep(&self) -> VecDeque<T> {
+        std::mem::take(&mut *self.inbox.lock().unwrap())
+    }
+}
+
+/// Per-walk monotone epoch fence for net workers.
+///
+/// The coordinator is the authority on token epochs (it fences `Served`
+/// and forwarded tokens against `TokenWatch`); this floor is the worker's
+/// local first line of defense that drops stale duplicates without a
+/// round-trip. [`EpochFloor::admit`] decides *and* raises in a single CAS,
+/// so two concurrent admits can never both base their decision on the same
+/// pre-raise floor — the two-step `load` + `fetch_max` it replaces allowed
+/// exactly that window (benign only because the coordinator re-fences;
+/// the worker-local invariant is now unconditional).
+#[derive(Debug)]
+pub struct EpochFloor {
+    floor: AtomicU32,
+}
+
+impl Default for EpochFloor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EpochFloor {
+    pub fn new() -> EpochFloor {
+        EpochFloor {
+            floor: AtomicU32::new(0),
+        }
+    }
+
+    /// Admit a token of `epoch` iff no strictly newer epoch has been
+    /// admitted, raising the floor to `epoch` in the same atomic step.
+    /// Equal epochs are admitted (retries of the live token).
+    pub fn admit(&self, epoch: u32) -> bool {
+        let mut cur = self.floor.load(Ordering::SeqCst);
+        loop {
+            if epoch < cur {
+                return false;
+            }
+            match self
+                .floor
+                .compare_exchange_weak(cur, epoch, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// The highest admitted epoch so far (0 before any admit).
+    pub fn current(&self) -> u32 {
+        self.floor.load(Ordering::SeqCst)
+    }
+}
+
+/// Kani bounded proofs over the claim primitives (sequential semantics;
+/// the concurrent interleavings are loom's job). Run via `cargo kani`
+/// (weekly deep tier — see EXPERIMENTS.md §Verification).
+#[cfg(kani)]
+mod kani_proofs {
+    use super::EpochFloor;
+
+    /// The floor is monotone and `admit` answers exactly `epoch >= floor`
+    /// for arbitrary epochs.
+    #[kani::proof]
+    fn epoch_floor_admit_is_monotone() {
+        let f = EpochFloor::new();
+        let a: u32 = kani::any();
+        let b: u32 = kani::any();
+        assert!(f.admit(a), "first admit always clears the zero floor");
+        assert_eq!(f.current(), a);
+        let rb = f.admit(b);
+        assert_eq!(rb, b >= a);
+        assert_eq!(f.current(), a.max(b));
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claim_is_exclusive_until_released() {
+        let slot: MailSlot<u32> = MailSlot::new();
+        assert!(slot.try_claim());
+        assert!(!slot.try_claim());
+        assert!(slot.is_claimed());
+        assert!(!slot.release());
+        assert!(!slot.is_claimed());
+        assert!(slot.try_claim());
+    }
+
+    #[test]
+    fn deliver_claims_once_per_drain_cycle() {
+        let slot: MailSlot<u32> = MailSlot::new();
+        assert!(slot.deliver(1), "first delivery claims");
+        assert!(!slot.deliver(2), "second delivery rides the same claim");
+        assert_eq!(slot.take(), Some(1));
+        assert_eq!(slot.take(), Some(2));
+        assert_eq!(slot.take(), None);
+        assert!(!slot.release(), "empty mailbox releases cleanly");
+        assert!(slot.deliver(3), "post-release delivery claims again");
+    }
+
+    #[test]
+    fn release_recheck_reclaims_pending_mail() {
+        let slot: MailSlot<u32> = MailSlot::new();
+        assert!(slot.deliver(1));
+        assert_eq!(slot.take(), Some(1));
+        // A message that landed while we held the claim (the deliverer saw
+        // scheduled == true and did not enqueue): release must re-claim.
+        assert!(!slot.deliver(2));
+        assert!(slot.release(), "release re-claims when mail is pending");
+        assert!(slot.is_claimed());
+        assert_eq!(slot.take(), Some(2));
+    }
+
+    #[test]
+    fn drain_and_release_empties_and_frees() {
+        let slot: MailSlot<u32> = MailSlot::new();
+        assert!(slot.deliver(1));
+        assert!(!slot.deliver(2));
+        let drained: Vec<u32> = slot.drain_and_release().into_iter().collect();
+        assert_eq!(drained, vec![1, 2]);
+        assert!(!slot.is_claimed());
+        assert!(!slot.has_mail());
+    }
+
+    #[test]
+    fn epoch_floor_rejects_stale_admits_fresh() {
+        let f = EpochFloor::new();
+        assert!(f.admit(0), "epoch 0 clears a zero floor");
+        assert!(f.admit(3));
+        assert_eq!(f.current(), 3);
+        assert!(!f.admit(2), "stale epoch is fenced");
+        assert!(f.admit(3), "retry of the live epoch passes");
+        assert!(f.admit(7));
+        assert_eq!(f.current(), 7);
+    }
+}

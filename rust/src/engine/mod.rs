@@ -22,6 +22,13 @@
 //!   coordinator that owns membership, stop rules, the lease/epoch
 //!   token-watch and trace merge, speaking the versioned [`net::wire`]
 //!   codec (`repro sweep --substrate net`, EXPERIMENTS.md §Net).
+//! * [`claim`] + [`timer`] — the concurrency primitives both pooled
+//!   substrates share: the mailbox/claim-flag handoff protocol
+//!   ([`claim::MailSlot`], [`claim::EpochFloor`]) and the timer-wheel
+//!   timekeeper service ([`timer::TimerService`]). These are the
+//!   model-checked pieces of the runtime — loom interleaving tests, a
+//!   state-machine suite, and Kani bounded proofs cover them
+//!   (EXPERIMENTS.md §Verification).
 //!
 //! The public entry point is the builder:
 //!
@@ -36,9 +43,11 @@
 //! println!("final NMSE: {:.4}", report.traces[0].last_metric());
 //! ```
 
+pub mod claim;
 pub mod des;
 pub mod net;
 pub mod threads;
+pub mod timer;
 
 pub use des::WalkEvent;
 

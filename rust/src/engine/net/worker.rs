@@ -33,6 +33,7 @@ use crate::algo::behavior::{
     TokenMsg,
 };
 use crate::config::{ExperimentConfig, RoutingRule};
+use crate::engine::claim::{EpochFloor, MailSlot};
 use crate::engine::threads::ServiceCompute;
 use crate::engine::Workload;
 use crate::graph::Topology;
@@ -40,11 +41,10 @@ use crate::scenario::executor::StealQueue;
 use crate::sim::FaultModel;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
-use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::os::unix::net::UnixStream;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Everything one agent owns between activations (the worker-process twin
@@ -60,10 +60,10 @@ struct Core {
 }
 
 struct AgentSlot {
-    inbox: Mutex<VecDeque<TokenMsg>>,
-    /// True while the agent is on the run queue or executing — the same
-    /// at-most-one-claim protocol as the thread substrate.
-    scheduled: AtomicBool,
+    /// Mailbox + claim bit — the same at-most-one-claim protocol as the
+    /// thread substrate, shared via [`MailSlot`] so the loom suite checks
+    /// one implementation for both runtimes.
+    mail: MailSlot<TokenMsg>,
     core: Mutex<Core>,
 }
 
@@ -84,8 +84,10 @@ struct Shared {
     runq: StealQueue<usize>,
     /// Per-walk monotone epoch floor: fences stale duplicates on the
     /// worker-local fast path (coordinator-relayed tokens are fenced
-    /// again upstream by the [`crate::sim::TokenWatch`]).
-    epoch_floor: Vec<AtomicU32>,
+    /// again upstream by the [`crate::sim::TokenWatch`]). The single-CAS
+    /// [`EpochFloor::admit`] replaced a load-then-`fetch_max` pair whose
+    /// decision could be based on a pre-raise floor (PR 8 audit).
+    epoch_floor: Vec<EpochFloor>,
     /// Local agents whose next payload doubles as their restart snapshot.
     needs_resync: Vec<AtomicBool>,
     writer: Mutex<FrameWriter<BufWriter<Box<dyn Write + Send>>>>,
@@ -98,8 +100,7 @@ impl Shared {
     /// Put `msg` in a *local* agent's mailbox and make it runnable.
     fn deliver(&self, dest: usize, msg: TokenMsg) {
         let li = dest - self.lo;
-        self.slots[li].inbox.lock().unwrap().push_back(msg);
-        if !self.slots[li].scheduled.swap(true, Ordering::SeqCst) {
+        if self.slots[li].mail.deliver(msg) {
             self.runq.push(li, li);
         }
     }
@@ -138,16 +139,6 @@ impl Shared {
     }
 }
 
-/// Release a local agent's claim, then re-check the mailbox — the same
-/// landed-in-the-gap re-claim as the thread substrate.
-fn release_claim(shared: &Shared, li: usize) {
-    let slot = &shared.slots[li];
-    slot.scheduled.store(false, Ordering::SeqCst);
-    if !slot.inbox.lock().unwrap().is_empty() && !slot.scheduled.swap(true, Ordering::SeqCst) {
-        shared.runq.push(li, li);
-    }
-}
-
 /// One pool worker: claim runnable local agents until the queue closes.
 fn pool_loop(w: usize, shared: &Shared) -> anyhow::Result<()> {
     while let Some(li) = shared.runq.pop(w) {
@@ -161,27 +152,39 @@ fn pool_loop(w: usize, shared: &Shared) -> anyhow::Result<()> {
 
 fn run_claimed(li: usize, shared: &Shared) -> anyhow::Result<()> {
     let slot = &shared.slots[li];
+    // Same row-handoff claim check as the thread substrate: the core lock
+    // below hands this thread the agent's state, sound only under the
+    // MailSlot claim.
+    debug_assert!(
+        slot.mail.is_claimed(),
+        "run_claimed({li}) without the scheduled claim"
+    );
     if shared.stop.load(Ordering::SeqCst) {
-        let mut inbox = slot.inbox.lock().unwrap();
-        while let Some(msg) = inbox.pop_front() {
+        // Drain + release in one inbox critical section (claim
+        // invariant 3 in `engine/claim.rs`): no token is left both
+        // undrained and unscheduled.
+        for msg in slot.mail.drain_and_release() {
             shared.retire(msg.payload);
         }
-        slot.scheduled.store(false, Ordering::SeqCst);
         return Ok(());
     }
-    let msg = slot.inbox.lock().unwrap().pop_front();
-    let Some(msg) = msg else {
-        release_claim(shared, li);
+    let Some(msg) = slot.mail.take() else {
+        // `release` re-checks for the landed-in-the-gap delivery — the
+        // same loom-checked protocol as the thread substrate (claim
+        // invariant 2).
+        if slot.mail.release() {
+            shared.runq.push(li, li);
+        }
         return Ok(());
     };
     {
         let mut core = slot.core.lock().unwrap();
         serve(li, &mut core, msg, shared)?;
     }
-    if !slot.inbox.lock().unwrap().is_empty() {
+    if slot.mail.has_mail() {
         shared.runq.push(li, li);
-    } else {
-        release_claim(shared, li);
+    } else if slot.mail.release() {
+        shared.runq.push(li, li);
     }
     Ok(())
 }
@@ -192,14 +195,12 @@ fn run_claimed(li: usize, shared: &Shared) -> anyhow::Result<()> {
 fn serve(li: usize, core: &mut Core, mut msg: TokenMsg, shared: &Shared) -> anyhow::Result<()> {
     let agent = shared.lo + li;
     // Local epoch fence: only the coordinator bumps epochs, so the floor
-    // is monotone and a below-floor token is a stale duplicate.
-    if shared.walks > 0 {
-        let floor = shared.epoch_floor[msg.id].load(Ordering::SeqCst);
-        if msg.epoch < floor {
-            core.pool.put(std::mem::take(&mut msg.payload));
-            return Ok(());
-        }
-        shared.epoch_floor[msg.id].fetch_max(msg.epoch, Ordering::SeqCst);
+    // is monotone and a below-floor token is a stale duplicate. `admit`
+    // decides and raises in one CAS — the loom regression
+    // `epoch_floor_admit_and_raise_are_one_atomic_step` pins this down.
+    if shared.walks > 0 && !shared.epoch_floor[msg.id].admit(msg.epoch) {
+        core.pool.put(std::mem::take(&mut msg.payload));
+        return Ok(());
     }
     // Crash-restart re-sync (a respawned worker process): the first
     // payload to reach each agent doubles as its state snapshot.
@@ -446,8 +447,7 @@ pub fn worker_main(args: &Args) -> anyhow::Result<()> {
         .into_iter()
         .enumerate()
         .map(|(li, behavior)| AgentSlot {
-            inbox: Mutex::new(VecDeque::new()),
-            scheduled: AtomicBool::new(false),
+            mail: MailSlot::new(),
             core: Mutex::new(Core {
                 behavior,
                 row: vec![0.0f32; dim],
@@ -478,7 +478,7 @@ pub fn worker_main(args: &Args) -> anyhow::Result<()> {
         stop: AtomicBool::new(false),
         slots,
         runq: StealQueue::new(pool_size),
-        epoch_floor: (0..walks).map(|_| AtomicU32::new(0)).collect(),
+        epoch_floor: (0..walks).map(|_| EpochFloor::new()).collect(),
         needs_resync: (0..local_n).map(|_| AtomicBool::new(restarted)).collect(),
         writer,
         retired: Mutex::new(Vec::new()),
@@ -567,8 +567,7 @@ pub fn worker_main(args: &Args) -> anyhow::Result<()> {
         }
     }
     for slot in &shared.slots {
-        let mut inbox = slot.inbox.lock().unwrap();
-        while let Some(msg) = inbox.pop_front() {
+        for msg in slot.mail.sweep() {
             shared.retire(msg.payload);
         }
     }

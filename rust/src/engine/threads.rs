@@ -21,7 +21,8 @@
 //!   PR 4's exclusive-row ownership is preserved;
 //! * every delay that used to pin a sleeping thread — link latency,
 //!   retransmission ack timeouts, calibrated straggler sleeps — becomes a
-//!   deadline on a shared [`TimerWheel`] driven by one timekeeper thread,
+//!   deadline on a shared [`crate::sim::TimerWheel`] (via
+//!   [`TimerService`]) driven by one timekeeper thread,
 //!   so thousands of concurrent delays coalesce instead of each occupying
 //!   a kernel thread;
 //! * compute still goes through the serialized [`SolverClient`] service
@@ -62,15 +63,16 @@ use crate::data::AgentData;
 use crate::graph::Topology;
 use crate::metrics::{Trace, TracePoint};
 use crate::model::{BlockStore, Problem, Task};
+use crate::engine::claim::MailSlot;
+use crate::engine::timer::TimerService;
 use crate::scenario::executor::StealQueue;
-use crate::sim::{FaultModel, LatencyModel, Membership, TimerWheel, TimingModel, TokenWatch};
+use crate::sim::{FaultModel, LatencyModel, Membership, TimingModel, TokenWatch};
 use crate::solver::SolverClient;
 use crate::util::rng::Rng;
 use std::cell::UnsafeCell;
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 /// Timer-wheel resolution. Link latencies are U(10µs, 100µs); 20µs ticks
 /// quantize them no coarser than the OS sleep granularity already does,
@@ -83,16 +85,23 @@ const WHEEL_SLOTS: usize = 512;
 /// The shared block arena for the thread substrate. Rows are disjoint
 /// cache-line-padded slices of one allocation; each agent's [`AgentCore`]
 /// holds a [`RowView`] over exactly its own row.
-///
-/// Safety contract (why the `Sync` impl is sound): row `i` is touched only
-/// through agent `i`'s `RowView`, which lives inside the agent's
-/// mutex-guarded core, and a core is only ever executed under a single
-/// claim (the `scheduled` flag); the coordinator reads the arena only
-/// after joining every pool thread. The `Arc` keeps the allocation alive
-/// even if the coordinator unwinds early, so a still-running worker can
-/// never write into freed memory.
 struct ArenaCell(UnsafeCell<BlockStore>);
 
+// SAFETY: `&ArenaCell` is shared across the pool, but the `BlockStore`
+// behind the cell is only ever accessed row-wise through disjoint
+// `RowView`s — row `i` only through agent `i`'s view, which lives inside
+// the agent's mutex-guarded `AgentCore`. Exclusivity of each row is the
+// claim protocol's single-ownership invariant (`engine/claim.rs`
+// invariant 1, model-checked in `tests/loom_runtime.rs`): a core runs only
+// under its `MailSlot` claim, at most one of which exists at a time, and
+// the row hands off between workers *with* the claim — the SeqCst claim
+// swap plus the core mutex give the release/acquire edge that orders one
+// worker's row writes before the next worker's reads. The coordinator
+// touches the arena directly only before any pool thread exists (row
+// carving in `run`) and after joining every pool thread (final consensus
+// read), both of which are happens-before-ordered with all worker access
+// via spawn/join. The `debug_assert!` in `run_claimed` checks the claim
+// is actually held at the row-handoff site.
 unsafe impl Sync for ArenaCell {}
 
 /// Exclusive view of one arena row, movable between workers with the
@@ -104,14 +113,24 @@ struct RowView {
     dim: usize,
 }
 
-// Safety: the raw pointer targets a row no other core accesses (see
-// `ArenaCell`), and the Arc it rides with is Send.
+// SAFETY: sending a `RowView` to another thread moves write access to one
+// arena row. That is sound because (a) the pointer targets a row no other
+// `RowView` overlaps — rows are carved once, disjointly, from
+// `BlockStore::row_ptr` before the pool starts (see `model/arena.rs` for
+// the in-bounds/disjointness argument); (b) access is serialized by the
+// claim protocol: the view is only dereferenced inside `serve`, under the
+// owning agent's core mutex, by the worker holding the agent's `MailSlot`
+// claim; and (c) the `_arena` Arc travels with the view (Arc is
+// Send+Sync), keeping the allocation alive for the view's lifetime even
+// if the coordinator unwinds early, so a still-running worker can never
+// write into freed memory.
 unsafe impl Send for RowView {}
 
 impl RowView {
     fn slice_mut(&mut self) -> &mut [f32] {
-        // Safety: exclusive access per the ArenaCell contract; the pointer
-        // is valid for `dim` floats (one padded arena row).
+        // SAFETY: exclusive access per the `RowView` contract above; the
+        // pointer is valid for `dim` floats (one padded arena row —
+        // `model/arena.rs` guarantees `dim` elements in bounds per row).
         unsafe { std::slice::from_raw_parts_mut(self.ptr, self.dim) }
     }
 }
@@ -138,12 +157,6 @@ enum TimerItem {
     Retry { from: usize, preferred: usize, msg: TokenMsg, holds: u32 },
 }
 
-/// The shared wheel plus the timekeeper's wakeup condvar.
-struct Timers {
-    wheel: Mutex<TimerWheel<TimerItem>>,
-    cv: Condvar,
-}
-
 /// Everything one parked agent owns between activations. A worker claims
 /// it through the slot's mutex; the `scheduled` flag guarantees at most
 /// one claim (run-queue entry, wheel `Unpark`, or running worker) exists
@@ -163,10 +176,10 @@ struct AgentCore {
 }
 
 struct AgentSlot {
-    inbox: Mutex<VecDeque<TokenMsg>>,
-    /// True while the agent is on the run queue, parked in the wheel, or
-    /// executing on a worker.
-    scheduled: AtomicBool,
+    /// Mailbox + claim bit (`engine/claim.rs`). The claim is held while
+    /// the agent is on the run queue, parked in the wheel, or executing on
+    /// a worker — arena-row ownership moves with it.
+    mail: MailSlot<TokenMsg>,
     core: Mutex<AgentCore>,
 }
 
@@ -174,6 +187,26 @@ struct Shared {
     topo: Topology,
     cycle: Vec<usize>,
     routing: RoutingRule,
+    /// Activation / transmission-attempt totals.
+    ///
+    /// Ordering audit (PR 8, satellite 3): every *mutation* is a
+    /// `fetch_add` — an atomic RMW — so the totals are exact regardless of
+    /// memory ordering; `Relaxed` cannot drop or double-count an RMW, it
+    /// only weakens how the count *synchronizes with other locations*.
+    /// The three read classes each have their own correctness argument:
+    /// (a) stop-rule trips compare the value *returned by the caller's own
+    /// `fetch_add`* (which includes its increment and every earlier one in
+    /// the location's modification order), so the threshold trips exactly
+    /// once at or past the bound, and `trip_stop` itself latches via a
+    /// SeqCst swap; (b) trace finalization reads happen after `join()` on
+    /// every pool thread, and thread join gives happens-before with all of
+    /// the joined threads' increments; (c) mid-run monitor samples and
+    /// `retire_token`'s `k` are intentionally approximate snapshots (the
+    /// monitor's time axis is wall-clock; coherence still guarantees a
+    /// snapshot is some real prefix-total that includes the reader's own
+    /// increments). The state-machine suite (`tests/statemachine.rs`)
+    /// asserts class-(b) exactness: recorded totals equal the reference
+    /// model's counts to the message.
     activations: AtomicU64,
     comm: AtomicU64,
     stop: AtomicBool,
@@ -209,7 +242,7 @@ struct Shared {
     eval_model: EvalModel,
     agents: Vec<AgentSlot>,
     runq: StealQueue<usize>,
-    timers: Timers,
+    timers: TimerService<TimerItem>,
     /// Per-worker busy nanoseconds (time spent holding agent claims) —
     /// the utilization series in the trace telemetry.
     worker_busy_ns: Vec<AtomicU64>,
@@ -226,15 +259,16 @@ impl Shared {
 
     /// Make agent `i` runnable unless it already holds a claim.
     fn schedule(&self, i: usize) {
-        if !self.agents[i].scheduled.swap(true, Ordering::SeqCst) {
+        if self.agents[i].mail.try_claim() {
             self.runq.push(i, i);
         }
     }
 
     /// Put `msg` in `dest`'s mailbox and make it runnable.
     fn deliver(&self, dest: usize, msg: TokenMsg) {
-        self.agents[dest].inbox.lock().unwrap().push_back(msg);
-        self.schedule(dest);
+        if self.agents[dest].mail.deliver(msg) {
+            self.runq.push(dest, dest);
+        }
     }
 
     /// Hand `msg` to `dest` after `delay` seconds: zero-delay messages go
@@ -254,11 +288,7 @@ impl Shared {
     /// Put `item` on the wheel `delay` seconds from now and wake the
     /// timekeeper.
     fn schedule_timer(&self, delay: f64, item: TimerItem) {
-        let mut wheel = self.timers.wheel.lock().unwrap();
-        let tick = wheel.tick_at(self.now() + delay);
-        wheel.schedule_at(tick, item);
-        drop(wheel);
-        self.timers.cv.notify_one();
+        self.timers.schedule_secs(self.now() + delay, item);
     }
 
     /// Transmit a token toward `next` against the retransmission budget
@@ -274,6 +304,9 @@ impl Shared {
         rng: &mut Rng,
     ) -> u64 {
         let t = self.faults.transmit_token(rng);
+        // Stop decisions use the RMW's own return value — exact by
+        // modification order even at Relaxed (read class (a) on
+        // `Shared::activations`).
         let comm_now = self.comm.fetch_add(t.attempts, Ordering::Relaxed) + t.attempts;
         if t.delivered {
             let lf = if self.link.is_empty() { 1.0 } else { self.link[next] };
@@ -293,12 +326,11 @@ impl Shared {
     }
 
     /// Trip the stop flag (once): close the run queue so every parked
-    /// worker wakes, and wake the timekeeper so it exits.
+    /// worker wakes, and stop the timer service so the timekeeper exits.
     fn trip_stop(&self) {
         if !self.stop.swap(true, Ordering::SeqCst) {
             self.runq.close();
-            let _wheel = self.timers.wheel.lock().unwrap();
-            self.timers.cv.notify_all();
+            self.timers.stop();
         }
     }
 
@@ -308,6 +340,9 @@ impl Shared {
         if self.eval_model != EvalModel::Token || payload.is_empty() {
             return;
         }
+        // Relaxed snapshot (read class (c) on `Shared::activations`): `k`
+        // only arbitrates newest-wins among retiring tokens, and coherence
+        // guarantees it is a real prefix-total.
         let k = self.activations.load(Ordering::Relaxed);
         let mut slot = self.final_token.lock().unwrap();
         let newer = match &*slot {
@@ -439,8 +474,7 @@ pub(crate) fn run(
         .zip(rows)
         .enumerate()
         .map(|(i, (behavior, row))| AgentSlot {
-            inbox: Mutex::new(VecDeque::new()),
-            scheduled: AtomicBool::new(false),
+            mail: MailSlot::new(),
             core: Mutex::new(AgentCore {
                 behavior,
                 row,
@@ -484,10 +518,7 @@ pub(crate) fn run(
         eval_model: spec.eval_model(),
         agents,
         runq: StealQueue::new(workers),
-        timers: Timers {
-            wheel: Mutex::new(TimerWheel::new(TICK_SECS, WHEEL_SLOTS)),
-            cv: Condvar::new(),
-        },
+        timers: TimerService::new(TICK_SECS, WHEEL_SLOTS),
         worker_busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
         final_token: Mutex::new(None),
     });
@@ -625,13 +656,12 @@ pub(crate) fn run(
     if shared.eval_model == EvalModel::Token {
         let _ = shared.runq.drain();
         for slot in &shared.agents {
-            let mut inbox = slot.inbox.lock().unwrap();
-            while let Some(msg) = inbox.pop_front() {
+            for msg in slot.mail.sweep() {
                 shared.retire_token(msg.payload);
             }
         }
         let mut leftovers = Vec::new();
-        shared.timers.wheel.lock().unwrap().drain(&mut leftovers);
+        shared.timers.drain(&mut leftovers);
         for item in leftovers {
             match item {
                 TimerItem::Deliver { msg, .. } | TimerItem::Retry { msg, .. } => {
@@ -644,7 +674,8 @@ pub(crate) fn run(
 
     // Final point: the true final consensus read straight out of the arena
     // (safe now — every pool thread has been joined), or the newest
-    // retired token value.
+    // retired token value. The Relaxed counter reads below are likewise
+    // exact post-join (read class (b) on `Shared::activations`).
     let metric = match shared.eval_model {
         EvalModel::AgentMean => {
             let store = unsafe { &*arena.0.get() };
@@ -691,39 +722,13 @@ pub(crate) fn run(
 
 /// The timekeeper: sleeps until the wheel's next deadline, fires due
 /// entries (mailbox deliveries and agent unparks), exits when the stop
-/// flag rises. All deliveries happen with the wheel lock *released* so the
-/// run-queue and mailbox locks never nest under it.
+/// flag rises. The park/advance/stop discipline lives in
+/// [`TimerService::next_batch`] (model-checked under loom); all deliveries
+/// happen with the wheel lock *released* so the run-queue and mailbox
+/// locks never nest under it.
 fn timer_loop(shared: &Shared) {
     let mut due: Vec<TimerItem> = Vec::new();
-    loop {
-        {
-            let mut wheel = shared.timers.wheel.lock().unwrap();
-            loop {
-                if shared.stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                let now_tick = wheel.elapsed_tick(shared.now());
-                wheel.advance_to(now_tick, &mut due);
-                if !due.is_empty() {
-                    break;
-                }
-                // Sleep to the next deadline (capped: the cap is only a
-                // backstop — schedules and stop both notify the condvar).
-                let wait = match wheel.next_due() {
-                    Some(t) => (wheel.deadline_secs(t) - shared.now()).max(0.0),
-                    None => 0.05,
-                };
-                if wait == 0.0 {
-                    continue;
-                }
-                let (guard, _) = shared
-                    .timers
-                    .cv
-                    .wait_timeout(wheel, Duration::from_secs_f64(wait.min(0.05)))
-                    .unwrap();
-                wheel = guard;
-            }
-        }
+    while shared.timers.next_batch(|| shared.now(), &mut due) {
         for item in due.drain(..) {
             match item {
                 TimerItem::Deliver { dest, msg } => shared.deliver(dest, msg),
@@ -803,14 +808,25 @@ fn run_claimed(
     sample_tx: &mpsc::Sender<Sample>,
 ) -> anyhow::Result<()> {
     let slot = &shared.agents[i];
+    // Claim check at the row-handoff boundary: we are about to take the
+    // core mutex and with it mutable access to arena row `i` — sound only
+    // under the MailSlot claim (see the `ArenaCell`/`RowView` SAFETY
+    // comments). Every path into here holds it: `pop` only yields indices
+    // pushed by a claim winner, and `Unpark` entries keep the claim parked
+    // on the wheel.
+    debug_assert!(
+        slot.mail.is_claimed(),
+        "run_claimed({i}) without the scheduled claim"
+    );
     if shared.stop.load(Ordering::SeqCst) {
         // Drain-at-stop: retire queued tokens so the monitor still gets a
-        // final token value, then park for good.
-        let mut inbox = slot.inbox.lock().unwrap();
-        while let Some(msg) = inbox.pop_front() {
+        // final token value, then park for good. Drain and release happen
+        // in one inbox critical section (`drain_and_release`), so a
+        // concurrent deliverer either gets drained here or re-claims and
+        // enqueues — no token is stranded unretired (claim invariant 3).
+        for msg in slot.mail.drain_and_release() {
             shared.retire_token(msg.payload);
         }
-        slot.scheduled.store(false, Ordering::SeqCst);
         return Ok(());
     }
 
@@ -821,47 +837,32 @@ fn run_claimed(
     // the `Unpark` entry, so no duplicate queue entry can exist.
     let now = shared.now();
     if core.busy_until > now {
-        let mut wheel = shared.timers.wheel.lock().unwrap();
-        let tick = wheel.tick_at(core.busy_until);
-        wheel.schedule_at(tick, TimerItem::Unpark { agent: i });
-        drop(wheel);
-        shared.timers.cv.notify_one();
+        shared
+            .timers
+            .schedule_secs(core.busy_until, TimerItem::Unpark { agent: i });
         return Ok(());
     }
 
-    let msg = slot.inbox.lock().unwrap().pop_front();
-    let Some(msg) = msg else {
-        // Nothing to do: release the claim (see `release_claim` for the
-        // landed-in-the-gap re-check).
-        release_claim(shared, i);
+    let Some(msg) = slot.mail.take() else {
+        // Nothing to do: release the claim. `MailSlot::release` re-checks
+        // the mailbox for the landed-in-the-gap delivery and re-claims
+        // (claim invariant 2, loom-checked).
+        if slot.mail.release() {
+            shared.runq.push(i, i);
+        }
         return Ok(());
     };
 
     serve(i, core, msg, shared, sample_tx)?;
 
     drop(core_guard);
-    if !slot.inbox.lock().unwrap().is_empty() {
+    if slot.mail.has_mail() {
         // Backlog: keep the claim and requeue behind the other runnables.
         shared.runq.push(i, i);
-    } else {
-        release_claim(shared, i);
-    }
-    Ok(())
-}
-
-/// Release agent `i`'s claim, then re-check the mailbox: a message that
-/// landed between the last drain and the release re-claims immediately
-/// (whoever wins the `swap` — us or a concurrent deliverer — enqueues
-/// exactly one entry). This is the one delicate interleaving in the claim
-/// protocol; both release paths must share it.
-fn release_claim(shared: &Shared, i: usize) {
-    let slot = &shared.agents[i];
-    slot.scheduled.store(false, Ordering::SeqCst);
-    if !slot.inbox.lock().unwrap().is_empty()
-        && !slot.scheduled.swap(true, Ordering::SeqCst)
-    {
+    } else if slot.mail.release() {
         shared.runq.push(i, i);
     }
+    Ok(())
 }
 
 /// Service one message at agent `i`: run the behavior, account the
@@ -966,6 +967,11 @@ fn serve(
         Hold(usize),
         None,
     }
+    // Relaxed snapshot as the default: only activations that *add* comm
+    // decide stop rules from it, and those overwrite `comm_now` with their
+    // own `fetch_add` return below (read class (a)) — an activation that
+    // adds nothing may see a stale total, but then the thread that did
+    // increment past `max_comm` trips the stop from its own RMW result.
     let mut comm_now = shared.comm.load(Ordering::Relaxed);
     let mut forward = Fwd::None;
     if served.forward && !stopping {

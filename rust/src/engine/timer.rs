@@ -1,0 +1,170 @@
+//! The timekeeper handoff: one shared [`TimerWheel`] plus the condvar
+//! protocol that parks the timer thread without losing wakeups.
+//!
+//! Extracted from the pooled runtimes (`engine/threads.rs` and
+//! `engine/net/worker.rs` both run one timekeeper thread) so the loom
+//! suite can model-check deadline insertion racing the timekeeper's
+//! park/advance cycle — the `TimerWheel` deadline-insertion race named by
+//! the PR-8 issue.
+//!
+//! # Why no wakeup is ever lost
+//!
+//! Scheduling requires the wheel lock ([`TimerService::schedule_secs`]),
+//! and the timekeeper holds that lock continuously from its stop-check and
+//! `advance_to` scan until `Condvar::wait` *atomically* releases it. A
+//! scheduler (or [`TimerService::stop`]) therefore cannot run its
+//! notify between the timekeeper's decision to sleep and the sleep itself:
+//! it either runs before the timekeeper's scan (and the scan sees the new
+//! entry / the stop flag) or after the timekeeper is parked (and the
+//! notify wakes it). `stop` takes the wheel lock before notifying for
+//! exactly this reason. Under std a capped `wait_timeout` additionally
+//! backstops the clock drifting past a deadline with no notify; under
+//! `--cfg loom` the timeout is dropped and the model proves the notify
+//! protocol alone suffices (`tests/loom_runtime.rs`).
+
+use crate::sim::TimerWheel;
+use crate::util::sync::{AtomicBool, Condvar, Mutex, Ordering};
+
+/// A shared timer wheel, its timekeeper wakeup condvar, and the stop
+/// latch. `T` is the deadline payload (e.g. `TimerItem` in the runtimes).
+pub struct TimerService<T> {
+    wheel: Mutex<TimerWheel<T>>,
+    cv: Condvar,
+    stopped: AtomicBool,
+}
+
+impl<T> TimerService<T> {
+    /// See [`TimerWheel::new`] for the tick/slot semantics.
+    pub fn new(tick_secs: f64, nslots: usize) -> TimerService<T> {
+        TimerService {
+            wheel: Mutex::new(TimerWheel::new(tick_secs, nslots)),
+            cv: Condvar::new(),
+            stopped: AtomicBool::new(false),
+        }
+    }
+
+    /// Put `item` on the wheel at absolute time `deadline_secs` and wake
+    /// the timekeeper. `tick_at` rounds *up*, so a deadline may fire a
+    /// little late but never early; past deadlines clamp to the cursor and
+    /// fire on the next advance.
+    pub fn schedule_secs(&self, deadline_secs: f64, item: T) {
+        let mut wheel = self.wheel.lock().unwrap();
+        let tick = wheel.tick_at(deadline_secs);
+        wheel.schedule_at(tick, item);
+        drop(wheel);
+        self.cv.notify_one();
+    }
+
+    /// Latch the stop flag and wake the timekeeper (and anyone else parked
+    /// on the condvar). Idempotent.
+    pub fn stop(&self) {
+        self.stopped.store(true, Ordering::SeqCst);
+        // Take the wheel lock before notifying: a timekeeper between its
+        // stop-check and its wait holds the lock, so the notify can only
+        // run once the wait has atomically parked+released — the wakeup
+        // cannot fall in the gap (see the module docs).
+        let _wheel = self.wheel.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::SeqCst)
+    }
+
+    /// The timekeeper's blocking step: park until a batch of deadlines is
+    /// due (filled into `due`, returns `true`) or the service is stopped
+    /// (returns `false`; `due` is left empty — still-scheduled items stay
+    /// on the wheel for [`TimerService::drain`]).
+    pub fn next_batch(&self, now_secs: impl Fn() -> f64, due: &mut Vec<T>) -> bool {
+        let mut wheel = self.wheel.lock().unwrap();
+        loop {
+            if self.stopped.load(Ordering::SeqCst) {
+                return false;
+            }
+            let now_tick = wheel.elapsed_tick(now_secs());
+            wheel.advance_to(now_tick, due);
+            if !due.is_empty() {
+                return true;
+            }
+            // Sleep to the next deadline. The cap is only a backstop —
+            // schedule_secs and stop both notify the condvar.
+            #[cfg(not(loom))]
+            {
+                let wait = match wheel.next_due() {
+                    Some(t) => (wheel.deadline_secs(t) - now_secs()).max(0.0),
+                    None => 0.05,
+                };
+                if wait == 0.0 {
+                    continue;
+                }
+                let (guard, _) = self
+                    .cv
+                    .wait_timeout(wheel, std::time::Duration::from_secs_f64(wait.min(0.05)))
+                    .unwrap();
+                wheel = guard;
+            }
+            // Under loom there is no timed wait: the model must prove the
+            // notify protocol alone never strands the timekeeper.
+            #[cfg(loom)]
+            {
+                wheel = self.cv.wait(wheel).unwrap();
+            }
+        }
+    }
+
+    /// Sweep every still-scheduled item off the wheel (shutdown
+    /// accounting). Callers run this after the timekeeper has exited.
+    pub fn drain(&self, out: &mut Vec<T>) {
+        self.wheel.lock().unwrap().drain(out);
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn due_deadline_fires_without_parking() {
+        let svc: TimerService<u32> = TimerService::new(1.0, 4);
+        svc.schedule_secs(2.0, 7);
+        let mut due = Vec::new();
+        assert!(svc.next_batch(|| 2.0, &mut due));
+        assert_eq!(due, vec![7]);
+    }
+
+    #[test]
+    fn stop_unblocks_and_leaves_items_for_drain() {
+        let svc: TimerService<u32> = TimerService::new(1.0, 4);
+        svc.schedule_secs(100.0, 9);
+        svc.stop();
+        let mut due = Vec::new();
+        assert!(!svc.next_batch(|| 0.0, &mut due));
+        assert!(due.is_empty());
+        let mut left = Vec::new();
+        svc.drain(&mut left);
+        assert_eq!(left, vec![9]);
+    }
+
+    #[test]
+    fn timekeeper_wakes_on_cross_thread_schedule() {
+        use std::sync::atomic::{AtomicU64, Ordering as O};
+        use std::sync::Arc;
+        let svc: Arc<TimerService<u32>> = Arc::new(TimerService::new(1e-3, 8));
+        // A coarse fake clock that only starts ticking once the scheduler
+        // has run, so the timekeeper genuinely parks first.
+        let clock = Arc::new(AtomicU64::new(0));
+        let svc2 = svc.clone();
+        let clock2 = clock.clone();
+        let tk = std::thread::spawn(move || {
+            let mut due = Vec::new();
+            let fired = svc2.next_batch(|| clock2.load(O::SeqCst) as f64, &mut due);
+            (fired, due)
+        });
+        svc.schedule_secs(1.0, 3);
+        clock.store(2, O::SeqCst);
+        svc.schedule_secs(1.5, 4);
+        let (fired, due) = tk.join().unwrap();
+        assert!(fired);
+        assert!(!due.is_empty());
+    }
+}

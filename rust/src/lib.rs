@@ -47,7 +47,13 @@
 //!     view lives in the agent's parked core and its ownership moves
 //!     between pool workers with the agent's run-queue claim — exactly one
 //!     claim exists at a time, so no two workers can ever touch the same
-//!     row. Recording therefore costs O(dim) independent of N: the
+//!     row. That claim/steal/park protocol — and the queue, timer and
+//!     epoch-fence primitives it rests on ([`scenario::executor`],
+//!     [`engine::claim`], [`engine::timer`]) — is machine-checked: loom
+//!     model tests over the real primitives, state-machine property
+//!     suites against reference models, Kani bounded proofs and a miri
+//!     pass over the arena's unsafe row math, in two CI tiers (see
+//!     EXPERIMENTS.md §Verification). Recording costs O(dim) independent of N: the
 //!     consensus mean comes from the [`model::ObjectiveTracker`]'s running
 //!     block-sum, the objective streams rows in place, and no per-record
 //!     snapshot matrix exists — the layout that makes N=4096-agent runs

@@ -73,9 +73,10 @@ impl BlockStore {
     /// Agent `i`'s block x_i.
     pub fn row(&self, i: usize) -> &[f32] {
         assert!(i < self.n);
-        // Safety: the buffer is `n · stride` contiguous f32s (repr(C)
-        // lines) and `i < n`, so the row's `dim <= stride` floats are in
-        // bounds and properly initialized.
+        // SAFETY: the buffer is `n · stride` contiguous f32s (`CacheLine`
+        // is `repr(C)` over `[f32; LANE]`) and `i < n`, so the row's
+        // `dim <= stride` floats are in bounds and properly initialized
+        // (zeroed at construction).
         unsafe {
             std::slice::from_raw_parts(
                 self.data.as_ptr().cast::<f32>().add(i * self.stride),
@@ -88,18 +89,37 @@ impl BlockStore {
     /// exclusively, so this is ordinary safe borrowing).
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let ptr = self.row_ptr(i);
-        // Safety: in-bounds per `row_ptr`; `&mut self` guarantees
+        // SAFETY: in-bounds per `row_ptr`; `&mut self` guarantees
         // exclusivity.
         unsafe { std::slice::from_raw_parts_mut(ptr, self.dim) }
     }
 
     /// Raw pointer to agent `i`'s row, for the thread substrate's per-agent
-    /// row handles. The returned pointer stays valid for the lifetime of
-    /// the arena's heap allocation (moving the `BlockStore` value does not
-    /// move the boxed data).
+    /// row handles (`RowView` in `engine/threads.rs`).
+    ///
+    /// Pointer-math invariants the caller may rely on:
+    /// * **In bounds:** `i < n` is asserted, and the row occupies
+    ///   `[i·stride, i·stride + dim)` with `dim <= stride`, so every view
+    ///   of `dim` floats stays inside the single allocation — no view ever
+    ///   reaches the padding of another row's live prefix.
+    /// * **Disjoint:** rows are `stride`-spaced, so views for distinct `i`
+    ///   can never overlap; handing out one pointer per `i` (as `run` in
+    ///   `engine/threads.rs` does, once, before the pool starts) yields
+    ///   mutually disjoint views that are safe to write from different
+    ///   threads *provided* each view is externally serialized — the claim
+    ///   protocol (`engine/claim.rs`) is that serialization.
+    /// * **Stable:** the pointer stays valid for the lifetime of the
+    ///   arena's heap allocation (moving the `BlockStore` value does not
+    ///   move the boxed data; growing is impossible — the arena is
+    ///   fixed-size after `new`).
+    ///
+    /// The `miri` CI job runs the arena and executor unit tests under the
+    /// interpreter to check exactly these aliasing claims.
     pub(crate) fn row_ptr(&mut self, i: usize) -> *mut f32 {
         assert!(i < self.n);
-        // Safety of the offset: i < n, so the row lies inside the buffer.
+        // SAFETY of the offset: `i < n`, so `i·stride` is within the
+        // `n·stride`-float buffer and the add cannot overflow `isize`
+        // (the allocation exists).
         unsafe { self.data.as_mut_ptr().cast::<f32>().add(i * self.stride) }
     }
 }

@@ -475,6 +475,69 @@ impl<T> TimerWheel<T> {
     }
 }
 
+/// Kani bounded proofs for the wheel's slot arithmetic: absolute tags
+/// across revolutions, never-early firing, exactly-once accounting. The
+/// harnesses stay on integer ticks (`schedule_at`/`advance_to`) — the
+/// float tick conversions are covered by unit/property tests instead,
+/// where the solver's exactness adds nothing. Run via `cargo kani`
+/// (weekly deep tier — see EXPERIMENTS.md §Verification).
+#[cfg(kani)]
+mod kani_proofs {
+    use super::TimerWheel;
+
+    /// For any wheel size (1..=4 slots), any deadline up to 3+ ring
+    /// revolutions ahead, and any pair of monotone advances: the entry
+    /// fires on the first advance whose tick reaches the deadline, never
+    /// early, exactly once; `len` tracks it exactly.
+    #[kani::proof]
+    #[kani::unwind(24)]
+    fn wheel_fires_exactly_once_never_early_across_revolutions() {
+        let nslots: usize = kani::any();
+        kani::assume(nslots >= 1 && nslots <= 4);
+        let mut w: TimerWheel<u8> = TimerWheel::new(1.0, nslots);
+        let t: u64 = kani::any();
+        kani::assume(t <= 3 * nslots as u64 + 2);
+        let a1: u64 = kani::any();
+        let a2: u64 = kani::any();
+        kani::assume(a1 <= 16 && a2 <= 16 && a2 >= a1);
+        w.schedule_at(t, 7);
+        assert_eq!(w.len(), 1);
+        let mut out = Vec::new();
+        w.advance_to(a1, &mut out);
+        assert_eq!(out.len(), usize::from(a1 >= t), "first advance: fire iff due");
+        out.clear();
+        w.advance_to(a2, &mut out);
+        assert_eq!(
+            out.len(),
+            usize::from(a1 < t && a2 >= t),
+            "second advance: fire iff newly due, never twice"
+        );
+        assert_eq!(w.len(), usize::from(a2 < t), "len tracks the residue");
+    }
+
+    /// Scheduling at a tick the cursor has already passed clamps to the
+    /// cursor: the entry fires on the very next advance, never silently
+    /// lands in an already-swept slot to wait a full revolution.
+    #[kani::proof]
+    #[kani::unwind(24)]
+    fn wheel_past_deadline_clamps_to_cursor() {
+        let nslots: usize = kani::any();
+        kani::assume(nslots >= 1 && nslots <= 4);
+        let mut w: TimerWheel<u8> = TimerWheel::new(1.0, nslots);
+        let a1: u64 = kani::any();
+        kani::assume(a1 <= 8);
+        let mut out = Vec::new();
+        w.advance_to(a1, &mut out);
+        assert!(out.is_empty());
+        let stale: u64 = kani::any();
+        kani::assume(stale <= a1);
+        w.schedule_at(stale, 9);
+        w.advance_to(a1 + 1, &mut out);
+        assert_eq!(out, vec![9], "clamped entry fires on the next advance");
+        assert_eq!(w.len(), 0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

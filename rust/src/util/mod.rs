@@ -1,11 +1,13 @@
 //! Small self-contained substrates the offline build cannot pull from
 //! crates.io: a counter-based RNG, a JSON parser for the artifact manifest,
-//! a CLI argument helper, and a micro property-test harness.
+//! a CLI argument helper, a micro property-test harness, and the std/loom
+//! sync facade the verified concurrency primitives import from.
 
 pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod sync;
 
 /// Current OS-thread count of this process, from `/proc/self/status`
 /// (`None` off Linux or when procfs is unavailable). Used by the M:N

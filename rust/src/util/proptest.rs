@@ -23,14 +23,28 @@ impl Default for PropConfig {
     }
 }
 
-/// Run `prop` against `cfg.cases` generated inputs. `gen` draws one input
-/// from the RNG; `prop` returns `Err(reason)` on violation.
+/// Deep-tier case-count override: `PROPTEST_CASES=4096 cargo test`
+/// multiplies coverage across *every* property without touching the
+/// per-test defaults (mirroring the proptest crate's env knob; the weekly
+/// verification workflow sets it — see EXPERIMENTS.md §Verification).
+/// Unset or unparsable values fall back to the per-test `cfg.cases`.
+fn env_cases() -> Option<usize> {
+    std::env::var("PROPTEST_CASES").ok()?.trim().parse().ok()
+}
+
+/// Run `prop` against `cfg.cases` generated inputs (the `PROPTEST_CASES`
+/// environment variable overrides the count). `gen` draws one input from
+/// the RNG; `prop` returns `Err(reason)` on violation.
 pub fn run_prop<T, G, P>(name: &str, cfg: PropConfig, mut gen: G, mut prop: P)
 where
     G: FnMut(&mut Rng) -> T,
     P: FnMut(&T) -> Result<(), String>,
     T: std::fmt::Debug,
 {
+    let cfg = PropConfig {
+        cases: env_cases().unwrap_or(cfg.cases),
+        ..cfg
+    };
     let mut rng = Rng::new(cfg.seed);
     for case in 0..cfg.cases {
         let case_rng_seed = rng.next_u64();
@@ -52,6 +66,9 @@ mod tests {
 
     #[test]
     fn passing_property_runs_all_cases() {
+        // Honor a deep-tier PROPTEST_CASES override if one is set for the
+        // whole test run.
+        let expected = env_cases().unwrap_or(32);
         let mut count = 0;
         run_prop(
             "addition commutes",
@@ -66,7 +83,7 @@ mod tests {
                 }
             },
         );
-        assert_eq!(count, 32);
+        assert_eq!(count, expected);
     }
 
     #[test]

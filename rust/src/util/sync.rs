@@ -1,0 +1,34 @@
+//! Synchronization-primitive facade: `std::sync` by default, `loom::sync`
+//! under `RUSTFLAGS="--cfg loom"`.
+//!
+//! The hand-rolled concurrency primitives the pooled runtimes lean on —
+//! [`crate::scenario::executor::StealQueue`], the claim-flag protocol in
+//! [`crate::engine::claim`], the timekeeper handoff in
+//! [`crate::engine::timer`] — import their atomics, mutexes and condvars
+//! from here instead of `std::sync` directly. A normal build re-exports
+//! `std` types (zero cost, identical codegen); a `--cfg loom` build swaps
+//! in loom's model-checked twins so `tests/loom_runtime.rs` can explore
+//! every interleaving of the *actual* protocol code, not a test replica.
+//!
+//! Only the verified primitives route through this facade. The rest of the
+//! engine (worker threads, `mpsc` sample channels, wall clocks) stays on
+//! `std` — it still compiles under `--cfg loom` (loom types are ordinary
+//! structs), it just is not what the model checker drives.
+//!
+//! Run the model suite with:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_runtime
+//! ```
+//!
+//! See EXPERIMENTS.md §Verification for the full tier layout.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};

@@ -1,0 +1,280 @@
+//! Loom model tests for the M:N runtime's concurrency primitives.
+//!
+//! Compiled (and meaningful) only under the loom cfg:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_runtime
+//! ```
+//!
+//! The primitives themselves ([`StealQueue`], [`MailSlot`], [`EpochFloor`],
+//! [`TimerService`]) build against `loom::sync` via the
+//! `apibcd::util::sync` facade, so every interleaving explored here is an
+//! interleaving of the *production* code, not a test replica. The fast CI
+//! tier bounds exploration with `LOOM_MAX_PREEMPTIONS`; the weekly deep
+//! tier runs unbounded. See EXPERIMENTS.md §Verification.
+//!
+//! Thread budget: loom models at most 4 threads (including the model's
+//! main thread) — every scenario here spawns ≤ 2 and uses the main thread
+//! as the third actor.
+#![cfg(loom)]
+
+use apibcd::engine::claim::{EpochFloor, MailSlot};
+use apibcd::engine::timer::TimerService;
+use apibcd::scenario::executor::StealQueue;
+use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+/// The satellite-1 window (`scheduled.store(false)` → inbox-recheck →
+/// re-claim) against a concurrent delivery: in every interleaving the
+/// message ends up claim-covered by exactly one run-queue entry — never
+/// stranded in an unscheduled mailbox, never double-enqueued.
+#[test]
+fn release_recheck_never_strands_a_delivery() {
+    loom::model(|| {
+        let slot: Arc<MailSlot<u32>> = Arc::new(MailSlot::new());
+        let q: Arc<StealQueue<usize>> = Arc::new(StealQueue::new(1));
+        // A worker is mid-claim on agent 0 with an already-drained mailbox
+        // (the state right before `run_claimed`'s release path).
+        assert!(slot.try_claim());
+
+        let s2 = Arc::clone(&slot);
+        let q2 = Arc::clone(&q);
+        let deliverer = thread::spawn(move || {
+            if s2.deliver(7) {
+                q2.push(0, 0);
+            }
+        });
+        // The owner's release path (MailSlot::release = store(false),
+        // recheck, swap re-claim).
+        if slot.release() {
+            q.push(0, 0);
+        }
+        deliverer.join().unwrap();
+
+        let mut entries = 0;
+        while q.try_pop(0).is_some() {
+            entries += 1;
+        }
+        assert_eq!(entries, 1, "message must be covered by exactly one entry");
+        assert!(slot.is_claimed(), "the covering entry carries the claim");
+        assert_eq!(slot.take(), Some(7), "and the message is still there");
+    });
+}
+
+/// Claim/steal interleaving with two workers racing two agents: the claim
+/// bit admits at most one worker per agent at a time (single ownership —
+/// the arena-row handoff invariant), queue entries never materialize
+/// without a claim (no phantom wakeup), and no delivered message is lost:
+/// everything is either served or swept after the drain barrier.
+#[test]
+fn claim_steal_close_single_ownership_no_lost_messages() {
+    loom::model(|| {
+        let slots: Arc<Vec<MailSlot<u32>>> =
+            Arc::new((0..2).map(|_| MailSlot::new()).collect());
+        let q: Arc<StealQueue<usize>> = Arc::new(StealQueue::new(2));
+        let running: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..2).map(|_| AtomicUsize::new(0)).collect());
+        let served = Arc::new(AtomicUsize::new(0));
+
+        let mut workers = Vec::new();
+        for w in 0..2usize {
+            let slots = Arc::clone(&slots);
+            let q = Arc::clone(&q);
+            let running = Arc::clone(&running);
+            let served = Arc::clone(&served);
+            workers.push(thread::spawn(move || {
+                while let Some(i) = q.pop(w) {
+                    assert!(
+                        slots[i].is_claimed(),
+                        "phantom wakeup: queue entry without a claim"
+                    );
+                    let was = running[i].fetch_add(1, Ordering::SeqCst);
+                    assert_eq!(was, 0, "two workers own agent {i} at once");
+                    if slots[i].take().is_some() {
+                        served.fetch_add(1, Ordering::SeqCst);
+                    }
+                    running[i].fetch_sub(1, Ordering::SeqCst);
+                    if slots[i].has_mail() {
+                        q.push(i, i);
+                    } else if slots[i].release() {
+                        q.push(i, i);
+                    }
+                }
+            }));
+        }
+
+        // Main is the deliverer, then trips the drain barrier.
+        for (m, dest) in [(1u32, 0usize), (2, 1)] {
+            if slots[dest].deliver(m) {
+                q.push(dest, dest);
+            }
+        }
+        q.close();
+        for h in workers {
+            h.join().unwrap();
+        }
+
+        // Post-quiescence accounting: a close can strand entries in the
+        // queue and messages in mailboxes — the owner sweep (as in the
+        // runtimes' shutdown) must find exactly the unserved remainder.
+        let _ = q.drain();
+        let swept: usize = slots.iter().map(|s| s.sweep().len()).sum();
+        assert_eq!(
+            served.load(Ordering::SeqCst) + swept,
+            2,
+            "every delivered message is served or swept, exactly once"
+        );
+    });
+}
+
+/// `close()` is a reliable drain-and-park barrier: with workers parked or
+/// parking on an empty-then-nonempty queue, close wakes everyone (loom
+/// itself fails the model on any deadlocked schedule), and the one pushed
+/// item is claimed at most once — by a worker or by the owner's sweep.
+#[test]
+fn stealqueue_close_wakes_every_parked_worker() {
+    loom::model(|| {
+        let q: Arc<StealQueue<u32>> = Arc::new(StealQueue::new(2));
+        let mut workers = Vec::new();
+        for w in 0..2usize {
+            let q = Arc::clone(&q);
+            workers.push(thread::spawn(move || q.pop(w)));
+        }
+        q.push(0, 9);
+        q.close();
+        let popped = workers
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .filter(Option::is_some)
+            .count();
+        let swept = q.drain().len();
+        assert_eq!(popped + swept, 1, "the item is claimed exactly once");
+    });
+}
+
+/// Stop-flag vs in-flight token: the `run_claimed` stop skeleton (drain +
+/// release in one inbox critical section) races a delivery and the stop
+/// trip — in every interleaving the token is served, retired by the
+/// drain, or swept by the owner; never lost, never double-counted.
+#[test]
+fn stop_drain_retires_every_in_flight_token() {
+    loom::model(|| {
+        let slot: Arc<MailSlot<u32>> = Arc::new(MailSlot::new());
+        let q: Arc<StealQueue<usize>> = Arc::new(StealQueue::new(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicUsize::new(0));
+        let retired = Arc::new(AtomicUsize::new(0));
+
+        let worker = {
+            let slot = Arc::clone(&slot);
+            let q = Arc::clone(&q);
+            let stop = Arc::clone(&stop);
+            let served = Arc::clone(&served);
+            let retired = Arc::clone(&retired);
+            thread::spawn(move || {
+                while let Some(_i) = q.pop(0) {
+                    if stop.load(Ordering::SeqCst) {
+                        retired.fetch_add(slot.drain_and_release().len(), Ordering::SeqCst);
+                        continue;
+                    }
+                    if slot.take().is_some() {
+                        served.fetch_add(1, Ordering::SeqCst);
+                    }
+                    if slot.has_mail() {
+                        q.push(0, 0);
+                    } else if slot.release() {
+                        q.push(0, 0);
+                    }
+                }
+            })
+        };
+        let deliverer = {
+            let slot = Arc::clone(&slot);
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                if slot.deliver(1) {
+                    q.push(0, 0);
+                }
+            })
+        };
+
+        // Main trips the stop barrier, racing both.
+        stop.store(true, Ordering::SeqCst);
+        q.close();
+        deliverer.join().unwrap();
+        worker.join().unwrap();
+
+        let _ = q.drain();
+        let swept = slot.sweep().len();
+        let total = served.load(Ordering::SeqCst) + retired.load(Ordering::SeqCst) + swept;
+        assert_eq!(total, 1, "in-flight token: served, retired, or swept");
+    });
+}
+
+/// `TimerWheel` deadline insertion racing the timekeeper's
+/// park/advance/stop cycle: under loom the timekeeper has *no* timeout
+/// backstop, so this model proves the notify protocol alone never loses a
+/// wakeup (a lost one deadlocks the schedule and fails the model), and
+/// the scheduled item is fired or drained — exactly once.
+#[test]
+fn timer_schedule_races_timekeeper_and_stop() {
+    loom::model(|| {
+        let svc: Arc<TimerService<u8>> = Arc::new(TimerService::new(1.0, 2));
+        let fired = Arc::new(AtomicUsize::new(0));
+
+        let timekeeper = {
+            let svc = Arc::clone(&svc);
+            let fired = Arc::clone(&fired);
+            thread::spawn(move || {
+                let mut due = Vec::new();
+                while svc.next_batch(|| 0.0, &mut due) {
+                    fired.fetch_add(due.len(), Ordering::SeqCst);
+                    due.clear();
+                }
+            })
+        };
+        let scheduler = {
+            let svc = Arc::clone(&svc);
+            thread::spawn(move || svc.schedule_secs(0.0, 7))
+        };
+
+        scheduler.join().unwrap();
+        svc.stop();
+        timekeeper.join().unwrap();
+
+        let mut left = Vec::new();
+        svc.drain(&mut left);
+        assert_eq!(
+            fired.load(Ordering::SeqCst) + left.len(),
+            1,
+            "the deadline fires or is drained, exactly once"
+        );
+    });
+}
+
+/// Regression for the PR-8 epoch-fence hardening: `admit` decides and
+/// raises the floor in one atomic step, so concurrent admits always leave
+/// the floor at the max admitted epoch, the regenerated (higher) epoch is
+/// always admitted, and a stale epoch can never pass once the floor rose.
+#[test]
+fn epoch_floor_admit_and_raise_are_one_atomic_step() {
+    loom::model(|| {
+        let floor = Arc::new(EpochFloor::new());
+        let live = {
+            let floor = Arc::clone(&floor);
+            thread::spawn(move || floor.admit(2))
+        };
+        let stale = {
+            let floor = Arc::clone(&floor);
+            thread::spawn(move || floor.admit(1))
+        };
+        let live_admitted = live.join().unwrap();
+        let _stale_admitted = stale.join().unwrap();
+
+        assert!(live_admitted, "the regenerated epoch always clears the floor");
+        assert_eq!(floor.current(), 2, "floor ends at the max admitted epoch");
+        assert!(!floor.admit(1), "stale epoch is fenced after the raise");
+        assert!(floor.admit(2), "live-epoch retries keep passing");
+    });
+}

@@ -15,14 +15,17 @@
 //!   `axpy_scale`/`dist2` and `gemv`/`gemv_t`/`ger` agree with scalar f64
 //!   references over arbitrary lengths (including sub-lane/sub-block
 //!   tails);
-//! * serialization: JSON writer/parser round trip on random documents.
+//! * serialization: JSON writer/parser round trip on random documents;
+//! * timer wheel: revolution-boundary behaviour — slot-0 deadlines,
+//!   multi-revolution delays and simultaneous ticks fire exactly once, in
+//!   deadline order, never early.
 
 use apibcd::config::RoutingRule;
 use apibcd::data::{shard::PartitionKind, Dataset, DatasetProfile, Partition};
 use apibcd::graph::Topology;
 use apibcd::linalg::{axpy, dist2};
 use apibcd::model::{penalty_objective, Task};
-use apibcd::sim::{AgentAvailability, EventQueue, TokenWatch};
+use apibcd::sim::{AgentAvailability, EventQueue, TimerWheel, TokenWatch};
 use apibcd::solver::{LocalSolver, NativeSolver};
 use apibcd::util::proptest::{run_prop, PropConfig};
 use apibcd::util::rng::Rng;
@@ -1019,6 +1022,89 @@ fn prop_epoch_fencing_admits_exactly_one_live_token_per_walk() {
                     "stale_drops {} != fenced deliveries {stale_attempts}",
                     watch.stale_drops
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_timer_wheel_revolution_boundaries() {
+    // PR-8 satellite: the wheel's ring arithmetic at its seams. Deadlines
+    // are biased onto slot 0 (exact multiples of nslots), pile several
+    // onto the *same* tick, and reach many revolutions out; the cursor is
+    // then advanced tick-by-tick so "fires exactly once, in deadline
+    // order, never early" is checked at every single boundary — including
+    // each wrap through slot 0.
+    run_prop(
+        "timer wheel revolution boundaries",
+        cfg(80, 1010),
+        |r| {
+            let nslots = 1 + r.below(6);
+            let revolutions = 2 + r.below(4);
+            let n = 1 + r.below(24);
+            let deadlines: Vec<u64> = (0..n)
+                .map(|_| {
+                    let max_tick = (nslots * revolutions) as u64;
+                    if r.below(3) == 0 {
+                        // Exact slot-0 hit, k whole revolutions out.
+                        (r.below(revolutions + 1) * nslots) as u64
+                    } else {
+                        r.below(max_tick as usize + 1) as u64
+                    }
+                })
+                .collect();
+            (nslots, deadlines)
+        },
+        |&(nslots, ref deadlines)| {
+            let mut wheel: TimerWheel<usize> = TimerWheel::new(1.0, nslots);
+            for (id, &t) in deadlines.iter().enumerate() {
+                wheel.schedule_at(t, id);
+            }
+            let mut fired_at: Vec<Option<u64>> = vec![None; deadlines.len()];
+            let last = deadlines.iter().copied().max().unwrap_or(0);
+            let mut out = Vec::new();
+            for now in 0..=last {
+                out.clear();
+                wheel.advance_to(now, &mut out);
+                for &id in &out {
+                    if let Some(prev) = fired_at[id] {
+                        return Err(format!("id {id} fired twice (ticks {prev} and {now})"));
+                    }
+                    if now < deadlines[id] {
+                        return Err(format!(
+                            "id {id} fired early: tick {now} < deadline {}",
+                            deadlines[id]
+                        ));
+                    }
+                    if now > deadlines[id] {
+                        return Err(format!(
+                            "id {id} fired late under tick-by-tick advance: \
+                             tick {now} > deadline {}",
+                            deadlines[id]
+                        ));
+                    }
+                    fired_at[id] = Some(now);
+                }
+            }
+            // Advancing one tick at a time means firing order IS deadline
+            // order; every scheduled entry must have fired by `last`.
+            if let Some(id) = fired_at.iter().position(Option::is_none) {
+                return Err(format!(
+                    "id {id} (deadline {}) never fired by tick {last}",
+                    deadlines[id]
+                ));
+            }
+            if !wheel.is_empty() {
+                return Err(format!("{} entries left on the wheel", wheel.len()));
+            }
+            // A deadline already at the cursor's past clamps forward and
+            // fires on the very next advance — the slot-0 stale case.
+            wheel.schedule_at(0, usize::MAX);
+            out.clear();
+            wheel.advance_to(last + 1, &mut out);
+            if out != vec![usize::MAX] {
+                return Err(format!("stale deadline did not clamp-fire: {out:?}"));
             }
             Ok(())
         },

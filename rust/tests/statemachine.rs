@@ -1,0 +1,442 @@
+//! State-machine property tests: drive the *real* scheduler primitives
+//! through randomized operation sequences and compare against trivially
+//! correct reference models (PR-8 tentpole, part b).
+//!
+//! Where the loom suite (`tests/loom_runtime.rs`) exhaustively checks
+//! *interleavings* of tiny scenarios, these properties check *long
+//! histories*: hundreds of randomized enqueue/claim/steal/stop sequences
+//! per case, asserting
+//!
+//! * single ownership — the claim bit admits one runner at a time and the
+//!   run queue never holds an entry for an unclaimed agent (no phantom
+//!   wakeup);
+//! * no lost message — every delivered message is served, retired by the
+//!   stop drain, or swept at shutdown, exactly once;
+//! * exact totals — the `Relaxed` event counters the runtimes use for stop
+//!   rules and metrics reconcile exactly against the reference count after
+//!   the pool joins (the satellite-3 ordering audit, executed);
+//! * wheel ≡ BTreeMap — the `TimerWheel` fires the same multiset of items
+//!   as an ordered-map reference at every advance: never early, exactly
+//!   once, across slot-0/revolution boundaries.
+//!
+//! Deep tier: `PROPTEST_CASES=4096 cargo test --test statemachine` (see
+//! EXPERIMENTS.md §Verification).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use apibcd::engine::claim::MailSlot;
+use apibcd::scenario::executor::StealQueue;
+use apibcd::sim::TimerWheel;
+use apibcd::util::proptest::{run_prop, PropConfig};
+
+fn cfg(cases: usize, seed: u64) -> PropConfig {
+    PropConfig { cases, seed }
+}
+
+/// One randomized scheduler op for the sequential reference-model check.
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    /// Deliver the next message id to agent `usize`.
+    Deliver(usize),
+    /// Pop one run-queue entry and run the `run_claimed` skeleton once.
+    Run,
+}
+
+/// Trivially correct single-threaded scheduler: explicit inboxes, a
+/// scheduled bit, and a FIFO run queue.
+struct RefSched {
+    inbox: Vec<VecDeque<u32>>,
+    scheduled: Vec<bool>,
+    runq: VecDeque<usize>,
+    served: Vec<(usize, u32)>,
+}
+
+impl RefSched {
+    fn new(agents: usize) -> RefSched {
+        RefSched {
+            inbox: vec![VecDeque::new(); agents],
+            scheduled: vec![false; agents],
+            runq: VecDeque::new(),
+            served: Vec::new(),
+        }
+    }
+
+    fn deliver(&mut self, a: usize, msg: u32) {
+        self.inbox[a].push_back(msg);
+        if !self.scheduled[a] {
+            self.scheduled[a] = true;
+            self.runq.push_back(a);
+        }
+    }
+
+    fn run_one(&mut self) -> Option<usize> {
+        let a = self.runq.pop_front()?;
+        assert!(self.scheduled[a], "reference model broke its own invariant");
+        if let Some(msg) = self.inbox[a].pop_front() {
+            self.served.push((a, msg));
+        }
+        if self.inbox[a].is_empty() {
+            self.scheduled[a] = false;
+        } else {
+            self.runq.push_back(a);
+        }
+        Some(a)
+    }
+}
+
+/// Sequential refinement: `MailSlot` + a 1-shard `StealQueue` (FIFO, so
+/// histories are comparable) produce *exactly* the reference model's serve
+/// sequence, claim states, and queue occupancy at every step of a random
+/// deliver/run history.
+#[test]
+fn prop_mailslot_scheduler_refines_reference_model() {
+    run_prop(
+        "mailslot scheduler ≡ reference model",
+        cfg(96, 0x5EED_0801),
+        |r| {
+            let agents = 1 + r.below(5);
+            let ops: Vec<Op> = (0..20 + r.below(60))
+                .map(|_| {
+                    if r.below(2) == 0 {
+                        Op::Deliver(r.below(agents))
+                    } else {
+                        Op::Run
+                    }
+                })
+                .collect();
+            (agents, ops)
+        },
+        |&(agents, ref ops)| {
+            let slots: Vec<MailSlot<u32>> = (0..agents).map(|_| MailSlot::new()).collect();
+            let q: StealQueue<usize> = StealQueue::new(1);
+            let mut model = RefSched::new(agents);
+            let mut served: Vec<(usize, u32)> = Vec::new();
+            let mut next_msg = 0u32;
+
+            let mut step = |slots: &[MailSlot<u32>],
+                            q: &StealQueue<usize>,
+                            model: &mut RefSched,
+                            served: &mut Vec<(usize, u32)>,
+                            op: Op|
+             -> Result<(), String> {
+                match op {
+                    Op::Deliver(a) => {
+                        if slots[a].deliver(next_msg) {
+                            q.push(a, a);
+                        }
+                        model.deliver(a, next_msg);
+                        next_msg += 1;
+                    }
+                    Op::Run => {
+                        let real = q.try_pop(0);
+                        let reference = model.run_one();
+                        if real != reference {
+                            return Err(format!("popped {real:?}, model popped {reference:?}"));
+                        }
+                        if let Some(a) = real {
+                            if !slots[a].is_claimed() {
+                                return Err(format!("phantom wakeup: entry for unclaimed {a}"));
+                            }
+                            if let Some(msg) = slots[a].take() {
+                                served.push((a, msg));
+                            }
+                            if slots[a].has_mail() {
+                                q.push(a, a);
+                            } else if slots[a].release() {
+                                q.push(a, a);
+                            }
+                        }
+                    }
+                }
+                // Claim bits must track the model's scheduled bits exactly.
+                for a in 0..slots.len() {
+                    if slots[a].is_claimed() != model.scheduled[a] {
+                        return Err(format!(
+                            "agent {a}: claimed={} but model scheduled={}",
+                            slots[a].is_claimed(),
+                            model.scheduled[a]
+                        ));
+                    }
+                }
+                Ok(())
+            };
+
+            for &op in ops {
+                step(&slots, &q, &mut model, &mut served, op)?;
+            }
+            // Flush: run until both sides quiesce, then compare histories.
+            loop {
+                let before = served.len();
+                step(&slots, &q, &mut model, &mut served, Op::Run)?;
+                if before == served.len() && model.runq.is_empty() && q.try_pop(0).is_none() {
+                    break;
+                }
+            }
+            if served != model.served {
+                return Err(format!(
+                    "serve history diverged:\n  real:  {served:?}\n  model: {:?}",
+                    model.served
+                ));
+            }
+            let leftovers: usize = slots.iter().map(|s| s.sweep().len()).sum();
+            if leftovers != 0 {
+                return Err(format!("{leftovers} messages stranded after quiesce"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The worker-side `run_claimed` skeleton shared by the contention props:
+/// claim-pop loop with the stop-drain path, phantom-wakeup assertion, and
+/// `Relaxed` event counters (exactly the orderings the runtimes use).
+fn worker_loop(
+    w: usize,
+    q: &StealQueue<usize>,
+    slots: &[MailSlot<u32>],
+    stop: &AtomicBool,
+    served: &AtomicUsize,
+    retired: &AtomicUsize,
+) {
+    while let Some(i) = q.pop(w) {
+        assert!(slots[i].is_claimed(), "phantom wakeup: entry without a claim");
+        if stop.load(Ordering::SeqCst) {
+            retired.fetch_add(slots[i].drain_and_release().len(), Ordering::Relaxed);
+            continue;
+        }
+        if slots[i].take().is_some() {
+            served.fetch_add(1, Ordering::Relaxed);
+        }
+        if slots[i].has_mail() {
+            q.push(i, i);
+        } else if slots[i].release() {
+            q.push(i, i);
+        }
+    }
+}
+
+/// Satellite 3, executed: under real contention (threads, stealing,
+/// parking) the `Relaxed` fetch_add counters reconcile *exactly* against
+/// the delivered total once the pool joins — modification order makes RMWs
+/// exact; `Relaxed` only weakens cross-location visibility, which the join
+/// edge restores.
+#[test]
+fn prop_contended_relaxed_counters_reconcile_exactly() {
+    run_prop(
+        "contended serve totals are exact",
+        cfg(12, 0x5EED_0802),
+        |r| {
+            let agents = 2 + r.below(5);
+            let workers = 2 + r.below(3);
+            let msgs = 1 + r.below(48);
+            let dests: Vec<usize> = (0..msgs).map(|_| r.below(agents)).collect();
+            (agents, workers, dests)
+        },
+        |&(agents, workers, ref dests)| {
+            let slots: Arc<Vec<MailSlot<u32>>> =
+                Arc::new((0..agents).map(|_| MailSlot::new()).collect());
+            let q: Arc<StealQueue<usize>> = Arc::new(StealQueue::new(workers));
+            let stop = AtomicBool::new(false); // never tripped here
+            let served = AtomicUsize::new(0);
+            let retired = AtomicUsize::new(0);
+
+            let timed_out = std::thread::scope(|scope| {
+                for w in 0..workers {
+                    let slots = Arc::clone(&slots);
+                    let q = Arc::clone(&q);
+                    let (stop, served, retired) = (&stop, &served, &retired);
+                    scope.spawn(move || worker_loop(w, &q, &slots, stop, served, retired));
+                }
+                for (m, &dest) in dests.iter().enumerate() {
+                    if slots[dest].deliver(m as u32) {
+                        q.push(dest, dest);
+                    }
+                }
+                // Quiesce, then drain-and-park the pool. Bounded: a
+                // stranded message is exactly the bug this hunts, and it
+                // must fail the case, not hang the CI job — close before
+                // reporting so the parked workers can exit the scope.
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+                let mut timed_out = false;
+                while served.load(Ordering::Relaxed) < dests.len() {
+                    if std::time::Instant::now() >= deadline {
+                        timed_out = true;
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                q.close();
+                timed_out
+            });
+            if timed_out {
+                return Err(format!(
+                    "lost message: served {} of {} after 20s",
+                    served.load(Ordering::Relaxed),
+                    dests.len()
+                ));
+            }
+
+            // Post-join reads (read class b): exact by the join edge.
+            if served.load(Ordering::Relaxed) != dests.len() {
+                return Err(format!(
+                    "served {} != delivered {}",
+                    served.load(Ordering::Relaxed),
+                    dests.len()
+                ));
+            }
+            if retired.load(Ordering::Relaxed) != 0 {
+                return Err("retired without a stop".into());
+            }
+            for (a, slot) in slots.iter().enumerate() {
+                if slot.is_claimed() {
+                    return Err(format!("agent {a} still claimed after quiesce"));
+                }
+                if slot.has_mail() {
+                    return Err(format!("agent {a} has unserved mail after quiesce"));
+                }
+            }
+            if !q.drain().is_empty() {
+                return Err("run queue not empty after quiesce".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Stop-flag vs in-flight tokens at scale: trip the stop barrier at a
+/// random point *during* delivery and check conservation — every message
+/// is served, retired by a worker's stop-drain, or swept by the owner;
+/// the three tallies partition the delivered total exactly.
+#[test]
+fn prop_stop_drain_conserves_every_message() {
+    run_prop(
+        "stop/drain conserves messages",
+        cfg(12, 0x5EED_0803),
+        |r| {
+            let agents = 2 + r.below(5);
+            let workers = 2 + r.below(3);
+            let msgs = 1 + r.below(48);
+            let stop_after = r.below(msgs + 1);
+            let dests: Vec<usize> = (0..msgs).map(|_| r.below(agents)).collect();
+            (agents, workers, stop_after, dests)
+        },
+        |&(agents, workers, stop_after, ref dests)| {
+            let slots: Arc<Vec<MailSlot<u32>>> =
+                Arc::new((0..agents).map(|_| MailSlot::new()).collect());
+            let q: Arc<StealQueue<usize>> = Arc::new(StealQueue::new(workers));
+            let stop = AtomicBool::new(false);
+            let served = AtomicUsize::new(0);
+            let retired = AtomicUsize::new(0);
+
+            std::thread::scope(|scope| {
+                for w in 0..workers {
+                    let slots = Arc::clone(&slots);
+                    let q = Arc::clone(&q);
+                    let (stop, served, retired) = (&stop, &served, &retired);
+                    scope.spawn(move || worker_loop(w, &q, &slots, stop, served, retired));
+                }
+                for (m, &dest) in dests.iter().enumerate() {
+                    if m == stop_after {
+                        stop.store(true, Ordering::SeqCst);
+                    }
+                    // Deliveries keep racing the stop, as in the runtimes.
+                    if slots[dest].deliver(m as u32) {
+                        q.push(dest, dest);
+                    }
+                }
+                if stop_after >= dests.len() {
+                    stop.store(true, Ordering::SeqCst);
+                }
+                q.close();
+            });
+
+            let _ = q.drain();
+            let swept: usize = slots.iter().map(|s| s.sweep().len()).sum();
+            let total =
+                served.load(Ordering::Relaxed) + retired.load(Ordering::Relaxed) + swept;
+            if total != dests.len() {
+                return Err(format!(
+                    "conservation broke: served {} + retired {} + swept {swept} != {}",
+                    served.load(Ordering::Relaxed),
+                    retired.load(Ordering::Relaxed),
+                    dests.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `TimerWheel` vs an ordered-map reference over random schedule/advance
+/// histories: at every advance the wheel fires exactly the reference's due
+/// multiset (never early, never lost, exactly once), including stale
+/// deadlines (clamped to the cursor), slot-0 wraps, and advances spanning
+/// multiple revolutions.
+#[test]
+fn prop_timer_wheel_refines_btreemap() {
+    run_prop(
+        "timer wheel ≡ BTreeMap reference",
+        cfg(96, 0x5EED_0804),
+        |r| {
+            let nslots = 1 + r.below(8);
+            let horizon = 4 * nslots as u64 + 2;
+            let ops: Vec<(bool, u64)> = (0..10 + r.below(50))
+                .map(|_| (r.below(3) < 2, r.below(horizon as usize) as u64))
+                .collect();
+            (nslots, ops)
+        },
+        |&(nslots, ref ops)| {
+            let mut wheel: TimerWheel<u32> = TimerWheel::new(0.5, nslots);
+            let mut reference: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+            let mut cursor = 0u64; // mirrors the wheel's private cursor
+            let mut next_id = 0u32;
+            let mut scheduled = 0usize;
+            let mut fired_total = 0usize;
+
+            for &(is_schedule, t) in ops {
+                if is_schedule {
+                    wheel.schedule_at(t, next_id);
+                    reference.entry(t.max(cursor)).or_default().push(next_id);
+                    next_id += 1;
+                    scheduled += 1;
+                } else {
+                    let mut fired = Vec::new();
+                    wheel.advance_to(t, &mut fired);
+                    let mut expected = Vec::new();
+                    if t >= cursor {
+                        let later = reference.split_off(&(t + 1));
+                        expected.extend(reference.values().flatten().copied());
+                        reference = later;
+                        cursor = t + 1;
+                    }
+                    // Same-tick firing order is unspecified: compare
+                    // multisets.
+                    fired.sort_unstable();
+                    expected.sort_unstable();
+                    if fired != expected {
+                        return Err(format!(
+                            "advance_to({t}): fired {fired:?}, expected {expected:?}"
+                        ));
+                    }
+                    fired_total += fired.len();
+                }
+                let ref_len: usize = reference.values().map(Vec::len).sum();
+                if wheel.len() != ref_len {
+                    return Err(format!("len {} != reference {ref_len}", wheel.len()));
+                }
+            }
+            // Exactly-once accounting closes the books.
+            let mut left = Vec::new();
+            wheel.drain(&mut left);
+            if fired_total + left.len() != scheduled {
+                return Err(format!(
+                    "accounting: fired {fired_total} + drained {} != scheduled {scheduled}",
+                    left.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
