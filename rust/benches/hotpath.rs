@@ -172,8 +172,57 @@ fn bench_coordinator(suite: &mut Suite, smoke: bool) {
         }
         while queue.pop().is_some() {}
     });
-    suite.derive("sim/event-queue push/pop ns", r.mean_ns / 2048.0);
-    println!("  → {:.1}ns per queue op", r.mean_ns / 2048.0);
+    let cal_op_ns = r.mean_ns / 2048.0;
+    suite.derive("sim/event-queue push/pop ns", cal_op_ns);
+    println!("  → {:.1}ns per queue op", cal_op_ns);
+    suite.push(r);
+
+    // Reference shape: the pre-calendar `BinaryHeap` event queue (min-heap
+    // on (time, seq)) under the identical push/pop schedule. The derived
+    // ratio is the calendar queue's measured per-op advantage; it also
+    // guards against the calendar path regressing below the O(log n)
+    // baseline it replaced.
+    struct HeapEv {
+        t: f64,
+        seq: u64,
+    }
+    impl PartialEq for HeapEv {
+        fn eq(&self, o: &Self) -> bool {
+            self.t == o.t && self.seq == o.seq
+        }
+    }
+    impl Eq for HeapEv {}
+    impl PartialOrd for HeapEv {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for HeapEv {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            // Reversed: BinaryHeap is a max-heap, events need the min.
+            o.t.partial_cmp(&self.t)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(o.seq.cmp(&self.seq))
+        }
+    }
+    let mut heap: std::collections::BinaryHeap<HeapEv> =
+        std::collections::BinaryHeap::with_capacity(1024);
+    let mut th = 0.0f64;
+    let mut seq = 0u64;
+    let r = bench("sim/binary-heap push+pop x1024 (reference)", iters_q, || {
+        for i in 0..1024usize {
+            th += 1e-5;
+            heap.push(HeapEv { t: th + (i % 7) as f64 * 1e-5, seq });
+            seq += 1;
+        }
+        while heap.pop().is_some() {}
+    });
+    let heap_op_ns = r.mean_ns / 2048.0;
+    suite.derive("sim/binary-heap push/pop ns (reference)", heap_op_ns);
+    if cal_op_ns > 0.0 {
+        suite.derive("sim/event-queue speedup vs binary-heap", heap_op_ns / cal_op_ns);
+    }
+    println!("  → {:.1}ns per heap op", heap_op_ns);
     suite.push(r);
 
     // Topology + routing.

@@ -94,6 +94,13 @@ struct ApiBcdAgent {
 }
 
 impl AgentBehavior for ApiBcdAgent {
+    fn state_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        self.zhat.capacity() * std::mem::size_of::<Vec<f32>>()
+            + self.zhat.iter().map(|z| z.capacity() * f).sum::<usize>()
+            + (self.tz_buf.capacity() + self.x_new.capacity() + self.g_buf.capacity()) * f
+    }
+
     fn on_activation(
         &mut self,
         msg: &mut TokenMsg,

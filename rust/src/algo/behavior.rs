@@ -179,6 +179,15 @@ pub trait AgentBehavior: Send {
     /// ADMM duals y) to a state consistent with that snapshot; behaviors
     /// whose auxiliaries are scratch-only keep this default no-op.
     fn on_restart(&mut self, _snapshot: &[f32]) {}
+
+    /// Approximate heap bytes of this behavior's per-agent state (scratch
+    /// buffers, local token copies, gossip weights) — the behavior term of
+    /// the `bytes_per_agent` accounting in `BENCH_scale.json`. The default
+    /// 0 is fine for stateless behaviors; the shipped algorithms override
+    /// it with their buffer footprints.
+    fn state_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// How the recorded figure model is assembled from the run state.

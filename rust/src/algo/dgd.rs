@@ -74,7 +74,7 @@ impl BehaviorSpec for DgdSpec {
             me: agent,
             alpha,
             weights: env.topo.metropolis_row(agent),
-            neighbors: env.topo.neighbors(agent).to_vec(),
+            neighbors: env.topo.neighbors(agent).collect(),
             round: 0,
             x_new: vec![0.0; env.dim],
             g_buf: vec![0.0; env.dim],
@@ -112,6 +112,25 @@ impl DgdAgent {
 }
 
 impl AgentBehavior for DgdAgent {
+    fn state_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        self.weights.capacity() * std::mem::size_of::<(usize, f64)>()
+            + self.neighbors.capacity() * std::mem::size_of::<usize>()
+            + (self.x_new.capacity() + self.g_buf.capacity()) * f
+            + self
+                .pending
+                .values()
+                .map(|r| {
+                    r.slots.capacity() * std::mem::size_of::<Option<Vec<f32>>>()
+                        + r.slots
+                            .iter()
+                            .flatten()
+                            .map(|v| v.capacity() * f)
+                            .sum::<usize>()
+                })
+                .sum::<usize>()
+    }
+
     fn on_activation(
         &mut self,
         msg: &mut TokenMsg,

@@ -52,6 +52,10 @@ struct IBcdAgent {
 }
 
 impl AgentBehavior for IBcdAgent {
+    fn state_bytes(&self) -> usize {
+        (self.tz_buf.capacity() + self.x_new.capacity()) * std::mem::size_of::<f32>()
+    }
+
     fn on_activation(
         &mut self,
         msg: &mut TokenMsg,

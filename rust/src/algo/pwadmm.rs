@@ -70,6 +70,17 @@ struct PwAdmmAgent {
 }
 
 impl AgentBehavior for PwAdmmAgent {
+    fn state_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        self.zhat.capacity() * std::mem::size_of::<Vec<f32>>()
+            + self.zhat.iter().map(|z| z.capacity() * f).sum::<usize>()
+            + (self.y.capacity()
+                + self.zbar_buf.capacity()
+                + self.tz_buf.capacity()
+                + self.x_new.capacity())
+                * f
+    }
+
     fn on_activation(
         &mut self,
         msg: &mut TokenMsg,

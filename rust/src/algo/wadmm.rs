@@ -59,6 +59,11 @@ struct WadmmAgent {
 }
 
 impl AgentBehavior for WadmmAgent {
+    fn state_bytes(&self) -> usize {
+        (self.y.capacity() + self.tz_buf.capacity() + self.x_new.capacity())
+            * std::mem::size_of::<f32>()
+    }
+
     fn on_activation(
         &mut self,
         msg: &mut TokenMsg,

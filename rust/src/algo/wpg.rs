@@ -58,6 +58,10 @@ struct WpgAgent {
 }
 
 impl AgentBehavior for WpgAgent {
+    fn state_bytes(&self) -> usize {
+        (self.x_new.capacity() + self.g_buf.capacity()) * std::mem::size_of::<f32>()
+    }
+
     fn on_activation(
         &mut self,
         msg: &mut TokenMsg,

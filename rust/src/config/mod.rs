@@ -98,8 +98,10 @@ pub struct ExperimentConfig {
     pub agents: usize,
     /// ξ — fraction of the complete graph's edges.
     pub xi: f64,
-    /// Topology family: "random" (uses ξ), "ring", "grid", "star",
-    /// "complete", "small-world".
+    /// Topology family: "random" (uses ξ), "ring", "grid", "torus",
+    /// "star", "complete", "small-world", "scale-free", "geometric".
+    /// Ring, grid, torus, star, complete, scale-free and geometric are
+    /// implicit — neighbors are computed on demand, no adjacency lists.
     pub topology: String,
     /// M — parallel walks for API-BCD / PW-ADMM.
     pub walks: usize,
@@ -467,10 +469,10 @@ mod tests {
     #[test]
     fn validate_rejects_unknown_topology_listing_valid_kinds() {
         let mut cfg =
-            ExperimentConfig { topology: "torus".into(), ..ExperimentConfig::default() };
+            ExperimentConfig { topology: "hypercube".into(), ..ExperimentConfig::default() };
         let err = cfg.validate().unwrap_err().to_string();
-        assert!(err.contains("torus") && err.contains("scale-free"), "{err}");
-        cfg.topology = "geometric".into();
+        assert!(err.contains("hypercube") && err.contains("scale-free"), "{err}");
+        cfg.topology = "torus".into();
         assert!(cfg.validate().is_ok());
     }
 

@@ -101,14 +101,19 @@ impl Partition {
             let lo = (a * per).min(order.len());
             let hi = ((a + 1) * per).min(order.len());
             let rows_here = hi.saturating_sub(lo);
-            let mut x = vec![0.0f32; capacity * p];
-            let mut y = vec![0.0f32; capacity];
-            let mut yoh = if matches!(ds.profile.task, Task::Multiclass(_)) {
-                vec![0.0f32; capacity * c]
+            // Empty shards carry no padded buffers at all (rows = 0): at
+            // N ≫ n_train the trailing agents would otherwise each pay
+            // `capacity·(p+2)` floats of pure padding, which dominates
+            // memory in the million-agent sweeps.
+            let alloc = if rows_here == 0 { 0 } else { capacity };
+            let mut x = vec![0.0f32; alloc * p];
+            let mut y = vec![0.0f32; alloc];
+            let mut yoh = if matches!(ds.profile.task, Task::Multiclass(_)) && alloc > 0 {
+                vec![0.0f32; alloc * c]
             } else {
                 Vec::new()
             };
-            let mut mask = vec![0.0f32; capacity];
+            let mut mask = vec![0.0f32; alloc];
             for (r, &src) in order[lo..hi].iter().enumerate() {
                 x[r * p..(r + 1) * p].copy_from_slice(ds.x.row(src));
                 y[r] = ds.y[src];
@@ -120,7 +125,7 @@ impl Partition {
             shards.push(AgentData {
                 agent: a,
                 uid: AgentData::fresh_uid(),
-                rows: capacity,
+                rows: alloc,
                 features: p,
                 classes: c,
                 x,

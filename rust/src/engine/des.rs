@@ -153,8 +153,14 @@ pub(crate) fn run(
         dim,
         n,
     };
-    let mut agents: Vec<Box<dyn AgentBehavior>> =
-        (0..n).map(|i| spec.make_agent(i, &env)).collect();
+    // Behaviors are built lazily on first activation: startup is O(active
+    // set), not O(N), and a 1M-agent token-walk run only ever constructs
+    // behaviors for agents the walk actually reaches. This also skips
+    // Metropolis-weight row construction entirely for token-walk-only
+    // algorithms — DGD builds its (on-demand) rows per agent at first
+    // gossip use, the walk methods never do.
+    let mut agents: Vec<Option<Box<dyn AgentBehavior>>> = Vec::new();
+    agents.resize_with(n, || None);
 
     // Per-agent heterogeneity (empty = homogeneous): slow agents stretch
     // their simulated compute, slow links stretch the latency draw of every
@@ -225,7 +231,7 @@ pub(crate) fn run(
         }
     } else {
         for i in 0..n {
-            for &j in topo.neighbors(i) {
+            for j in topo.neighbors(i) {
                 let (attempts, retry) = faults.transmit(&mut rng);
                 comm += attempts;
                 let slot = store.insert(TokenMsg {
@@ -259,13 +265,17 @@ pub(crate) fn run(
             store.put(slot, msg); // freeze the duplicate; the live token walks on
             continue;
         }
+        if agents[i].is_none() {
+            agents[i] = Some(spec.make_agent(i, &env));
+        }
+        let agent = agents[i].as_mut().expect("behavior constructed above");
         // Crash-restart re-sync: the first neighbor payload to reach a
         // restarted agent doubles as its state snapshot.
         if needs_resync[i] {
             let row = blocks.row_mut(i);
             tracker.block_updated(i, row, &msg.payload);
             row.copy_from_slice(&msg.payload);
-            agents[i].on_restart(&msg.payload);
+            agent.on_restart(&msg.payload);
             needs_resync[i] = false;
         }
         let served = {
@@ -277,7 +287,7 @@ pub(crate) fn run(
                 out: &mut sends,
                 pool: &mut pool,
             };
-            agents[i].on_activation(&mut msg, &mut ctx)?
+            agent.on_activation(&mut msg, &mut ctx)?
         };
 
         // Busy-agent FIFO: service starts when the agent frees.
@@ -426,5 +436,15 @@ pub(crate) fn run(
     trace.recovery_activations = watch.recovery_activations;
     trace.crash_restarts = crash_restarts;
     trace.reroute_holds = reroute_holds;
+    // Memory accounting (BENCH_scale.json first-class metrics): resident
+    // bytes of the structures that scale with N — arena rows, event queue,
+    // topology index and lazily-constructed behavior state — plus the OS
+    // peak-RSS ground truth. Implicit topologies keep the per-agent figure
+    // flat where a materialized adjacency would grow with degree.
+    let behavior_bytes: usize = agents.iter().flatten().map(|a| a.state_bytes()).sum();
+    trace.bytes_per_agent =
+        (blocks.mem_bytes() + queue.mem_bytes() + topo.mem_bytes() + behavior_bytes) as f64
+            / n as f64;
+    trace.peak_rss_bytes = crate::util::peak_rss_bytes().unwrap_or(0);
     Ok((trace, events))
 }

@@ -318,7 +318,7 @@ fn serve(li: usize, core: &mut Core, mut msg: TokenMsg, shared: &Shared) -> anyh
 fn gossip_kickoff(shared: &Shared, rng: &mut Rng) -> anyhow::Result<()> {
     let mut attempts_total = 0u64;
     for i in shared.lo..shared.hi {
-        for &j in shared.topo.neighbors(i) {
+        for j in shared.topo.neighbors(i) {
             let (attempts, _retry) = shared.faults.transmit(rng);
             attempts_total += attempts;
             shared.dispatch(

@@ -547,7 +547,7 @@ pub(crate) fn run(
         }
     } else {
         for i in 0..n {
-            for &j in topo.neighbors(i) {
+            for j in topo.neighbors(i) {
                 let (attempts, _retry) = shared.faults.transmit(&mut rng);
                 shared.comm.fetch_add(attempts, Ordering::Relaxed);
                 shared.deliver(

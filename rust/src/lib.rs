@@ -59,7 +59,14 @@
 //!     snapshot matrix exists — the layout that makes N=4096-agent runs
 //!     cheap to measure on *both* substrates
 //!     (`repro sweep [--substrate threads] --agents 16,...,4096` →
-//!     `BENCH_scale.json` / `BENCH_threads_scale.json`).
+//!     `BENCH_scale.json` / `BENCH_threads_scale.json`). The DES goes
+//!     further — to N=10⁶ in bounded memory: a calendar event queue
+//!     ([`sim::EventQueue`], O(1) amortized push/pop, exact (time, seq)
+//!     order), implicit topologies ([`graph::Topology`] — ring/grid/
+//!     torus/star/complete/scale-free/geometric answer `neighbors(i)`
+//!     without adjacency lists), lazily constructed per-agent behaviors
+//!     (startup O(active set)), and first-class `bytes_per_agent` /
+//!     `peak_rss_bytes` columns in the sweep — see EXPERIMENTS.md §Scale.
 //!   - substrate primitives in [`graph`] (topologies, including scale-free
 //!     and geometric generators) and [`sim`] (event queue, latency/timing
 //!     models, per-agent heterogeneity, failure injection). Token loss and

@@ -65,10 +65,13 @@ USAGE:
   repro run    --config experiment.toml [overrides...]
   repro replicate [--preset P] [--seeds 5] [--target T] [overrides...]
   repro sweep  --param <walks|agents|tau-api|xi|inner-k> --values 1,2,4 [--preset P]
-  repro sweep  --agents 16,64,256,1024,4096 [--activations K] [--walks M]
+  repro sweep  --agents 16,64,...,1048576 [--activations K] [--walks M]
                [--eval-every E] [--jobs J] [--out BENCH_scale.json]
                [--substrate des|threads|net] [--workers W] [--net-workers P]
-               (N-scaling sweep: ns-per-activation / ns-per-record vs N;
+               (N-scaling sweep: ns-per-activation / ns-per-record vs N,
+                plus bytes_per_agent / peak_rss_bytes memory columns on the
+                DES substrate — N = 1M runs in bounded memory via the
+                calendar queue + implicit ring topology;
                 --substrate threads emits BENCH_threads_scale.json with
                 peak OS-thread counts — the M:N bound check;
                 --substrate net emits BENCH_net.json with real wire bytes
@@ -432,8 +435,9 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
     })?;
 
     println!(
-        "{:<8} {:<16} {:>12} {:>9} {:>16} {:>14} {:>12}",
-        "agents", "algorithm", "activations", "records", "ns/activation", "ns/record", "peak thr"
+        "{:<8} {:<16} {:>12} {:>9} {:>16} {:>14} {:>12} {:>12}",
+        "agents", "algorithm", "activations", "records", "ns/activation", "ns/record", "B/agent",
+        "peak thr"
     );
     let mut results: Vec<Json> = Vec::new();
     // Flatness signals per algorithm at the endpoint Ns: ns-per-record
@@ -455,8 +459,8 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
                 0.0
             };
             println!(
-                "{:<8} {:<16} {:>12} {:>9} {:>16.0} {:>14.0} {:>12}",
-                n, t.name, k, records, ns_act, ns_rec, t.peak_threads
+                "{:<8} {:<16} {:>12} {:>9} {:>16.0} {:>14.0} {:>12.0} {:>12}",
+                n, t.name, k, records, ns_act, ns_rec, t.bytes_per_agent, t.peak_threads
             );
             let mut row = BTreeMap::new();
             row.insert("name".into(), Json::Str(format!("{suite}/{}/N={n}", t.name)));
@@ -468,6 +472,11 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
             row.insert("record_secs".into(), Json::Num(t.record_secs));
             row.insert("ns_per_activation".into(), Json::Num(ns_act));
             row.insert("ns_per_record".into(), Json::Num(ns_rec));
+            // Memory footprint (DES substrate): simulator-owned state
+            // (arena + event queue + topology + behaviors) per agent, and
+            // the process high-water mark for the whole sweep cell.
+            row.insert("bytes_per_agent".into(), Json::Num(t.bytes_per_agent));
+            row.insert("peak_rss_bytes".into(), Json::Num(t.peak_rss_bytes as f64));
             if threads {
                 row.insert("peak_threads".into(), Json::Num(t.peak_threads as f64));
                 row.insert(

@@ -94,6 +94,12 @@ impl BlockStore {
         unsafe { std::slice::from_raw_parts_mut(ptr, self.dim) }
     }
 
+    /// Bytes of heap memory held by the arena (padded rows included) —
+    /// feeds the `bytes_per_agent` accounting in `BENCH_scale.json`.
+    pub fn mem_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<CacheLine>()
+    }
+
     /// Raw pointer to agent `i`'s row, for the thread substrate's per-agent
     /// row handles (`RowView` in `engine/threads.rs`).
     ///

@@ -427,8 +427,6 @@ impl Membership {
         }
         let live: Vec<usize> = topo
             .neighbors(from)
-            .iter()
-            .copied()
             .filter(|&j| self.is_up(j, now) && self.link_up(from, j, now))
             .collect();
         if live.is_empty() {

@@ -19,7 +19,6 @@ pub use faults::{FaultModel, Membership, TokenTransmit, TokenWatch};
 
 use crate::util::rng::Rng;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 /// Per-hop link latency model. The paper draws U(1e-5, 1e-4) seconds.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -259,66 +258,280 @@ impl PartialOrd for Arrival {
     }
 }
 
-/// Deterministic min-time event queue.
-#[derive(Debug, Default)]
+/// Deterministic min-time event queue: a calendar queue (the continuous-
+/// time sibling of [`TimerWheel`]).
+///
+/// The old implementation was a `BinaryHeap` — O(log n) per push/pop with
+/// a pointer-chasing sift on every operation, the per-event constant that
+/// dominates million-agent gossip runs. The calendar layout replaces it
+/// with a ring of time buckets of `width` seconds each: a push appends to
+/// the bucket `floor(time / width)` when that bucket lies inside the ring's
+/// current window, and to a single unsorted *overflow* level when it lies
+/// beyond it (the exact analogue of a wheel entry waiting out a
+/// revolution). A pop scans forward from the cursor to the first non-empty
+/// bucket and takes that bucket's exact `(time, seq)` minimum, migrating
+/// overflow entries in whenever the window has advanced far enough to
+/// admit them. With the width tracking the mean event spacing (it is
+/// re-derived on every resize), buckets hold O(1) entries and push/pop are
+/// O(1) amortized.
+///
+/// Determinism: `(time, seq)` is a strict total order (`seq` is unique),
+/// and every pop returns the exact global minimum under it — the same
+/// order the `BinaryHeap` produced — so DES traces are byte-identical per
+/// seed regardless of bucket width, resize history, or overflow residency
+/// (`tests/statemachine.rs` pins queue ≡ heap over randomized histories).
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Arrival>,
+    /// The calendar ring. Slot `b % slots.len()` holds the entries of
+    /// absolute bucket `b` for every `b` in `[cur, cur + slots.len())`;
+    /// all calendar entries live inside that window (pushes whose bucket
+    /// the cursor has already passed are clamped into bucket `cur`).
+    slots: Vec<Vec<Arrival>>,
+    /// Seconds per bucket.
+    width: f64,
+    /// Absolute bucket index of the ring cursor (monotone within a run;
+    /// re-anchored only when the queue is empty or rebuilt).
+    cur: u64,
+    /// Events beyond the ring window, unsorted.
+    overflow: Vec<Arrival>,
+    /// Cached `(time, seq)` minimum of `overflow` — lets pop compare the
+    /// in-window candidate against the whole overflow level in O(1).
+    overflow_min: Option<(f64, u64)>,
+    /// Entries currently in `slots` (not counting `overflow`).
+    cal_len: usize,
     next_seq: u64,
 }
 
+impl Default for EventQueue {
+    fn default() -> EventQueue {
+        EventQueue::new()
+    }
+}
+
+/// Initial bucket width: the paper's minimum link latency, so fresh queues
+/// start near the event spacing of the workload they model.
+const INITIAL_WIDTH: f64 = 1e-5;
+const INITIAL_SLOTS: usize = 64;
+
 impl EventQueue {
     pub fn new() -> EventQueue {
-        EventQueue::default()
-    }
-
-    /// Pre-sized queue: the DES knows its steady-state in-flight bound up
-    /// front (M tokens, or one message per directed edge for gossip), so
-    /// the heap never regrows mid-run.
-    pub fn with_capacity(cap: usize) -> EventQueue {
         EventQueue {
-            heap: BinaryHeap::with_capacity(cap),
+            slots: (0..INITIAL_SLOTS).map(|_| Vec::new()).collect(),
+            width: INITIAL_WIDTH,
+            cur: 0,
+            overflow: Vec::new(),
+            overflow_min: None,
+            cal_len: 0,
             next_seq: 0,
         }
     }
 
-    /// Clear for reuse, keeping the heap's `Arrival` capacity — the engine
+    /// Pre-sized queue: the DES knows its steady-state in-flight bound up
+    /// front (M tokens, or one message per directed edge for gossip), so
+    /// the buckets never regrow mid-run.
+    pub fn with_capacity(cap: usize) -> EventQueue {
+        let mut q = EventQueue::new();
+        q.reserve(cap);
+        q
+    }
+
+    /// Clear for reuse, keeping every bucket's allocation — the engine
     /// recycles one queue across the runs of an experiment instead of
     /// reallocating per algorithm.
     pub fn reset(&mut self) {
-        self.heap.clear();
+        for s in &mut self.slots {
+            s.clear();
+        }
+        self.overflow.clear();
+        self.overflow_min = None;
+        self.cal_len = 0;
+        self.cur = 0;
         self.next_seq = 0;
     }
 
-    /// Ensure capacity for at least `cap` queued arrivals.
+    /// Ensure capacity for at least `cap` queued arrivals (spread across
+    /// the calendar buckets).
     pub fn reserve(&mut self, cap: usize) {
-        self.heap.reserve(cap.saturating_sub(self.heap.len()));
+        let per = cap.div_ceil(self.slots.len());
+        for s in &mut self.slots {
+            if s.capacity() < per {
+                s.reserve(per - s.len().min(per));
+            }
+        }
     }
 
+    /// Total queued-arrival capacity across the buckets and the overflow
+    /// level. Advisory: unlike the old heap this is not one contiguous
+    /// allocation, so pushes beyond it only regrow a single bucket.
     pub fn capacity(&self) -> usize {
-        self.heap.capacity()
+        self.slots.iter().map(Vec::capacity).sum::<usize>() + self.overflow.capacity()
+    }
+
+    /// Heap bytes currently held (buckets + overflow + the ring spine) —
+    /// the event-queue term of the sweep's `bytes_per_agent` accounting.
+    pub fn mem_bytes(&self) -> usize {
+        self.capacity() * std::mem::size_of::<Arrival>()
+            + self.slots.capacity() * std::mem::size_of::<Vec<Arrival>>()
+    }
+
+    fn abs_bucket(&self, time: f64) -> u64 {
+        // `as` saturates, so far-future times land at u64::MAX (overflow).
+        if time <= 0.0 { 0 } else { (time / self.width) as u64 }
     }
 
     pub fn push(&mut self, time: f64, token: usize, agent: usize) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Arrival {
-            time,
-            seq,
-            token,
-            agent,
-        });
+        self.insert(Arrival { time, seq, token, agent });
+        // Adaptive resize (outside `insert` so a rebuild's re-inserts can
+        // never recurse): grow when buckets are crowding, or when the
+        // window is so narrow that pushes pile into overflow.
+        let nslots = self.slots.len();
+        if self.cal_len > 2 * nslots || (self.overflow.len() > 4 * nslots && self.overflow.len() > 64)
+        {
+            self.rebuild(nslots * 2);
+        }
+    }
+
+    fn insert(&mut self, a: Arrival) {
+        if self.cal_len == 0 && self.overflow.is_empty() {
+            // Empty queue: re-anchor the window at the new event so the
+            // pop scan never walks a stale cursor gap.
+            self.cur = self.abs_bucket(a.time);
+        }
+        let nslots = self.slots.len() as u64;
+        let b = self.abs_bucket(a.time);
+        if b < self.cur.saturating_add(nslots) {
+            // In-window, or already passed (clamped into bucket `cur`,
+            // where the exact-min pop still orders it correctly).
+            let idx = (b.max(self.cur) % nslots) as usize;
+            self.slots[idx].push(a);
+            self.cal_len += 1;
+        } else {
+            match self.overflow_min {
+                Some((t, s)) if (t, s) <= (a.time, a.seq) => {}
+                _ => self.overflow_min = Some((a.time, a.seq)),
+            }
+            self.overflow.push(a);
+        }
+    }
+
+    /// Move every overflow entry the current window now admits into the
+    /// calendar and recompute the cached overflow minimum.
+    fn migrate_overflow(&mut self) {
+        let nslots = self.slots.len() as u64;
+        let end = self.cur.saturating_add(nslots);
+        let mut i = 0;
+        while i < self.overflow.len() {
+            if self.abs_bucket(self.overflow[i].time) < end {
+                let a = self.overflow.swap_remove(i);
+                let idx = (self.abs_bucket(a.time).max(self.cur) % nslots) as usize;
+                self.slots[idx].push(a);
+                self.cal_len += 1;
+            } else {
+                i += 1;
+            }
+        }
+        self.overflow_min = None;
+        for a in &self.overflow {
+            match self.overflow_min {
+                Some((t, s)) if (t, s) <= (a.time, a.seq) => {}
+                _ => self.overflow_min = Some((a.time, a.seq)),
+            }
+        }
+    }
+
+    /// Re-bucket everything into `new_nslots` slots with a width re-derived
+    /// from the live span (mean event spacing), re-anchored at the earliest
+    /// entry.
+    fn rebuild(&mut self, new_nslots: usize) {
+        let mut all: Vec<Arrival> = Vec::with_capacity(self.len());
+        for s in &mut self.slots {
+            all.append(s);
+        }
+        all.append(&mut self.overflow);
+        self.slots.resize_with(new_nslots.max(1), Vec::new);
+        self.overflow_min = None;
+        self.cal_len = 0;
+        self.cur = 0;
+        if all.len() >= 2 {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for a in &all {
+                lo = lo.min(a.time);
+                hi = hi.max(a.time);
+            }
+            if hi > lo && lo.is_finite() && hi.is_finite() {
+                self.width = ((hi - lo) / all.len() as f64).max(1e-12);
+            }
+        }
+        for a in all {
+            self.insert(a);
+        }
     }
 
     pub fn pop(&mut self) -> Option<Arrival> {
-        self.heap.pop()
+        if self.cal_len == 0 && self.overflow.is_empty() {
+            return None;
+        }
+        // Shrink a ring a prior burst grew once it is mostly empty again.
+        let nslots = self.slots.len();
+        if nslots > INITIAL_SLOTS && self.len() < nslots / 8 {
+            self.rebuild(nslots / 2);
+        }
+        loop {
+            if self.cal_len == 0 {
+                // Everything lives in overflow: re-anchor the window at
+                // its minimum and pull the now-admissible entries in.
+                let (t, _) = self.overflow_min.expect("overflow_min tracks overflow");
+                self.cur = self.abs_bucket(t);
+                self.migrate_overflow();
+                debug_assert!(self.cal_len > 0, "overflow min must migrate in");
+                continue;
+            }
+            // First non-empty bucket at or after the cursor holds the
+            // calendar minimum (buckets partition the window by time).
+            let nslots = self.slots.len() as u64;
+            let mut off = 0u64;
+            let idx = loop {
+                debug_assert!(off < nslots, "cal_len > 0 but window empty");
+                let idx = ((self.cur + off) % nslots) as usize;
+                if !self.slots[idx].is_empty() {
+                    break idx;
+                }
+                off += 1;
+            };
+            self.cur += off;
+            let slot = &self.slots[idx];
+            let mut best = 0;
+            for i in 1..slot.len() {
+                if (slot[i].time, slot[i].seq) < (slot[best].time, slot[best].seq) {
+                    best = i;
+                }
+            }
+            // The cursor may have advanced past buckets that were beyond
+            // the window when their events were pushed — an overflow entry
+            // can now undercut the calendar candidate. Admit and rescan
+            // (at most once: post-migration overflow is beyond the window,
+            // hence later than any in-window candidate).
+            if let Some((t, s)) = self.overflow_min {
+                if (t, s) < (slot[best].time, slot[best].seq) {
+                    self.migrate_overflow();
+                    continue;
+                }
+            }
+            let a = self.slots[idx].swap_remove(best);
+            self.cal_len -= 1;
+            return Some(a);
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.cal_len + self.overflow.len()
     }
 }
 
@@ -567,12 +780,82 @@ mod tests {
         }
         q.reset();
         assert!(q.is_empty());
-        assert_eq!(q.capacity(), cap, "reset must keep the allocation");
+        assert!(q.capacity() >= cap, "reset must keep the allocations");
         // Seq restarts, so a reused queue replays bit-identically.
         q.push(1.0, 7, 7);
         assert_eq!(q.pop().unwrap().seq, 0);
         q.reserve(128);
         assert!(q.capacity() >= 128);
+    }
+
+    #[test]
+    fn queue_pops_exact_min_across_overflow_and_window_moves() {
+        // Events spanning many ring windows (width starts at 1e-5 over 64
+        // slots, so anything past 6.4e-4 lands in overflow), pushed in a
+        // pattern that forces cursor re-anchors, migrations and clamped
+        // past-pushes — the pop sequence must still be the exact global
+        // (time, seq) order.
+        let mut q = EventQueue::new();
+        let times = [
+            5.0, 1e-6, 0.3, 0.3, 2.0e3, 4.2e-5, 7.7, 0.0, 1e-4, 12.5, 0.3,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            q.push(t, i, i);
+        }
+        assert_eq!(q.len(), times.len());
+        // Interleave: pop a few (advancing the cursor deep into the axis),
+        // then push times the cursor has already passed.
+        let first = q.pop().unwrap();
+        assert_eq!((first.time, first.token), (0.0, 7));
+        assert_eq!(q.pop().unwrap().time, 1e-6);
+        q.push(2e-6, 90, 90); // now in the cursor's past: must clamp, not vanish
+        q.push(6.0, 91, 91);
+        let mut expect: Vec<(f64, u64)> = times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| (t, i as u64))
+            .filter(|&(t, _)| t > 1e-6)
+            .chain([(2e-6, 11), (6.0, 12)])
+            .collect();
+        expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut got = Vec::new();
+        while let Some(a) = q.pop() {
+            got.push((a.time, a.seq));
+        }
+        assert_eq!(got, expect);
+        assert!(q.is_empty() && q.pop().is_none());
+    }
+
+    #[test]
+    fn queue_resizes_under_bursts_without_losing_order() {
+        // A burst far larger than the initial ring (forces grow rebuilds),
+        // then a drain past the shrink threshold, then a second burst at a
+        // much later epoch (forces a re-anchor) — conservation and exact
+        // ordering throughout.
+        let mut q = EventQueue::with_capacity(16);
+        let mut rng = Rng::new(0xCA1E);
+        for i in 0..2000usize {
+            q.push(rng.next_f64() * 10.0, i, i);
+        }
+        assert_eq!(q.len(), 2000);
+        let mut last = (f64::NEG_INFINITY, 0u64);
+        for _ in 0..2000 {
+            let a = q.pop().unwrap();
+            assert!((a.time, a.seq) > last, "pop went backwards");
+            last = (a.time, a.seq);
+        }
+        assert!(q.is_empty());
+        for i in 0..100usize {
+            q.push(1e6 + i as f64 * 1e-5, i, i);
+        }
+        let mut seen = 0;
+        let mut last = f64::NEG_INFINITY;
+        while let Some(a) = q.pop() {
+            assert!(a.time >= last);
+            last = a.time;
+            seen += 1;
+        }
+        assert_eq!(seen, 100);
     }
 
     #[test]

@@ -164,6 +164,13 @@ impl LocalSolver for PjrtSolver {
         tau_m: f32,
     ) -> anyhow::Result<SolveOut> {
         let t0 = Instant::now();
+        if shard.rows == 0 {
+            // Padded-out agent (N > training rows): f_i ≡ 0, so the prox
+            // has the closed form x = tzsum/(τM) — no device round-trip,
+            // and no zero-row buffers for the compiled kernel shapes.
+            let w = tzsum.iter().map(|&t| t / tau_m.max(1e-30)).collect();
+            return Ok(SolveOut { w, wall_secs: t0.elapsed().as_secs_f64() });
+        }
         if self.cache_inputs {
             self.ensure_uploaded(shard)?;
         }
@@ -215,6 +222,10 @@ impl LocalSolver for PjrtSolver {
 
     fn grad(&mut self, shard: &AgentData, w: &[f32]) -> anyhow::Result<SolveOut> {
         let t0 = Instant::now();
+        if shard.rows == 0 {
+            // Empty shard: ∇f_i ≡ 0.
+            return Ok(SolveOut { w: vec![0.0; w.len()], wall_secs: t0.elapsed().as_secs_f64() });
+        }
         if self.cache_inputs {
             self.ensure_uploaded(shard)?;
         }

@@ -21,6 +21,19 @@ pub fn os_thread_count() -> Option<u64> {
         .and_then(|v| v.trim().parse().ok())
 }
 
+/// Peak resident set size of this process in bytes, from
+/// `/proc/self/status` (`VmHWM`, reported in kB). `None` off Linux or when
+/// procfs is unavailable. The `repro sweep` memory accounting pairs this OS
+/// ground truth with the per-structure `bytes_per_agent` estimate.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let kb: u64 = status
+        .lines()
+        .find_map(|l| l.strip_prefix("VmHWM:"))
+        .and_then(|v| v.trim().trim_end_matches("kB").trim().parse().ok())?;
+    Some(kb * 1024)
+}
+
 /// Format a float duration (seconds) for human-readable tables.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {

@@ -56,8 +56,8 @@ fn prop_random_topology_well_formed() {
                 return Err(format!("edges {} != target {target}", g.num_edges()));
             }
             for i in 0..n {
-                for &j in g.neighbors(i) {
-                    if !g.neighbors(j).contains(&i) {
+                for j in g.neighbors(i) {
+                    if !g.neighbors(j).any(|k| k == i) {
                         return Err(format!("asymmetric edge {i}-{j}"));
                     }
                     if i == j {
@@ -138,11 +138,11 @@ fn prop_every_topology_kind_well_formed() {
                 }
                 degree_sum += d;
                 let mut prev = None;
-                for &j in g.neighbors(i) {
+                for j in g.neighbors(i) {
                     if j == i {
                         return Err(format!("{kind}: self loop at {i}"));
                     }
-                    if !g.neighbors(j).contains(&i) {
+                    if !g.neighbors(j).any(|k| k == i) {
                         return Err(format!("{kind}: asymmetric edge {i}-{j}"));
                     }
                     if let Some(p) = prev {
@@ -159,12 +159,13 @@ fn prop_every_topology_kind_well_formed() {
                     2 * g.num_edges()
                 ));
             }
-            for w in g.edges().windows(2) {
+            let es = g.edges();
+            for w in es.windows(2) {
                 if w[0] >= w[1] {
                     return Err(format!("{kind}: edge list not strictly sorted"));
                 }
             }
-            for &(a, b) in g.edges() {
+            for &(a, b) in &es {
                 if a >= b || !g.has_edge(a, b) {
                     return Err(format!("{kind}: non-canonical edge ({a},{b})"));
                 }
@@ -183,6 +184,68 @@ fn prop_every_topology_kind_well_formed() {
                         return Err(format!("{kind}: metropolis mass on non-edge {i}-{j}"));
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_implicit_topology_agrees_with_materialized() {
+    // The implicit representations (ring/grid/torus/star/complete computed
+    // arithmetically, scale-free/geometric re-derived from a seeded hash)
+    // must answer every query identically to their fully materialized
+    // adjacency-list forms — neighbors, degrees, edge membership, edge
+    // lists, and connectivity.
+    run_prop(
+        "implicit topology ≡ materialized",
+        cfg(64, 0x5EED_0902),
+        |r| {
+            (
+                Topology::KINDS[r.below(Topology::KINDS.len())],
+                2 + r.below(40),
+                0.2 + 0.7 * r.next_f64(),
+                r.next_u64(),
+            )
+        },
+        |&(kind, n, xi, seed)| {
+            let mut rng = Rng::new(seed);
+            let g = Topology::by_kind(kind, n, xi, &mut rng).map_err(|e| e.to_string())?;
+            let m = g.materialize();
+            if m.n() != g.n() {
+                return Err(format!("{kind}: materialized n {} != {}", m.n(), g.n()));
+            }
+            for i in 0..n {
+                let gi: Vec<usize> = g.neighbors(i).collect();
+                let mi: Vec<usize> = m.neighbors(i).collect();
+                if gi != mi {
+                    return Err(format!("{kind}: neighbors({i}) {gi:?} != {mi:?}"));
+                }
+                if g.degree(i) != m.degree(i) {
+                    return Err(format!(
+                        "{kind}: degree({i}) {} != {}",
+                        g.degree(i),
+                        m.degree(i)
+                    ));
+                }
+                for j in 0..n {
+                    if g.has_edge(i, j) != m.has_edge(i, j) {
+                        return Err(format!("{kind}: has_edge({i},{j}) disagrees"));
+                    }
+                }
+            }
+            if g.num_edges() != m.num_edges() {
+                return Err(format!(
+                    "{kind}: num_edges {} != {}",
+                    g.num_edges(),
+                    m.num_edges()
+                ));
+            }
+            if g.edges() != m.edges() {
+                return Err(format!("{kind}: edge lists differ"));
+            }
+            if g.is_connected() != m.is_connected() {
+                return Err(format!("{kind}: connectivity disagrees"));
             }
             Ok(())
         },

@@ -28,7 +28,7 @@ use std::sync::Arc;
 
 use apibcd::engine::claim::MailSlot;
 use apibcd::scenario::executor::StealQueue;
-use apibcd::sim::TimerWheel;
+use apibcd::sim::{Arrival, EventQueue, TimerWheel};
 use apibcd::util::proptest::{run_prop, PropConfig};
 
 fn cfg(cases: usize, seed: u64) -> PropConfig {
@@ -435,6 +435,106 @@ fn prop_timer_wheel_refines_btreemap() {
                     "accounting: fired {fired_total} + drained {} != scheduled {scheduled}",
                     left.len()
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Calendar `EventQueue` vs a `BinaryHeap` reference (PR-9 tentpole): over
+/// random interleaved push/pop histories the calendar queue pops *exactly*
+/// the heap's (time, seq) order — including duplicate times, where only the
+/// push-sequence tie-break decides, and time scales spanning nine orders of
+/// magnitude so events cross the overflow level, bucket migration, and the
+/// adaptive grow/shrink rebuilds. `Arrival::Ord` is the min-first ordering
+/// the pre-calendar heap used, so `BinaryHeap<Arrival>` *is* the old queue.
+#[test]
+fn prop_calendar_queue_refines_binary_heap() {
+    use std::collections::BinaryHeap;
+
+    #[derive(Debug, Clone, Copy)]
+    enum QOp {
+        /// Push at `now + dt` (dt = 0 forces an exact-duplicate time).
+        Push(f64),
+        Pop,
+    }
+
+    run_prop(
+        "calendar event queue ≡ BinaryHeap reference",
+        cfg(96, 0x5EED_0901),
+        |r| {
+            let ops: Vec<QOp> = (0..30 + r.below(200))
+                .map(|_| {
+                    if r.below(5) < 3 {
+                        // Mixed scales: ~µs steps (in-window), exact
+                        // duplicates, and rare ×1e4 outliers (overflow).
+                        let dt = match r.below(8) {
+                            0 => 0.0,
+                            1..=5 => r.next_f64() * 1e-4,
+                            6 => r.next_f64() * 1e-1,
+                            _ => r.next_f64() * 1e3,
+                        };
+                        QOp::Push(dt)
+                    } else {
+                        QOp::Pop
+                    }
+                })
+                .collect();
+            ops
+        },
+        |ops| {
+            let mut q = EventQueue::new();
+            let mut heap: BinaryHeap<Arrival> = BinaryHeap::new();
+            let mut now = 0.0f64;
+            let mut seq = 0u64; // mirrors the queue's private push counter
+            let mut dup_time = 0.0f64;
+
+            let check_pop = |q: &mut EventQueue,
+                                 heap: &mut BinaryHeap<Arrival>,
+                                 now: &mut f64|
+             -> Result<(), String> {
+                let real = q.pop();
+                let reference = heap.pop();
+                if real != reference {
+                    return Err(format!("popped {real:?}, heap popped {reference:?}"));
+                }
+                if let Some(a) = real {
+                    *now = a.time;
+                }
+                Ok(())
+            };
+
+            for &op in ops {
+                match op {
+                    QOp::Push(dt) => {
+                        // dt = 0 replays the previous push's exact time, so
+                        // only the seq tie-break can order the pair.
+                        let t = if dt == 0.0 { dup_time } else { now + dt };
+                        dup_time = t;
+                        q.push(t, seq as usize % 8, seq as usize % 64);
+                        heap.push(Arrival {
+                            time: t,
+                            seq,
+                            token: seq as usize % 8,
+                            agent: seq as usize % 64,
+                        });
+                        seq += 1;
+                    }
+                    QOp::Pop => check_pop(&mut q, &mut heap, &mut now)?,
+                }
+                if q.len() != heap.len() {
+                    return Err(format!("len {} != reference {}", q.len(), heap.len()));
+                }
+                if q.is_empty() != heap.is_empty() {
+                    return Err("is_empty disagrees with reference".into());
+                }
+            }
+            // Drain both sides: the tails must agree event-for-event too.
+            while !heap.is_empty() {
+                check_pop(&mut q, &mut heap, &mut now)?;
+            }
+            if q.pop().is_some() {
+                return Err("queue still had events after the reference drained".into());
             }
             Ok(())
         },
