@@ -31,6 +31,11 @@ from .profiles import PROFILES, DEFAULT_K, BLOCK_ROWS
 
 F32 = jnp.float32
 
+# Leading batch dimension of the *_batch entries: the vmapped twins the
+# rust solver service feeds from its drain queue (``--solver-batch``).
+# Must match the chunk size PjrtSolver stacks host-side.
+DEFAULT_BATCH = 8
+
 
 def to_hlo_text(lowered) -> str:
     """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
@@ -65,56 +70,80 @@ def _entry(name, fn, arg_specs, arg_names, out_shape, prof, static):
     return text, entry
 
 
+def _batched_entry(name, fn, in_axes, arg_specs, arg_names, out_shape, prof,
+                   static, b=DEFAULT_BATCH):
+    """Vmapped twin of ``_entry``: leading batch dim ``b`` on the axes
+    marked 0 in ``in_axes`` (the per-request model vectors); the shard
+    constants broadcast. The vmapped program lowers the same per-item math,
+    but vmap batches the dot reductions into ``dot_general``, which XLA may
+    reassociate — rows match one-at-a-time execution to within an ulp, not
+    bit-for-bit (``test_batched_prox_rows_match_per_item`` pins the
+    tolerance; the rust engine's cross-substrate claims use bands).
+    """
+    bspecs = [(b, *s) if ax == 0 else s for s, ax in zip(arg_specs, in_axes)]
+    return _entry(
+        name, jax.vmap(fn, in_axes=in_axes, out_axes=0),
+        bspecs, arg_names, (b, *out_shape), prof, static,
+    )
+
+
 def artifacts_for_profile(prof, k=DEFAULT_K):
-    """Yield (hlo_text, manifest_entry) for every artifact of one profile."""
+    """Yield (hlo_text, manifest_entry) for every artifact of one profile.
+
+    Per task: the per-item prox and grad entries, plus their ``*_batch``
+    vmapped twins (leading batch dim ``DEFAULT_BATCH`` on w0/tzsum/w).
+    """
     s, p, c = prof.shard_rows, prof.features, prof.classes
+    b = DEFAULT_BATCH
     if prof.task == "ls":
-        yield _entry(
-            f"{prof.name}_ls_prox_k{k}",
-            functools.partial(model.ls_prox_update, n_cg=k),
-            [(s, p), (s,), (s,), (p,), (p,), ()],
-            ["x", "y", "mask", "w0", "tzsum", "tau_m"],
-            (p,), prof, {"kind": "prox", "k": k},
-        )
-        yield _entry(
-            f"{prof.name}_ls_grad",
-            model.ls_grad,
-            [(s, p), (s,), (s,), (p,)],
-            ["x", "y", "mask", "w"],
-            (p,), prof, {"kind": "grad"},
-        )
+        prox_fn = functools.partial(model.ls_prox_update, n_cg=k)
+        prox_specs = [(s, p), (s,), (s,), (p,), (p,), ()]
+        prox_names = ["x", "y", "mask", "w0", "tzsum", "tau_m"]
+        prox_axes = (None, None, None, 0, 0, None)
+        grad_fn, out = model.ls_grad, (p,)
+        grad_specs = [(s, p), (s,), (s,), (p,)]
+        grad_names = ["x", "y", "mask", "w"]
+        tag = "ls"
     elif prof.task == "logit":
-        yield _entry(
-            f"{prof.name}_logit_prox_k{k}",
-            functools.partial(model.logit_prox_update, n_steps=k),
-            [(s, p), (s,), (s,), (p,), (p,), (), ()],
-            ["x", "y", "mask", "w0", "tzsum", "tau_m", "step"],
-            (p,), prof, {"kind": "prox", "k": k},
-        )
-        yield _entry(
-            f"{prof.name}_logit_grad",
-            model.logit_grad,
-            [(s, p), (s,), (s,), (p,)],
-            ["x", "y", "mask", "w"],
-            (p,), prof, {"kind": "grad"},
-        )
+        prox_fn = functools.partial(model.logit_prox_update, n_steps=k)
+        prox_specs = [(s, p), (s,), (s,), (p,), (p,), (), ()]
+        prox_names = ["x", "y", "mask", "w0", "tzsum", "tau_m", "step"]
+        prox_axes = (None, None, None, 0, 0, None, None)
+        grad_fn, out = model.logit_grad, (p,)
+        grad_specs = [(s, p), (s,), (s,), (p,)]
+        grad_names = ["x", "y", "mask", "w"]
+        tag = "logit"
     elif prof.task == "smax":
-        yield _entry(
-            f"{prof.name}_smax_prox_k{k}",
-            functools.partial(model.smax_prox_update, n_steps=k),
-            [(s, p), (s, c), (s,), (p, c), (p, c), (), ()],
-            ["x", "y_onehot", "mask", "w0", "tzsum", "tau_m", "step"],
-            (p, c), prof, {"kind": "prox", "k": k},
-        )
-        yield _entry(
-            f"{prof.name}_smax_grad",
-            model.smax_grad,
-            [(s, p), (s, c), (s,), (p, c)],
-            ["x", "y_onehot", "mask", "w"],
-            (p, c), prof, {"kind": "grad"},
-        )
+        prox_fn = functools.partial(model.smax_prox_update, n_steps=k)
+        prox_specs = [(s, p), (s, c), (s,), (p, c), (p, c), (), ()]
+        prox_names = ["x", "y_onehot", "mask", "w0", "tzsum", "tau_m", "step"]
+        prox_axes = (None, None, None, 0, 0, None, None)
+        grad_fn, out = model.smax_grad, (p, c)
+        grad_specs = [(s, p), (s, c), (s,), (p, c)]
+        grad_names = ["x", "y_onehot", "mask", "w"]
+        tag = "smax"
     else:  # pragma: no cover
         raise ValueError(f"unknown task {prof.task}")
+
+    grad_axes = (None, None, None, 0)
+    yield _entry(
+        f"{prof.name}_{tag}_prox_k{k}", prox_fn, prox_specs, prox_names,
+        out, prof, {"kind": "prox", "k": k},
+    )
+    yield _entry(
+        f"{prof.name}_{tag}_grad", grad_fn, grad_specs, grad_names,
+        out, prof, {"kind": "grad"},
+    )
+    yield _batched_entry(
+        f"{prof.name}_{tag}_prox_k{k}_b{b}", prox_fn, prox_axes,
+        prox_specs, prox_names, out, prof,
+        {"kind": "prox_batch", "k": k, "batch": b},
+    )
+    yield _batched_entry(
+        f"{prof.name}_{tag}_grad_b{b}", grad_fn, grad_axes,
+        grad_specs, grad_names, out, prof,
+        {"kind": "grad_batch", "batch": b},
+    )
 
 
 def main() -> None:

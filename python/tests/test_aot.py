@@ -34,11 +34,20 @@ def test_entry_structure(test_entries):
         for inp in entry["inputs"]:
             assert inp["dtype"] == "f32"
             assert all(isinstance(d, int) for d in inp["shape"])
-        assert entry["static"]["kind"] in ("prox", "grad")
+        assert entry["static"]["kind"] in (
+            "prox", "grad", "prox_batch", "grad_batch",
+        )
+
+
+def _by_kind(entries, kind):
+    matches = [e for _, e in entries if e["static"]["kind"] == kind]
+    assert len(matches) == 1, kind
+    return matches[0]
 
 
 def test_prox_entry_input_order(test_entries):
-    (_, prox), (_, grad) = test_entries
+    prox = _by_kind(test_entries, "prox")
+    grad = _by_kind(test_entries, "grad")
     assert [i["name"] for i in prox["inputs"]] == \
         ["x", "y", "mask", "w0", "tzsum", "tau_m"]
     assert [i["name"] for i in grad["inputs"]] == ["x", "y", "mask", "w"]
@@ -46,6 +55,61 @@ def test_prox_entry_input_order(test_entries):
     assert prox["inputs"][0]["shape"] == [s, p]
     assert prox["inputs"][5]["shape"] == []          # rank-0 scalar
     assert prox["output"]["shape"] == [p]
+
+
+def test_batched_entries_add_leading_batch_dim(test_entries):
+    """The *_batch twins batch only w0/tzsum/w; shard constants broadcast."""
+    b = aot.DEFAULT_BATCH
+    prox = _by_kind(test_entries, "prox")
+    grad = _by_kind(test_entries, "grad")
+    bprox = _by_kind(test_entries, "prox_batch")
+    bgrad = _by_kind(test_entries, "grad_batch")
+    assert bprox["static"]["batch"] == b
+    assert bgrad["static"]["batch"] == b
+    for scalar, batched, batched_args in (
+        (prox, bprox, ("w0", "tzsum")),
+        (grad, bgrad, ("w",)),
+    ):
+        assert [i["name"] for i in batched["inputs"]] == \
+            [i["name"] for i in scalar["inputs"]]
+        for si, bi in zip(scalar["inputs"], batched["inputs"]):
+            if si["name"] in batched_args:
+                assert bi["shape"] == [b] + si["shape"], si["name"]
+            else:
+                assert bi["shape"] == si["shape"], si["name"]
+        assert batched["output"]["shape"] == [b] + scalar["output"]["shape"]
+
+
+def test_batched_prox_rows_match_per_item(test_entries):
+    """Row i of the vmapped prox equals the per-item prox on request i to
+    within an ulp — vmap batches the dot reductions into ``dot_general``,
+    which may reassociate, so exact bit-equality does NOT hold (measured:
+    ~1 ulp on test_ls). The tight tolerance still catches any real defect
+    (a row/axis mix-up would be O(1) wrong), and the rust native batched
+    path keeps the strict bit-identity contract."""
+    import functools
+    import jax
+
+    prof = PROFILES["test_ls"]
+    s, p = prof.shard_rows, prof.features
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(s, p)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(s,)), jnp.float32)
+    mask = jnp.ones((s,), jnp.float32)
+    b = aot.DEFAULT_BATCH
+    w0s = jnp.asarray(rng.normal(size=(b, p)), jnp.float32)
+    tzs = jnp.asarray(rng.normal(size=(b, p)), jnp.float32)
+    tau_m = jnp.float32(0.5)
+    fn = functools.partial(model.ls_prox_update, n_cg=5)
+    batched = jax.vmap(fn, in_axes=(None, None, None, 0, 0, None))(
+        x, y, mask, w0s, tzs, tau_m
+    )
+    for i in range(b):
+        one = np.asarray(fn(x, y, mask, w0s[i], tzs[i], tau_m))
+        np.testing.assert_allclose(
+            np.asarray(batched[i]), one, rtol=1e-6,
+            atol=1e-6 * float(np.max(np.abs(one))),
+        )
 
 
 def test_export_is_deterministic():
@@ -58,9 +122,9 @@ def test_export_is_deterministic():
 def test_every_profile_exports():
     for name, prof in PROFILES.items():
         entries = list(aot.artifacts_for_profile(prof))
-        assert len(entries) == 2, name
+        assert len(entries) == 4, name
         kinds = {e["static"]["kind"] for _, e in entries}
-        assert kinds == {"prox", "grad"}
+        assert kinds == {"prox", "grad", "prox_batch", "grad_batch"}
 
 
 def test_manifest_on_disk_if_built():

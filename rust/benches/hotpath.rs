@@ -7,6 +7,8 @@
 //! * native solver: prox/grad per dataset profile;
 //! * PJRT solver: the same updates through the AOT artifacts (cached
 //!   device buffers vs cold uploads) — requires `make artifacts`;
+//! * solver service: B pipelined requests through one `prox_many` drain vs
+//!   B blocking round trips — the derived `batch speedup` row CI checks;
 //! * coordinator substrate: DES event handling, token routing, recorder
 //!   evaluation — with derived ns-per-activation metrics.
 //!
@@ -102,6 +104,80 @@ fn bench_pjrt(suite: &mut Suite, smoke: bool) {
             stats.compile_secs * 1e3
         );
     }
+}
+
+fn bench_solver_service(suite: &mut Suite, smoke: bool) {
+    use apibcd::solver::{ProxReq, SolverService};
+    use std::sync::Arc;
+
+    print_header("solver service (drain batching vs blocking round trips)");
+    // B matches the default --solver-batch drain target; the sequential
+    // twin issues the same B prox solves as one-at-a-time round trips, so
+    // the derived ratio isolates what the drain queue + recycled reply
+    // slots amortize (channel hops, wakeups, per-request allocation).
+    const B: usize = 8;
+    let prof = DatasetProfile::by_name("test_ls").unwrap();
+    let task = prof.task;
+    let ds = Dataset::load(prof, "/nonexistent", 1).unwrap();
+    let shards = Arc::new(Partition::new(&ds, B, PartitionKind::Iid).unwrap().shards);
+    let dim = prof.dim();
+    let service = SolverService::spawn(
+        move || Ok(Box::new(NativeSolver::new(task, 5)) as Box<dyn LocalSolver>),
+        shards,
+        B,
+    )
+    .unwrap();
+    let client = service.client();
+    let iters = if smoke { 50 } else { 400 };
+
+    // Sequential twin: one request in flight at a time — what every
+    // activation pays without the drain queue.
+    let mut bufs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..B)
+        .map(|_| (vec![0.1f32; dim], vec![0.05f32; dim], vec![0.0f32; dim]))
+        .collect();
+    let r = bench(&format!("solver/prox sequential x{B}"), iters, || {
+        for (agent, (w0, tz, out)) in bufs.iter_mut().enumerate() {
+            let got = client
+                .prox_buf(
+                    agent,
+                    std::mem::take(w0),
+                    std::mem::take(tz),
+                    0.5,
+                    std::mem::take(out),
+                )
+                .unwrap();
+            *w0 = got.w0;
+            *tz = got.tzsum;
+            *out = got.w;
+        }
+    });
+    let seq_ns = r.mean_ns;
+    suite.push(r);
+
+    // Batched: the same B requests pipelined through one prox_many call —
+    // one deep drain on the service side, one reply sweep on the client.
+    let mut reqs: Vec<ProxReq> = (0..B)
+        .map(|agent| ProxReq {
+            agent,
+            w0: vec![0.1f32; dim],
+            tzsum: vec![0.05f32; dim],
+            tau_m: 0.5,
+            out: vec![0.0f32; dim],
+            wall_secs: 0.0,
+        })
+        .collect();
+    let r = bench(&format!("solver/prox batched x{B}"), iters, || {
+        reqs = client.prox_many(std::mem::take(&mut reqs)).unwrap();
+    });
+    let batch_ns = r.mean_ns;
+    suite.push(r);
+
+    if batch_ns > 0.0 {
+        let speedup = seq_ns / batch_ns;
+        suite.derive(&format!("solver/prox batch speedup x{B}"), speedup);
+        println!("  → {speedup:.2}x over blocking round trips");
+    }
+    service.shutdown();
 }
 
 fn bench_coordinator(suite: &mut Suite, smoke: bool) {
@@ -257,6 +333,7 @@ fn main() {
     let mut suite = Suite::new("hotpath");
     bench_native(&mut suite, smoke);
     bench_pjrt(&mut suite, smoke);
+    bench_solver_service(&mut suite, smoke);
     bench_coordinator(&mut suite, smoke);
     let path = suite.default_path();
     match suite.write_json(&path) {

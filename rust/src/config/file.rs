@@ -152,6 +152,7 @@ fn apply(cfg: &mut ExperimentConfig, key: &str, v: &str) -> anyhow::Result<()> {
                 _ => return Err(bad("solver")),
             }
         }
+        "solver-batch" => cfg.solver_batch = v.parse().map_err(|_| bad("integer"))?,
         "partition" => {
             cfg.partition = match v {
                 "iid" => crate::data::shard::PartitionKind::Iid,
@@ -338,6 +339,17 @@ mod tests {
         assert_eq!(cfg.transport, NetTransport::Uds, "default transport");
         let err = from_str("transport = \"quic\"\n").unwrap_err().to_string();
         assert!(err.contains("quic") && err.contains("uds"), "{err}");
+    }
+
+    #[test]
+    fn solver_batch_key_parses() {
+        let cfg = from_str("solver-batch = 16\n").unwrap();
+        assert_eq!(cfg.solver_batch, 16);
+        assert_eq!(from_str("").unwrap().solver_batch, 8, "default drain target");
+        let err = from_str("solver-batch = wide\n").unwrap_err().to_string();
+        assert!(err.contains("solver-batch"), "{err}");
+        let err = from_str("solver-batch = 0\n").unwrap_err().to_string();
+        assert!(err.contains("solver-batch") && err.contains(">= 1"), "{err}");
     }
 
     #[test]

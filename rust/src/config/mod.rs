@@ -142,6 +142,12 @@ pub struct ExperimentConfig {
     pub data_dir: String,
     pub artifacts_dir: String,
     pub solver: SolverChoice,
+    /// Solver-service drain target: how many queued prox/grad requests one
+    /// flush may collect into a multi-RHS batch (thread and net substrates;
+    /// the DES calls the solver directly). 1 disables batching; the queue
+    /// going idle always flushes early, so latency never waits on a batch
+    /// filling up.
+    pub solver_batch: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -175,6 +181,7 @@ impl Default for ExperimentConfig {
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),
             solver: SolverChoice::Auto,
+            solver_batch: 8,
         }
     }
 }
@@ -362,6 +369,13 @@ impl ExperimentConfig {
             self.topology,
             crate::graph::Topology::VALID_KINDS
         );
+        anyhow::ensure!(
+            self.solver_batch >= 1,
+            "config: `solver-batch` must be >= 1 (got {}); 1 disables \
+             batching, larger values let the solver service drain that many \
+             queued requests into one multi-RHS solve",
+            self.solver_batch
+        );
         self.heterogeneity.validate()?;
         self.latency.validate()?;
         self.timing.validate()?;
@@ -437,6 +451,18 @@ mod tests {
         cfg.agents = 2;
         cfg.walks = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_solver_batch() {
+        let mut cfg = ExperimentConfig {
+            solver_batch: 0,
+            ..ExperimentConfig::default()
+        };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("solver-batch") && err.contains(">= 1"), "{err}");
+        cfg.solver_batch = 1;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -147,10 +147,13 @@ impl ExperimentBuilder {
                 let shards = Arc::new(workload.partition.shards.clone());
                 let profile = workload.profile;
                 let cfg2 = cfg.clone();
-                let service =
-                    SolverService::spawn(move || build_solver(&cfg2, profile), shards.clone())?;
+                let service = SolverService::spawn(
+                    move || build_solver(&cfg2, profile),
+                    shards.clone(),
+                    cfg.solver_batch,
+                )?;
                 for &kind in &cfg.algos {
-                    traces.push(threads::run(
+                    let mut trace = threads::run(
                         &cfg,
                         kind,
                         &workload.topo,
@@ -158,7 +161,13 @@ impl ExperimentBuilder {
                         &workload.problem,
                         workload.profile.task,
                         service.client(),
-                    )?);
+                    )?;
+                    // Per-algorithm drain-depth percentiles (take resets the
+                    // histogram, so each trace sees only its own run).
+                    let (p50, p99) = service.take_queue_depth();
+                    trace.solver_queue_depth_p50 = p50;
+                    trace.solver_queue_depth_p99 = p99;
+                    traces.push(trace);
                 }
                 service.shutdown();
             }

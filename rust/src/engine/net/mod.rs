@@ -643,6 +643,8 @@ pub(crate) fn run(
     let mut got_final = vec![false; w_count];
     let mut worker_bytes = vec![0u64; w_count];
     let mut worker_frames = vec![0u64; w_count];
+    let mut depth_p50 = 0u64;
+    let mut depth_p99 = 0u64;
     let drain_deadline = Instant::now() + DRAIN_TIMEOUT;
     while got_final.iter().any(|g| !g) && Instant::now() < drain_deadline {
         match rx.recv_timeout(Duration::from_millis(100)) {
@@ -653,11 +655,17 @@ pub(crate) fn run(
                     retired,
                     bytes_sent,
                     frames_sent,
+                    solver_depth_p50,
+                    solver_depth_p99,
                 },
             )) => {
                 got_final[w] = true;
                 worker_bytes[w] = bytes_sent;
                 worker_frames[w] = frames_sent;
+                // Busiest worker's drain depths — max, not mean: the
+                // batching headroom lives in the deepest queue.
+                depth_p50 = depth_p50.max(solver_depth_p50);
+                depth_p99 = depth_p99.max(solver_depth_p99);
                 for (agent, row) in rows {
                     let agent = agent as usize;
                     if agent < n && row.len() == dim {
@@ -714,6 +722,8 @@ pub(crate) fn run(
     trace.net_worker_bytes = worker_bytes;
     trace.net_worker_frames = worker_frames;
     trace.bytes_on_wire = trace.net_worker_bytes.iter().sum::<u64>() + coord_bytes;
+    trace.solver_queue_depth_p50 = depth_p50;
+    trace.solver_queue_depth_p99 = depth_p99;
     Ok(trace)
 }
 

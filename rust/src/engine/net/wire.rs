@@ -89,6 +89,10 @@ pub enum Frame {
         retired: Vec<Vec<f32>>,
         bytes_sent: u64,
         frames_sent: u64,
+        /// Solver-service drain-depth percentiles for this worker's run
+        /// (`Trace::solver_queue_depth_*`; coordinator takes the max).
+        solver_depth_p50: u64,
+        solver_depth_p99: u64,
     },
 }
 
@@ -427,6 +431,7 @@ pub fn encode_config(cfg: &ExperimentConfig) -> Vec<u8> {
             SolverChoice::Pjrt => 2,
         },
     );
+    put_u64(&mut b, cfg.solver_batch as u64);
     b
 }
 
@@ -489,6 +494,7 @@ pub fn decode_config(r: &mut Reader) -> anyhow::Result<ExperimentConfig> {
         2 => SolverChoice::Pjrt,
         v => anyhow::bail!("wire: unknown solver tag {v}"),
     };
+    let solver_batch = r.u64()? as usize;
     Ok(ExperimentConfig {
         name,
         profile,
@@ -518,6 +524,7 @@ pub fn decode_config(r: &mut Reader) -> anyhow::Result<ExperimentConfig> {
         data_dir,
         artifacts_dir,
         solver,
+        solver_batch,
     })
 }
 
@@ -611,6 +618,8 @@ pub fn encode_frame(f: &Frame) -> Vec<u8> {
             retired,
             bytes_sent,
             frames_sent,
+            solver_depth_p50,
+            solver_depth_p99,
         } => {
             put_u8(&mut b, TAG_FINAL_STATE);
             put_u32(&mut b, rows.len() as u32);
@@ -624,6 +633,8 @@ pub fn encode_frame(f: &Frame) -> Vec<u8> {
             }
             put_u64(&mut b, *bytes_sent);
             put_u64(&mut b, *frames_sent);
+            put_u64(&mut b, *solver_depth_p50);
+            put_u64(&mut b, *solver_depth_p99);
         }
     }
     b
@@ -716,6 +727,8 @@ pub fn decode_frame(body: &[u8]) -> anyhow::Result<Frame> {
                 retired,
                 bytes_sent: r.u64()?,
                 frames_sent: r.u64()?,
+                solver_depth_p50: r.u64()?,
+                solver_depth_p99: r.u64()?,
             }
         }
         tag => anyhow::bail!("wire: unknown frame tag {tag}"),
@@ -863,6 +876,7 @@ mod tests {
             cfg.faults = FaultModel::chaos(rng.uniform(0.0, 0.2));
         }
         cfg.net_workers = 1 + rng.below(8);
+        cfg.solver_batch = 1 + rng.below(32);
         cfg.transport = if rng.below(2) == 0 {
             NetTransport::Uds
         } else {
@@ -939,6 +953,8 @@ mod tests {
                     .collect(),
                 bytes_sent: rng.next_u64() % 100_000,
                 frames_sent: rng.next_u64() % 1000,
+                solver_depth_p50: rng.next_u64() % 64,
+                solver_depth_p99: rng.next_u64() % 128,
             },
         }
     }

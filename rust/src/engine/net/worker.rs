@@ -430,6 +430,7 @@ pub fn worker_main(args: &Args) -> anyhow::Result<()> {
     let service = crate::solver::SolverService::spawn(
         move || super::super::build_solver(&cfg2, profile),
         shards.clone(),
+        cfg.solver_batch,
     )?;
 
     let behaviors: Vec<Box<dyn AgentBehavior>> = {
@@ -571,6 +572,8 @@ pub fn worker_main(args: &Args) -> anyhow::Result<()> {
             shared.retire(msg.payload);
         }
     }
+    // Depth stats must be read before shutdown consumes the service.
+    let (solver_depth_p50, solver_depth_p99) = service.take_queue_depth();
     service.shutdown();
 
     // Ship the final state home. The wire counters exclude this last
@@ -592,6 +595,8 @@ pub fn worker_main(args: &Args) -> anyhow::Result<()> {
         retired,
         bytes_sent,
         frames_sent,
+        solver_depth_p50,
+        solver_depth_p99,
     });
 
     if let Some(e) = read_err {

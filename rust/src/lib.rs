@@ -106,6 +106,15 @@
 //!     .unwrap();
 //! println!("final NMSE: {:.4}", report.traces[0].last_metric());
 //! ```
+//!
+//! ## Batched solves
+//!
+//! Co-resident agents share one solver thread; [`solver::batch`] drains the
+//! request queue into multi-RHS batches (`--solver-batch`, gemm-shaped
+//! kernels in [`linalg`]) that are bit-identical to the one-at-a-time path.
+//! Design, drain policy and when batching is a no-op: EXPERIMENTS.md §Perf
+//! "Batched solves".
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
 
 pub mod algo;
 pub mod config;

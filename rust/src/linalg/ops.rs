@@ -15,6 +15,7 @@ const BLOCK: usize = 128;
 /// Independent f32 accumulators inside a block.
 const LANES: usize = 8;
 
+#[cfg(not(feature = "portable-simd"))]
 #[inline(always)]
 fn dot_block(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -32,6 +33,29 @@ fn dot_block(a: &[f32], b: &[f32]) -> f64 {
         tail += x * y;
     }
     lanes.iter().map(|&v| v as f64).sum::<f64>() + tail as f64
+}
+
+/// `std::simd` twin of the scalar block reducer (nightly, feature
+/// `portable-simd`): one f32x8 accumulator is exactly the LANES=8
+/// independent scalar lanes, and the lane fold runs in the same order, so
+/// the result is bit-identical to the scalar path.
+#[cfg(feature = "portable-simd")]
+#[inline(always)]
+fn dot_block(a: &[f32], b: &[f32]) -> f64 {
+    use std::simd::f32x8;
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = f32x8::splat(0.0);
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        acc += f32x8::from_slice(xa) * f32x8::from_slice(xb);
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ra.iter().zip(rb) {
+        tail += x * y;
+    }
+    acc.to_array().iter().map(|&v| v as f64).sum::<f64>() + tail as f64
 }
 
 /// Dot product: blocked f32 lanes, f64 block reduction.
@@ -89,6 +113,7 @@ pub fn nrm2(x: &[f32]) -> f32 {
     dot(x, x).sqrt()
 }
 
+#[cfg(not(feature = "portable-simd"))]
 #[inline(always)]
 fn dist2_block(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -108,6 +133,29 @@ fn dist2_block(a: &[f32], b: &[f32]) -> f64 {
         tail += d * d;
     }
     lanes.iter().map(|&v| v as f64).sum::<f64>() + tail as f64
+}
+
+/// `std::simd` twin of the scalar squared-distance block reducer — same
+/// lane width and fold order, bit-identical result (see [`dot_block`]).
+#[cfg(feature = "portable-simd")]
+#[inline(always)]
+fn dist2_block(a: &[f32], b: &[f32]) -> f64 {
+    use std::simd::f32x8;
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = f32x8::splat(0.0);
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        let d = f32x8::from_slice(xa) - f32x8::from_slice(xb);
+        acc += d * d;
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ra.iter().zip(rb) {
+        let d = x - y;
+        tail += d * d;
+    }
+    acc.to_array().iter().map(|&v| v as f64).sum::<f64>() + tail as f64
 }
 
 /// ‖a − b‖₂²: blocked f32 lanes, f64 block reduction.
@@ -164,6 +212,69 @@ pub fn ger(x: &[f32], y: &[f32], a: &mut [f32]) {
     for (&xi, arow) in x.iter().zip(a.chunks_exact_mut(y.len())) {
         if xi != 0.0 {
             axpy(xi, y, arow);
+        }
+    }
+}
+
+/// Multi-RHS [`gemv`]: `ys[r] = A xs[r]` for `n_rhs` right-hand sides laid
+/// out in stride-padded row-major matrices (`x_stride ≥ cols`,
+/// `y_stride ≥ rows` — the batch staging rows of
+/// [`crate::solver::batch::BatchMat`]). Each A row is streamed once across
+/// all RHS, but every output element is the same contiguous [`dot`] the
+/// sequential path computes, so the result is bit-identical to `n_rhs`
+/// separate `gemv` calls.
+#[allow(clippy::too_many_arguments)] // mirrors the BLAS gemm surface
+#[inline]
+pub fn gemm(
+    a: &[f32],
+    rows: usize,
+    cols: usize,
+    xs: &[f32],
+    x_stride: usize,
+    ys: &mut [f32],
+    y_stride: usize,
+    n_rhs: usize,
+) {
+    assert!(cols > 0, "gemm needs cols ≥ 1");
+    assert!(x_stride >= cols && (n_rhs == 0 || y_stride >= rows));
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert!(xs.len() >= n_rhs.saturating_sub(1) * x_stride + if n_rhs > 0 { cols } else { 0 });
+    for (i, row) in a.chunks_exact(cols).enumerate() {
+        for r in 0..n_rhs {
+            ys[r * y_stride + i] = dot(row, &xs[r * x_stride..r * x_stride + cols]);
+        }
+    }
+}
+
+/// Multi-RHS [`gemv_t`]: `ys[r] = Aᵀ ss[r]` with the same stride-padded
+/// layout as [`gemm`] (`s_stride ≥ rows`, `y_stride ≥ cols`). A rows are
+/// streamed once; per output the [`axpy`] sequence (ascending row index,
+/// zero entries skipped) is exactly the sequential `gemv_t`, so results
+/// are bit-identical to `n_rhs` separate calls.
+#[allow(clippy::too_many_arguments)] // mirrors the BLAS gemm surface
+#[inline]
+pub fn gemm_t(
+    a: &[f32],
+    rows: usize,
+    cols: usize,
+    ss: &[f32],
+    s_stride: usize,
+    ys: &mut [f32],
+    y_stride: usize,
+    n_rhs: usize,
+) {
+    assert!(cols > 0, "gemm_t needs cols ≥ 1");
+    assert!((n_rhs == 0 || s_stride >= rows) && y_stride >= cols);
+    debug_assert_eq!(a.len(), rows * cols);
+    for r in 0..n_rhs {
+        ys[r * y_stride..r * y_stride + cols].fill(0.0);
+    }
+    for (i, row) in a.chunks_exact(cols).enumerate() {
+        for r in 0..n_rhs {
+            let si = ss[r * s_stride + i];
+            if si != 0.0 {
+                axpy(si, row, &mut ys[r * y_stride..r * y_stride + cols]);
+            }
         }
     }
 }
@@ -260,6 +371,45 @@ mod tests {
         let mut yt = [0.0f32; 2];
         gemv_t(&a, 3, 2, &[1.0, 1.0, 1.0], &mut yt);
         assert_eq!(yt, [9.0, 12.0]);
+    }
+
+    #[test]
+    fn gemm_matches_per_rhs_gemv() {
+        // A = 3×2, two RHS in a stride-4 batch matrix; outputs stride 8.
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let xs = [1.0f32, 1.0, 0.0, 0.0, -1.0, 2.0, 0.0, 0.0];
+        let mut ys = [7.0f32; 16];
+        gemm(&a, 3, 2, &xs, 4, &mut ys, 8, 2);
+        for r in 0..2 {
+            let mut want = [0.0f32; 3];
+            gemv(&a, 3, 2, &xs[r * 4..r * 4 + 2], &mut want);
+            assert_eq!(&ys[r * 8..r * 8 + 3], &want, "rhs {r}");
+        }
+    }
+
+    #[test]
+    fn gemm_t_matches_per_rhs_gemv_t() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        // Second RHS has a zero entry — exercises the zero-skip path.
+        let ss = [1.0f32, 1.0, 1.0, 0.0, 2.0, 0.0, -1.0, 0.0];
+        let mut ys = [7.0f32; 8];
+        gemm_t(&a, 3, 2, &ss, 4, &mut ys, 4, 2);
+        for r in 0..2 {
+            let mut want = [0.0f32; 2];
+            gemv_t(&a, 3, 2, &ss[r * 4..r * 4 + 3], &mut want);
+            assert_eq!(&ys[r * 4..r * 4 + 2], &want, "rhs {r}");
+        }
+    }
+
+    #[test]
+    fn gemm_handles_zero_rows_and_zero_rhs() {
+        let a: [f32; 0] = [];
+        let mut ys = [1.0f32; 4];
+        gemm(&a, 0, 3, &[0.0; 4], 4, &mut ys, 4, 1);
+        gemm_t(&a, 0, 3, &[0.0; 4], 4, &mut ys, 4, 1);
+        // gemm with rows=0 writes nothing; gemm_t zeroes its outputs.
+        assert_eq!(ys, [0.0, 0.0, 0.0, 1.0]);
+        gemm(&a, 0, 3, &[], 4, &mut ys, 4, 0); // n_rhs = 0 is a no-op
     }
 
     #[test]

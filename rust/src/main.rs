@@ -150,6 +150,7 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()
     }
     cfg.workers = args.usize_or("workers", cfg.workers)?;
     cfg.net_workers = args.usize_or("net-workers", cfg.net_workers)?;
+    cfg.solver_batch = args.usize_or("solver-batch", cfg.solver_batch)?;
     if let Some(t) = args.str_opt("transport") {
         cfg.transport = apibcd::config::NetTransport::by_name(t).ok_or_else(|| {
             anyhow::anyhow!(
@@ -382,6 +383,11 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 42)?;
     let workers = args.usize_or("workers", 0)?;
     let net_workers = args.usize_or("net-workers", 2)?;
+    let solver_batch = args.usize_or("solver-batch", 8)?;
+    let heterogeneity = match args.str_opt("heterogeneity") {
+        None => apibcd::sim::Heterogeneity::None,
+        Some(h) => apibcd::sim::Heterogeneity::parse(h)?,
+    };
     let transport = match args.str_opt("transport") {
         None => apibcd::config::NetTransport::default(),
         Some(t) => apibcd::config::NetTransport::by_name(t).ok_or_else(|| {
@@ -429,6 +435,8 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
         cfg.seed = seed;
         cfg.workers = workers;
         cfg.net_workers = net_workers;
+        cfg.solver_batch = solver_batch;
+        cfg.heterogeneity = heterogeneity;
         cfg.transport = transport;
         cfg.stop.max_activations = activations;
         Experiment::builder(cfg).substrate(substrate).run()
@@ -483,6 +491,16 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
                     "workers".into(),
                     Json::Num(t.worker_busy_secs.len() as f64),
                 );
+                // The queue the batcher feeds on (EXPERIMENTS.md §Perf):
+                // drain-time depth percentiles from the solver service.
+                row.insert(
+                    "solver_queue_depth_p50".into(),
+                    Json::Num(t.solver_queue_depth_p50 as f64),
+                );
+                row.insert(
+                    "solver_queue_depth_p99".into(),
+                    Json::Num(t.solver_queue_depth_p99 as f64),
+                );
             }
             if net {
                 row.insert("peak_threads".into(), Json::Num(t.peak_threads as f64));
@@ -502,6 +520,16 @@ fn cmd_sweep_scale(args: &Args) -> anyhow::Result<()> {
                     Json::Arr(
                         t.net_worker_frames.iter().map(|&f| Json::Num(f as f64)).collect(),
                     ),
+                );
+                // Max across worker processes — batching headroom lives in
+                // the deepest per-worker solver queue.
+                row.insert(
+                    "solver_queue_depth_p50".into(),
+                    Json::Num(t.solver_queue_depth_p50 as f64),
+                );
+                row.insert(
+                    "solver_queue_depth_p99".into(),
+                    Json::Num(t.solver_queue_depth_p99 as f64),
                 );
             }
             results.push(Json::Obj(row));

@@ -28,6 +28,9 @@ pub struct Entry {
     pub kind: String,
     /// Inner iteration count for prox entries.
     pub k: Option<usize>,
+    /// Leading batch dimension for `prox_batch`/`grad_batch` entries
+    /// (vmapped over w0/tzsum); `None` for the per-item entries.
+    pub batch: Option<usize>,
     pub inputs: Vec<TensorSpec>,
     pub output: TensorSpec,
 }
@@ -149,6 +152,7 @@ impl Manifest {
                     .unwrap_or("")
                     .to_string(),
                 k: static_.and_then(|s| s.get("k")).and_then(Json::as_usize),
+                batch: static_.and_then(|s| s.get("batch")).and_then(Json::as_usize),
                 inputs,
                 output,
             });
@@ -225,6 +229,19 @@ mod tests {
         assert!(m.entry("test_ls", "prox").is_some());
         assert!(m.entry("test_ls", "grad").is_none());
         assert!(m.entry("nope", "prox").is_none());
+    }
+
+    #[test]
+    fn parses_batch_static() {
+        let text = SAMPLE.replace(
+            "\"static\": {\"kind\": \"prox\", \"k\": 5}",
+            "\"static\": {\"kind\": \"prox_batch\", \"k\": 5, \"batch\": 8}",
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert_eq!(m.entries[0].kind, "prox_batch");
+        assert_eq!(m.entries[0].batch, Some(8));
+        // per-item entries carry no batch dim
+        assert_eq!(Manifest::parse(SAMPLE).unwrap().entries[0].batch, None);
     }
 
     #[test]

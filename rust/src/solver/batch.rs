@@ -1,0 +1,388 @@
+//! Batching layer for the solver service (EXPERIMENTS.md §Perf "Batched
+//! solves"): groups pending same-shape prox/grad requests into contiguous
+//! batches so one drain of the service queue amortizes the per-request
+//! round-trip cost, and same-shard runs reach the multi-RHS kernels
+//! ([`crate::linalg::gemm`] / [`crate::linalg::gemm_t`]).
+//!
+//! The contract that makes the whole layer safe to enable by default:
+//! batched native execution is **bit-identical** to the one-at-a-time path
+//! (the multi-RHS kernels compute the same per-element op sequences, and
+//! the planner replays replies in arrival order), so `--solver-batch` is a
+//! perf knob, never a numerics switch. The one documented exception is the
+//! PJRT backend's vmapped artifacts, which re-lower the dot reductions and
+//! may differ from per-item execution by an ulp — see
+//! [`crate::solver::pjrt::PjrtSolver`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::LocalSolver;
+use crate::data::AgentData;
+
+/// One queued prox request: owned buffers travel to the solver thread and
+/// back (the caller's recycled buffers — no allocation on the steady path).
+/// `out` receives the updated block, `wall_secs` the measured compute time
+/// (amortized share of the batch for batched runs).
+#[derive(Debug, Clone)]
+pub struct ProxReq {
+    pub agent: usize,
+    pub w0: Vec<f32>,
+    pub tzsum: Vec<f32>,
+    pub tau_m: f32,
+    pub out: Vec<f32>,
+    pub wall_secs: f64,
+}
+
+/// One queued gradient request (same buffer-ownership contract as
+/// [`ProxReq`]).
+#[derive(Debug, Clone)]
+pub struct GradReq {
+    pub agent: usize,
+    pub w: Vec<f32>,
+    pub out: Vec<f32>,
+    pub wall_secs: f64,
+}
+
+/// Stride-padded row-major staging matrix for batched solves: each of the
+/// `rows` batch items gets a 64-byte-aligned-stride row (16 f32), the same
+/// padding discipline as the model arena, so the multi-RHS kernels walk
+/// contiguous per-item rows with no gather step.
+#[derive(Debug, Default)]
+pub struct BatchMat {
+    data: Vec<f32>,
+    stride: usize,
+    rows: usize,
+    cols: usize,
+}
+
+impl BatchMat {
+    /// f32 elements per stride unit (one 64-byte cache line).
+    pub const ALIGN: usize = 16;
+
+    pub fn new() -> BatchMat {
+        BatchMat::default()
+    }
+
+    /// Resize to `rows × cols` (stride-padded) and zero-fill. The backing
+    /// buffer is retained across calls, so steady-state reuse allocates
+    /// only when a larger batch or dimension arrives.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.stride = cols.div_ceil(Self::ALIGN).max(1) * Self::ALIGN;
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * self.stride, 0.0);
+    }
+
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let s = self.stride;
+        let c = self.cols;
+        &mut self.data[i * s..i * s + c]
+    }
+}
+
+/// Groups pending solver requests into batches. The drain policy lives in
+/// the service loop: it admits requests until the planner is [`full`]
+/// (`--solver-batch`) *or* the queue goes idle, then calls [`flush`] — so a
+/// sparse activation pattern (single queued request) flushes immediately
+/// and latency never regresses.
+///
+/// Each admitted request carries an opaque tag `T` (the service uses the
+/// requester's recycled reply slot). `flush` sorts same-shard requests
+/// adjacently so [`LocalSolver::prox_batch_into`] sees contiguous
+/// same-shape runs, then replies **in arrival order** regardless of the
+/// compute grouping.
+///
+/// [`full`]: BatchPlanner::full
+/// [`flush`]: BatchPlanner::flush
+pub struct BatchPlanner<T> {
+    cap: usize,
+    seq: u64,
+    prox: Vec<(u64, ProxReq, T)>,
+    grad: Vec<(u64, GradReq, T)>,
+}
+
+impl<T> BatchPlanner<T> {
+    pub fn new(cap: usize) -> BatchPlanner<T> {
+        BatchPlanner {
+            cap: cap.max(1),
+            seq: 0,
+            prox: Vec::new(),
+            grad: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.prox.len() + self.grad.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.prox.is_empty() && self.grad.is_empty()
+    }
+
+    /// True once the batch target is reached — time to flush.
+    #[inline]
+    pub fn full(&self) -> bool {
+        self.len() >= self.cap
+    }
+
+    pub fn push_prox(&mut self, req: ProxReq, tag: T) {
+        self.prox.push((self.seq, req, tag));
+        self.seq += 1;
+    }
+
+    pub fn push_grad(&mut self, req: GradReq, tag: T) {
+        self.grad.push((self.seq, req, tag));
+        self.seq += 1;
+    }
+
+    /// Run every pending request through the solver's batch entry points
+    /// and hand each result (or the whole-batch error) back with its tag,
+    /// in arrival order. A batch-level error is fanned out to every member
+    /// (the per-request buffers are dropped with it).
+    pub fn flush(
+        &mut self,
+        solver: &mut dyn LocalSolver,
+        shards: &[AgentData],
+        mut on_prox: impl FnMut(anyhow::Result<ProxReq>, T),
+        mut on_grad: impl FnMut(anyhow::Result<GradReq>, T),
+    ) {
+        if !self.prox.is_empty() {
+            let mut batch = std::mem::take(&mut self.prox);
+            // Same-shard runs become adjacent; (agent, seq) keys keep the
+            // sort deterministic and per-agent FIFO.
+            batch.sort_unstable_by_key(|(s, r, _)| (r.agent, *s));
+            let mut metas: Vec<(u64, T)> = Vec::with_capacity(batch.len());
+            let mut items: Vec<ProxReq> = Vec::with_capacity(batch.len());
+            for (s, r, t) in batch {
+                metas.push((s, t));
+                items.push(r);
+            }
+            match solver.prox_batch_into(shards, &mut items) {
+                Ok(()) => {
+                    let mut done: Vec<(u64, ProxReq, T)> = metas
+                        .into_iter()
+                        .zip(items)
+                        .map(|((s, t), r)| (s, r, t))
+                        .collect();
+                    done.sort_unstable_by_key(|(s, _, _)| *s);
+                    for (_, r, t) in done {
+                        on_prox(Ok(r), t);
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    metas.sort_unstable_by_key(|(s, _)| *s);
+                    for (_, t) in metas {
+                        on_prox(Err(anyhow::anyhow!("batched prox solve failed: {msg}")), t);
+                    }
+                }
+            }
+        }
+        if !self.grad.is_empty() {
+            let mut batch = std::mem::take(&mut self.grad);
+            batch.sort_unstable_by_key(|(s, r, _)| (r.agent, *s));
+            let mut metas: Vec<(u64, T)> = Vec::with_capacity(batch.len());
+            let mut items: Vec<GradReq> = Vec::with_capacity(batch.len());
+            for (s, r, t) in batch {
+                metas.push((s, t));
+                items.push(r);
+            }
+            match solver.grad_batch_into(shards, &mut items) {
+                Ok(()) => {
+                    let mut done: Vec<(u64, GradReq, T)> = metas
+                        .into_iter()
+                        .zip(items)
+                        .map(|((s, t), r)| (s, r, t))
+                        .collect();
+                    done.sort_unstable_by_key(|(s, _, _)| *s);
+                    for (_, r, t) in done {
+                        on_grad(Ok(r), t);
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    metas.sort_unstable_by_key(|(s, _)| *s);
+                    for (_, t) in metas {
+                        on_grad(Err(anyhow::anyhow!("batched grad solve failed: {msg}")), t);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Lock-free histogram of solver-queue depths, sampled by the service
+/// thread at drain time (how many requests one drain collected). Feeds the
+/// `solver_queue_depth_p50/p99` trace fields — deep queues are exactly the
+/// straggler scenarios the batcher amortizes.
+pub struct DepthStats {
+    /// counts[d] = drains that collected d requests; last bucket saturates.
+    counts: Vec<AtomicU64>,
+}
+
+impl DepthStats {
+    /// Depths 0..=127 tracked exactly; deeper drains land in the overflow
+    /// bucket (reported as 128).
+    pub const BUCKETS: usize = 129;
+
+    pub fn new() -> DepthStats {
+        DepthStats {
+            counts: (0..Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn record(&self, depth: usize) {
+        let b = depth.min(Self::BUCKETS - 1);
+        self.counts[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// (p50, p99) over the recorded drain depths, then reset — one
+    /// (algorithm) run's distribution per call. (0, 0) when nothing was
+    /// recorded.
+    pub fn take(&self) -> (u64, u64) {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.swap(0, Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return (0, 0);
+        }
+        let pick = |rank: u64| -> u64 {
+            let mut cum = 0u64;
+            for (d, &c) in counts.iter().enumerate() {
+                cum += c;
+                if cum >= rank {
+                    return d as u64;
+                }
+            }
+            (counts.len() - 1) as u64
+        };
+        let p50 = pick(total.div_ceil(2));
+        let p99 = pick((total * 99).div_ceil(100));
+        (p50, p99)
+    }
+}
+
+impl Default for DepthStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard::PartitionKind, Dataset, DatasetProfile, Partition};
+    use crate::model::Task;
+    use crate::solver::NativeSolver;
+
+    fn shards(n: usize) -> Vec<AgentData> {
+        let ds = Dataset::load(DatasetProfile::by_name("test_ls").unwrap(), "/nonexistent", 1)
+            .unwrap();
+        Partition::new(&ds, n, PartitionKind::Iid).unwrap().shards
+    }
+
+    #[test]
+    fn batch_mat_pads_rows_to_cache_lines() {
+        let mut m = BatchMat::new();
+        m.reset(3, 5);
+        assert_eq!(m.stride(), 16);
+        assert_eq!(m.data().len(), 48);
+        m.row_mut(1).fill(2.0);
+        assert_eq!(m.row(1), &[2.0; 5][..]);
+        assert_eq!(m.row(0), &[0.0; 5][..]);
+        // Padding lanes stay zero (gemm reads only the first `cols`).
+        assert_eq!(m.data()[16 + 5], 0.0);
+        m.reset(2, 16);
+        assert_eq!(m.stride(), 16);
+        m.reset(1, 17);
+        assert_eq!(m.stride(), 32);
+    }
+
+    #[test]
+    fn planner_replies_in_arrival_order_with_interleaved_agents() {
+        let shards = shards(3);
+        let mut solver = NativeSolver::new(Task::Regression, 5);
+        let mut planner: BatchPlanner<usize> = BatchPlanner::new(8);
+        let dim = shards[0].features;
+        // Arrival order interleaves agents 2,0,2,1 — compute sorts them,
+        // replies must come back 0,1,2,3.
+        for (i, agent) in [2usize, 0, 2, 1].into_iter().enumerate() {
+            planner.push_prox(
+                ProxReq {
+                    agent,
+                    w0: vec![0.1 * (i as f32 + 1.0); dim],
+                    tzsum: vec![0.05; dim],
+                    tau_m: 0.5,
+                    out: Vec::new(),
+                    wall_secs: 0.0,
+                },
+                i,
+            );
+        }
+        assert_eq!(planner.len(), 4);
+        assert!(!planner.full());
+        let mut got: Vec<usize> = Vec::new();
+        planner.flush(
+            &mut solver,
+            &shards,
+            |res, tag| {
+                let req = res.unwrap();
+                assert_eq!(req.out.len(), dim);
+                got.push(tag);
+            },
+            |_res, _tag| panic!("no grad requests queued"),
+        );
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert!(planner.is_empty());
+    }
+
+    #[test]
+    fn depth_stats_percentiles_and_reset() {
+        let s = DepthStats::new();
+        for _ in 0..99 {
+            s.record(1);
+        }
+        s.record(64);
+        let (p50, p99) = s.take();
+        assert_eq!(p50, 1);
+        assert_eq!(p99, 1);
+        assert_eq!(s.take(), (0, 0), "take resets");
+        s.record(7);
+        s.record(500); // overflow bucket
+        let (p50, p99) = s.take();
+        assert_eq!(p50, 7);
+        assert_eq!(p99, 128);
+    }
+}

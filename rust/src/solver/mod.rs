@@ -13,10 +13,12 @@
 //! Both return measured wall-clock per call — the computation-time input to
 //! the DES timing model.
 
+pub mod batch;
 pub mod native;
 pub mod pjrt;
 pub mod service;
 
+pub use batch::{BatchMat, BatchPlanner, DepthStats, GradReq, ProxReq};
 pub use native::NativeSolver;
 pub use pjrt::PjrtSolver;
 pub use service::{GradBufOut, ProxBufOut, SolverClient, SolverService};
@@ -81,6 +83,42 @@ pub trait LocalSolver {
         out.clear();
         out.extend_from_slice(&o.w);
         Ok(o.wall_secs)
+    }
+
+    /// Batched [`LocalSolver::prox_into`]: solve every request in `reqs`
+    /// (each against `shards[req.agent]`), writing each `req.out` and
+    /// `req.wall_secs`. The planner sorts same-shard requests adjacently,
+    /// so implementations may run contiguous same-agent runs through
+    /// multi-RHS kernels. Contract: results must match calling `prox_into`
+    /// once per request in order — **bit-identical** for the in-process
+    /// native kernels (same per-output op sequence; property-tested), and
+    /// within reassociated-reduction ulps for a compiled backend that
+    /// batches by program transformation ([`PjrtSolver`]'s vmapped
+    /// artifacts re-lower the dot reductions — see its docs). The default
+    /// is exactly the sequential loop, so `PjrtSolver` (when no batched
+    /// artifacts exist) and test doubles work unmodified.
+    fn prox_batch_into(
+        &mut self,
+        shards: &[AgentData],
+        reqs: &mut [ProxReq],
+    ) -> anyhow::Result<()> {
+        for r in reqs.iter_mut() {
+            r.wall_secs = self.prox_into(&shards[r.agent], &r.w0, &r.tzsum, r.tau_m, &mut r.out)?;
+        }
+        Ok(())
+    }
+
+    /// Batched [`LocalSolver::grad_into`]; same contract (and default) as
+    /// [`LocalSolver::prox_batch_into`].
+    fn grad_batch_into(
+        &mut self,
+        shards: &[AgentData],
+        reqs: &mut [GradReq],
+    ) -> anyhow::Result<()> {
+        for r in reqs.iter_mut() {
+            r.wall_secs = self.grad_into(&shards[r.agent], &r.w, &mut r.out)?;
+        }
+        Ok(())
     }
 
     fn task(&self) -> Task;

@@ -10,12 +10,33 @@
 //! [`Workspace`], so a steady-state `prox_into`/`grad_into` call performs
 //! zero heap allocations.
 
-use super::{prox_step_size, LocalSolver, SolveOut};
+use super::batch::BatchMat;
+use super::{prox_step_size, GradReq, LocalSolver, ProxReq, SolveOut};
 use crate::data::AgentData;
-use crate::linalg::{axpy_scale, dot, gemv, gemv_t, ger, sigmoid, softmax_inplace, Workspace};
+use crate::linalg::{
+    axpy, axpy_scale, dot, gemm, gemm_t, gemv, gemv_t, ger, sigmoid, softmax_inplace, Workspace,
+};
 use crate::model::Task;
 use std::collections::HashMap;
 use std::time::Instant;
+
+/// Stride-padded per-item state for the multi-RHS batch paths (reused
+/// across flushes; see [`BatchMat`]).
+#[derive(Default)]
+struct BatchScratch {
+    /// CG/GD iterate per item (the batched `out`).
+    w: BatchMat,
+    /// Per-item right-hand side b (LS CG).
+    b: BatchMat,
+    /// Normal-operator output / gradient accumulator per item.
+    q: BatchMat,
+    /// CG residual per item.
+    r: BatchMat,
+    /// CG direction per item.
+    dir: BatchMat,
+    /// Per-item row-space products (X·w / residuals).
+    rows: BatchMat,
+}
 
 pub struct NativeSolver {
     task: Task,
@@ -29,6 +50,8 @@ pub struct NativeSolver {
     /// Reused scratch buffers — the per-activation zero-allocation
     /// guarantee.
     ws: Workspace,
+    /// Batch staging (same reuse guarantee, sized to the largest flush).
+    bs: BatchScratch,
 }
 
 impl NativeSolver {
@@ -38,6 +61,7 @@ impl NativeSolver {
             inner_k,
             frob_cache: HashMap::new(),
             ws: Workspace::new(),
+            bs: BatchScratch::default(),
         }
     }
 
@@ -188,6 +212,166 @@ impl NativeSolver {
         }
         self.ws.grad = g;
     }
+
+    /// Multi-RHS CG for a same-shard run of LS prox requests: the exact
+    /// per-item op sequence of [`ls_prox_into`] (same [`dot`]s, same 1e-30
+    /// guards, same update order within an iteration) with the `gemv` /
+    /// `gemv_t` calls replaced by [`gemm`] / [`gemm_t`] — which are
+    /// bit-identical per column — so X streams through cache once per CG
+    /// step for the whole run while results match the sequential path
+    /// bit-for-bit.
+    ///
+    /// [`ls_prox_into`]: NativeSolver::ls_prox_into
+    fn ls_prox_batch(&mut self, shard: &AgentData, reqs: &mut [ProxReq]) {
+        let m = reqs.len();
+        let p = shard.features;
+        let a = shard.active;
+        let d = a.max(1) as f32;
+        let x = &shard.x[..a * p];
+        let inner_k = self.inner_k;
+        let BatchScratch { w, b, q, r, dir, rows } = &mut self.bs;
+        w.reset(m, p);
+        b.reset(m, p);
+        q.reset(m, p);
+        r.reset(m, p);
+        dir.reset(m, p);
+        rows.reset(m, a);
+
+        // Shared RHS base (1/d)XᵀDy — identical for every item in the run.
+        let base = &mut self.ws.b;
+        Workspace::resized(base, p);
+        gemv_t(x, a, p, &shard.y[..a], base);
+        for (j, req) in reqs.iter().enumerate() {
+            for ((bl, &raw), &tz) in
+                b.row_mut(j).iter_mut().zip(base.iter()).zip(&req.tzsum)
+            {
+                *bl = raw / d + tz;
+            }
+            w.row_mut(j).copy_from_slice(&req.w0);
+        }
+
+        // q = normal_op(w) for every item: [(1/d)XᵀDX + τM]·w.
+        gemm(x, a, p, w.data(), w.stride(), rows.data_mut(), rows.stride(), m);
+        gemm_t(x, a, p, rows.data(), rows.stride(), q.data_mut(), q.stride(), m);
+        let mut rs = vec![0.0f32; m];
+        for (j, req) in reqs.iter().enumerate() {
+            for (ql, &vl) in q.row_mut(j).iter_mut().zip(w.row(j)) {
+                *ql = *ql / d + req.tau_m * vl;
+            }
+            for ((rl, &bl), &ql) in r.row_mut(j).iter_mut().zip(b.row(j)).zip(q.row(j)) {
+                *rl = bl - ql;
+            }
+            dir.row_mut(j).copy_from_slice(r.row(j));
+            rs[j] = dot(r.row(j), r.row(j));
+        }
+
+        for _ in 0..inner_k {
+            gemm(x, a, p, dir.data(), dir.stride(), rows.data_mut(), rows.stride(), m);
+            gemm_t(x, a, p, rows.data(), rows.stride(), q.data_mut(), q.stride(), m);
+            for (j, req) in reqs.iter().enumerate() {
+                for (ql, &vl) in q.row_mut(j).iter_mut().zip(dir.row(j)) {
+                    *ql = *ql / d + req.tau_m * vl;
+                }
+                let denom = dot(dir.row(j), q.row(j));
+                let alpha = if denom > 1e-30 { rs[j] / denom.max(1e-30) } else { 0.0 };
+                axpy(alpha, dir.row(j), w.row_mut(j));
+                axpy(-alpha, q.row(j), r.row_mut(j));
+                let rs_new = dot(r.row(j), r.row(j));
+                let beta = if rs[j] > 1e-30 { rs_new / rs[j].max(1e-30) } else { 0.0 };
+                axpy_scale(1.0, r.row(j), beta, dir.row_mut(j));
+                rs[j] = rs_new;
+            }
+        }
+
+        for (j, req) in reqs.iter_mut().enumerate() {
+            req.out.clear();
+            req.out.extend_from_slice(w.row(j));
+        }
+    }
+
+    /// Batched K-step proximal gradient for same-shard binary runs —
+    /// per-item op sequence of [`gd_prox_into`] with the two X passes
+    /// batched through [`gemm`]/[`gemm_t`] (bit-identical per column).
+    ///
+    /// [`gd_prox_into`]: NativeSolver::gd_prox_into
+    fn gd_prox_batch(&mut self, shard: &AgentData, reqs: &mut [ProxReq]) {
+        let m = reqs.len();
+        let p = shard.features;
+        let a = shard.active;
+        let d = a.max(1) as f32;
+        let x = &shard.x[..a * p];
+        let inner_k = self.inner_k;
+        let frob = self.frob_sq(shard);
+        let steps: Vec<f32> = reqs
+            .iter()
+            .map(|req| prox_step_size(self.task, frob, shard.active, req.tau_m))
+            .collect();
+        let BatchScratch { w, q, rows, .. } = &mut self.bs;
+        w.reset(m, p);
+        q.reset(m, p);
+        rows.reset(m, a);
+        for (j, req) in reqs.iter().enumerate() {
+            w.row_mut(j).copy_from_slice(&req.w0);
+        }
+        for _ in 0..inner_k {
+            gemm(x, a, p, w.data(), w.stride(), rows.data_mut(), rows.stride(), m);
+            for j in 0..m {
+                for (e, &y) in rows.row_mut(j).iter_mut().zip(&shard.y[..a]) {
+                    *e = sigmoid(*e) - y;
+                }
+            }
+            gemm_t(x, a, p, rows.data(), rows.stride(), q.data_mut(), q.stride(), m);
+            for (j, req) in reqs.iter().enumerate() {
+                for v in q.row_mut(j).iter_mut() {
+                    *v /= d;
+                }
+                for ((wj, &gj), &tz) in
+                    w.row_mut(j).iter_mut().zip(q.row(j)).zip(&req.tzsum)
+                {
+                    *wj -= steps[j] * (gj + req.tau_m * *wj - tz);
+                }
+            }
+        }
+        for (j, req) in reqs.iter_mut().enumerate() {
+            req.out.clear();
+            req.out.extend_from_slice(w.row(j));
+        }
+    }
+
+    /// Batched mean-loss gradient for same-shard regression/binary runs:
+    /// predict + accumulate through [`gemm`]/[`gemm_t`], final `/d` applied
+    /// per element exactly as [`loss_grad_into`].
+    ///
+    /// [`loss_grad_into`]: NativeSolver::loss_grad_into
+    fn grad_batch(&mut self, shard: &AgentData, reqs: &mut [GradReq]) {
+        let m = reqs.len();
+        let p = shard.features;
+        let a = shard.active;
+        let d = a.max(1) as f32;
+        let x = &shard.x[..a * p];
+        let task = self.task;
+        let BatchScratch { w, q, rows, .. } = &mut self.bs;
+        w.reset(m, p);
+        q.reset(m, p);
+        rows.reset(m, a);
+        for (j, req) in reqs.iter().enumerate() {
+            w.row_mut(j).copy_from_slice(&req.w);
+        }
+        gemm(x, a, p, w.data(), w.stride(), rows.data_mut(), rows.stride(), m);
+        for j in 0..m {
+            for (e, &y) in rows.row_mut(j).iter_mut().zip(&shard.y[..a]) {
+                *e = match task {
+                    Task::Regression => *e - y,
+                    _ => sigmoid(*e) - y,
+                };
+            }
+        }
+        gemm_t(x, a, p, rows.data(), rows.stride(), q.data_mut(), q.stride(), m);
+        for (j, req) in reqs.iter_mut().enumerate() {
+            req.out.clear();
+            req.out.extend(q.row(j).iter().map(|&v| v / d));
+        }
+    }
 }
 
 impl LocalSolver for NativeSolver {
@@ -235,6 +419,80 @@ impl LocalSolver for NativeSolver {
         out.resize(w.len(), 0.0);
         self.loss_grad_into(shard, w, out);
         Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Contiguous same-shard runs of length ≥ 2 go through the multi-RHS
+    /// kernels (LS: batched CG; binary: batched K-step prox-GD); singleton
+    /// runs and multiclass fall back to the per-item path. Either way the
+    /// results are bit-identical to the sequential loop; only `wall_secs`
+    /// accounting differs (a batched run reports each item's amortized
+    /// share).
+    fn prox_batch_into(
+        &mut self,
+        shards: &[AgentData],
+        reqs: &mut [ProxReq],
+    ) -> anyhow::Result<()> {
+        let mut i = 0;
+        while i < reqs.len() {
+            let agent = reqs[i].agent;
+            let mut j = i + 1;
+            while j < reqs.len() && reqs[j].agent == agent {
+                j += 1;
+            }
+            let batched = j - i >= 2 && !matches!(self.task, Task::Multiclass(_));
+            if batched {
+                let t0 = Instant::now();
+                match self.task {
+                    Task::Regression => self.ls_prox_batch(&shards[agent], &mut reqs[i..j]),
+                    Task::Binary => self.gd_prox_batch(&shards[agent], &mut reqs[i..j]),
+                    Task::Multiclass(_) => unreachable!(),
+                }
+                let share = t0.elapsed().as_secs_f64() / (j - i) as f64;
+                for r in &mut reqs[i..j] {
+                    r.wall_secs = share;
+                }
+            } else {
+                for r in &mut reqs[i..j] {
+                    r.wall_secs =
+                        self.prox_into(&shards[r.agent], &r.w0, &r.tzsum, r.tau_m, &mut r.out)?;
+                }
+            }
+            i = j;
+        }
+        Ok(())
+    }
+
+    /// Same run grouping as [`LocalSolver::prox_batch_into`]; multiclass
+    /// gradients stay per-item (the per-row softmax path has no multi-RHS
+    /// shape).
+    fn grad_batch_into(
+        &mut self,
+        shards: &[AgentData],
+        reqs: &mut [GradReq],
+    ) -> anyhow::Result<()> {
+        let mut i = 0;
+        while i < reqs.len() {
+            let agent = reqs[i].agent;
+            let mut j = i + 1;
+            while j < reqs.len() && reqs[j].agent == agent {
+                j += 1;
+            }
+            let batched = j - i >= 2 && !matches!(self.task, Task::Multiclass(_));
+            if batched {
+                let t0 = Instant::now();
+                self.grad_batch(&shards[agent], &mut reqs[i..j]);
+                let share = t0.elapsed().as_secs_f64() / (j - i) as f64;
+                for r in &mut reqs[i..j] {
+                    r.wall_secs = share;
+                }
+            } else {
+                for r in &mut reqs[i..j] {
+                    r.wall_secs = self.grad_into(&shards[r.agent], &r.w, &mut r.out)?;
+                }
+            }
+            i = j;
+        }
+        Ok(())
     }
 
     fn task(&self) -> Task {
@@ -375,6 +633,60 @@ mod tests {
         let cap = out.capacity();
         b.prox_into(&s, &w0, &tz, 1.0, &mut out).unwrap();
         assert_eq!(out.capacity(), cap, "steady-state call must not realloc");
+    }
+
+    #[test]
+    fn batched_runs_bit_identical_to_sequential() {
+        // Multi-RHS CG (test_ls), batched prox-GD (test_logit) and the
+        // per-item multiclass fallback (test_smax) must all match the
+        // one-at-a-time path bit-for-bit, including mixed same-shard runs.
+        for name in ["test_ls", "test_logit", "test_smax"] {
+            let ds = Dataset::load(DatasetProfile::by_name(name).unwrap(), "/nonexistent", 3)
+                .unwrap();
+            let shards = Partition::new(&ds, 2, PartitionKind::Iid).unwrap().shards;
+            let task = DatasetProfile::by_name(name).unwrap().task;
+            let dim = shards[0].features * shards[0].classes;
+            let mk = |i: usize, agent: usize| super::super::ProxReq {
+                agent,
+                w0: (0..dim).map(|j| 0.03 * (i + j) as f32 - 0.1).collect(),
+                tzsum: (0..dim).map(|j| 0.01 * (i * dim + j) as f32).collect(),
+                tau_m: 1.0,
+                out: Vec::new(),
+                wall_secs: 0.0,
+            };
+            // Runs: [0,0,0] (multi-RHS), [1] (singleton), [0,0] (second run).
+            let mut reqs: Vec<_> = [(0, 0), (1, 0), (2, 0), (3, 1), (4, 0), (5, 0)]
+                .iter()
+                .map(|&(i, a)| mk(i, a))
+                .collect();
+            let mut batched = NativeSolver::new(task, 5);
+            batched.prox_batch_into(&shards, &mut reqs).unwrap();
+            let mut seq = NativeSolver::new(task, 5);
+            for (i, req) in reqs.iter().enumerate() {
+                let mut want = Vec::new();
+                seq.prox_into(&shards[req.agent], &req.w0, &req.tzsum, req.tau_m, &mut want)
+                    .unwrap();
+                assert_eq!(req.out, want, "{name} prox req {i}");
+            }
+
+            let mut greqs: Vec<_> = [(0, 0), (1, 0), (2, 1), (3, 1)]
+                .iter()
+                .map(|&(i, a)| super::super::GradReq {
+                    agent: a,
+                    w: (0..dim).map(|j| 0.05 * (i + j) as f32 - 0.2).collect(),
+                    out: Vec::new(),
+                    wall_secs: 0.0,
+                })
+                .collect();
+            let mut batched = NativeSolver::new(task, 5);
+            batched.grad_batch_into(&shards, &mut greqs).unwrap();
+            let mut seq = NativeSolver::new(task, 5);
+            for (i, req) in greqs.iter().enumerate() {
+                let mut want = Vec::new();
+                seq.grad_into(&shards[req.agent], &req.w, &mut want).unwrap();
+                assert_eq!(req.out, want, "{name} grad req {i}");
+            }
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! afterwards — only the small model-sized vectors (w0, tzsum) and two
 //! scalars move per update.
 
-use super::{prox_step_size, LocalSolver, SolveOut};
+use super::{prox_step_size, GradReq, LocalSolver, ProxReq, SolveOut};
 use crate::data::AgentData;
 use crate::model::Task;
 use crate::runtime::{Arg, CacheKey, Engine};
@@ -17,6 +17,11 @@ pub struct PjrtSolver {
     task: Task,
     prox_name: String,
     grad_name: String,
+    /// Batched (vmapped, leading batch dim on w0/tzsum) artifact entries
+    /// `(name, B)`, when the exporter produced them. `None` falls back to
+    /// the per-item entries in `prox_batch_into`/`grad_batch_into`.
+    prox_batch: Option<(String, usize)>,
+    grad_batch: Option<(String, usize)>,
     /// ‖X‖²_F cache keyed by [`AgentData::uid`] (shard identity, not agent
     /// index — same staleness guard as the native solver).
     frob_cache: HashMap<u64, f32>,
@@ -53,12 +58,21 @@ impl PjrtSolver {
             .ok_or_else(|| anyhow::anyhow!("no grad artifact for profile '{profile}'"))?
             .clone();
         let inner_k = prox.k.unwrap_or(engine.manifest().default_k);
+        // Optional batched twins (absent in older artifact sets).
+        let batch_of = |e: Option<&crate::runtime::Entry>| {
+            e.and_then(|e| e.batch.map(|b| (e.name.clone(), b)))
+                .filter(|&(_, b)| b >= 2)
+        };
+        let prox_batch = batch_of(engine.manifest().entry(profile, "prox_batch"));
+        let grad_batch = batch_of(engine.manifest().entry(profile, "grad_batch"));
         engine.warmup(profile)?;
         Ok(PjrtSolver {
             engine,
             task,
             prox_name: prox.name,
             grad_name: grad.name,
+            prox_batch,
+            grad_batch,
             frob_cache: HashMap::new(),
             uploaded: std::collections::HashSet::new(),
             inner_k,
@@ -113,16 +127,42 @@ impl PjrtSolver {
     }
 
     /// Cached device buffer for a rank-0 scalar (keyed by bit pattern).
-    fn scalar_arg(&mut self, v: f32) -> anyhow::Result<Arg<'static>> {
+    fn scalar_key(&mut self, v: f32) -> anyhow::Result<CacheKey> {
         let bits = v.to_bits();
         if let Some(key) = self.scalar_cache.get(&bits) {
-            return Ok(Arg::Cached(*key));
+            return Ok(*key);
         }
         // Slot 3 namespace; the bit pattern doubles as the "agent" id.
         let key = CacheKey { agent: bits as usize, slot: 3 };
         self.engine.cache_buffer(key, &[v], &[])?;
         self.scalar_cache.insert(bits, key);
-        Ok(Arg::Cached(key))
+        Ok(key)
+    }
+
+    fn scalar_arg(&mut self, v: f32) -> anyhow::Result<Arg<'static>> {
+        Ok(Arg::Cached(self.scalar_key(v)?))
+    }
+
+    /// The prox subproblem's scalar tail: τ·M always, plus the inner GD
+    /// step for the non-quadratic tasks (`None` for regression, whose CG
+    /// artifact takes no step argument).
+    fn prox_scalars(
+        &mut self,
+        shard: &AgentData,
+        tau_m: f32,
+    ) -> anyhow::Result<(CacheKey, Option<CacheKey>)> {
+        let tau_key = self.scalar_key(tau_m)?;
+        let step_key = match self.task {
+            Task::Regression => None,
+            _ => {
+                let frob = *self
+                    .frob_cache
+                    .entry(shard.uid)
+                    .or_insert_with(|| shard.frob_sq());
+                Some(self.scalar_key(prox_step_size(self.task, frob, shard.active, tau_m))?)
+            }
+        };
+        Ok((tau_key, step_key))
     }
 
     /// The three constant-data arguments: cached device buffers when
@@ -153,6 +193,127 @@ impl PjrtSolver {
             ]
         }
     }
+
+    /// One contiguous same-(shard, τM) run of prox requests through the
+    /// batched artifact in chunks of exactly `b` (the compiled leading
+    /// dim), duplicate-padding the tail chunk. The vmapped entry lowers
+    /// the same per-item math, but batching the dot reductions into
+    /// `dot_general` lets XLA reassociate them — outputs may differ from
+    /// one-at-a-time execution by an ulp (pinned at that tolerance by
+    /// `python/tests/test_aot.py`; engine-level agreement claims all use
+    /// bands). The native solver's batched path, by contrast, is
+    /// bit-exact.
+    fn prox_run_batched(
+        &mut self,
+        name: &str,
+        b: usize,
+        shard: &AgentData,
+        reqs: &mut [ProxReq],
+    ) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        if self.cache_inputs {
+            self.ensure_uploaded(shard)?;
+        }
+        let dims = self.model_dims(shard);
+        let dim: usize = dims.iter().product();
+        let mut bdims = vec![b];
+        bdims.extend_from_slice(&dims);
+        let dims_x = [shard.rows, shard.features];
+        let dims_rows = [shard.rows];
+        let dims_yoh = [shard.rows, shard.classes];
+        let (tau_key, step_key) = self.prox_scalars(shard, reqs[0].tau_m)?;
+        let mut w0s = vec![0.0f32; b * dim];
+        let mut tzs = vec![0.0f32; b * dim];
+        let mut done = 0;
+        while done < reqs.len() {
+            let take = (reqs.len() - done).min(b);
+            for slot in 0..b {
+                // Duplicate-pad a short tail with its last real item.
+                let r = &reqs[done + slot.min(take - 1)];
+                w0s[slot * dim..(slot + 1) * dim].copy_from_slice(&r.w0);
+                tzs[slot * dim..(slot + 1) * dim].copy_from_slice(&r.tzsum);
+            }
+            let [a0, a1, a2] = self.data_args(shard, &dims_x, &dims_rows, &dims_yoh);
+            let mut args = vec![
+                a0,
+                a1,
+                a2,
+                Arg::Host(&w0s, &bdims),
+                Arg::Host(&tzs, &bdims),
+                Arg::Cached(tau_key),
+            ];
+            if let Some(k) = step_key {
+                args.push(Arg::Cached(k));
+            }
+            let out = self.engine.execute(name, &args)?;
+            anyhow::ensure!(
+                out.len() == b * dim,
+                "batched prox artifact '{name}' returned {} values, want {}",
+                out.len(),
+                b * dim
+            );
+            for (slot, r) in reqs[done..done + take].iter_mut().enumerate() {
+                r.out.clear();
+                r.out.extend_from_slice(&out[slot * dim..(slot + 1) * dim]);
+            }
+            done += take;
+        }
+        let share = t0.elapsed().as_secs_f64() / reqs.len() as f64;
+        for r in reqs.iter_mut() {
+            r.wall_secs = share;
+        }
+        Ok(())
+    }
+
+    /// Gradient twin of [`PjrtSolver::prox_run_batched`].
+    fn grad_run_batched(
+        &mut self,
+        name: &str,
+        b: usize,
+        shard: &AgentData,
+        reqs: &mut [GradReq],
+    ) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        if self.cache_inputs {
+            self.ensure_uploaded(shard)?;
+        }
+        let dims = self.model_dims(shard);
+        let dim: usize = dims.iter().product();
+        let mut bdims = vec![b];
+        bdims.extend_from_slice(&dims);
+        let dims_x = [shard.rows, shard.features];
+        let dims_rows = [shard.rows];
+        let dims_yoh = [shard.rows, shard.classes];
+        let mut ws = vec![0.0f32; b * dim];
+        let mut done = 0;
+        while done < reqs.len() {
+            let take = (reqs.len() - done).min(b);
+            for slot in 0..b {
+                let r = &reqs[done + slot.min(take - 1)];
+                ws[slot * dim..(slot + 1) * dim].copy_from_slice(&r.w);
+            }
+            let [a0, a1, a2] = self.data_args(shard, &dims_x, &dims_rows, &dims_yoh);
+            let out = self
+                .engine
+                .execute(name, &[a0, a1, a2, Arg::Host(&ws, &bdims)])?;
+            anyhow::ensure!(
+                out.len() == b * dim,
+                "batched grad artifact '{name}' returned {} values, want {}",
+                out.len(),
+                b * dim
+            );
+            for (slot, r) in reqs[done..done + take].iter_mut().enumerate() {
+                r.out.clear();
+                r.out.extend_from_slice(&out[slot * dim..(slot + 1) * dim]);
+            }
+            done += take;
+        }
+        let share = t0.elapsed().as_secs_f64() / reqs.len() as f64;
+        for r in reqs.iter_mut() {
+            r.wall_secs = share;
+        }
+        Ok(())
+    }
 }
 
 impl LocalSolver for PjrtSolver {
@@ -178,42 +339,22 @@ impl LocalSolver for PjrtSolver {
         let dims_x = [shard.rows, shard.features];
         let dims_rows = [shard.rows];
         let dims_yoh = [shard.rows, shard.classes];
-        let tau_arg = self.scalar_arg(tau_m)?;
+        // Scalars first (they need &mut for the device cache), then one
+        // data_args call feeding a single arg list for both task shapes.
+        let (tau_key, step_key) = self.prox_scalars(shard, tau_m)?;
         let [a0, a1, a2] = self.data_args(shard, &dims_x, &dims_rows, &dims_yoh);
-        let w = match self.task {
-            Task::Regression => self.engine.execute(
-                &self.prox_name,
-                &[
-                    a0,
-                    a1,
-                    a2,
-                    Arg::Host(w0, &dims),
-                    Arg::Host(tzsum, &dims),
-                    tau_arg,
-                ],
-            )?,
-            _ => {
-                let frob = *self
-                    .frob_cache
-                    .entry(shard.uid)
-                    .or_insert_with(|| shard.frob_sq());
-                let step_arg =
-                    self.scalar_arg(prox_step_size(self.task, frob, shard.active, tau_m))?;
-                let [a0, a1, a2] = self.data_args(shard, &dims_x, &dims_rows, &dims_yoh);
-                self.engine.execute(
-                    &self.prox_name,
-                    &[
-                        a0,
-                        a1,
-                        a2,
-                        Arg::Host(w0, &dims),
-                        Arg::Host(tzsum, &dims),
-                        tau_arg,
-                        step_arg,
-                    ],
-                )?
-            }
-        };
+        let mut args = vec![
+            a0,
+            a1,
+            a2,
+            Arg::Host(w0, &dims),
+            Arg::Host(tzsum, &dims),
+            Arg::Cached(tau_key),
+        ];
+        if let Some(k) = step_key {
+            args.push(Arg::Cached(k));
+        }
+        let w = self.engine.execute(&self.prox_name, &args)?;
         Ok(SolveOut {
             w,
             wall_secs: t0.elapsed().as_secs_f64(),
@@ -221,10 +362,25 @@ impl LocalSolver for PjrtSolver {
     }
 
     fn grad(&mut self, shard: &AgentData, w: &[f32]) -> anyhow::Result<SolveOut> {
+        let mut out = Vec::new();
+        let wall_secs = self.grad_into(shard, w, &mut out)?;
+        Ok(SolveOut { w: out, wall_secs })
+    }
+
+    fn grad_into(
+        &mut self,
+        shard: &AgentData,
+        w: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<f64> {
         let t0 = Instant::now();
         if shard.rows == 0 {
-            // Empty shard: ∇f_i ≡ 0.
-            return Ok(SolveOut { w: vec![0.0; w.len()], wall_secs: t0.elapsed().as_secs_f64() });
+            // Empty shard: ∇f_i ≡ 0, written into the caller's recycled
+            // buffer — the steady-state hot loop stays allocation-free
+            // even for padded-out agents.
+            out.clear();
+            out.resize(w.len(), 0.0);
+            return Ok(t0.elapsed().as_secs_f64());
         }
         if self.cache_inputs {
             self.ensure_uploaded(shard)?;
@@ -234,14 +390,75 @@ impl LocalSolver for PjrtSolver {
         let dims_rows = [shard.rows];
         let dims_yoh = [shard.rows, shard.classes];
         let [a0, a1, a2] = self.data_args(shard, &dims_x, &dims_rows, &dims_yoh);
-        let g = self.engine.execute(
-            &self.grad_name,
-            &[a0, a1, a2, Arg::Host(w, &dims)],
-        )?;
-        Ok(SolveOut {
-            w: g,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        })
+        *out = self
+            .engine
+            .execute(&self.grad_name, &[a0, a1, a2, Arg::Host(w, &dims)])?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn prox_batch_into(
+        &mut self,
+        shards: &[AgentData],
+        reqs: &mut [ProxReq],
+    ) -> anyhow::Result<()> {
+        let batched = self.prox_batch.clone();
+        let mut i = 0;
+        while i < reqs.len() {
+            // The planner sorted same-agent requests adjacently; the scalar
+            // args are shared device buffers, so a run additionally needs
+            // one τM value.
+            let mut j = i + 1;
+            while j < reqs.len()
+                && reqs[j].agent == reqs[i].agent
+                && reqs[j].tau_m == reqs[i].tau_m
+            {
+                j += 1;
+            }
+            let rows = shards[reqs[i].agent].rows;
+            match &batched {
+                Some((name, b)) if j - i >= 2 && rows > 0 => {
+                    let agent = reqs[i].agent;
+                    self.prox_run_batched(name, *b, &shards[agent], &mut reqs[i..j])?;
+                }
+                _ => {
+                    for r in &mut reqs[i..j] {
+                        r.wall_secs =
+                            self.prox_into(&shards[r.agent], &r.w0, &r.tzsum, r.tau_m, &mut r.out)?;
+                    }
+                }
+            }
+            i = j;
+        }
+        Ok(())
+    }
+
+    fn grad_batch_into(
+        &mut self,
+        shards: &[AgentData],
+        reqs: &mut [GradReq],
+    ) -> anyhow::Result<()> {
+        let batched = self.grad_batch.clone();
+        let mut i = 0;
+        while i < reqs.len() {
+            let mut j = i + 1;
+            while j < reqs.len() && reqs[j].agent == reqs[i].agent {
+                j += 1;
+            }
+            let rows = shards[reqs[i].agent].rows;
+            match &batched {
+                Some((name, b)) if j - i >= 2 && rows > 0 => {
+                    let agent = reqs[i].agent;
+                    self.grad_run_batched(name, *b, &shards[agent], &mut reqs[i..j])?;
+                }
+                _ => {
+                    for r in &mut reqs[i..j] {
+                        r.wall_secs = self.grad_into(&shards[r.agent], &r.w, &mut r.out)?;
+                    }
+                }
+            }
+            i = j;
+        }
+        Ok(())
     }
 
     fn task(&self) -> Task {

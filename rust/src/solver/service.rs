@@ -2,44 +2,46 @@
 //! multi-threaded executor.
 //!
 //! One dedicated OS thread owns the [`LocalSolver`]; agent threads talk to
-//! it over an mpsc request channel and get results back on per-request
-//! reply channels. This is the "leader owns the runtime" topology: the
-//! compute device is a serialized resource, exactly like a real accelerator
-//! queue, and the *coordination* concurrency (token walks, queuing at busy
-//! agents) lives in the agents.
+//! it over an mpsc request channel. Two mechanics keep the per-request
+//! overhead off the hot path (EXPERIMENTS.md §Perf "Batched solves"):
+//!
+//! * **Recycled reply slots** — every [`SolverClient`] owns one persistent
+//!   reply channel created at construction; requests carry a clone of its
+//!   sender (an `Arc` bump), so the old per-request reply-channel
+//!   allocation is gone. A shared `alive` flag (cleared by the service
+//!   thread on exit, panic included) preserves the old
+//!   "service-died-without-replying" error semantics.
+//! * **Queue draining** — the service thread drains its queue into a
+//!   [`BatchPlanner`] (blocking recv for the first request, then
+//!   `try_recv` until `--solver-batch` requests are pending or the queue
+//!   goes idle) and flushes the whole batch through the solver's
+//!   `prox_batch_into`/`grad_batch_into`. A single queued request still
+//!   flushes immediately, so sparse activation patterns see no added
+//!   latency; deep queues (straggler scenarios) amortize the wakeup and
+//!   reach the multi-RHS kernels. Drain depths feed [`DepthStats`]
+//!   (`solver_queue_depth_p50/p99` in the trace).
 
+use super::batch::{BatchPlanner, DepthStats, GradReq, ProxReq};
 use super::{LocalSolver, SolveOut};
 use crate::data::AgentData;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 enum Op {
+    /// Prox request; `out` is the caller's recycled output buffer (pass
+    /// `Vec::new()` to let the solver allocate).
     Prox {
-        agent: usize,
-        w0: Vec<f32>,
-        tzsum: Vec<f32>,
-        tau_m: f32,
-    },
-    /// Buffer-recycling prox: the service computes into `out` (via the
-    /// solver's `prox_into`) and hands every buffer back in the reply, so
-    /// none of the three model-sized vectors is reallocated per call (the
-    /// mpsc round trip itself still allocates its small reply-channel
-    /// nodes).
-    ProxBuf {
         agent: usize,
         w0: Vec<f32>,
         tzsum: Vec<f32>,
         tau_m: f32,
         out: Vec<f32>,
     },
+    /// Gradient request; same buffer contract as `Prox`.
     Grad {
-        agent: usize,
-        w: Vec<f32>,
-    },
-    /// Buffer-recycling gradient: same contract as `ProxBuf` for the
-    /// gradient-path algorithms (WPG, gAPI-BCD, DGD).
-    GradBuf {
         agent: usize,
         w: Vec<f32>,
         out: Vec<f32>,
@@ -47,15 +49,21 @@ enum Op {
     Shutdown,
 }
 
-enum Reply {
-    Out(mpsc::Sender<anyhow::Result<SolveOut>>),
-    Buf(mpsc::Sender<anyhow::Result<ProxBufOut>>),
-    GBuf(mpsc::Sender<anyhow::Result<GradBufOut>>),
+/// One completed solve travelling back on a client's reply slot: the
+/// output buffer plus the request buffers handed back for reuse (`a` =
+/// w0/w, `b` = tzsum or empty for gradients).
+struct Done {
+    out: Vec<f32>,
+    wall_secs: f64,
+    a: Vec<f32>,
+    b: Vec<f32>,
 }
+
+type ReplyTx = mpsc::Sender<anyhow::Result<Done>>;
 
 struct Request {
     op: Op,
-    reply: Reply,
+    reply: ReplyTx,
 }
 
 /// Result of [`SolverClient::prox_buf`]: the updated block in `w` plus the
@@ -75,13 +83,59 @@ pub struct GradBufOut {
     pub w_in: Vec<f32>,
 }
 
-/// Cloneable handle agents use to submit local updates.
-#[derive(Clone)]
+/// Cloneable handle agents use to submit local updates. Each handle owns a
+/// persistent reply slot; clones get a fresh one (slots are never shared),
+/// so a steady-state request allocates no channels.
 pub struct SolverClient {
     tx: mpsc::Sender<Request>,
+    reply_tx: ReplyTx,
+    reply_rx: mpsc::Receiver<anyhow::Result<Done>>,
+    alive: Arc<AtomicBool>,
+}
+
+impl Clone for SolverClient {
+    fn clone(&self) -> SolverClient {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        SolverClient {
+            tx: self.tx.clone(),
+            reply_tx,
+            reply_rx,
+            alive: self.alive.clone(),
+        }
+    }
 }
 
 impl SolverClient {
+    fn recv_reply(&self) -> anyhow::Result<Done> {
+        loop {
+            match self.reply_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(res) => return res,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if !self.alive.load(Ordering::Acquire) {
+                        // The service may have replied just before exiting.
+                        if let Ok(res) = self.reply_rx.try_recv() {
+                            return res;
+                        }
+                        anyhow::bail!("solver service dropped the reply");
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("solver service dropped the reply")
+                }
+            }
+        }
+    }
+
+    fn call(&self, op: Op) -> anyhow::Result<Done> {
+        self.tx
+            .send(Request {
+                op,
+                reply: self.reply_tx.clone(),
+            })
+            .map_err(|_| anyhow::anyhow!("solver service is down"))?;
+        self.recv_reply()
+    }
+
     pub fn prox(
         &self,
         agent: usize,
@@ -89,19 +143,21 @@ impl SolverClient {
         tzsum: Vec<f32>,
         tau_m: f32,
     ) -> anyhow::Result<SolveOut> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request {
-                op: Op::Prox { agent, w0, tzsum, tau_m },
-                reply: Reply::Out(reply),
-            })
-            .map_err(|_| anyhow::anyhow!("solver service is down"))?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("solver service dropped the reply"))?
+        let done = self.call(Op::Prox {
+            agent,
+            w0,
+            tzsum,
+            tau_m,
+            out: Vec::new(),
+        })?;
+        Ok(SolveOut {
+            w: done.out,
+            wall_secs: done.wall_secs,
+        })
     }
 
-    /// Buffer-recycling prox (see `Op::ProxBuf`): pass owned buffers, get
-    /// all of them back. `out` is overwritten with the updated block.
+    /// Buffer-recycling prox: pass owned buffers, get all of them back.
+    /// `out` is overwritten with the updated block.
     pub fn prox_buf(
         &self,
         agent: usize,
@@ -110,41 +166,88 @@ impl SolverClient {
         tau_m: f32,
         out: Vec<f32>,
     ) -> anyhow::Result<ProxBufOut> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request {
-                op: Op::ProxBuf { agent, w0, tzsum, tau_m, out },
-                reply: Reply::Buf(reply),
-            })
-            .map_err(|_| anyhow::anyhow!("solver service is down"))?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("solver service dropped the reply"))?
+        let done = self.call(Op::Prox {
+            agent,
+            w0,
+            tzsum,
+            tau_m,
+            out,
+        })?;
+        Ok(ProxBufOut {
+            w: done.out,
+            wall_secs: done.wall_secs,
+            w0: done.a,
+            tzsum: done.b,
+        })
     }
 
     pub fn grad(&self, agent: usize, w: Vec<f32>) -> anyhow::Result<SolveOut> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request {
-                op: Op::Grad { agent, w },
-                reply: Reply::Out(reply),
-            })
-            .map_err(|_| anyhow::anyhow!("solver service is down"))?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("solver service dropped the reply"))?
+        let done = self.call(Op::Grad {
+            agent,
+            w,
+            out: Vec::new(),
+        })?;
+        Ok(SolveOut {
+            w: done.out,
+            wall_secs: done.wall_secs,
+        })
     }
 
-    /// Buffer-recycling gradient (see `Op::GradBuf`): pass owned buffers,
-    /// get both back. `out` is overwritten with ∇f_i(w).
+    /// Buffer-recycling gradient: pass owned buffers, get both back. `out`
+    /// is overwritten with ∇f_i(w).
     pub fn grad_buf(&self, agent: usize, w: Vec<f32>, out: Vec<f32>) -> anyhow::Result<GradBufOut> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request {
-                op: Op::GradBuf { agent, w, out },
-                reply: Reply::GBuf(reply),
-            })
-            .map_err(|_| anyhow::anyhow!("solver service is down"))?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("solver service dropped the reply"))?
+        let done = self.call(Op::Grad { agent, w, out })?;
+        Ok(GradBufOut {
+            w: done.out,
+            wall_secs: done.wall_secs,
+            w_in: done.a,
+        })
+    }
+
+    /// Pipelined batch submit: enqueue every request, then collect the
+    /// replies (FIFO — the planner replies in arrival order). One deep
+    /// drain on the service side turns these into a single batched solve,
+    /// so this is the cheapest way to run many independent prox updates.
+    /// Buffers are recycled exactly as in [`SolverClient::prox_buf`].
+    pub fn prox_many(&self, reqs: Vec<ProxReq>) -> anyhow::Result<Vec<ProxReq>> {
+        let metas: Vec<(usize, f32)> = reqs.iter().map(|r| (r.agent, r.tau_m)).collect();
+        for r in reqs {
+            self.tx
+                .send(Request {
+                    op: Op::Prox {
+                        agent: r.agent,
+                        w0: r.w0,
+                        tzsum: r.tzsum,
+                        tau_m: r.tau_m,
+                        out: r.out,
+                    },
+                    reply: self.reply_tx.clone(),
+                })
+                .map_err(|_| anyhow::anyhow!("solver service is down"))?;
+        }
+        let mut out = Vec::with_capacity(metas.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        // Collect every outstanding reply even after an error, so the slot
+        // is drained and the client stays usable.
+        for (agent, tau_m) in metas {
+            match self.recv_reply() {
+                Ok(done) => out.push(ProxReq {
+                    agent,
+                    w0: done.a,
+                    tzsum: done.b,
+                    tau_m,
+                    out: done.out,
+                    wall_secs: done.wall_secs,
+                }),
+                Err(e) => {
+                    let _ = first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            None => Ok(out),
+            Some(e) => Err(e),
+        }
     }
 }
 
@@ -153,21 +256,44 @@ impl SolverClient {
 pub struct SolverService {
     tx: mpsc::Sender<Request>,
     handle: Option<JoinHandle<()>>,
+    alive: Arc<AtomicBool>,
+    depth: Arc<DepthStats>,
+}
+
+/// Clears the shared alive flag when the service thread exits — normal
+/// return or panic — so blocked clients always unblock.
+struct AliveGuard(Arc<AtomicBool>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
 }
 
 impl SolverService {
     /// Spawn the service thread. `factory` builds the solver *inside* the
     /// thread (required: PJRT clients are not `Send`). `shards` holds every
-    /// agent's data; requests reference agents by index.
-    pub fn spawn<F>(factory: F, shards: Arc<Vec<AgentData>>) -> anyhow::Result<SolverService>
+    /// agent's data; requests reference agents by index. `batch` is the
+    /// drain target (`--solver-batch`): the thread collects up to this many
+    /// pending requests per flush (1 = the pre-batching behavior).
+    pub fn spawn<F>(
+        factory: F,
+        shards: Arc<Vec<AgentData>>,
+        batch: usize,
+    ) -> anyhow::Result<SolverService>
     where
         F: FnOnce() -> anyhow::Result<Box<dyn LocalSolver>> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let alive = Arc::new(AtomicBool::new(true));
+        let depth = Arc::new(DepthStats::new());
+        let alive2 = alive.clone();
+        let depth2 = depth.clone();
         let handle = std::thread::Builder::new()
             .name("solver-service".into())
             .spawn(move || {
+                let guard = AliveGuard(alive2);
                 let mut solver = match factory() {
                     Ok(s) => {
                         let _ = ready_tx.send(Ok(()));
@@ -178,45 +304,77 @@ impl SolverService {
                         return;
                     }
                 };
-                while let Ok(req) = rx.recv() {
-                    match (req.op, req.reply) {
-                        (Op::Prox { agent, w0, tzsum, tau_m }, Reply::Out(reply)) => {
-                            let out = solver.prox(&shards[agent], &w0, &tzsum, tau_m);
-                            let _ = reply.send(out);
+                let mut planner: BatchPlanner<ReplyTx> = BatchPlanner::new(batch);
+                // Admit one request; true = shutdown was requested.
+                fn admit(planner: &mut BatchPlanner<ReplyTx>, req: Request) -> bool {
+                    match req.op {
+                        Op::Prox { agent, w0, tzsum, tau_m, out } => {
+                            planner.push_prox(
+                                ProxReq { agent, w0, tzsum, tau_m, out, wall_secs: 0.0 },
+                                req.reply,
+                            );
+                            false
                         }
-                        (
-                            Op::ProxBuf { agent, w0, tzsum, tau_m, mut out },
-                            Reply::Buf(reply),
-                        ) => {
-                            let wall = solver
-                                .prox_into(&shards[agent], &w0, &tzsum, tau_m, &mut out);
-                            let res = wall.map(|wall_secs| ProxBufOut {
-                                w: out,
-                                wall_secs,
-                                w0,
-                                tzsum,
-                            });
-                            let _ = reply.send(res);
+                        Op::Grad { agent, w, out } => {
+                            planner.push_grad(
+                                GradReq { agent, w, out, wall_secs: 0.0 },
+                                req.reply,
+                            );
+                            false
                         }
-                        (Op::Grad { agent, w }, Reply::Out(reply)) => {
-                            let out = solver.grad(&shards[agent], &w);
-                            let _ = reply.send(out);
-                        }
-                        (Op::GradBuf { agent, w, mut out }, Reply::GBuf(reply)) => {
-                            let wall = solver.grad_into(&shards[agent], &w, &mut out);
-                            let res = wall.map(|wall_secs| GradBufOut {
-                                w: out,
-                                wall_secs,
-                                w_in: w,
-                            });
-                            let _ = reply.send(res);
-                        }
-                        (Op::Shutdown, _) => break,
-                        // Op/reply pairs are constructed together in
-                        // SolverClient; a mismatch is unreachable.
-                        _ => break,
+                        Op::Shutdown => true,
                     }
                 }
+                let mut stopping = false;
+                while !stopping {
+                    // Drain policy: block for the first request, then admit
+                    // until the batch target is reached or the queue idles.
+                    match rx.recv() {
+                        Ok(req) => stopping = admit(&mut planner, req),
+                        Err(_) => break,
+                    }
+                    while !stopping && !planner.full() {
+                        match rx.try_recv() {
+                            Ok(req) => stopping = admit(&mut planner, req),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                stopping = true;
+                            }
+                        }
+                    }
+                    if !planner.is_empty() {
+                        depth2.record(planner.len());
+                        planner.flush(
+                            &mut *solver,
+                            &shards,
+                            |res, reply| {
+                                let _ = reply.send(res.map(|r| Done {
+                                    out: r.out,
+                                    wall_secs: r.wall_secs,
+                                    a: r.w0,
+                                    b: r.tzsum,
+                                }));
+                            },
+                            |res, reply| {
+                                let _ = reply.send(res.map(|r| Done {
+                                    out: r.out,
+                                    wall_secs: r.wall_secs,
+                                    a: r.w,
+                                    b: Vec::new(),
+                                }));
+                            },
+                        );
+                    }
+                }
+                // Error out anything still queued behind the shutdown, then
+                // let the guard clear `alive` (clients racing a late send
+                // observe the flag and bail).
+                while let Ok(req) = rx.try_recv() {
+                    let _ = req
+                        .reply
+                        .send(Err(anyhow::anyhow!("solver service is shutting down")));
+                }
+                drop(guard);
             })?;
         ready_rx
             .recv()
@@ -224,11 +382,26 @@ impl SolverService {
         Ok(SolverService {
             tx,
             handle: Some(handle),
+            alive,
+            depth,
         })
     }
 
     pub fn client(&self) -> SolverClient {
-        SolverClient { tx: self.tx.clone() }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        SolverClient {
+            tx: self.tx.clone(),
+            reply_tx,
+            reply_rx,
+            alive: self.alive.clone(),
+        }
+    }
+
+    /// (p50, p99) of the drain-time queue depths since the last call, then
+    /// reset — the engine samples this per algorithm run into
+    /// `Trace::solver_queue_depth_*`.
+    pub fn take_queue_depth(&self) -> (u64, u64) {
+        self.depth.take()
     }
 
     pub fn shutdown(mut self) {
@@ -239,7 +412,7 @@ impl SolverService {
         let (reply, _rx) = mpsc::channel();
         let _ = self.tx.send(Request {
             op: Op::Shutdown,
-            reply: Reply::Out(reply),
+            reply,
         });
         if let Some(h) = self.handle.take() {
             let _ = h.join();
@@ -260,14 +433,18 @@ mod tests {
     use crate::model::Task;
     use crate::solver::NativeSolver;
 
-    fn shards() -> Arc<Vec<AgentData>> {
+    fn shards_n(n: usize) -> Arc<Vec<AgentData>> {
         let ds = Dataset::load(
             DatasetProfile::by_name("test_ls").unwrap(),
             "/nonexistent",
             1,
         )
         .unwrap();
-        Arc::new(Partition::new(&ds, 1, PartitionKind::Iid).unwrap().shards)
+        Arc::new(Partition::new(&ds, n, PartitionKind::Iid).unwrap().shards)
+    }
+
+    fn shards() -> Arc<Vec<AgentData>> {
+        shards_n(1)
     }
 
     #[test]
@@ -276,6 +453,7 @@ mod tests {
         let svc = SolverService::spawn(
             || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
             shards.clone(),
+            8,
         )
         .unwrap();
         let client = svc.client();
@@ -294,6 +472,7 @@ mod tests {
         let svc = SolverService::spawn(
             || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
             shards.clone(),
+            8,
         )
         .unwrap();
         let client = svc.client();
@@ -315,6 +494,7 @@ mod tests {
         let svc = SolverService::spawn(
             || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
             shards.clone(),
+            8,
         )
         .unwrap();
         let client = svc.client();
@@ -332,6 +512,7 @@ mod tests {
         let svc = SolverService::spawn(
             || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
             shards.clone(),
+            4,
         )
         .unwrap();
         let p = shards[0].features;
@@ -351,7 +532,75 @@ mod tests {
     #[test]
     fn factory_error_propagates() {
         let shards = shards();
-        let res = SolverService::spawn(|| Err(anyhow::anyhow!("boom")), shards);
+        let res = SolverService::spawn(|| Err(anyhow::anyhow!("boom")), shards, 8);
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn prox_many_matches_sequential_round_trips() {
+        // One pipelined submit (deep drain → one batched flush) must return
+        // exactly what B separate blocking round trips return, in order —
+        // including with duplicate agents in the batch.
+        let shards = shards_n(3);
+        let p = shards[0].features;
+        let svc = SolverService::spawn(
+            || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
+            shards.clone(),
+            8,
+        )
+        .unwrap();
+        let client = svc.client();
+        let agents = [2usize, 0, 1, 0, 2, 2];
+        let reqs: Vec<ProxReq> = agents
+            .iter()
+            .enumerate()
+            .map(|(i, &agent)| ProxReq {
+                agent,
+                w0: vec![0.02 * i as f32; p],
+                tzsum: vec![0.05; p],
+                tau_m: 0.5,
+                out: Vec::new(),
+                wall_secs: 0.0,
+            })
+            .collect();
+        let want: Vec<Vec<f32>> = reqs
+            .iter()
+            .map(|r| {
+                client
+                    .prox(r.agent, r.w0.clone(), r.tzsum.clone(), r.tau_m)
+                    .unwrap()
+                    .w
+            })
+            .collect();
+        let got = client.prox_many(reqs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.agent, agents[i], "reply order must be FIFO");
+            assert_eq!(g.out, *w, "req {i}");
+            assert_eq!(g.w0, vec![0.02 * i as f32; p], "buffers recycled");
+        }
+        // Depth stats saw at least one multi-request drain.
+        let (p50, p99) = svc.take_queue_depth();
+        assert!(p99 >= 1, "p50={p50} p99={p99}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batch_one_behaves_like_unbatched_service() {
+        let shards = shards();
+        let svc = SolverService::spawn(
+            || Ok(Box::new(NativeSolver::new(Task::Regression, 5)) as Box<dyn LocalSolver>),
+            shards.clone(),
+            1,
+        )
+        .unwrap();
+        let client = svc.client();
+        let p = shards[0].features;
+        let a = client.prox(0, vec![0.0; p], vec![0.1; p], 1.0).unwrap();
+        let b = client.prox(0, vec![0.0; p], vec![0.1; p], 1.0).unwrap();
+        assert_eq!(a.w, b.w);
+        let (p50, p99) = svc.take_queue_depth();
+        assert!(p50 >= 1 && p99 >= 1, "every drain collected one request");
+        svc.shutdown();
     }
 }

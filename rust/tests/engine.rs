@@ -530,3 +530,41 @@ fn timeline_events_cover_all_walks() {
         assert!(e.start >= e.arrival && e.end >= e.start, "{e:?}");
     }
 }
+
+#[test]
+fn substrates_agree_with_batched_solver() {
+    // The solver-service drain (`solver_batch = 8`) reorders compute into
+    // multi-RHS batches; the math contract says that must not move the
+    // result. DES (which calls the solver directly) and threads (which
+    // batch through the service) have to land on comparable models, and
+    // the threads run must report drain-depth telemetry.
+    let mut cfg = base_ls();
+    cfg.algos = vec![AlgoKind::ApiBcd];
+    cfg.stop.max_activations = 400;
+    cfg.solver_batch = 8;
+    cfg.workers = 2;
+
+    let des = Experiment::builder(cfg.clone())
+        .substrate(Substrate::Des)
+        .run()
+        .unwrap();
+    let thr = Experiment::builder(cfg)
+        .substrate(Substrate::Threads)
+        .run()
+        .unwrap();
+    let (d, t) = (&des.traces[0], &thr.traces[0]);
+    assert!(d.last_metric().is_finite() && t.last_metric().is_finite());
+    assert!(
+        (d.last_metric() - t.last_metric()).abs() < 0.25,
+        "des {} vs threads {} at solver_batch=8",
+        d.last_metric(),
+        t.last_metric()
+    );
+    assert!(
+        t.solver_queue_depth_p50 >= 1 && t.solver_queue_depth_p99 >= t.solver_queue_depth_p50,
+        "threads trace must sample drain depths (p50 {}, p99 {})",
+        t.solver_queue_depth_p50,
+        t.solver_queue_depth_p99
+    );
+    assert_eq!(d.solver_queue_depth_p50, 0, "DES has no solver queue");
+}

@@ -26,7 +26,7 @@ use apibcd::graph::Topology;
 use apibcd::linalg::{axpy, dist2};
 use apibcd::model::{penalty_objective, Task};
 use apibcd::sim::{AgentAvailability, EventQueue, TimerWheel, TokenWatch};
-use apibcd::solver::{LocalSolver, NativeSolver};
+use apibcd::solver::{BatchPlanner, GradReq, LocalSolver, NativeSolver, ProxReq};
 use apibcd::util::proptest::{run_prop, PropConfig};
 use apibcd::util::rng::Rng;
 
@@ -1168,6 +1168,114 @@ fn prop_timer_wheel_revolution_boundaries() {
             wheel.advance_to(last + 1, &mut out);
             if out != vec![usize::MAX] {
                 return Err(format!("stale deadline did not clamp-fire: {out:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_solves_bit_identical_to_sequential() {
+    // Random compositions through the BatchPlanner — mixed shards, mixed
+    // prox/grad, batch caps 1..=8, partial flushes at arbitrary points —
+    // must reproduce the one-at-a-time `prox_into`/`grad_into` outputs
+    // bit-for-bit (the LocalSolver batch contract).
+    use std::cell::RefCell;
+
+    run_prop(
+        "batched solves bit-identical",
+        cfg(18, 1313),
+        |r| {
+            let profile = r.below(3);
+            let n_agents = 2 + r.below(3);
+            let cap = 1 + r.below(8);
+            (profile, n_agents, cap, r.next_u64())
+        },
+        |&(profile, n_agents, cap, seed)| {
+            let name = ["test_ls", "test_logit", "test_smax"][profile];
+            let prof = DatasetProfile::by_name(name).unwrap();
+            let ds = Dataset::load(prof, "/nonexistent", 1).map_err(|e| e.to_string())?;
+            let shards = Partition::new(&ds, n_agents, PartitionKind::Iid)
+                .map_err(|e| e.to_string())?
+                .shards;
+            let dim = shards[0].features * shards[0].classes;
+            let mut rng = Rng::new(seed);
+            let n_reqs = 1 + rng.below(12);
+
+            let mut planner: BatchPlanner<usize> = BatchPlanner::new(cap);
+            let mut batched = NativeSolver::new(prof.task, 5);
+            let mut seq = NativeSolver::new(prof.task, 5);
+            let outs: RefCell<Vec<Option<Vec<f32>>>> = RefCell::new(vec![None; n_reqs]);
+            let errs: RefCell<Vec<String>> = RefCell::new(Vec::new());
+            let mut wants: Vec<Vec<f32>> = Vec::new();
+            for i in 0..n_reqs {
+                let agent = rng.below(n_agents);
+                let vec_of = |rng: &mut Rng, scale: f32| -> Vec<f32> {
+                    (0..dim).map(|_| scale * rng.normal_f32()).collect()
+                };
+                if rng.below(3) > 0 {
+                    let w0 = vec_of(&mut rng, 0.3);
+                    let tzsum = vec_of(&mut rng, 0.2);
+                    let tau_m = 0.25 + 0.75 * rng.next_f64() as f32;
+                    let mut want = Vec::new();
+                    seq.prox_into(&shards[agent], &w0, &tzsum, tau_m, &mut want)
+                        .map_err(|e| e.to_string())?;
+                    wants.push(want);
+                    planner.push_prox(
+                        ProxReq { agent, w0, tzsum, tau_m, out: Vec::new(), wall_secs: 0.0 },
+                        i,
+                    );
+                } else {
+                    let w = vec_of(&mut rng, 0.3);
+                    let mut want = Vec::new();
+                    seq.grad_into(&shards[agent], &w, &mut want)
+                        .map_err(|e| e.to_string())?;
+                    wants.push(want);
+                    planner.push_grad(GradReq { agent, w, out: Vec::new(), wall_secs: 0.0 }, i);
+                }
+                // Partial flush: whenever the cap fills, and at random
+                // points in between (idle-queue early flush).
+                if planner.full() || rng.below(4) == 0 {
+                    planner.flush(
+                        &mut batched,
+                        &shards,
+                        |res, tag| match res {
+                            Ok(r) => outs.borrow_mut()[tag] = Some(r.out),
+                            Err(e) => errs.borrow_mut().push(e.to_string()),
+                        },
+                        |res, tag| match res {
+                            Ok(r) => outs.borrow_mut()[tag] = Some(r.out),
+                            Err(e) => errs.borrow_mut().push(e.to_string()),
+                        },
+                    );
+                }
+            }
+            planner.flush(
+                &mut batched,
+                &shards,
+                |res, tag| match res {
+                    Ok(r) => outs.borrow_mut()[tag] = Some(r.out),
+                    Err(e) => errs.borrow_mut().push(e.to_string()),
+                },
+                |res, tag| match res {
+                    Ok(r) => outs.borrow_mut()[tag] = Some(r.out),
+                    Err(e) => errs.borrow_mut().push(e.to_string()),
+                },
+            );
+            if let Some(e) = errs.borrow().first() {
+                return Err(format!("solve error: {e}"));
+            }
+            let outs = outs.into_inner();
+            for (i, want) in wants.iter().enumerate() {
+                match &outs[i] {
+                    None => return Err(format!("request {i} never replied")),
+                    Some(got) if got != want => {
+                        return Err(format!(
+                            "{name}: request {i}/{n_reqs} (cap {cap}) diverged from sequential"
+                        ));
+                    }
+                    _ => {}
+                }
             }
             Ok(())
         },
